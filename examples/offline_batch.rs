@@ -1,0 +1,54 @@
+//! Offline (throughput-oriented) inference: all requests submitted at t=0,
+//! engines race on makespan — the paper's §6.3 scenario.
+//!
+//! ```sh
+//! cargo run --release --example offline_batch -- --dataset ldc --n 80
+//! ```
+
+use nexus::coordinator::{offline_makespan, Experiment};
+use nexus::engine::EngineKind;
+use nexus::model::ModelConfig;
+use nexus::util::cli::Args;
+use nexus::util::fmt::{dur, Table};
+use nexus::workload::Dataset;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let dataset = Dataset::by_name(&args.get_or("dataset", "ldc")).expect("dataset");
+    let n = args.get_usize("n", 80);
+    let model = match dataset {
+        Dataset::Mixed => ModelConfig::llama8b(),
+        _ => ModelConfig::qwen3b(),
+    };
+    let mut exp = Experiment::new(model, dataset, n, 1.0);
+    exp.seed = args.get_u64("seed", 42);
+
+    println!("offline batch: {} requests of {} on {}", n, dataset.name(), model.name);
+    let mut t = Table::new(
+        "offline makespan (X = timeout)",
+        &["engine", "makespan", "tok/s", "recomputes", "gpus"],
+    );
+    for &kind in EngineKind::all() {
+        eprintln!("  running {}...", kind.name());
+        match offline_makespan(kind, &exp) {
+            Some((mk, m)) => {
+                let s = m.summary();
+                t.row(&[
+                    kind.name().to_string(),
+                    dur(mk),
+                    format!("{:.0}", s.token_throughput),
+                    format!("{}", m.recomputes),
+                    format!("{}", kind.gpus(&exp.model)),
+                ]);
+            }
+            None => t.row(&[
+                kind.name().to_string(),
+                "X".into(),
+                String::new(),
+                String::new(),
+                format!("{}", kind.gpus(&exp.model)),
+            ]),
+        }
+    }
+    t.print();
+}

@@ -1,0 +1,65 @@
+//! Quickstart: the three core Nexus mechanisms in ~60 lines of API use.
+//!
+//! 1. Calibrate the contention-aware cost model (one-time pass, §4.1.1).
+//! 2. Ask the Algorithm-1 controller for an SM partition for a live batch.
+//! 3. Run a full serving experiment and compare Nexus against vLLM.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use nexus::coordinator::Experiment;
+use nexus::costmodel::calibrate;
+use nexus::engine::EngineKind;
+use nexus::gpusim::GpuSpec;
+use nexus::model::ModelConfig;
+use nexus::partition::{BatchState, PartitionConfig, PartitionController};
+use nexus::util::fmt::dur;
+use nexus::workload::Dataset;
+
+fn main() {
+    // --- 1. one-time calibration of the Eq.-7 curves on the L20 substrate.
+    let gpu = GpuSpec::l20();
+    let cost = calibrate(&gpu);
+    let model = ModelConfig::qwen3b();
+    println!(
+        "calibrated cost model for {} on {} ({} SMs, {:.0} GB/s)",
+        model.name,
+        gpu.name,
+        gpu.sm_count,
+        gpu.mem_bw / 1e9
+    );
+
+    // --- 2. a per-batch partition decision (Algorithm 1).
+    let prefill_ops = model.prefill_ops(512, 512.0 * 4000.0, 4000.0, 0);
+    let decode_ops = model.decode_ops(32, 32.0 * 1800.0);
+    let mut controller = PartitionController::new(PartitionConfig::default());
+    let decision = controller.decide(
+        &cost,
+        &BatchState { prefill_ops: &prefill_ops, decode_ops: &decode_ops, kv_usage: 0.42 },
+    );
+    println!(
+        "partition decision: prefill {:.0}% / decode {:.0}% ({:?}, {} cost-model queries)",
+        decision.r_p * 100.0,
+        decision.r_d * 100.0,
+        decision.mode,
+        decision.queries
+    );
+    let t_pre = cost.prefill(&prefill_ops, decision.r_p).total;
+    let t_dec = cost.decode(&decode_ops, decision.r_d, None);
+    println!("predicted: prefill iter {} | decode iter {}", dur(t_pre), dur(t_dec));
+
+    // --- 3. an end-to-end serving comparison on a ShareGPT-like trace.
+    let exp = Experiment::new(model, Dataset::ShareGpt, 60, 4.0);
+    for kind in [EngineKind::Vllm, EngineKind::Nexus] {
+        let s = exp.run(kind).summary();
+        println!(
+            "{:>6}: mean TTFT {} | mean TBT {} | norm latency {}",
+            kind.name(),
+            dur(s.mean_ttft),
+            dur(s.mean_tbt),
+            dur(s.mean_norm)
+        );
+    }
+    println!("done — see `nexus compare` and rust/benches/ for the full evaluation");
+}

@@ -1,0 +1,51 @@
+//! Online serving scenario: the paper's §6.2 single-GPU evaluation in
+//! miniature — every engine on a bursty Mixed workload (60% chat / 40%
+//! long-document), reporting the Fig.-9 metric set plus engine internals.
+//!
+//! ```sh
+//! cargo run --release --example serve_workload -- --n 150 --rate 3.0
+//! ```
+
+use nexus::coordinator::Experiment;
+use nexus::engine::EngineKind;
+use nexus::model::ModelConfig;
+use nexus::util::cli::Args;
+use nexus::util::fmt::{dur, Table};
+use nexus::workload::Dataset;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let n = args.get_usize("n", 120);
+    let rate = args.get_f64("rate", 3.0);
+    let seed = args.get_u64("seed", 42);
+
+    let mut exp = Experiment::new(ModelConfig::llama8b(), Dataset::Mixed, n, rate);
+    exp.seed = seed;
+    println!(
+        "Mixed workload on {} — {} requests at {} req/s (seed {})",
+        exp.model.name, n, rate, seed
+    );
+
+    let mut t = Table::new(
+        "online serving (single L20; vLLM-P/D uses two)",
+        &["engine", "TTFT", "TTFT95", "TBT", "TBT95", "norm", "repart", "recomp", "gpus"],
+    );
+    for &kind in EngineKind::all() {
+        eprintln!("  running {}...", kind.name());
+        let m = exp.run(kind);
+        let s = m.summary();
+        t.row(&[
+            kind.name().to_string(),
+            dur(s.mean_ttft),
+            dur(s.p95_ttft),
+            dur(s.mean_tbt),
+            dur(s.p95_tbt),
+            dur(s.mean_norm),
+            format!("{}", m.repartitions),
+            format!("{}", m.recomputes),
+            format!("{}", kind.gpus(&exp.model)),
+        ]);
+    }
+    t.print();
+    println!("(expected shape: Nexus lowest TTFT/norm on one GPU; vLLM-P/D best TBT on two)");
+}

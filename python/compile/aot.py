@@ -1,0 +1,135 @@
+"""AOT compiler: lower the Layer-2 model (with its Layer-1 Pallas kernels)
+to HLO **text** artifacts for the rust PJRT runtime.
+
+Interchange format is HLO text, NOT ``.serialize()`` / StableHLO bytes: the
+image's xla_extension 0.5.1 rejects jax≥0.5's 64-bit-instruction-id protos
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs under ``--out`` (default ``../artifacts``):
+    manifest.json     model dims + weight tensor table + entry files
+    weights.bin       all weights, f32 little-endian, manifest order
+    prefill.hlo.txt   prefill entry (weights…, tokens, length) → (logits, kv)
+    decode.hlo.txt    decode entry (weights…, tokens, pos, kv) → (logits, kv)
+
+Usage: ``cd python && python -m compile.aot [--out DIR] [--seed N]``
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import TINY, decode, init_params, param_specs, prefill, reference_generate
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the rust
+    side unwraps one tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entries(arch):
+    """Lower both entries with weights as leading runtime inputs."""
+    w_specs = [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in param_specs(arch)
+    ]
+    n_w = len(w_specs)
+
+    def prefill_entry(*args):
+        weights = list(args[:n_w])
+        tokens, length = args[n_w], args[n_w + 1]
+        return prefill(arch, weights, tokens, length)
+
+    def decode_entry(*args):
+        weights = list(args[:n_w])
+        tokens, pos, kv = args[n_w], args[n_w + 1], args[n_w + 2]
+        return decode(arch, weights, tokens, pos, kv)
+
+    tok_p = jax.ShapeDtypeStruct((arch.max_prompt,), jnp.int32)
+    len_p = jax.ShapeDtypeStruct((), jnp.int32)
+    prefill_lowered = jax.jit(prefill_entry).lower(*w_specs, tok_p, len_p)
+
+    tok_d = jax.ShapeDtypeStruct((arch.decode_batch,), jnp.int32)
+    pos_d = jax.ShapeDtypeStruct((arch.decode_batch,), jnp.int32)
+    kv_d = jax.ShapeDtypeStruct(
+        (arch.decode_batch, arch.layers, 2, arch.kv_cap, arch.kv_dim), jnp.float32
+    )
+    decode_lowered = jax.jit(decode_entry).lower(*w_specs, tok_d, pos_d, kv_d)
+    return prefill_lowered, decode_lowered
+
+
+def _reference_block(arch, params) -> dict:
+    """Greedy-generation ground truth for the rust integration test."""
+    prompt = np.array([7, 42, 300, 5, 128, 9, 77, 201], np.int32)
+    steps = 12
+    jp = [jnp.asarray(p) for p in params]
+    tokens = reference_generate(arch, jp, prompt, steps)
+    return {"prompt": prompt.tolist(), "steps": steps, "tokens": tokens.tolist()}
+
+
+def build(out_dir: pathlib.Path, seed: int = 0, arch=TINY) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    # Weights: f32 LE, concatenated in param_specs order.
+    params = init_params(arch, seed)
+    flat = np.concatenate([p.ravel() for p in params]).astype("<f4")
+    (out_dir / "weights.bin").write_bytes(flat.tobytes())
+
+    print(f"lowering prefill/decode entries ({arch.params_count():,} params)...")
+    prefill_lowered, decode_lowered = lower_entries(arch)
+    (out_dir / "prefill.hlo.txt").write_text(to_hlo_text(prefill_lowered))
+    (out_dir / "decode.hlo.txt").write_text(to_hlo_text(decode_lowered))
+
+    manifest = {
+        "model": {
+            "layers": arch.layers,
+            "d": arch.d,
+            "heads": arch.heads,
+            "kv_heads": arch.kv_heads,
+            "d_ff": arch.d_ff,
+            "vocab": arch.vocab,
+            "max_prompt": arch.max_prompt,
+            "kv_cap": arch.kv_cap,
+            "decode_batch": arch.decode_batch,
+        },
+        "weights": {
+            "file": "weights.bin",
+            "seed": seed,
+            "tensors": [
+                {"name": n, "shape": list(s)} for n, s in param_specs(arch)
+            ],
+        },
+        "entries": [
+            {"name": "prefill", "file": "prefill.hlo.txt"},
+            {"name": "decode", "file": "decode.hlo.txt"},
+        ],
+        # Cross-layer oracle: greedy generation computed in JAX at build
+        # time; the rust runtime must reproduce these token ids exactly
+        # (rust/tests/runtime_pjrt.rs).
+        "reference": _reference_block(arch, params),
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    for f in ["manifest.json", "weights.bin", "prefill.hlo.txt", "decode.hlo.txt"]:
+        size = (out_dir / f).stat().st_size
+        print(f"  wrote {f}: {size:,} bytes")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--seed", type=int, default=0, help="weight init seed")
+    args = ap.parse_args()
+    build(pathlib.Path(args.out), args.seed)
+
+
+if __name__ == "__main__":
+    main()

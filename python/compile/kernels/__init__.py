@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the AOT HLO).
+
+Exports the three hot-spot kernels plus RMSNorm, all interpret-mode (CPU
+PJRT), each with a pure-jnp oracle in :mod:`.ref`.
+"""
+
+from .attention import decode_attention, prefill_attention
+from .ffn import rmsnorm, swiglu_ffn
+
+__all__ = ["prefill_attention", "decode_attention", "swiglu_ffn", "rmsnorm"]

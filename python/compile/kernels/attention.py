@@ -1,0 +1,149 @@
+"""Pallas attention kernels — the paper's compute hot-spots, rethought for TPU.
+
+Hardware adaptation (DESIGN.md §5): the paper's kernels are CUDA/SM-centric;
+here the same two hot-spots are expressed in TPU idiom:
+
+* **Prefill attention** (compute-bound, §2.3): flash-style tiling. The grid
+  iterates (head, q-block); each program streams the KV sequence through
+  VMEM in ``block_k`` tiles, maintaining the running max / normalizer so the
+  full ``[P, P]`` score matrix never materializes. Q/K tiles are sized for
+  the MXU (multiples of 64/128 lanes).
+* **Decode attention** (memory-bound GEMV, §2.3): a KV-streaming reduction.
+  One program per head walks the cache in ``block_c`` tiles — bandwidth-
+  bound by design, mirroring why decode saturates at low SM counts (Fig 5c).
+
+Both kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so the interpreter path is the correctness target and
+real-TPU performance is *estimated* from the block shapes (EXPERIMENTS.md
+§Perf). Numerics are validated against :mod:`.ref` by pytest + hypothesis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _prefill_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int, seq_len: int):
+    """One (head, q-block) program of flash-style causal attention."""
+    qi = pl.program_id(1)
+    length = len_ref[0]
+    q = q_ref[...].astype(jnp.float32)  # [block_q, dh]
+    block_q, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    q_idx = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (pl.dslice(j * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(j * block_k, block_k), slice(None)))
+        s = q @ k.astype(jnp.float32).T * scale  # [block_q, block_k]
+        k_idx = j * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = (k_idx[None, :] <= q_idx[:, None]) & (k_idx[None, :] < length)
+        s = jnp.where(mask, s, _NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    n_k = seq_len // block_k
+    m0 = jnp.full((block_q,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, dh), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_k, body, (m0, l0, acc0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-20)[:, None]).astype(o_ref.dtype)
+
+
+def prefill_attention(q, k, v, length, *, block_q: int = 64, block_k: int = 64):
+    """Causal prompt attention. ``q, k, v: [P, H, Dh]``; ``length``: scalar.
+
+    ``P`` must be divisible by both block sizes (callers pad — the model
+    pads prompts to ``max_prompt`` anyway). Matches
+    :func:`.ref.prefill_attention_ref` on the first ``length`` rows.
+    """
+    p, h, dh = q.shape
+    assert k.shape == (p, h, dh) and v.shape == (p, h, dh), "MHA shapes"
+    assert p % block_q == 0 and p % block_k == 0, f"P={p} not tileable"
+    qt = jnp.transpose(q, (1, 0, 2))  # [H, P, Dh]
+    kt = jnp.transpose(k, (1, 0, 2))
+    vt = jnp.transpose(v, (1, 0, 2))
+    len_arr = jnp.reshape(length, (1,)).astype(jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_prefill_kernel, block_k=block_k, seq_len=p),
+        grid=(h, p // block_q),
+        in_specs=[
+            pl.BlockSpec((1,), lambda hh, i: (0,)),
+            pl.BlockSpec((None, block_q, dh), lambda hh, i: (hh, i, 0)),
+            pl.BlockSpec((None, p, dh), lambda hh, i: (hh, 0, 0)),
+            pl.BlockSpec((None, p, dh), lambda hh, i: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, dh), lambda hh, i: (hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, p, dh), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(len_arr, qt, kt, vt)
+    return jnp.transpose(out, (1, 0, 2))
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, block_c: int, cap: int):
+    """One head's GEMV attention, streaming the KV cache through VMEM."""
+    pos = pos_ref[0]
+    q = q_ref[...].astype(jnp.float32)  # [1, dh] (block keeps a dummy row dim)
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (pl.dslice(j * block_c, block_c), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(j * block_c, block_c), slice(None)))
+        s = (q @ k.astype(jnp.float32).T * scale)[0]  # [block_c]
+        c_idx = j * block_c + jax.lax.iota(jnp.int32, block_c)
+        s = jnp.where(c_idx <= pos, s, _NEG_INF)
+        m_new = jnp.maximum(m, s.max())
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum()
+        acc_new = acc * alpha + p @ v.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    n_c = cap // block_c
+    m0 = jnp.float32(_NEG_INF)
+    l0 = jnp.float32(0.0)
+    acc0 = jnp.zeros((dh,), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_c, body, (m0, l0, acc0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-20))[None, :].astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, block_c: int = 64):
+    """Single-token attention against a padded KV cache.
+
+    ``q: [H, Dh]``; ``k_cache, v_cache: [C, H, Dh]``; ``pos``: scalar index
+    of the current token (its K/V already written at ``cache[pos]``).
+    Matches :func:`.ref.decode_attention_ref`.
+    """
+    c, h, dh = k_cache.shape
+    assert q.shape == (h, dh)
+    assert c % block_c == 0, f"C={c} not tileable by {block_c}"
+    kt = jnp.transpose(k_cache, (1, 0, 2))  # [H, C, Dh]
+    vt = jnp.transpose(v_cache, (1, 0, 2))
+    pos_arr = jnp.reshape(pos, (1,)).astype(jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, block_c=block_c, cap=c),
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda hh: (0,)),
+            pl.BlockSpec((1, dh), lambda hh: (hh, 0)),
+            pl.BlockSpec((None, c, dh), lambda hh: (hh, 0, 0)),
+            pl.BlockSpec((None, c, dh), lambda hh: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dh), lambda hh: (hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, dh), q.dtype),
+        interpret=True,
+    )(pos_arr, q, kt, vt)
+    return out

@@ -1,0 +1,94 @@
+"""Fused SwiGLU FFN Pallas kernel.
+
+The FFN is the most FLOP-intensive dense op (§2.2) and the one that keeps
+scaling with SMs the longest (Fig. 5b) — on TPU it is the canonical MXU
+workload. This kernel fuses ``matmul → SiLU·gate → matmul`` per token tile
+so the ``[block_n, d_ff]`` intermediate stays in VMEM and is never written
+to HBM. ``interpret=True`` (see attention.py for why).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ffn_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)  # [block_n, d]
+    g = x @ wg_ref[...].astype(jnp.float32)  # [block_n, f] — stays in VMEM
+    u = x @ wu_ref[...].astype(jnp.float32)
+    act = g * jax.nn.sigmoid(g) * u
+    o_ref[...] = (act @ wd_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def swiglu_ffn(x, w_gate, w_up, w_down, *, block_n: int = 32):
+    """``(silu(x @ Wg) * (x @ Wu)) @ Wd`` with the intermediate fused in VMEM.
+
+    ``x: [N, D]``; weight shapes ``[D, F]``, ``[D, F]``, ``[F, D]``. ``N``
+    is padded to a multiple of ``block_n`` internally. Matches
+    :func:`.ref.swiglu_ffn_ref`.
+    """
+    n, d = x.shape
+    f = w_gate.shape[1]
+    assert w_gate.shape == (d, f) and w_up.shape == (d, f) and w_down.shape == (f, d)
+    # Don't pad a tiny batch (decode: n=1) up to a full tile — shrink the
+    # tile instead (interpret-mode cost scales with padded rows; on TPU a
+    # sub-8 tile underfills the MXU but wastes no HBM traffic).
+    block_n = min(block_n, _pow2_at_least(n))
+    n_pad = (n + block_n - 1) // block_n * block_n
+    xp = jnp.pad(x, ((0, n_pad - n), (0, 0))) if n_pad != n else x
+
+    out = pl.pallas_call(
+        functools.partial(_ffn_kernel),
+        grid=(n_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((f, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d), x.dtype),
+        interpret=True,
+    )(xp, w_gate, w_up, w_down)
+    return out[:n]
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # [block_n, d]
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * s_ref[...].astype(jnp.float32)).astype(
+        o_ref.dtype
+    )
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-6, block_n: int = 32):
+    """RMSNorm over the last axis; ``x: [N, D]``, ``scale: [D]``.
+
+    Matches :func:`.ref.rmsnorm_ref`.
+    """
+    n, d = x.shape
+    assert scale.shape == (d,)
+    block_n = min(block_n, _pow2_at_least(n))
+    n_pad = (n + block_n - 1) // block_n * block_n
+    xp = jnp.pad(x, ((0, n_pad - n), (0, 0))) if n_pad != n else x
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(n_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d), x.dtype),
+        interpret=True,
+    )(xp, scale)
+    return out[:n]
+
+def _pow2_at_least(n: int) -> int:
+    """Smallest power of two ≥ n (tile-shrink helper)."""
+    p = 1
+    while p < n:
+        p <<= 1
+    return p

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for the Pallas kernels (Layer-1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain `jax.numpy` ops only. `python/tests/test_kernel.py`
+asserts `assert_allclose(kernel(...), ref(...))` across hypothesis-driven
+shape/dtype sweeps.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6):
+    """RMSNorm over the last axis: ``x * scale / rms(x)``."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def prefill_attention_ref(q, k, v, length):
+    """Causal multi-head attention over a (padded) prompt.
+
+    Args:
+        q, k, v: ``[P, H, Dh]`` — padded to ``P`` tokens.
+        length: scalar int — number of real tokens; keys at index >= length
+            are masked out (so padding never contributes).
+
+    Returns:
+        ``[P, H, Dh]`` attention output (rows beyond ``length`` are
+        unspecified — callers slice by ``length``).
+    """
+    p, _h, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.array(dh, jnp.float32))
+    s = jnp.einsum("qhd,khd->hqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    idx = jnp.arange(p)
+    causal = idx[None, :] <= idx[:, None]  # [q, k]
+    valid = idx[None, :] < length  # [1, k]
+    mask = (causal & valid)[None, :, :]
+    s = jnp.where(mask, s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("hqk,khd->qhd", a, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos):
+    """Single-token GEMV attention against a KV cache.
+
+    Args:
+        q: ``[H, Dh]`` — the new token's query.
+        k_cache, v_cache: ``[C, H, Dh]`` — cache padded to capacity ``C``.
+        pos: scalar int — the new token's position; cache entries at index
+            > pos are masked (the token's own K/V is already written at
+            index ``pos``).
+
+    Returns:
+        ``[H, Dh]``.
+    """
+    c, _h, dh = k_cache.shape
+    scale = 1.0 / jnp.sqrt(jnp.array(dh, jnp.float32))
+    s = jnp.einsum("hd,khd->hk", q.astype(jnp.float32), k_cache.astype(jnp.float32)) * scale
+    valid = jnp.arange(c)[None, :] <= pos
+    s = jnp.where(valid, s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("hk,khd->hd", a, v_cache.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def swiglu_ffn_ref(x, w_gate, w_up, w_down):
+    """SwiGLU FFN: ``(silu(x @ Wg) * (x @ Wu)) @ Wd``.
+
+    Args:
+        x: ``[N, D]``; ``w_gate``/``w_up``: ``[D, F]``; ``w_down``: ``[F, D]``.
+    """
+    xf = x.astype(jnp.float32)
+    g = xf @ w_gate.astype(jnp.float32)
+    u = xf @ w_up.astype(jnp.float32)
+    silu = g * jax.nn.sigmoid(g)
+    return ((silu * u) @ w_down.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,213 @@
+"""Layer-2 JAX model: the tiny decoder-only transformer served by the rust
+runtime, with explicit prefill / decode entry points and KV cache.
+
+Build-time only — `aot.py` lowers the two entries to HLO text which
+`rust/src/runtime` compiles and executes via PJRT; Python is never on the
+request path. The compute hot-spots (attention, FFN, RMSNorm) are the
+Layer-1 Pallas kernels from :mod:`compile.kernels`, so they lower into the
+same HLO.
+
+Weights are *runtime inputs* (not baked constants): the rust side uploads
+`weights.bin` to device once and reuses the buffers across calls. Parameter
+order is fixed by :func:`param_specs` and recorded in `manifest.json`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import decode_attention, prefill_attention, rmsnorm, swiglu_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    """Architecture + AOT shape parameters (mirrors rust `TinyDims`)."""
+
+    layers: int = 4
+    d: int = 256
+    heads: int = 4
+    kv_heads: int = 4
+    d_ff: int = 1024
+    vocab: int = 512
+    #: Prefill entry's padded prompt width.
+    max_prompt: int = 128
+    #: Per-request KV capacity baked into the decode entry.
+    kv_cap: int = 192
+    #: Decode entry's static batch width.
+    decode_batch: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        return self.d // self.heads
+
+    @property
+    def kv_dim(self) -> int:
+        return self.kv_heads * self.head_dim
+
+    def params_count(self) -> int:
+        return sum(int(np.prod(s)) for _, s in param_specs(self))
+
+
+TINY = Arch()
+
+
+def param_specs(arch: Arch) -> list[tuple[str, tuple[int, ...]]]:
+    """(name, shape) for every weight tensor, in manifest/weights.bin order."""
+    d, kvd, dff = arch.d, arch.kv_dim, arch.d_ff
+    specs: list[tuple[str, tuple[int, ...]]] = [("embed", (arch.vocab, d))]
+    for i in range(arch.layers):
+        specs += [
+            (f"l{i}.ln1", (d,)),
+            (f"l{i}.wq", (d, d)),
+            (f"l{i}.wk", (d, kvd)),
+            (f"l{i}.wv", (d, kvd)),
+            (f"l{i}.wo", (d, d)),
+            (f"l{i}.ln2", (d,)),
+            (f"l{i}.w_gate", (d, dff)),
+            (f"l{i}.w_up", (d, dff)),
+            (f"l{i}.w_down", (dff, d)),
+        ]
+    specs += [("ln_f", (d,)), ("lm_head", (d, arch.vocab))]
+    return specs
+
+
+def init_params(arch: Arch, seed: int = 0) -> list[np.ndarray]:
+    """Deterministic scaled-normal init, one array per spec entry."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in param_specs(arch):
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            out.append(np.ones(shape, np.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            out.append(rng.standard_normal(shape).astype(np.float32) / np.sqrt(fan_in))
+    return out
+
+
+def _unpack(arch: Arch, flat: list[jax.Array]):
+    """Split the flat weight list into (embed, layers, ln_f, lm_head)."""
+    specs = param_specs(arch)
+    assert len(flat) == len(specs), f"want {len(specs)} weights, got {len(flat)}"
+    embed = flat[0]
+    per_layer = 9
+    layers = []
+    for i in range(arch.layers):
+        base = 1 + i * per_layer
+        ln1, wq, wk, wv, wo, ln2, wg, wu, wd = flat[base : base + per_layer]
+        layers.append((ln1, wq, wk, wv, wo, ln2, wg, wu, wd))
+    ln_f, lm_head = flat[-2], flat[-1]
+    return embed, layers, ln_f, lm_head
+
+
+def prefill(arch: Arch, weights: list[jax.Array], tokens: jax.Array, length: jax.Array):
+    """Prefill entry: process a padded prompt, return first-token logits + KV.
+
+    Args:
+        tokens: ``i32[max_prompt]`` (padding after ``length`` is ignored).
+        length: ``i32[]`` — number of real tokens, in ``1..=max_prompt``.
+
+    Returns:
+        ``(logits f32[vocab], kv f32[layers, 2, kv_cap, kv_dim])`` where the
+        KV rows past ``length`` are zero (pre-padded to decode capacity).
+    """
+    embed, layers, ln_f, lm_head = _unpack(arch, weights)
+    p, h, dh = arch.max_prompt, arch.heads, arch.head_dim
+    x = embed[tokens]  # [P, d]
+    # Zero padded rows so their K/V contributions (stored, masked anyway) stay tame.
+    keep = (jnp.arange(p) < length)[:, None]
+    x = jnp.where(keep, x, 0.0)
+
+    kv_all = []
+    for ln1, wq, wk, wv, wo, ln2, wg, wu, wd in layers:
+        hdd = rmsnorm(x, ln1)
+        q = (hdd @ wq).reshape(p, h, dh)
+        k = (hdd @ wk).reshape(p, arch.kv_heads, dh)
+        v = (hdd @ wv).reshape(p, arch.kv_heads, dh)
+        attn = prefill_attention(q, k, v, length)  # [P, H, Dh]
+        x = x + attn.reshape(p, arch.d) @ wo
+        x = x + swiglu_ffn(rmsnorm(x, ln2), wg, wu, wd)
+        # Stash this layer's K/V, padded to decode capacity and zeroed
+        # beyond `length`.
+        kf = jnp.where(keep, k.reshape(p, arch.kv_dim), 0.0)
+        vf = jnp.where(keep, v.reshape(p, arch.kv_dim), 0.0)
+        pad = ((0, arch.kv_cap - p), (0, 0))
+        kv_all.append(jnp.stack([jnp.pad(kf, pad), jnp.pad(vf, pad)]))
+
+    xf = rmsnorm(x, ln_f)
+    logits = xf[length - 1] @ lm_head  # [vocab]
+    kv = jnp.stack(kv_all)  # [L, 2, C, KVD]
+    return logits.astype(jnp.float32), kv.astype(jnp.float32)
+
+
+def _decode_one(arch: Arch, weights, token, pos, kv):
+    """One request's decode step. ``kv: [L, 2, C, KVD]`` updated at ``pos``."""
+    embed, layers, ln_f, lm_head = _unpack(arch, weights)
+    h, dh, c = arch.heads, arch.head_dim, arch.kv_cap
+    x = embed[token]  # [d]
+
+    new_kv = []
+    for li, (ln1, wq, wk, wv, wo, ln2, wg, wu, wd) in enumerate(layers):
+        hdd = rmsnorm(x[None, :], ln1)[0]
+        q = (hdd @ wq).reshape(h, dh)
+        k_new = hdd @ wk  # [KVD]
+        v_new = hdd @ wv
+        k_cache = jax.lax.dynamic_update_slice(kv[li, 0], k_new[None, :], (pos, 0))
+        v_cache = jax.lax.dynamic_update_slice(kv[li, 1], v_new[None, :], (pos, 0))
+        attn = decode_attention(
+            q,
+            k_cache.reshape(c, arch.kv_heads, dh),
+            v_cache.reshape(c, arch.kv_heads, dh),
+            pos,
+            # One KV sweep per head: C=192 fits VMEM comfortably (§Perf) and
+            # collapses the interpret-mode fori_loop to a single step.
+            block_c=c,
+        )  # [H, Dh]
+        x = x + attn.reshape(arch.d) @ wo
+        x = x + swiglu_ffn(rmsnorm(x[None, :], ln2), wg, wu, wd)[0]
+        new_kv.append(jnp.stack([k_cache, v_cache]))
+
+    logits = rmsnorm(x[None, :], ln_f)[0] @ lm_head
+    return logits.astype(jnp.float32), jnp.stack(new_kv)
+
+
+def decode(arch: Arch, weights: list[jax.Array], tokens: jax.Array, pos: jax.Array, kv: jax.Array):
+    """Batched decode entry.
+
+    Args:
+        tokens: ``i32[B]`` last emitted token per slot.
+        pos: ``i32[B]`` position each new token is written at.
+        kv: ``f32[B, L, 2, C, KVD]`` per-slot caches.
+
+    Returns:
+        ``(logits f32[B, vocab], kv f32[B, L, 2, C, KVD])``. Inactive slots
+        are the caller's concern (their outputs are simply unused).
+    """
+    b = arch.decode_batch
+    assert tokens.shape == (b,) and pos.shape == (b,)
+    outs = [_decode_one(arch, weights, tokens[i], pos[i], kv[i]) for i in range(b)]
+    logits = jnp.stack([o[0] for o in outs])
+    new_kv = jnp.stack([o[1] for o in outs])
+    return logits, new_kv
+
+
+def reference_generate(arch: Arch, weights, prompt: np.ndarray, steps: int) -> np.ndarray:
+    """Greedy generation through prefill→decode — the numeric ground truth
+    the rust runtime's token loop must reproduce exactly."""
+    tokens = np.zeros(arch.max_prompt, np.int32)
+    tokens[: len(prompt)] = prompt
+    logits, kv = prefill(arch, weights, jnp.asarray(tokens), jnp.int32(len(prompt)))
+    out = [int(jnp.argmax(logits))]
+    # Single active slot in a batch-B decode call.
+    b = arch.decode_batch
+    kv_b = jnp.zeros((b, arch.layers, 2, arch.kv_cap, arch.kv_dim), jnp.float32)
+    kv_b = kv_b.at[0].set(kv)
+    for i in range(steps - 1):
+        tok = jnp.zeros(b, jnp.int32).at[0].set(out[-1])
+        p = jnp.zeros(b, jnp.int32).at[0].set(len(prompt) + i)
+        logits_b, kv_b = decode(arch, weights, tok, p, kv_b)
+        out.append(int(jnp.argmax(logits_b[0])))
+    return np.array(out, np.int32)

@@ -1,0 +1,196 @@
+"""Layer-1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes, lengths and scale regimes;
+`assert_allclose` against `compile.kernels.ref` is the core signal.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import decode_attention, prefill_attention, rmsnorm, swiglu_ffn
+from compile.kernels.ref import (
+    decode_attention_ref,
+    prefill_attention_ref,
+    rmsnorm_ref,
+    swiglu_ffn_ref,
+)
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == np.dtype(jnp.bfloat16) else dict(
+        rtol=3e-5, atol=3e-5
+    )
+
+
+def randn(rng, shape, dtype, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- prefill
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    p_blocks=st.integers(1, 3),
+    heads=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([32, 64]),
+    dtype=st.sampled_from([np.float32]),
+)
+def test_prefill_attention_matches_ref(seed, p_blocks, heads, dh, dtype):
+    rng = np.random.default_rng(seed)
+    p = 64 * p_blocks
+    length = int(rng.integers(1, p + 1))
+    q = randn(rng, (p, heads, dh), dtype)
+    k = randn(rng, (p, heads, dh), dtype)
+    v = randn(rng, (p, heads, dh), dtype)
+    got = np.asarray(prefill_attention(q, k, v, jnp.int32(length)))
+    want = np.asarray(prefill_attention_ref(q, k, v, length))
+    np.testing.assert_allclose(got[:length], want[:length], **tol(np.dtype(dtype)))
+
+
+def test_prefill_attention_ignores_padding():
+    """Keys past `length` must not affect the valid rows."""
+    rng = np.random.default_rng(7)
+    p, h, dh, length = 128, 2, 32, 50
+    q = randn(rng, (p, h, dh), np.float32)
+    k = randn(rng, (p, h, dh), np.float32)
+    v = randn(rng, (p, h, dh), np.float32)
+    base = np.asarray(prefill_attention(q, k, v, jnp.int32(length)))[:length]
+    k2, v2 = k.copy(), v.copy()
+    k2[length:] = 1e6  # poison the padding
+    v2[length:] = -1e6
+    poisoned = np.asarray(prefill_attention(q, k2, v2, jnp.int32(length)))[:length]
+    np.testing.assert_allclose(base, poisoned, rtol=1e-6, atol=1e-6)
+
+
+def test_prefill_attention_is_causal():
+    """Changing a later token must not change earlier rows."""
+    rng = np.random.default_rng(3)
+    p, h, dh = 64, 2, 32
+    q = randn(rng, (p, h, dh), np.float32)
+    k = randn(rng, (p, h, dh), np.float32)
+    v = randn(rng, (p, h, dh), np.float32)
+    a = np.asarray(prefill_attention(q, k, v, jnp.int32(p)))
+    k2, v2 = k.copy(), v.copy()
+    k2[40:] += 5.0
+    v2[40:] -= 5.0
+    b = np.asarray(prefill_attention(q, k2, v2, jnp.int32(p)))
+    np.testing.assert_allclose(a[:40], b[:40], rtol=1e-6, atol=1e-6)
+    assert np.abs(a[41:] - b[41:]).max() > 1e-3, "later rows should change"
+
+
+@pytest.mark.parametrize("block_q,block_k", [(32, 32), (64, 32), (32, 64), (64, 128)])
+def test_prefill_attention_block_shapes_agree(block_q, block_k):
+    """The flash tiling must be invariant to block-shape choices."""
+    rng = np.random.default_rng(11)
+    p, h, dh = 128, 2, 32
+    q = randn(rng, (p, h, dh), np.float32)
+    k = randn(rng, (p, h, dh), np.float32)
+    v = randn(rng, (p, h, dh), np.float32)
+    a = np.asarray(
+        prefill_attention(q, k, v, jnp.int32(p), block_q=block_q, block_k=block_k)
+    )
+    want = np.asarray(prefill_attention_ref(q, k, v, p))
+    np.testing.assert_allclose(a, want, rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------- decode
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    c_blocks=st.integers(1, 3),
+    heads=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([32, 64]),
+)
+def test_decode_attention_matches_ref(seed, c_blocks, heads, dh):
+    rng = np.random.default_rng(seed)
+    c = 64 * c_blocks
+    pos = int(rng.integers(0, c))
+    q = randn(rng, (heads, dh), np.float32)
+    kc = randn(rng, (c, heads, dh), np.float32)
+    vc = randn(rng, (c, heads, dh), np.float32)
+    got = np.asarray(decode_attention(q, kc, vc, jnp.int32(pos)))
+    want = np.asarray(decode_attention_ref(q, kc, vc, pos))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_decode_attention_masks_future_cache():
+    rng = np.random.default_rng(5)
+    c, h, dh, pos = 192, 4, 64, 20
+    q = randn(rng, (h, dh), np.float32)
+    kc = randn(rng, (c, h, dh), np.float32)
+    vc = randn(rng, (c, h, dh), np.float32)
+    base = np.asarray(decode_attention(q, kc, vc, jnp.int32(pos)))
+    kc2, vc2 = kc.copy(), vc.copy()
+    kc2[pos + 1 :] = 1e6
+    vc2[pos + 1 :] = -1e6
+    poisoned = np.asarray(decode_attention(q, kc2, vc2, jnp.int32(pos)))
+    np.testing.assert_allclose(base, poisoned, rtol=1e-6, atol=1e-6)
+
+
+def test_decode_attention_pos_zero_attends_self_only():
+    rng = np.random.default_rng(9)
+    c, h, dh = 64, 2, 32
+    q = randn(rng, (h, dh), np.float32)
+    kc = randn(rng, (c, h, dh), np.float32)
+    vc = randn(rng, (c, h, dh), np.float32)
+    got = np.asarray(decode_attention(q, kc, vc, jnp.int32(0)))
+    # Softmax over one element == that element's V.
+    np.testing.assert_allclose(got, vc[0], rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- FFN / norm
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 100),
+    d=st.sampled_from([64, 256]),
+    f=st.sampled_from([128, 1024]),
+    scale=st.sampled_from([0.02, 1.0]),
+)
+def test_swiglu_ffn_matches_ref(seed, n, d, f, scale):
+    rng = np.random.default_rng(seed)
+    x = randn(rng, (n, d), np.float32)
+    wg = randn(rng, (d, f), np.float32, scale)
+    wu = randn(rng, (d, f), np.float32, scale)
+    wd = randn(rng, (f, d), np.float32, scale)
+    got = np.asarray(swiglu_ffn(x, wg, wu, wd))
+    want = np.asarray(swiglu_ffn_ref(x, wg, wu, wd))
+    assert got.shape == (n, d)
+    # f32 accumulation-order differences scale with the output magnitude
+    # (scale=1.0 drives activations to O(1e3)); compare relative to it.
+    atol = 2e-6 * max(1.0, float(np.abs(want).max()))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=atol)
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 70),
+    d=st.sampled_from([32, 256]),
+)
+def test_rmsnorm_matches_ref(seed, n, d):
+    rng = np.random.default_rng(seed)
+    x = randn(rng, (n, d), np.float32, 3.0)
+    s = randn(rng, (d,), np.float32)
+    got = np.asarray(rmsnorm(x, s))
+    want = np.asarray(rmsnorm_ref(x, s))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_rmsnorm_unit_output_scale():
+    """With scale=1, output rows must have RMS ≈ 1."""
+    rng = np.random.default_rng(1)
+    x = randn(rng, (8, 128), np.float32, 10.0)
+    out = np.asarray(rmsnorm(x, np.ones(128, np.float32)))
+    rms = np.sqrt((out**2).mean(axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)

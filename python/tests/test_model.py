@@ -1,0 +1,166 @@
+"""Layer-2 correctness: model shapes, prefill↔decode consistency, AOT build.
+
+The decisive test is `test_decode_matches_incremental_prefill`: the logits a
+decode step produces from the prefill-built KV cache must equal the logits a
+longer prefill produces directly — this is the invariant the rust runtime's
+token loop relies on.
+"""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile.model import (
+    Arch,
+    TINY,
+    decode,
+    init_params,
+    param_specs,
+    prefill,
+    reference_generate,
+)
+
+# A smaller arch for the expensive sweeps (same code paths, faster trace).
+SMALL = Arch(layers=2, d=64, heads=2, kv_heads=2, d_ff=128, vocab=64,
+             max_prompt=64, kv_cap=128, decode_batch=2)
+
+
+@pytest.fixture(scope="module")
+def small_params():
+    return [jnp.asarray(p) for p in init_params(SMALL, 0)]
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return [jnp.asarray(p) for p in init_params(TINY, 0)]
+
+
+def test_param_specs_count_and_order():
+    specs = param_specs(TINY)
+    assert specs[0][0] == "embed"
+    assert specs[-1][0] == "lm_head"
+    assert len(specs) == 2 + 9 * TINY.layers + 1
+    # ~4.5M params for the tiny config (DESIGN.md).
+    assert 3e6 < TINY.params_count() < 6e6
+
+
+def test_init_deterministic():
+    a = init_params(SMALL, 7)
+    b = init_params(SMALL, 7)
+    c = init_params(SMALL, 8)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    assert any(np.abs(x - y).max() > 0 for x, y in zip(a, c))
+
+
+def test_prefill_shapes(small_params):
+    tokens = np.zeros(SMALL.max_prompt, np.int32)
+    tokens[:5] = [1, 2, 3, 4, 5]
+    logits, kv = prefill(SMALL, small_params, jnp.asarray(tokens), jnp.int32(5))
+    assert logits.shape == (SMALL.vocab,)
+    assert kv.shape == (SMALL.layers, 2, SMALL.kv_cap, SMALL.kv_dim)
+    # KV rows past `length` must be zero (decode-capacity padding).
+    assert np.abs(np.asarray(kv)[:, :, 5:]).max() == 0.0
+
+
+def test_prefill_padding_invariant(small_params):
+    """Garbage in the padded token tail must not change the result."""
+    base = np.zeros(SMALL.max_prompt, np.int32)
+    base[:6] = [9, 8, 7, 6, 5, 4]
+    poisoned = base.copy()
+    poisoned[6:] = 63  # junk tokens past `length`
+    l1, kv1 = prefill(SMALL, small_params, jnp.asarray(base), jnp.int32(6))
+    l2, kv2 = prefill(SMALL, small_params, jnp.asarray(poisoned), jnp.int32(6))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(kv1), np.asarray(kv2), rtol=1e-6, atol=1e-6)
+
+
+def test_decode_shapes(small_params):
+    b = SMALL.decode_batch
+    kv = jnp.zeros((b, SMALL.layers, 2, SMALL.kv_cap, SMALL.kv_dim), jnp.float32)
+    logits, kv2 = decode(
+        SMALL, small_params, jnp.zeros(b, jnp.int32), jnp.zeros(b, jnp.int32), kv
+    )
+    assert logits.shape == (b, SMALL.vocab)
+    assert kv2.shape == kv.shape
+
+
+def test_decode_matches_incremental_prefill(small_params):
+    """decode(prefill KV, next token) == prefill(prompt + next token)."""
+    prompt = np.array([3, 10, 7, 60, 45, 9, 2], np.int32)
+    n = len(prompt)
+    tokens = np.zeros(SMALL.max_prompt, np.int32)
+    tokens[:n] = prompt
+    logits, kv = prefill(SMALL, small_params, jnp.asarray(tokens), jnp.int32(n))
+    nxt = int(jnp.argmax(logits))
+
+    tokens2 = tokens.copy()
+    tokens2[n] = nxt
+    want, _ = prefill(SMALL, small_params, jnp.asarray(tokens2), jnp.int32(n + 1))
+
+    b = SMALL.decode_batch
+    kv_b = jnp.zeros((b, SMALL.layers, 2, SMALL.kv_cap, SMALL.kv_dim)).at[0].set(kv)
+    tok = jnp.zeros(b, jnp.int32).at[0].set(nxt)
+    pos = jnp.zeros(b, jnp.int32).at[0].set(n)
+    got, _ = decode(SMALL, small_params, tok, pos, kv_b)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_decode_slots_are_independent(small_params):
+    """One slot's tokens/KV must not leak into another's logits."""
+    b = SMALL.decode_batch
+    rngkv = np.random.default_rng(0).standard_normal(
+        (b, SMALL.layers, 2, SMALL.kv_cap, SMALL.kv_dim)
+    ).astype(np.float32) * 0.1
+    tok = jnp.asarray(np.array([5, 6], np.int32))
+    pos = jnp.asarray(np.array([3, 4], np.int32))
+    l1, _ = decode(SMALL, small_params, tok, pos, jnp.asarray(rngkv))
+    # Change slot 1's state entirely; slot 0's logits must be unchanged.
+    rngkv2 = rngkv.copy()
+    rngkv2[1] += 1.0
+    tok2 = jnp.asarray(np.array([5, 60], np.int32))
+    l2, _ = decode(SMALL, small_params, tok2, pos, jnp.asarray(rngkv2))
+    np.testing.assert_allclose(np.asarray(l1[0]), np.asarray(l2[0]), rtol=1e-6, atol=1e-6)
+    assert np.abs(np.asarray(l1[1]) - np.asarray(l2[1])).max() > 1e-4
+
+
+def test_greedy_generation_deterministic(small_params):
+    prompt = np.array([1, 2, 3], np.int32)
+    a = reference_generate(SMALL, small_params, prompt, steps=5)
+    b = reference_generate(SMALL, small_params, prompt, steps=5)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (5,)
+    assert (a >= 0).all() and (a < SMALL.vocab).all()
+
+
+@pytest.mark.slow
+def test_aot_build_writes_consistent_artifacts(tmp_path):
+    """Full AOT pass on a small arch: manifest/weights/HLO all consistent."""
+    from compile import aot
+
+    arch = SMALL
+    aot.build(tmp_path, seed=0, arch=arch)
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["model"]["layers"] == arch.layers
+    total = sum(int(np.prod(t["shape"])) for t in manifest["weights"]["tensors"])
+    assert (tmp_path / "weights.bin").stat().st_size == total * 4
+    for entry in manifest["entries"]:
+        text = (tmp_path / entry["file"]).read_text()
+        assert text.startswith("HloModule"), f"{entry['name']} is not HLO text"
+    names = {e["name"] for e in manifest["entries"]}
+    assert names == {"prefill", "decode"}
+
+
+def test_artifacts_dir_if_built():
+    """If `make artifacts` ran, the checked artifacts must be loadable."""
+    art = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+    if not (art / "manifest.json").exists():
+        pytest.skip("artifacts not built")
+    manifest = json.loads((art / "manifest.json").read_text())
+    total = sum(int(np.prod(t["shape"])) for t in manifest["weights"]["tensors"])
+    assert (art / manifest["weights"]["file"]).stat().st_size == total * 4
+    for entry in manifest["entries"]:
+        assert (art / entry["file"]).read_text().startswith("HloModule")

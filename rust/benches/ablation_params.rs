@@ -1,0 +1,70 @@
+//! Design-choice ablations beyond Fig. 13: the two tunable knobs the paper
+//! discusses but does not sweep.
+//!
+//! (a) hysteresis buffer δ (§4.2): 0 → naive async (oscillation), large →
+//!     unresponsive. Measures latency + applied repartitions.
+//! (b) SPF age-decay γ (§4.3.1 / Eq. 10): 0 → pure SPF (starves long
+//!     prompts, best mean TTFT), large → FCFS-like (fair, worse mean).
+//!
+//! `cargo bench --bench ablation_params`
+
+use nexus::engine::{run_engine, EngineCfg, EngineKind};
+use nexus::model::ModelConfig;
+use nexus::util::fmt::{dur, Table};
+use nexus::workload::{generate, Dataset};
+
+fn main() {
+    let n = std::env::var("NEXUS_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(100);
+    let trace = generate(Dataset::Mixed, n, 3.0, 42);
+
+    // (a) δ sweep.
+    let mut t = Table::new(
+        "hysteresis buffer δ (Mixed / llama8b @ 3 req/s)",
+        &["delta", "TTFT", "TBT", "norm", "repartitions", "suppressed"],
+    );
+    for delta in [0.0, 0.02, 0.05, 0.10, 0.20] {
+        let mut cfg = EngineCfg::new(ModelConfig::llama8b(), 42);
+        cfg.partition.delta = delta;
+        let m = run_engine(EngineKind::Nexus, &cfg, &trace);
+        let s = m.summary();
+        t.row(&[
+            format!("{delta:.2}"),
+            dur(s.mean_ttft),
+            dur(s.mean_tbt),
+            dur(s.mean_norm),
+            format!("{}", m.repartitions),
+            format!("{}", m.suppressed_repartitions),
+        ]);
+    }
+    t.print();
+    println!("(paper §4.2: δ filters transient noise; δ=0 degenerates to naive async)\n");
+
+    // (b) γ sweep.
+    let mut t = Table::new(
+        "SPF age-decay γ (anti-starvation, Eq. 10)",
+        &["gamma", "mean TTFT", "p95 TTFT", "p99-ish (max)", "mean norm"],
+    );
+    for gamma in [0.0, 5.0, 15.0, 50.0, 200.0] {
+        let mut cfg = EngineCfg::new(ModelConfig::llama8b(), 42);
+        cfg.gamma = gamma;
+        let m = run_engine(EngineKind::Nexus, &cfg, &trace);
+        let s = m.summary();
+        let max_ttft = m
+            .records
+            .iter()
+            .map(|r| r.ttft())
+            .fold(0.0f64, f64::max);
+        t.row(&[
+            format!("{gamma:.0}"),
+            dur(s.mean_ttft),
+            dur(s.p95_ttft),
+            dur(max_ttft),
+            dur(s.mean_norm),
+        ]);
+    }
+    t.print();
+    println!(
+        "(paper §4.3.1: low γ favors responsiveness (mean), high γ fairness (tail); \
+         the default 15 balances them)"
+    );
+}

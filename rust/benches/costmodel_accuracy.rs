@@ -1,0 +1,87 @@
+//! §4.1 validation — cost-model prediction accuracy and greedy-search
+//! convergence.
+//!
+//! (a) predicted vs substrate-measured iteration latency over random batch
+//!     states (isolated per phase, across the SM grid): mean/p95 absolute
+//!     relative error;
+//! (b) Algorithm-1 convergence: cost-model queries per decision (paper:
+//!     converges in 2–4 greedy iterations).
+//!
+//! `cargo bench --bench costmodel_accuracy`
+
+use nexus::costmodel::calibrate;
+use nexus::gpusim::{iteration_time_isolated, GpuSpec};
+use nexus::model::ModelConfig;
+use nexus::partition::{BatchState, PartitionConfig, PartitionController};
+use nexus::util::fmt::Table;
+use nexus::util::rng::Rng;
+use nexus::util::{mean, percentile};
+
+fn main() {
+    let gpu = GpuSpec::l20();
+    let cost = calibrate(&gpu);
+    let mut rng = Rng::new(2024);
+
+    let mut t = Table::new(
+        "cost-model accuracy vs substrate (isolated iterations, random states)",
+        &["model", "phase", "mean |rel err|", "p95 |rel err|", "max"],
+    );
+    for model in [ModelConfig::qwen3b(), ModelConfig::llama8b()] {
+        for prefill in [true, false] {
+            let mut errs = Vec::new();
+            for _ in 0..300 {
+                let r = gpu.quantize(rng.range_f64(0.1, 1.0));
+                let (truth, pred) = if prefill {
+                    let chunk = rng.range_usize(64, 2048);
+                    let kv = rng.range_f64(chunk as f64, 12000.0);
+                    let ops = model.prefill_ops(chunk, chunk as f64 * kv, kv, 0);
+                    (iteration_time_isolated(&gpu, &ops, r), cost.prefill(&ops, r).total)
+                } else {
+                    let batch = rng.range_usize(1, 256);
+                    let ctx = rng.range_f64(64.0, 4000.0);
+                    let ops = model.decode_ops(batch, batch as f64 * ctx);
+                    (iteration_time_isolated(&gpu, &ops, r), cost.decode(&ops, r, None))
+                };
+                errs.push(((pred - truth) / truth).abs());
+            }
+            t.row(&[
+                model.name.to_string(),
+                if prefill { "prefill" } else { "decode" }.into(),
+                format!("{:.1}%", 100.0 * mean(&errs)),
+                format!("{:.1}%", 100.0 * percentile(&errs, 95.0)),
+                format!("{:.1}%", 100.0 * errs.iter().cloned().fold(0.0, f64::max)),
+            ]);
+        }
+    }
+    t.print();
+    println!("(target: <15-20% mean — enough to rank SM partitions)\n");
+
+    // (b) greedy convergence.
+    let model = ModelConfig::qwen3b();
+    let mut queries_cold = Vec::new();
+    let mut queries_warm = Vec::new();
+    for _ in 0..200 {
+        let chunk = rng.range_usize(64, 2048);
+        let kv = rng.range_f64(chunk as f64, 10000.0);
+        let pre = model.prefill_ops(chunk, chunk as f64 * kv, kv, 0);
+        let dec = model.decode_ops(rng.range_usize(1, 128), rng.range_f64(1e3, 2e5));
+        let st = BatchState { prefill_ops: &pre, decode_ops: &dec, kv_usage: rng.f64() };
+        let mut ctl = PartitionController::new(PartitionConfig::default());
+        queries_cold.push(ctl.decide(&cost, &st).queries as f64);
+        queries_warm.push(ctl.decide(&cost, &st).queries as f64);
+    }
+    let mut t = Table::new(
+        "Algorithm-1 greedy search cost (cost-model queries per decision)",
+        &["state", "mean", "p95", "max"],
+    );
+    for (name, q) in [("cold (fresh controller)", &queries_cold), ("warm (settled)", &queries_warm)] {
+        t.row(&[
+            name.to_string(),
+            format!("{:.1}", mean(q)),
+            format!("{:.0}", percentile(q, 95.0)),
+            format!("{:.0}", q.iter().cloned().fold(0.0, f64::max)),
+        ]);
+    }
+    t.print();
+    println!("(each greedy *iteration* is a few queries; paper: converges in 2–4 iterations)");
+}

@@ -1,0 +1,60 @@
+//! Figure 11 — offline inference makespan: all requests submitted at t=0.
+//! Long Data Collections on Qwen2.5-3B and Mixed on Llama3.1-8B; X marks a
+//! timeout (FastServe's recompute collapse in the paper).
+//!
+//! `cargo bench --bench fig11_offline`
+
+use nexus::coordinator::{offline_makespan, Experiment};
+use nexus::engine::EngineKind;
+use nexus::model::ModelConfig;
+use nexus::util::fmt::{dur, Table};
+use nexus::workload::Dataset;
+
+fn main() {
+    let n = std::env::var("NEXUS_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(100);
+    for (dataset, model) in [
+        (Dataset::LongData, ModelConfig::qwen3b()),
+        (Dataset::Mixed, ModelConfig::llama8b()),
+    ] {
+        let mut exp = Experiment::new(model, dataset, n, 1.0);
+        // Offline batches stress memory: emulate the paper's tighter
+        // effective KV budget under full batches.
+        exp.seed = 42;
+        let mut t = Table::new(
+            &format!("Fig 11 — offline makespan: {} / {} ({} reqs)", dataset.name(), model.name, n),
+            &["engine", "makespan", "tok/s", "vs vLLM", "gpus"],
+        );
+        let mut vllm_mk = None;
+        for &kind in EngineKind::all() {
+            match offline_makespan(kind, &exp) {
+                Some((mk, m)) => {
+                    if kind == EngineKind::Vllm {
+                        vllm_mk = Some(mk);
+                    }
+                    t.row(&[
+                        kind.name().to_string(),
+                        dur(mk),
+                        format!("{:.0}", m.summary().token_throughput),
+                        vllm_mk
+                            .map(|v| format!("{:+.0}%", 100.0 * (mk - v) / v))
+                            .unwrap_or_default(),
+                        format!("{}", kind.gpus(&exp.model)),
+                    ]);
+                }
+                None => t.row(&[
+                    kind.name().to_string(),
+                    "X (timeout)".into(),
+                    String::new(),
+                    String::new(),
+                    format!("{}", kind.gpus(&exp.model)),
+                ]),
+            }
+        }
+        t.print();
+        println!();
+    }
+    println!(
+        "(paper shape: Nexus 5–50% below vLLM on LDC; vLLM-P/D lowest but on 2 GPUs; \
+         FastServe times out)"
+    );
+}

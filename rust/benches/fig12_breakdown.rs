@@ -1,0 +1,55 @@
+//! Figure 12 — breakdown of per-token latency into scheduling, queuing and
+//! execution stages, for Long Data Collections (Qwen3B) and Mixed
+//! (Llama8B).
+//!
+//! `cargo bench --bench fig12_breakdown`
+
+use nexus::coordinator::Experiment;
+use nexus::engine::EngineKind;
+use nexus::model::ModelConfig;
+use nexus::util::fmt::{dur, Table};
+use nexus::workload::Dataset;
+
+fn main() {
+    let n = std::env::var("NEXUS_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(120);
+    for (dataset, model, rate) in [
+        (Dataset::LongData, ModelConfig::qwen3b(), 2.5),
+        (Dataset::Mixed, ModelConfig::llama8b(), 2.5),
+    ] {
+        let exp = Experiment::new(model, dataset, n, rate);
+        let mut t = Table::new(
+            &format!(
+                "Fig 12 — per-token latency breakdown: {} / {} @ {} req/s",
+                dataset.name(),
+                model.name,
+                rate
+            ),
+            &["engine", "sched", "queue", "exec", "total", "queue share"],
+        );
+        let mut vllm_queue = None;
+        for &kind in EngineKind::all() {
+            let m = exp.run(kind);
+            let b = m.breakdown();
+            if kind == EngineKind::Vllm {
+                vllm_queue = Some(b.queue);
+            }
+            t.row(&[
+                kind.name().to_string(),
+                dur(b.sched),
+                dur(b.queue),
+                dur(b.exec),
+                dur(b.total()),
+                format!("{:.0}%", 100.0 * b.queue / b.total().max(1e-12)),
+            ]);
+        }
+        t.print();
+        if let Some(vq) = vllm_queue {
+            let nexus_q = exp.run(EngineKind::Nexus).breakdown().queue;
+            println!("queue-time: Nexus {:.1}x lower than vLLM\n", vq / nexus_q.max(1e-12));
+        }
+    }
+    println!(
+        "(paper shape: scheduling negligible for all; queuing dominates under load and \
+         Nexus cuts it 4–5x vs monolithic baselines; execution comparable)"
+    );
+}

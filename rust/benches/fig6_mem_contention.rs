@@ -1,0 +1,105 @@
+//! Figure 6 — memory contention's impact and variability.
+//!
+//! (a) decode latency vs the co-running prefill's KV length under a fixed
+//!     50/50 SM partition (ground truth = the fluid simulator's
+//!     demand-proportional bandwidth sharing), alongside the Eq. 8–9 cost
+//!     model's prediction;
+//! (b) prefill KV length over time in a replayed chunked-prefill run —
+//!     the §3.3 variability that makes static partitioning insufficient.
+//!
+//! `cargo bench --bench fig6_mem_contention`
+
+use nexus::costmodel::calibrate;
+use nexus::gpusim::{GpuSpec, Sim};
+use nexus::model::ModelConfig;
+use nexus::util::fmt::{dur, Table};
+use nexus::util::rng::Rng;
+use nexus::util::{mean, percentile};
+use nexus::workload::Dataset;
+
+fn main() {
+    let spec = GpuSpec::l20();
+    let model = ModelConfig::qwen3b();
+    let cost = calibrate(&spec);
+    let decode = model.decode_ops(16, 16.0 * 2000.0);
+
+    // (a) co-run a decode iteration with prefill chunks of growing KV.
+    let mut t = Table::new(
+        "Fig 6a — decode latency vs co-running prefill KV length (50/50 SMs)",
+        &["prefill KV", "decode (sim)", "Δ vs 2k", "decode (cost model)", "decode (no prefill)"],
+    );
+    let solo = {
+        let mut sim = Sim::new(spec, 2);
+        sim.set_partition(0, 0.5);
+        sim.set_partition(1, 0.5);
+        sim.submit(1, &decode, 2);
+        sim.drain().last().unwrap().time
+    };
+    let mut base = None;
+    for kv_len in [2000.0, 4000.0, 6000.0, 8000.0, 10000.0] {
+        let prefill = model.prefill_ops(512, 512.0 * kv_len, kv_len, 0);
+        // Simulator ground truth: keep the prefill stream busy with
+        // back-to-back chunks while one decode iteration runs.
+        let mut sim = Sim::new(spec, 2);
+        sim.set_partition(0, 0.5);
+        sim.set_partition(1, 0.5);
+        for k in 0..8 {
+            sim.submit(0, &prefill, 100 + k);
+        }
+        sim.submit(1, &decode, 2);
+        let done = sim.drain();
+        let t_dec = done.iter().find(|c| c.tag == 2).unwrap().time;
+        let b = *base.get_or_insert(t_dec);
+        // Analytical prediction (Eq. 8–9 with rate-based shares).
+        let pp = cost.prefill(&prefill, 0.5).pressure;
+        let pred = cost.decode(&decode, 0.5, Some(&pp));
+        t.row(&[
+            format!("{kv_len:.0}"),
+            dur(t_dec),
+            format!("+{:.1}%", 100.0 * (t_dec - b) / b),
+            dur(pred),
+            dur(solo),
+        ]);
+    }
+    t.print();
+    println!(
+        "(paper: +36% from 2k→10k on real hardware; the fluid average-rate model \
+         reproduces the monotone shape at smaller magnitude — see EXPERIMENTS.md)\n"
+    );
+
+    // (b) prefill KV length variability in a replayed chunked run.
+    let mut rng = Rng::new(7);
+    let mut kv_series: Vec<f64> = Vec::new();
+    // Replay: requests arrive, are prefilled in 512-token chunks FCFS; the
+    // "prefill KV length" each iteration is the attended context of the
+    // current chunk.
+    let mut backlog: Vec<(usize, usize)> = Vec::new(); // (prompt, prefilled)
+    for step in 0..4000 {
+        if step % 3 == 0 {
+            let (p, _) = Dataset::LongData.sample(&mut rng);
+            backlog.push((p, 0));
+        }
+        if let Some(head) = backlog.first_mut() {
+            let take = (head.0 - head.1).min(512);
+            head.1 += take;
+            kv_series.push(head.1 as f64);
+            if head.1 >= head.0 {
+                backlog.remove(0);
+            }
+        }
+    }
+    let windows: Vec<f64> = kv_series.chunks(50).map(mean).collect();
+    let mut t = Table::new(
+        "Fig 6b — prefill KV length variability over the run",
+        &["stat", "tokens"],
+    );
+    t.row(&["mean".into(), format!("{:.0}", mean(&kv_series))]);
+    t.row(&["p5".into(), format!("{:.0}", percentile(&kv_series, 5.0))]);
+    t.row(&["p50".into(), format!("{:.0}", percentile(&kv_series, 50.0))]);
+    t.row(&["p95".into(), format!("{:.0}", percentile(&kv_series, 95.0))]);
+    let wmin = windows.iter().cloned().fold(f64::INFINITY, f64::min);
+    let wmax = windows.iter().cloned().fold(0.0, f64::max);
+    t.row(&["50-iter window min/max".into(), format!("{wmin:.0} / {wmax:.0}")]);
+    t.print();
+    println!("(fluctuates by >4x across windows → contention is not statically predictable)");
+}

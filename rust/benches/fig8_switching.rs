@@ -1,0 +1,102 @@
+//! Figure 8 — SM partition switching mechanisms under a repartition storm:
+//! synchronous (global checkpoint), naive asynchronous, and Nexus's
+//! buffered (hysteresis) asynchronous switching.
+//!
+//! Both streams run continuous work while a controller proposes a new
+//! partition every iteration, oscillating ±3% around a drifting target with
+//! occasional genuine shifts. We measure completed iterations, GPU
+//! utilization, and the number of physical repartitions.
+//!
+//! `cargo bench --bench fig8_switching`
+
+use nexus::gpusim::{GpuSpec, Sim};
+use nexus::model::ModelConfig;
+use nexus::util::fmt::Table;
+use nexus::util::rng::Rng;
+
+#[derive(Clone, Copy, PartialEq)]
+enum Policy {
+    Synchronous,
+    NaiveAsync,
+    Hysteresis(f64),
+}
+
+fn run(policy: Policy, horizon: f64) -> (usize, f64, usize) {
+    let spec = GpuSpec::l20();
+    let model = ModelConfig::qwen3b();
+    let prefill = model.prefill_ops(512, 512.0 * 3000.0, 3000.0, 0);
+    let decode = model.decode_ops(24, 24.0 * 1500.0);
+    let mut sim = Sim::new(spec, 2);
+    let mut rng = Rng::new(99);
+    let mut applied_rp = 0.55f64;
+    sim.set_partition(0, applied_rp);
+    sim.set_partition(1, 1.0 - applied_rp);
+    let mut completed = 0usize;
+    let mut switches = 0usize;
+    let mut tag = 0u64;
+    let mut drift = 0.55f64;
+
+    // Keep both streams fed; propose a repartition at each decode boundary.
+    while sim.now() < horizon {
+        for s in 0..2 {
+            if !sim.busy(s) {
+                tag += 1;
+                sim.submit(s, if s == 0 { &prefill } else { &decode }, tag);
+            }
+        }
+        let t = sim.peek_next_completion().unwrap();
+        let done = sim.advance_to(t + 1e-12);
+        completed += done.len();
+
+        // Controller proposal: jitter ± occasional real shift.
+        if rng.chance(0.02) {
+            drift = rng.range_f64(0.35, 0.75);
+        }
+        let proposal = (drift + rng.range_f64(-0.03, 0.03)).clamp(0.1, 0.9);
+        let apply = match policy {
+            Policy::NaiveAsync => true,
+            Policy::Hysteresis(delta) => (proposal - applied_rp).abs() >= delta,
+            Policy::Synchronous => true,
+        };
+        if apply && (proposal - applied_rp).abs() > 1e-9 {
+            if policy == Policy::Synchronous {
+                // Global checkpoint: drain BOTH streams before switching —
+                // the idle bubble of Fig. 8a.
+                let drained = sim.drain();
+                completed += drained.len();
+            }
+            applied_rp = proposal;
+            sim.set_partition(0, applied_rp);
+            sim.set_partition(1, 1.0 - applied_rp);
+            switches += 1;
+        }
+    }
+    let util = (sim.busy_time[0] + sim.busy_time[1]) / (2.0 * sim.now());
+    (completed, util, switches)
+}
+
+fn main() {
+    let horizon = 30.0;
+    let mut t = Table::new(
+        "Fig 8 — switching mechanism comparison (30s storm, proposal every iteration)",
+        &["mechanism", "iterations done", "GPU utilization", "physical switches"],
+    );
+    for (name, policy) in [
+        ("synchronous (drain both)", Policy::Synchronous),
+        ("naive asynchronous", Policy::NaiveAsync),
+        ("buffered async (δ=0.05)", Policy::Hysteresis(0.05)),
+    ] {
+        let (done, util, switches) = run(policy, horizon);
+        t.row(&[
+            name.to_string(),
+            format!("{done}"),
+            format!("{:.1}%", util * 100.0),
+            format!("{switches}"),
+        ]);
+    }
+    t.print();
+    println!(
+        "(expected: hysteresis ≈ naive-async throughput with ~10x fewer switches; \
+         synchronous loses utilization to drain bubbles)"
+    );
+}

@@ -1,0 +1,80 @@
+//! Figure 9 — end-to-end single-GPU evaluation: three workloads × five
+//! systems × a request-rate sweep; mean and P95 of normalized latency,
+//! TTFT, and TBT (the paper's six columns), plus sustainable throughput.
+//!
+//! All systems use one simulated L20 except vLLM-P/D (two). Request count
+//! per point is controlled by `NEXUS_BENCH_N` (default 120).
+//!
+//! `cargo bench --bench fig9_single_gpu`
+
+use nexus::coordinator::{sustainable_throughput, Experiment, SloSpec};
+use nexus::engine::EngineKind;
+use nexus::model::ModelConfig;
+use nexus::util::fmt::{dur, Table};
+use nexus::workload::Dataset;
+
+fn bench_n() -> usize {
+    std::env::var("NEXUS_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(120)
+}
+
+fn main() {
+    let n = bench_n();
+    let configs = [
+        (Dataset::LongData, ModelConfig::qwen3b(), vec![1.0, 2.0, 3.0]),
+        (Dataset::Arxiv, ModelConfig::qwen3b(), vec![1.5, 3.0, 4.5]),
+        (Dataset::Mixed, ModelConfig::llama8b(), vec![1.5, 2.5, 3.5]),
+    ];
+    for (dataset, model, rates) in configs {
+        println!("=== {} on {} ({} requests/point) ===", dataset.name(), model.name, n);
+        let mut t = Table::new(
+            &format!("Fig 9 — {} / {}", dataset.name(), model.name),
+            &[
+                "engine", "rate", "norm", "norm95", "TTFT", "TTFT95", "TBT", "TBT95",
+            ],
+        );
+        for &kind in EngineKind::all() {
+            for &rate in &rates {
+                let exp = Experiment::new(model, dataset, n, rate);
+                let s = exp.run(kind).summary();
+                t.row(&[
+                    kind.name().to_string(),
+                    format!("{rate:.1}"),
+                    dur(s.mean_norm),
+                    dur(s.p95_norm),
+                    dur(s.mean_ttft),
+                    dur(s.p95_ttft),
+                    dur(s.mean_tbt),
+                    dur(s.p95_tbt),
+                ]);
+            }
+        }
+        t.print();
+
+        // Columns 1–2 summary: max sustainable rate under the latency SLO.
+        let mut t2 = Table::new(
+            "max sustainable throughput (p95 norm ≤ 0.2 s/token)",
+            &["engine", "req/s", "vs vLLM"],
+        );
+        let slo = SloSpec::default();
+        let base = Experiment::new(model, dataset, n.min(80), 1.0);
+        let hi = 16.0;
+        let mut vllm_thr = 0.0;
+        for &kind in EngineKind::all() {
+            let thr = sustainable_throughput(kind, &base, slo, 0.25, hi, 0.5);
+            if kind == EngineKind::Vllm {
+                vllm_thr = thr;
+            }
+            t2.row(&[
+                kind.name().to_string(),
+                if thr >= hi { format!("≥{hi:.0}") } else { format!("{thr:.2}") },
+                if vllm_thr > 0.0 { format!("{:.2}x", thr / vllm_thr) } else { "—".into() },
+            ]);
+        }
+        t2.print();
+        println!();
+    }
+    println!(
+        "(paper shape: Nexus 1.5–2.2x vLLM throughput, 2–20x TTFT, 1.2–2.5x TBT; \
+         SGLang between; FastServe good mean-TTFT / bad tail; vLLM-P/D best TBT on 2 GPUs)"
+    );
+}

@@ -1,0 +1,122 @@
+//! §Perf — hot-path microbenchmarks for the L3 coordinator. These anchor
+//! the EXPERIMENTS.md §Perf iteration log: the partition decision must be
+//! ≪ 1 ms (it runs per batch inside the serving loop), the simulator event
+//! loop bounds experiment turnaround, and the schedulers must stay
+//! negligible (Fig. 12's "scheduling overhead" row).
+//!
+//! `cargo bench --bench perf_hotpath`
+
+use nexus::coordinator::Experiment;
+use nexus::costmodel::calibrate;
+use nexus::engine::EngineKind;
+use nexus::gpusim::{GpuSpec, Sim};
+use nexus::model::ModelConfig;
+use nexus::partition::{BatchState, PartitionConfig, PartitionController};
+use nexus::sched::{spf_batch, PrefillItem};
+use nexus::util::fmt::Table;
+use nexus::util::rng::Rng;
+use std::time::Instant;
+
+fn time_it<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() {
+    let gpu = GpuSpec::l20();
+    let cost = calibrate(&gpu);
+    let model = ModelConfig::qwen3b();
+    let mut t = Table::new("L3 hot-path microbenchmarks", &["path", "per op", "note"]);
+
+    // 1. Cost-model query (one phase prediction).
+    let pre = model.prefill_ops(512, 512.0 * 4000.0, 4000.0, 0);
+    let dec = model.decode_ops(32, 32.0 * 1500.0);
+    let per = time_it(200_000, || {
+        std::hint::black_box(cost.prefill(std::hint::black_box(&pre), 0.6));
+    });
+    t.row(&["cost model: prefill query".into(), fmt_ns(per), "Eq. 5+8".into()]);
+    let per = time_it(200_000, || {
+        std::hint::black_box(cost.decode(std::hint::black_box(&dec), 0.4, None));
+    });
+    t.row(&["cost model: decode query".into(), fmt_ns(per), "Eq. 6+9".into()]);
+
+    // 2. Full partition decision (Algorithm 1).
+    let mut ctl = PartitionController::new(PartitionConfig::default());
+    let st = BatchState { prefill_ops: &pre, decode_ops: &dec, kv_usage: 0.5 };
+    let per = time_it(20_000, || {
+        std::hint::black_box(ctl.decide(&cost, &st));
+    });
+    t.row(&[
+        "partition decision (Alg. 1)".into(),
+        fmt_ns(per),
+        "target ≪ 1 ms/batch".into(),
+    ]);
+
+    // 3. SPF scheduling over a deep queue.
+    let mut rng = Rng::new(1);
+    let queue: Vec<PrefillItem> = (0..10_000)
+        .map(|id| PrefillItem {
+            id,
+            prompt_len: rng.range_usize(16, 10_000),
+            prefilled: 0,
+            arrival: rng.range_f64(0.0, 100.0),
+        })
+        .collect();
+    let per = time_it(500, || {
+        std::hint::black_box(spf_batch(std::hint::black_box(&queue), 50.0, 2048, 15.0));
+    });
+    t.row(&["SPF batch over 10k queue".into(), fmt_ns(per), "Alg. 2".into()]);
+
+    // 4. Simulator kernel throughput (events/sec).
+    let ops = model.decode_ops(16, 16.0 * 1000.0);
+    let n_kernels = 20_000;
+    let t0 = Instant::now();
+    let mut sim = Sim::new(gpu, 2);
+    sim.set_partition(0, 0.5);
+    sim.set_partition(1, 0.5);
+    let mut done = 0usize;
+    let mut tag = 0;
+    while done < n_kernels {
+        for s in 0..2 {
+            if !sim.busy(s) {
+                tag += 1;
+                sim.submit(s, &ops, tag);
+            }
+        }
+        let t_next = sim.peek_next_completion().unwrap();
+        done += sim.advance_to(t_next + 1e-12).len();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let per_kernel = wall / (n_kernels as f64 * ops.len() as f64);
+    t.row(&[
+        "gpusim kernel event".into(),
+        fmt_ns(per_kernel),
+        format!("{:.1}M kernels/s", 1e-6 / per_kernel),
+    ]);
+
+    // 5. End-to-end experiment turnaround (sim seconds per wall second).
+    let exp = Experiment::new(model, nexus::workload::Dataset::ShareGpt, 60, 4.0);
+    let t0 = Instant::now();
+    let m = exp.run(EngineKind::Nexus);
+    let wall = t0.elapsed().as_secs_f64();
+    t.row(&[
+        "Nexus engine end-to-end".into(),
+        format!("{:.2}s wall", wall),
+        format!("{:.0}x realtime ({:.1}s sim)", m.makespan / wall, m.makespan),
+    ]);
+
+    t.print();
+}
+
+fn fmt_ns(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.0} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else {
+        format!("{:.2} ms", secs * 1e3)
+    }
+}

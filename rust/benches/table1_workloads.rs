@@ -1,0 +1,39 @@
+//! Table 1 — workload characteristics: generated length statistics next to
+//! the paper's published rows.
+//!
+//! `cargo bench --bench table1_workloads`
+
+use nexus::util::fmt::Table;
+use nexus::workload::{generate, length_stats, table1_reference, Dataset};
+
+fn main() {
+    let n = std::env::var("NEXUS_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8000usize);
+    let reference = table1_reference();
+    let mut t = Table::new(
+        "Table 1 — workload length statistics (ours vs paper)",
+        &["dataset", "dir", "mean", "P50", "P95", "P99", "paper mean/P50/P95/P99"],
+    );
+    for ds in [Dataset::LongData, Dataset::Arxiv, Dataset::ShareGpt] {
+        let trace = generate(ds, n, 1.0, 123);
+        let want = reference[ds.name()];
+        let ins: Vec<usize> = trace.iter().map(|r| r.prompt_len).collect();
+        let outs: Vec<usize> = trace.iter().map(|r| r.output_len).collect();
+        for (dir, lens, w) in [("In", &ins, &want[0..4]), ("Out", &outs, &want[4..8])] {
+            let (m, p50, p95, p99) = length_stats(lens);
+            t.row(&[
+                ds.name().to_string(),
+                dir.to_string(),
+                format!("{m:.0}"),
+                format!("{p50:.0}"),
+                format!("{p95:.0}"),
+                format!("{p99:.0}"),
+                format!("{:.0} / {:.0} / {:.0} / {:.0}", w[0], w[1], w[2], w[3]),
+            ]);
+        }
+    }
+    t.print();
+    println!("({n} samples per dataset; fit = clamped log-normal on P50/P95)");
+}

@@ -1,0 +1,171 @@
+//! Experiment coordinator: trace construction, engine comparison runs, and
+//! the sustainable-throughput search used for Fig. 9/10 column 1–2.
+
+use crate::engine::{run_engine, EngineCfg, EngineKind};
+use crate::metrics::{RunMetrics, Summary};
+use crate::model::ModelConfig;
+use crate::workload::{self, Dataset};
+
+/// One experiment's shape: which model/dataset, how many requests, at what
+/// Poisson rate (requests/second).
+#[derive(Debug, Clone)]
+pub struct Experiment {
+    pub model: ModelConfig,
+    pub dataset: Dataset,
+    pub n_requests: usize,
+    pub rate: f64,
+    pub seed: u64,
+}
+
+impl Experiment {
+    pub fn new(model: ModelConfig, dataset: Dataset, n_requests: usize, rate: f64) -> Self {
+        Experiment { model, dataset, n_requests, rate, seed: 42 }
+    }
+
+    pub fn trace(&self) -> Vec<workload::Request> {
+        workload::generate(self.dataset, self.n_requests, self.rate, self.seed)
+    }
+
+    pub fn cfg(&self) -> EngineCfg {
+        let mut cfg = EngineCfg::new(self.model, self.seed);
+        // Radix hit rates by workload: chat traffic shares prefixes far more
+        // than long-document summarization.
+        cfg.radix = match self.dataset {
+            Dataset::ShareGpt => (0.5, 0.5),
+            Dataset::Mixed => (0.4, 0.5),
+            Dataset::LongData => (0.3, 0.4),
+            Dataset::Arxiv => (0.2, 0.4),
+        };
+        cfg
+    }
+
+    /// Run one engine on this experiment's trace.
+    pub fn run(&self, kind: EngineKind) -> RunMetrics {
+        run_engine(kind, &self.cfg(), &self.trace())
+    }
+
+    /// Run all requested engines, returning (kind, metrics) pairs.
+    pub fn run_all(&self, kinds: &[EngineKind]) -> Vec<(EngineKind, RunMetrics)> {
+        kinds.iter().map(|&k| (k, self.run(k))).collect()
+    }
+}
+
+/// Latency constraints defining "sustainable" load (§6.2.1: the highest
+/// arrival rate handled without violating token latency constraints).
+#[derive(Debug, Clone, Copy)]
+pub struct SloSpec {
+    /// P95 normalized latency ceiling (s per output token).
+    pub p95_norm: f64,
+    /// Mean TTFT ceiling (s).
+    pub mean_ttft: f64,
+}
+
+impl Default for SloSpec {
+    fn default() -> Self {
+        SloSpec { p95_norm: 0.20, mean_ttft: 15.0 }
+    }
+}
+
+impl SloSpec {
+    pub fn satisfied(&self, s: &Summary, total: usize) -> bool {
+        s.completed == total && s.p95_norm <= self.p95_norm && s.mean_ttft <= self.mean_ttft
+    }
+}
+
+/// Binary-search the maximum sustainable request rate for one engine.
+///
+/// Runs `n_requests`-sized traces at candidate rates in `[lo, hi]` req/s and
+/// returns the highest rate whose run satisfies `slo` (resolution `tol`).
+pub fn sustainable_throughput(
+    kind: EngineKind,
+    base: &Experiment,
+    slo: SloSpec,
+    lo: f64,
+    hi: f64,
+    tol: f64,
+) -> f64 {
+    let ok_at = |rate: f64| -> bool {
+        let mut exp = base.clone();
+        exp.rate = rate;
+        let m = exp.run(kind);
+        slo.satisfied(&m.summary(), exp.n_requests)
+    };
+    let mut lo = lo;
+    let mut hi = hi;
+    if !ok_at(lo) {
+        return 0.0;
+    }
+    if ok_at(hi) {
+        return hi;
+    }
+    while hi - lo > tol {
+        let mid = 0.5 * (lo + hi);
+        if ok_at(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Offline makespan (§6.3): all requests submitted at t=0; returns the
+/// completion time, or `None` on timeout (some request never finished).
+pub fn offline_makespan(kind: EngineKind, exp: &Experiment) -> Option<(f64, RunMetrics)> {
+    let trace = workload::offline(exp.dataset, exp.n_requests, exp.seed);
+    let m = run_engine(kind, &exp.cfg(), &trace);
+    if m.timeouts > 0 || m.summary().completed < exp.n_requests {
+        None
+    } else {
+        Some((m.makespan, m))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Experiment {
+        Experiment::new(ModelConfig::qwen3b(), Dataset::ShareGpt, 25, 3.0)
+    }
+
+    #[test]
+    fn experiment_runs_and_summarizes() {
+        let exp = small();
+        let m = exp.run(EngineKind::Nexus);
+        let s = m.summary();
+        assert_eq!(s.completed, 25);
+        assert!(s.mean_ttft > 0.0 && s.mean_tbt > 0.0);
+    }
+
+    #[test]
+    fn run_all_covers_kinds() {
+        let exp = small();
+        let res = exp.run_all(&[EngineKind::Vllm, EngineKind::Nexus]);
+        assert_eq!(res.len(), 2);
+        assert!(res.iter().all(|(_, m)| m.summary().completed == 25));
+    }
+
+    #[test]
+    fn throughput_search_brackets() {
+        let mut exp = small();
+        exp.n_requests = 20;
+        let slo = SloSpec::default();
+        let thr = sustainable_throughput(EngineKind::Nexus, &exp, slo, 0.5, 40.0, 2.0);
+        assert!(thr > 0.0, "nexus must sustain some load");
+        // An absurd SLO yields zero.
+        let strict = SloSpec { p95_norm: 1e-6, mean_ttft: 1e-6 };
+        assert_eq!(
+            sustainable_throughput(EngineKind::Vllm, &exp, strict, 0.5, 40.0, 2.0),
+            0.0
+        );
+    }
+
+    #[test]
+    fn offline_makespan_positive() {
+        let exp = Experiment::new(ModelConfig::qwen3b(), Dataset::ShareGpt, 20, 1.0);
+        let (mk, m) = offline_makespan(EngineKind::Vllm, &exp).unwrap();
+        assert!(mk > 0.0);
+        assert_eq!(m.summary().completed, 20);
+    }
+}

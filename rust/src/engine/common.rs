@@ -1,0 +1,192 @@
+//! Shared request-lifecycle bookkeeping for all serving engines.
+
+use crate::metrics::RequestRecord;
+use crate::workload::Request;
+
+/// Mutable per-request state while a request is in flight.
+#[derive(Debug, Clone)]
+pub struct ReqState {
+    pub req: Request,
+    /// Prompt tokens that still need prefill (radix caching / recompute may
+    /// change this relative to `req.prompt_len`).
+    pub effective_prompt: usize,
+    pub prefilled: usize,
+    /// Output tokens produced so far (the first comes from prefill).
+    pub generated: usize,
+    pub first_token: f64,
+    pub last_token: f64,
+    pub gaps: Vec<f64>,
+    /// Time this request (re-)entered a wait queue.
+    pub queue_since: f64,
+    pub queue_time: f64,
+    pub sched_time: f64,
+    pub exec_time: f64,
+}
+
+impl ReqState {
+    pub fn new(req: Request) -> Self {
+        ReqState {
+            req,
+            effective_prompt: req.prompt_len,
+            prefilled: 0,
+            generated: 0,
+            first_token: f64::NAN,
+            last_token: f64::NAN,
+            gaps: Vec::new(),
+            queue_since: req.arrival,
+            queue_time: 0.0,
+            sched_time: 0.0,
+            exec_time: 0.0,
+        }
+    }
+
+    pub fn prefill_done(&self) -> bool {
+        self.prefilled >= self.effective_prompt
+    }
+
+    pub fn decode_done(&self) -> bool {
+        self.generated >= self.req.output_len
+    }
+
+    /// Record the first output token (end of prefill).
+    pub fn note_first_token(&mut self, now: f64) {
+        debug_assert!(self.first_token.is_nan(), "first token recorded twice");
+        self.first_token = now;
+        self.last_token = now;
+        self.generated = 1;
+    }
+
+    /// Record one decode token; `exec` is the iteration duration, used to
+    /// split the inter-token gap into execution vs queueing.
+    pub fn note_token(&mut self, now: f64, exec: f64) {
+        let gap = now - self.last_token;
+        self.gaps.push(gap);
+        self.queue_time += (gap - exec).max(0.0);
+        self.last_token = now;
+        self.generated += 1;
+    }
+
+    /// Requeue for (re-)prefill after eviction: everything already emitted
+    /// must be recomputed into KV before decoding can continue.
+    pub fn restart_for_recompute(&mut self, now: f64) {
+        self.effective_prompt = self.req.prompt_len + self.generated;
+        self.prefilled = 0;
+        self.queue_since = now;
+    }
+
+    pub fn into_record(self, finish: f64) -> RequestRecord {
+        RequestRecord {
+            id: self.req.id,
+            arrival: self.req.arrival,
+            first_token: if self.first_token.is_nan() { finish } else { self.first_token },
+            finish,
+            prompt_len: self.req.prompt_len,
+            output_len: self.req.output_len,
+            token_gaps: self.gaps,
+            sched_time: self.sched_time,
+            queue_time: self.queue_time,
+            exec_time: self.exec_time,
+        }
+    }
+}
+
+/// Cursor over a time-sorted arrival trace.
+#[derive(Debug, Clone)]
+pub struct ArrivalFeed<'a> {
+    trace: &'a [Request],
+    next: usize,
+}
+
+impl<'a> ArrivalFeed<'a> {
+    pub fn new(trace: &'a [Request]) -> Self {
+        debug_assert!(trace.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        ArrivalFeed { trace, next: 0 }
+    }
+
+    pub fn peek_time(&self) -> Option<f64> {
+        self.trace.get(self.next).map(|r| r.arrival)
+    }
+
+    /// Pop every request with `arrival ≤ t`.
+    pub fn pop_until(&mut self, t: f64) -> &'a [Request] {
+        let start = self.next;
+        while self.next < self.trace.len() && self.trace[self.next].arrival <= t {
+            self.next += 1;
+        }
+        &self.trace[start..self.next]
+    }
+
+    pub fn exhausted(&self) -> bool {
+        self.next >= self.trace.len()
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.trace.len() - self.next
+    }
+}
+
+/// Causal attention token-pairs for a prefill chunk: `take` new tokens
+/// attending to `prior` cached tokens plus themselves (triangular).
+pub fn chunk_attn_pairs(prior: usize, take: usize) -> f64 {
+    take as f64 * prior as f64 + take as f64 * (take as f64 + 1.0) / 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, arrival: f64, p: usize, o: usize) -> Request {
+        Request { id, arrival, prompt_len: p, output_len: o }
+    }
+
+    #[test]
+    fn lifecycle_ttft_and_gaps() {
+        let mut st = ReqState::new(req(0, 1.0, 100, 3));
+        st.prefilled = 100;
+        assert!(st.prefill_done());
+        st.note_first_token(2.0);
+        assert_eq!(st.generated, 1);
+        st.note_token(2.05, 0.03);
+        st.note_token(2.10, 0.05);
+        assert!(st.decode_done());
+        let r = st.into_record(2.10);
+        assert!((r.ttft() - 1.0).abs() < 1e-12);
+        assert_eq!(r.token_gaps.len(), 2);
+        // First gap 0.05 with 0.03 exec → 0.02 queued.
+        assert!((r.queue_time - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recompute_restart_extends_prompt() {
+        let mut st = ReqState::new(req(1, 0.0, 50, 10));
+        st.prefilled = 50;
+        st.note_first_token(1.0);
+        st.note_token(1.1, 0.1);
+        st.restart_for_recompute(2.0);
+        assert_eq!(st.effective_prompt, 52);
+        assert_eq!(st.prefilled, 0);
+        assert!(!st.prefill_done());
+        assert_eq!(st.generated, 2, "emitted tokens are kept");
+    }
+
+    #[test]
+    fn arrival_feed_pops_in_order() {
+        let tr = vec![req(0, 1.0, 1, 1), req(1, 2.0, 1, 1), req(2, 2.0, 1, 1), req(3, 5.0, 1, 1)];
+        let mut feed = ArrivalFeed::new(&tr);
+        assert_eq!(feed.peek_time(), Some(1.0));
+        assert_eq!(feed.pop_until(0.5).len(), 0);
+        assert_eq!(feed.pop_until(2.0).len(), 3);
+        assert_eq!(feed.peek_time(), Some(5.0));
+        assert!(!feed.exhausted());
+        assert_eq!(feed.pop_until(10.0).len(), 1);
+        assert!(feed.exhausted());
+    }
+
+    #[test]
+    fn attn_pairs_triangular() {
+        // First chunk of 4 tokens, no prior: 1+2+3+4 = 10.
+        assert_eq!(chunk_attn_pairs(0, 4), 10.0);
+        // 2 tokens after 100 cached: 2·100 + 1+2 = 203.
+        assert_eq!(chunk_attn_pairs(100, 2), 203.0);
+    }
+}

@@ -1,0 +1,423 @@
+//! Engine-level P/D disaggregation baseline (vLLM-P/D via LMCache-style
+//! KV hand-off): one prefill GPU + one decode GPU, a finite staging buffer
+//! between them, and a PCIe-class transfer link.
+//!
+//! Reproduces the §6.2.2 failure mode: an aggressive prefill side can
+//! overrun the transfer buffer, forcing evictions whose KV must be
+//! recomputed — under bursty load the system livelocks on recompute.
+
+use super::common::{chunk_attn_pairs, ArrivalFeed, ReqState};
+use super::EngineCfg;
+use crate::gpusim::Sim;
+use crate::kv::{KvCache, TransferBuffer};
+use crate::metrics::RunMetrics;
+use crate::model::OpWork;
+use crate::sched::{fcfs_batch, PrefillItem};
+use crate::workload::Request;
+use std::time::Instant;
+
+struct PrefillIter {
+    parts: Vec<(usize, usize)>,
+    start: f64,
+}
+
+struct DecodeIter {
+    ids: Vec<usize>,
+    start: f64,
+}
+
+/// A finished prefill whose KV is streaming to the decode GPU.
+#[derive(Debug, Clone, Copy)]
+struct InTransfer {
+    id: usize,
+    ready_at: f64,
+    #[allow(dead_code)]
+    bytes: f64,
+}
+
+pub struct DisaggEngine<'c> {
+    cfg: &'c EngineCfg,
+}
+
+impl<'c> DisaggEngine<'c> {
+    pub fn new(cfg: &'c EngineCfg) -> Self {
+        DisaggEngine { cfg }
+    }
+
+    pub fn run(&mut self, trace: &[Request]) -> RunMetrics {
+        let cfg = self.cfg;
+        // Two physical GPUs: independent simulators (no shared bandwidth).
+        let mut psim = Sim::new(cfg.gpu, 1);
+        let mut dsim = Sim::new(cfg.gpu, 1);
+        psim.set_partition(0, 1.0);
+        dsim.set_partition(0, 1.0);
+        let mut pkv = cfg.kv_cache();
+        let mut dkv = cfg.kv_cache();
+        let mut buffer = TransferBuffer::new(cfg.gpu.hbm_bytes * cfg.transfer_buffer_frac);
+        let mut metrics = RunMetrics::default();
+
+        let mut states: Vec<Option<ReqState>> = vec![None; trace.len()];
+        let mut waiting: Vec<usize> = Vec::new(); // prefill queue
+        let mut transfers: Vec<InTransfer> = Vec::new();
+        let mut running: Vec<usize> = Vec::new(); // decoding on GPU 1
+        let mut p_inflight: Option<PrefillIter> = None;
+        let mut d_inflight: Option<DecodeIter> = None;
+        let mut feed = ArrivalFeed::new(trace);
+        let mut done = 0usize;
+        let mut tag = 0u64;
+        // Requests evicted from the buffer retry prefill after a backoff.
+        let mut retry_at: Vec<(usize, f64)> = Vec::new();
+
+        while done < trace.len() {
+            let mut t = f64::INFINITY;
+            if let Some(a) = feed.peek_time() {
+                t = t.min(a);
+            }
+            if p_inflight.is_some() {
+                if let Some(s) = psim.peek_next_completion() {
+                    t = t.min(s);
+                }
+            }
+            if d_inflight.is_some() {
+                if let Some(s) = dsim.peek_next_completion() {
+                    t = t.min(s);
+                }
+            }
+            for tr in &transfers {
+                t = t.min(tr.ready_at);
+            }
+            for &(_, at) in &retry_at {
+                t = t.min(at);
+            }
+            if !t.is_finite() {
+                t = psim.now().max(dsim.now());
+            }
+            if t > cfg.max_virtual_time {
+                // Livelocked (e.g. buffer-overrun recompute storm, §6.2.2).
+                metrics.timeouts = trace.len() - done;
+                break;
+            }
+
+            // Advance both GPUs to the global event time.
+            let now = t.max(psim.now()).max(dsim.now());
+            let p_done = psim.advance_to(now + 1e-12);
+            let d_done = dsim.advance_to(now + 1e-12);
+
+            for r in feed.pop_until(now) {
+                states[r.id] = Some(ReqState::new(*r));
+                waiting.push(r.id);
+            }
+            // Buffer-evicted requests rejoin the prefill queue.
+            retry_at.retain(|&(id, at)| {
+                if at <= now {
+                    waiting.push(id);
+                    false
+                } else {
+                    true
+                }
+            });
+
+            // Prefill GPU completions → stage KV into the transfer buffer.
+            for c in p_done {
+                let it = p_inflight.take().expect("prefill completion w/o inflight");
+                let end = c.time;
+                let dur = end - it.start;
+                for (id, take) in it.parts {
+                    let st = states[id].as_mut().unwrap();
+                    st.exec_time += dur;
+                    st.queue_time += (it.start - st.queue_since).max(0.0);
+                    st.queue_since = end;
+                    st.prefilled += take;
+                    if st.prefill_done() {
+                        waiting.retain(|&x| x != id);
+                        if st.generated == 0 {
+                            st.note_first_token(end);
+                        }
+                        if st.decode_done() {
+                            let st = states[id].take().unwrap();
+                            pkv.release(id);
+                            metrics.push(st.into_record(end));
+                            done += 1;
+                            continue;
+                        }
+                        let bytes = pkv.tokens(id) as f64 * pkv.bytes_per_token;
+                        pkv.release(id);
+                        if buffer.push(id, bytes) {
+                            transfers.push(InTransfer {
+                                id,
+                                ready_at: end + bytes / cfg.gpu.link_bw,
+                                bytes,
+                            });
+                        } else {
+                            // §6.2.2: buffer overrun → evict + recompute.
+                            metrics.recomputes += 1;
+                            let st = states[id].as_mut().unwrap();
+                            st.restart_for_recompute(end);
+                            retry_at.push((id, end + 0.25));
+                        }
+                    }
+                }
+            }
+
+            // Completed transfers → admit on the decode GPU.
+            let mut still: Vec<InTransfer> = Vec::new();
+            for tr in transfers.drain(..) {
+                if tr.ready_at <= now {
+                    let st = states[tr.id].as_ref().unwrap();
+                    let ctx = st.req.prompt_len + st.generated;
+                    if dkv.try_reserve(tr.id, ctx) {
+                        buffer.pop(tr.id);
+                        running.push(tr.id);
+                    } else {
+                        // Decode side full: KV waits in the buffer.
+                        let mut tr = tr;
+                        tr.ready_at = now + 0.05;
+                        still.push(tr);
+                    }
+                } else {
+                    still.push(tr);
+                }
+            }
+            transfers = still;
+
+            // Decode GPU completions.
+            for c in d_done {
+                let it = d_inflight.take().expect("decode completion w/o inflight");
+                let end = c.time;
+                let dur = end - it.start;
+                for id in it.ids {
+                    let st = states[id].as_mut().unwrap();
+                    st.exec_time += dur;
+                    st.note_token(end, dur);
+                    if st.decode_done() {
+                        let st = states[id].take().unwrap();
+                        dkv.release(id);
+                        running.retain(|&x| x != id);
+                        metrics.push(st.into_record(end));
+                        done += 1;
+                    }
+                }
+            }
+
+            // Schedule prefill GPU (FCFS chunked, prefill-only batches).
+            if p_inflight.is_none() {
+                p_inflight = self.schedule_prefill(
+                    &mut psim, &mut pkv, &mut states, &waiting, &mut tag,
+                );
+            }
+            // Schedule decode GPU (FCFS decode-only batches).
+            if d_inflight.is_none() {
+                d_inflight = self.schedule_decode(
+                    &mut dsim, &mut dkv, &mut states, &mut running, &mut waiting, &mut metrics,
+                    &mut tag,
+                );
+            }
+
+            if p_inflight.is_none()
+                && d_inflight.is_none()
+                && transfers.is_empty()
+                && retry_at.is_empty()
+                && feed.exhausted()
+                && done < trace.len()
+            {
+                metrics.timeouts = trace.len() - done;
+                break;
+            }
+        }
+        metrics.makespan = metrics.makespan.max(psim.now()).max(dsim.now());
+        metrics
+    }
+
+    fn schedule_prefill(
+        &self,
+        sim: &mut Sim,
+        kv: &mut KvCache,
+        states: &mut [Option<ReqState>],
+        waiting: &[usize],
+        tag: &mut u64,
+    ) -> Option<PrefillIter> {
+        let wall = Instant::now();
+        let cfg = self.cfg;
+        let now = sim.now();
+        let queue: Vec<PrefillItem> = waiting
+            .iter()
+            .map(|&id| {
+                let st = states[id].as_ref().unwrap();
+                PrefillItem {
+                    id,
+                    prompt_len: st.effective_prompt,
+                    prefilled: st.prefilled,
+                    arrival: st.req.arrival,
+                }
+            })
+            .collect();
+        if queue.is_empty() {
+            return None;
+        }
+        let picked = fcfs_batch(&queue, cfg.token_budget, true);
+        let mut parts: Vec<(usize, usize)> = Vec::new();
+        let mut left = cfg.token_budget;
+        for qidx in picked {
+            let item = &queue[qidx];
+            let take = item.remaining().min(cfg.chunk_size).min(left);
+            if take == 0 {
+                break;
+            }
+            if kv.try_reserve(item.id, take) {
+                parts.push((item.id, take));
+                left -= take;
+            }
+        }
+        if parts.is_empty() {
+            return None;
+        }
+        let n: usize = parts.iter().map(|&(_, t)| t).sum();
+        let mut pairs = 0.0;
+        let mut kv_read = 0.0;
+        let mut finishing = 0usize;
+        for &(id, take) in &parts {
+            let st = states[id].as_ref().unwrap();
+            pairs += chunk_attn_pairs(st.prefilled, take);
+            kv_read += (st.prefilled + take) as f64;
+            if st.prefilled + take >= st.effective_prompt {
+                finishing += 1;
+            }
+        }
+        let ops: Vec<OpWork> = cfg.model.prefill_ops(n, pairs, kv_read, finishing);
+        *tag += 1;
+        sim.submit(0, &ops, *tag);
+        let share = wall.elapsed().as_secs_f64() / parts.len() as f64;
+        for &(id, _) in &parts {
+            states[id].as_mut().unwrap().sched_time += share;
+        }
+        Some(PrefillIter { parts, start: now })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn schedule_decode(
+        &self,
+        sim: &mut Sim,
+        kv: &mut KvCache,
+        states: &mut [Option<ReqState>],
+        running: &mut Vec<usize>,
+        waiting: &mut Vec<usize>,
+        metrics: &mut RunMetrics,
+        tag: &mut u64,
+    ) -> Option<DecodeIter> {
+        let wall = Instant::now();
+        let cfg = self.cfg;
+        let now = sim.now();
+        let mut ids: Vec<usize> = running.clone();
+        ids.truncate(cfg.max_batch);
+        let mut decode_ids = Vec::with_capacity(ids.len());
+        for id in ids {
+            loop {
+                if kv.try_reserve(id, 1) {
+                    decode_ids.push(id);
+                    break;
+                }
+                let victim = running
+                    .iter()
+                    .copied()
+                    .filter(|&v| v != id)
+                    .max_by(|&a, &b| {
+                        let aa = states[a].as_ref().unwrap().req.arrival;
+                        let bb = states[b].as_ref().unwrap().req.arrival;
+                        aa.partial_cmp(&bb).unwrap()
+                    });
+                match victim {
+                    Some(v) => {
+                        kv.release(v);
+                        running.retain(|&x| x != v);
+                        decode_ids.retain(|&x| x != v);
+                        states[v].as_mut().unwrap().restart_for_recompute(now);
+                        waiting.push(v);
+                        metrics.recomputes += 1;
+                    }
+                    None => break,
+                }
+            }
+        }
+        if decode_ids.is_empty() {
+            return None;
+        }
+        let ctx: f64 = decode_ids.iter().map(|&id| kv.tokens(id) as f64).sum();
+        let ops = cfg.model.decode_ops(decode_ids.len(), ctx);
+        *tag += 1;
+        sim.submit(0, &ops, *tag);
+        let share = wall.elapsed().as_secs_f64() / decode_ids.len() as f64;
+        for &id in &decode_ids {
+            states[id].as_mut().unwrap().sched_time += share;
+        }
+        Some(DecodeIter { ids: decode_ids, start: now })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::monolithic::MonolithicEngine;
+    use crate::engine::EngineCfg;
+    use crate::model::ModelConfig;
+    use crate::workload::{generate, Dataset};
+
+    fn cfg() -> EngineCfg {
+        EngineCfg::new(ModelConfig::qwen3b(), 42)
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let cfg = cfg();
+        let trace = generate(Dataset::ShareGpt, 40, 4.0, 7);
+        let m = DisaggEngine::new(&cfg).run(&trace);
+        assert_eq!(m.summary().completed, 40);
+    }
+
+    #[test]
+    fn best_tbt_by_full_isolation() {
+        // With a whole GPU for decode, vLLM-P/D should post the lowest TBT
+        // (the paper's Fig. 9 columns 5–6 finding) vs the monolithic engine.
+        let cfg = cfg();
+        let trace = generate(Dataset::LongData, 40, 2.5, 11);
+        let pd = DisaggEngine::new(&cfg).run(&trace).summary();
+        let v = MonolithicEngine::vllm(&cfg).run(&trace).summary();
+        assert!(
+            pd.mean_tbt < v.mean_tbt,
+            "P/D TBT {} must beat monolithic {}",
+            pd.mean_tbt,
+            v.mean_tbt
+        );
+    }
+
+    #[test]
+    fn small_buffer_forces_recomputes() {
+        let mut cfg = cfg();
+        cfg.transfer_buffer_frac = 2e-4; // ~10 MB: overruns immediately
+        let trace = generate(Dataset::LongData, 25, 4.0, 13);
+        let m = DisaggEngine::new(&cfg).run(&trace);
+        assert!(m.recomputes > 0, "tiny buffer must evict (got {})", m.recomputes);
+        assert_eq!(m.summary().completed + m.timeouts, 25);
+    }
+
+    #[test]
+    fn transfer_delay_shows_in_first_gap() {
+        // The first decode token waits for the PCIe KV transfer, so the
+        // first inter-token gap must exceed the link transfer time.
+        let cfg = cfg();
+        let trace = generate(Dataset::LongData, 5, 0.5, 17);
+        let m = DisaggEngine::new(&cfg).run(&trace);
+        for r in &m.records {
+            if r.token_gaps.is_empty() {
+                continue;
+            }
+            let kv_bytes = r.prompt_len as f64 * cfg.model.kv_bytes_per_token();
+            let link_time = kv_bytes / cfg.gpu.link_bw;
+            assert!(
+                r.token_gaps[0] >= link_time * 0.9,
+                "first gap {} must include transfer {}",
+                r.token_gaps[0],
+                link_time
+            );
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! Serving engines: Nexus plus the four baselines of the paper's §6.1.
+//!
+//! | kind | paper baseline | mechanism |
+//! |---|---|---|
+//! | [`EngineKind::Vllm`] | vLLM v1-0.8.1 | monolithic chunked prefill, FCFS continuous batching |
+//! | [`EngineKind::Sglang`] | SGLang v0.4.4 | monolithic + RadixAttention prefix-cache model |
+//! | [`EngineKind::FastServe`] | FastServe | skip-join MLFQ, CPU swap + recompute |
+//! | [`EngineKind::VllmPD`] | vLLM-P/D | engine-level disaggregation, 2 GPUs + transfer buffer |
+//! | [`EngineKind::Nexus`] | this paper | intra-GPU disaggregation, Alg. 1 + SPF/FCFS |
+//!
+//! The `Nexus*` ablation variants reproduce Fig. 13.
+
+pub mod common;
+pub mod disagg;
+pub mod fastserve;
+pub mod monolithic;
+pub mod nexus;
+
+pub use nexus::NexusFlags;
+
+use crate::gpusim::GpuSpec;
+use crate::kv::KvCache;
+use crate::metrics::RunMetrics;
+use crate::model::ModelConfig;
+use crate::partition::PartitionConfig;
+use crate::workload::Request;
+
+/// Engine selection, including the Fig.-13 ablation variants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    Vllm,
+    Sglang,
+    FastServe,
+    /// vLLM-P/D: engine-level disaggregation on two GPUs.
+    VllmPD,
+    Nexus,
+    /// Nexus without dynamic SM changing (static 50/50) — "Nexus-Wo-SC".
+    NexusWoSc,
+    /// FCFS both phases, no SM changing — "PF-DF-Wo-SC".
+    PfDfWoSc,
+    /// FCFS both phases, with SM changing — "PF-DF-W-SC".
+    PfDfWSc,
+}
+
+impl EngineKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Vllm => "vLLM",
+            EngineKind::Sglang => "SGLang",
+            EngineKind::FastServe => "FastServe",
+            EngineKind::VllmPD => "vLLM-P/D",
+            EngineKind::Nexus => "Nexus",
+            EngineKind::NexusWoSc => "Nexus-Wo-SC",
+            EngineKind::PfDfWoSc => "PF-DF-Wo-SC",
+            EngineKind::PfDfWSc => "PF-DF-W-SC",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<EngineKind> {
+        match name.to_ascii_lowercase().as_str() {
+            "vllm" => Some(EngineKind::Vllm),
+            "sglang" => Some(EngineKind::Sglang),
+            "fastserve" => Some(EngineKind::FastServe),
+            "vllm-pd" | "vllmpd" | "pd" | "vllm-p/d" => Some(EngineKind::VllmPD),
+            "nexus" => Some(EngineKind::Nexus),
+            "nexus-wo-sc" => Some(EngineKind::NexusWoSc),
+            "pf-df-wo-sc" => Some(EngineKind::PfDfWoSc),
+            "pf-df-w-sc" => Some(EngineKind::PfDfWSc),
+            _ => None,
+        }
+    }
+
+    /// GPUs consumed (vLLM-P/D doubles hardware; TP multiplies it).
+    pub fn gpus(&self, model: &ModelConfig) -> usize {
+        let base = if *self == EngineKind::VllmPD { 2 } else { 1 };
+        base * model.tp
+    }
+
+    pub fn all() -> &'static [EngineKind] {
+        &[
+            EngineKind::Vllm,
+            EngineKind::Sglang,
+            EngineKind::FastServe,
+            EngineKind::VllmPD,
+            EngineKind::Nexus,
+        ]
+    }
+}
+
+/// Shared engine configuration; defaults mirror the paper's §5 / §6.1 setup
+/// (vLLM defaults for budgets, Nexus's α/β/δ/γ/KV_switch).
+#[derive(Debug, Clone)]
+pub struct EngineCfg {
+    pub model: ModelConfig,
+    pub gpu: GpuSpec,
+    /// Max batched tokens per iteration (vLLM `max_num_batched_tokens`).
+    pub token_budget: usize,
+    /// Chunked-prefill chunk size.
+    pub chunk_size: usize,
+    /// Max concurrent decode sequences.
+    pub max_batch: usize,
+    /// HBM fraction reserved for activations/workspace when sizing KV.
+    pub activation_frac: f64,
+    /// Override the KV block count (tests / pressure experiments).
+    pub kv_blocks_override: Option<usize>,
+    /// SGLang radix cache (hit probability, mean cached fraction).
+    pub radix: (f64, f64),
+    /// vLLM-P/D staging buffer as a fraction of HBM.
+    pub transfer_buffer_frac: f64,
+    /// Nexus partition-controller parameters (α, β, δ, KV_switch).
+    pub partition: PartitionConfig,
+    /// SPF age-decay γ (paper default 15).
+    pub gamma: f64,
+    /// Virtual-time ceiling: a run exceeding this marks the unfinished
+    /// requests as timeouts (the "X" outcomes in Fig. 11) instead of
+    /// simulating a livelocked system forever.
+    pub max_virtual_time: f64,
+    pub seed: u64,
+}
+
+impl EngineCfg {
+    pub fn new(model: ModelConfig, seed: u64) -> Self {
+        EngineCfg {
+            model,
+            gpu: GpuSpec::l20(),
+            token_budget: 2048,
+            chunk_size: 512,
+            max_batch: 256,
+            activation_frac: 0.10,
+            kv_blocks_override: None,
+            radix: (0.35, 0.5),
+            transfer_buffer_frac: 0.15,
+            partition: PartitionConfig::default(),
+            gamma: 15.0,
+            max_virtual_time: 14_400.0, // 4 virtual hours
+            seed,
+        }
+    }
+
+    /// Size the paged KV cache for this (model, GPU) pair. Under tensor
+    /// parallelism the KV pool spans all `tp` GPUs.
+    pub fn kv_cache(&self) -> KvCache {
+        if let Some(blocks) = self.kv_blocks_override {
+            return KvCache::new(blocks, 16, self.model.kv_bytes_per_token());
+        }
+        let hbm = self.gpu.hbm_bytes * self.model.tp as f64;
+        KvCache::for_gpu(
+            hbm,
+            self.model.weights_bytes(),
+            self.model.kv_bytes_per_token(),
+            self.activation_frac,
+            16,
+        )
+    }
+}
+
+/// Run one engine over a trace.
+pub fn run_engine(kind: EngineKind, cfg: &EngineCfg, trace: &[Request]) -> RunMetrics {
+    match kind {
+        EngineKind::Vllm => monolithic::MonolithicEngine::vllm(cfg).run(trace),
+        EngineKind::Sglang => monolithic::MonolithicEngine::sglang(cfg).run(trace),
+        EngineKind::FastServe => fastserve::FastServeEngine::new(cfg).run(trace),
+        EngineKind::VllmPD => disagg::DisaggEngine::new(cfg).run(trace),
+        EngineKind::Nexus => {
+            nexus::NexusEngine::new(cfg, NexusFlags { use_spf: true, dynamic_sm: true })
+                .run(trace)
+        }
+        EngineKind::NexusWoSc => {
+            nexus::NexusEngine::new(cfg, NexusFlags { use_spf: true, dynamic_sm: false })
+                .run(trace)
+        }
+        EngineKind::PfDfWoSc => {
+            nexus::NexusEngine::new(cfg, NexusFlags { use_spf: false, dynamic_sm: false })
+                .run(trace)
+        }
+        EngineKind::PfDfWSc => {
+            nexus::NexusEngine::new(cfg, NexusFlags { use_spf: false, dynamic_sm: true })
+                .run(trace)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{generate, Dataset};
+
+    #[test]
+    fn kind_name_roundtrip() {
+        for k in [
+            EngineKind::Vllm,
+            EngineKind::Sglang,
+            EngineKind::FastServe,
+            EngineKind::VllmPD,
+            EngineKind::Nexus,
+            EngineKind::NexusWoSc,
+            EngineKind::PfDfWoSc,
+            EngineKind::PfDfWSc,
+        ] {
+            assert_eq!(EngineKind::by_name(k.name()), Some(k));
+        }
+        assert!(EngineKind::by_name("orca").is_none());
+    }
+
+    #[test]
+    fn gpu_accounting() {
+        let m = ModelConfig::qwen14b().with_tp(2);
+        assert_eq!(EngineKind::Nexus.gpus(&m), 2);
+        assert_eq!(EngineKind::VllmPD.gpus(&ModelConfig::qwen3b()), 2);
+        assert_eq!(EngineKind::Vllm.gpus(&ModelConfig::qwen3b()), 1);
+    }
+
+    #[test]
+    fn kv_cache_sizing_sane() {
+        let cfg = EngineCfg::new(ModelConfig::qwen3b(), 1);
+        let kv = cfg.kv_cache();
+        // L20: 48 GB − weights (~6 GB) − 10% activations → millions of tokens.
+        let tokens = kv.total_blocks * kv.block_tokens;
+        assert!(tokens > 500_000, "kv tokens {tokens}");
+        let cfg_tp = EngineCfg::new(ModelConfig::qwen14b().with_tp(2), 1);
+        assert!(cfg_tp.kv_cache().total_blocks > kv.total_blocks / 4);
+    }
+
+    #[test]
+    fn every_engine_kind_completes_a_small_trace() {
+        let cfg = EngineCfg::new(ModelConfig::qwen3b(), 42);
+        let trace = generate(Dataset::ShareGpt, 15, 3.0, 3);
+        for &k in EngineKind::all() {
+            let m = run_engine(k, &cfg, &trace);
+            assert_eq!(m.summary().completed, 15, "{} dropped requests", k.name());
+        }
+    }
+}

@@ -1,0 +1,341 @@
+//! Monolithic chunked-prefill engine — the vLLM v1 / Sarathi-Serve baseline,
+//! plus the SGLang variant (RadixAttention prefix-cache model).
+//!
+//! One GPU stream runs *mixed* batches: every running decode contributes one
+//! token and the remaining token budget is filled with FCFS prefill chunks.
+//! Because the whole iteration completes as a unit, lightweight decode
+//! tokens experience the full mixed-iteration latency — the fine-grained
+//! interference the paper measures in Fig. 4.
+
+use super::common::{chunk_attn_pairs, ArrivalFeed, ReqState};
+use super::EngineCfg;
+use crate::gpusim::Sim;
+use crate::kv::KvCache;
+use crate::metrics::RunMetrics;
+use crate::model::OpWork;
+use crate::sched::{mixed_batch, PrefillItem, RadixCache};
+use crate::workload::Request;
+use std::time::Instant;
+
+/// In-flight mixed-iteration manifest.
+struct Iter {
+    decode_ids: Vec<usize>,
+    /// (request id, prefill tokens taken this iteration).
+    prefill_parts: Vec<(usize, usize)>,
+    start: f64,
+}
+
+pub struct MonolithicEngine<'c> {
+    cfg: &'c EngineCfg,
+    /// SGLang mode: prefix cache shrinking effective prefill lengths.
+    radix: Option<RadixCache>,
+}
+
+impl<'c> MonolithicEngine<'c> {
+    pub fn vllm(cfg: &'c EngineCfg) -> Self {
+        MonolithicEngine { cfg, radix: None }
+    }
+
+    pub fn sglang(cfg: &'c EngineCfg) -> Self {
+        let (p, f) = cfg.radix;
+        MonolithicEngine { cfg, radix: Some(RadixCache::new(p, f, cfg.seed ^ 0x5617)) }
+    }
+
+    pub fn run(&mut self, trace: &[Request]) -> RunMetrics {
+        let cfg = self.cfg;
+        let mut sim = Sim::new(cfg.gpu, 1);
+        sim.set_partition(0, 1.0);
+        let mut kv = cfg.kv_cache();
+        let mut metrics = RunMetrics::default();
+
+        let mut states: Vec<Option<ReqState>> = vec![None; trace.len()];
+        let mut waiting: Vec<usize> = Vec::new();
+        let mut running: Vec<usize> = Vec::new();
+        let mut inflight: Option<Iter> = None;
+        let mut feed = ArrivalFeed::new(trace);
+        let mut done = 0usize;
+        let mut tag = 0u64;
+
+        while done < trace.len() {
+            // Next event: arrival or iteration completion.
+            let t_arr = feed.peek_time();
+            let t_sim = if inflight.is_some() { sim.peek_next_completion() } else { None };
+            let t = match (t_arr, t_sim) {
+                (Some(a), Some(s)) => a.min(s),
+                (Some(a), None) => a,
+                (None, Some(s)) => s,
+                (None, None) => {
+                    // No arrivals, nothing in flight — but requests remain:
+                    // schedule must make progress below from current queues.
+                    sim.now()
+                }
+            };
+            if t > cfg.max_virtual_time {
+                metrics.timeouts = trace.len() - done;
+                break;
+            }
+            let completions = sim.advance_to(t + 1e-12);
+            for r in feed.pop_until(t) {
+                let mut st = ReqState::new(*r);
+                if let Some(radix) = &mut self.radix {
+                    st.effective_prompt = radix.effective_prefill(r.prompt_len);
+                }
+                states[r.id] = Some(st);
+                waiting.push(r.id);
+            }
+            for c in completions {
+                let it = inflight.take().expect("completion without inflight iter");
+                debug_assert_eq!(c.tag, tag);
+                let now = c.time;
+                let dur = now - it.start;
+                // Decode tokens.
+                for id in it.decode_ids {
+                    let st = states[id].as_mut().unwrap();
+                    st.exec_time += dur;
+                    st.note_token(now, dur);
+                    if st.decode_done() {
+                        let st = states[id].take().unwrap();
+                        kv.release(id);
+                        running.retain(|&x| x != id);
+                        metrics.push(st.into_record(now));
+                        done += 1;
+                    }
+                }
+                // Prefill chunks.
+                for (id, take) in it.prefill_parts {
+                    let st = states[id].as_mut().unwrap();
+                    st.exec_time += dur;
+                    st.queue_time += (it.start - st.queue_since).max(0.0);
+                    st.queue_since = now;
+                    st.prefilled += take;
+                    if st.prefill_done() {
+                        waiting.retain(|&x| x != id);
+                        if st.generated > 0 {
+                            // Recompute path: tokens already emitted; resume decode.
+                            running.push(id);
+                        } else {
+                            st.note_first_token(now);
+                            if st.decode_done() {
+                                let st = states[id].take().unwrap();
+                                kv.release(id);
+                                metrics.push(st.into_record(now));
+                                done += 1;
+                            } else {
+                                running.push(id);
+                            }
+                        }
+                    }
+                }
+            }
+            if inflight.is_none() {
+                inflight = self.schedule(
+                    &mut sim, &mut kv, &mut states, &mut waiting, &mut running, &mut metrics,
+                    &mut tag,
+                );
+                if inflight.is_none() && feed.exhausted() && done < trace.len() {
+                    // Nothing schedulable and nothing will arrive: requests
+                    // whose KV can never fit. Mark the rest as timeouts.
+                    metrics.timeouts = trace.len() - done;
+                    break;
+                }
+            }
+        }
+        metrics
+    }
+
+    /// Build and submit the next mixed iteration. Returns its manifest.
+    #[allow(clippy::too_many_arguments)]
+    fn schedule(
+        &mut self,
+        sim: &mut Sim,
+        kv: &mut KvCache,
+        states: &mut [Option<ReqState>],
+        waiting: &mut Vec<usize>,
+        running: &mut Vec<usize>,
+        metrics: &mut RunMetrics,
+        tag: &mut u64,
+    ) -> Option<Iter> {
+        let wall = Instant::now();
+        let cfg = self.cfg;
+        let now = sim.now();
+
+        // Continuous batching: every running decode joins (capped), each
+        // reserving one more KV token. On OOM, vLLM preempts the most
+        // recently arrived running request (recompute-on-resume).
+        let mut decode_ids: Vec<usize> = Vec::new();
+        let mut candidates = running.clone();
+        candidates.truncate(cfg.max_batch);
+        for id in candidates {
+            loop {
+                if kv.try_reserve(id, 1) {
+                    decode_ids.push(id);
+                    break;
+                }
+                // Preempt the newest running request that is not `id`.
+                let victim = running
+                    .iter()
+                    .copied()
+                    .filter(|&v| v != id)
+                    .max_by(|&a, &b| {
+                        let aa = states[a].as_ref().unwrap().req.arrival;
+                        let bb = states[b].as_ref().unwrap().req.arrival;
+                        aa.partial_cmp(&bb).unwrap()
+                    });
+                match victim {
+                    Some(v) => {
+                        kv.release(v);
+                        running.retain(|&x| x != v);
+                        decode_ids.retain(|&x| x != v);
+                        let st = states[v].as_mut().unwrap();
+                        st.restart_for_recompute(now);
+                        waiting.push(v);
+                        metrics.recomputes += 1;
+                    }
+                    None => break, // lone request can't grow: stall this tick
+                }
+            }
+        }
+
+        // FCFS prefill chunks fill the remaining token budget.
+        let queue: Vec<PrefillItem> = waiting
+            .iter()
+            .map(|&id| {
+                let st = states[id].as_ref().unwrap();
+                PrefillItem {
+                    id,
+                    prompt_len: st.effective_prompt,
+                    prefilled: st.prefilled,
+                    arrival: st.req.arrival,
+                }
+            })
+            .collect();
+        let mixed = mixed_batch(&decode_ids, &queue, cfg.token_budget, cfg.chunk_size);
+
+        let mut prefill_parts: Vec<(usize, usize)> = Vec::new();
+        for (qidx, take) in mixed.prefill_parts {
+            let id = queue[qidx].id;
+            if kv.try_reserve(id, take) {
+                prefill_parts.push((id, take));
+            }
+            // On reserve failure the chunk is dropped this iteration; decode
+            // completions free blocks and the request retries next tick.
+        }
+
+        if decode_ids.is_empty() && prefill_parts.is_empty() {
+            return None;
+        }
+
+        // Compose the iteration's operator list (decode + prefill share it —
+        // that is exactly the interference mechanism).
+        let mut ops: Vec<OpWork> = Vec::new();
+        if !decode_ids.is_empty() {
+            let ctx: f64 = decode_ids.iter().map(|&id| kv.tokens(id) as f64).sum();
+            ops.extend(cfg.model.decode_ops(decode_ids.len(), ctx));
+        }
+        if !prefill_parts.is_empty() {
+            let n: usize = prefill_parts.iter().map(|&(_, t)| t).sum();
+            let mut pairs = 0.0;
+            let mut kv_read = 0.0;
+            let mut finishing = 0usize;
+            for &(id, take) in &prefill_parts {
+                let st = states[id].as_ref().unwrap();
+                pairs += chunk_attn_pairs(st.prefilled, take);
+                kv_read += (st.prefilled + take) as f64;
+                if st.prefilled + take >= st.effective_prompt {
+                    finishing += 1;
+                }
+            }
+            ops.extend(cfg.model.prefill_ops(n, pairs, kv_read, finishing));
+        }
+
+        *tag += 1;
+        sim.submit(0, &ops, *tag);
+
+        // Attribute real scheduler wall time across participants (Fig. 12).
+        let sched = wall.elapsed().as_secs_f64();
+        let parts = decode_ids.len() + prefill_parts.len();
+        if parts > 0 {
+            let share = sched / parts as f64;
+            for &id in &decode_ids {
+                states[id].as_mut().unwrap().sched_time += share;
+            }
+            for &(id, _) in &prefill_parts {
+                states[id].as_mut().unwrap().sched_time += share;
+            }
+        }
+
+        Some(Iter { decode_ids, prefill_parts, start: now })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineCfg;
+    use crate::model::ModelConfig;
+    use crate::workload::{generate, Dataset};
+
+    fn cfg() -> EngineCfg {
+        EngineCfg::new(ModelConfig::qwen3b(), 42)
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let cfg = cfg();
+        let trace = generate(Dataset::ShareGpt, 40, 4.0, 7);
+        let m = MonolithicEngine::vllm(&cfg).run(&trace);
+        assert_eq!(m.summary().completed, 40);
+        assert_eq!(m.timeouts, 0);
+    }
+
+    #[test]
+    fn ttft_after_arrival_and_ordered_tokens() {
+        let cfg = cfg();
+        let trace = generate(Dataset::ShareGpt, 20, 2.0, 3);
+        let m = MonolithicEngine::vllm(&cfg).run(&trace);
+        for r in &m.records {
+            assert!(r.first_token >= r.arrival, "ttft must be ≥ 0");
+            assert!(r.finish >= r.first_token);
+            assert_eq!(r.token_gaps.len(), r.output_len.saturating_sub(1));
+            for g in &r.token_gaps {
+                assert!(*g >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_batches_inflate_decode_latency() {
+        // The Fig.-4 mechanism: with long prompts arriving, decode gaps are
+        // far larger than a pure decode iteration would be.
+        let cfg = cfg();
+        let trace = generate(Dataset::LongData, 30, 2.5, 11);
+        let m = MonolithicEngine::vllm(&cfg).run(&trace);
+        let s = m.summary();
+        // A pure decode-only iteration for this model is ~10-20 ms.
+        assert!(s.mean_tbt > 0.030, "mean TBT {} should show interference", s.mean_tbt);
+    }
+
+    #[test]
+    fn sglang_radix_beats_vllm_ttft_on_chat() {
+        let mut cfg = cfg();
+        cfg.radix = (0.6, 0.6);
+        let trace = generate(Dataset::ShareGpt, 60, 6.0, 9);
+        let v = MonolithicEngine::vllm(&cfg).run(&trace).summary();
+        let s = MonolithicEngine::sglang(&cfg).run(&trace).summary();
+        assert!(
+            s.mean_ttft < v.mean_ttft,
+            "radix cache should cut TTFT: sglang {} vs vllm {}",
+            s.mean_ttft,
+            v.mean_ttft
+        );
+    }
+
+    #[test]
+    fn offline_batch_drains() {
+        let cfg = cfg();
+        let trace = crate::workload::offline(Dataset::ShareGpt, 30, 5);
+        let m = MonolithicEngine::vllm(&cfg).run(&trace);
+        assert_eq!(m.summary().completed, 30);
+        assert!(m.makespan > 0.0);
+    }
+}

@@ -1,0 +1,455 @@
+//! Nexus — proactive intra-GPU prefill/decode disaggregation (paper §4).
+//!
+//! Two concurrent streams on one GPU (green-context style), with:
+//! * per-batch SM partitioning from the contention-aware cost model +
+//!   greedy dual-objective search (Algorithm 1, [`crate::partition`]);
+//! * hysteresis-buffered asynchronous switching (§4.2): partitions apply at
+//!   the next kernel launch, small changes are suppressed;
+//! * phase-specific schedulers (§4.3): Shortest-Prompt-First with age decay
+//!   for prefill (Algorithm 2), FCFS for decode.
+//!
+//! Ablation flags reproduce the Fig.-13 variants: `use_spf = false` falls
+//! back to FCFS prefill ("PF-DF"); `dynamic_sm = false` pins a static 50/50
+//! split ("Wo-SC").
+
+use super::common::{chunk_attn_pairs, ArrivalFeed, ReqState};
+use super::EngineCfg;
+use crate::costmodel::{calibrate, CostModel};
+use crate::gpusim::Sim;
+use crate::kv::KvCache;
+use crate::metrics::RunMetrics;
+use crate::model::OpWork;
+use crate::partition::{BatchState, PartitionController};
+use crate::sched::{fcfs_batch, spf_batch, PrefillItem};
+use crate::workload::Request;
+use std::time::Instant;
+
+const PREFILL_STREAM: usize = 0;
+const DECODE_STREAM: usize = 1;
+
+/// Nexus ablation switches (Fig. 13).
+#[derive(Debug, Clone, Copy)]
+pub struct NexusFlags {
+    /// SPF prefill scheduling (false → FCFS, the "PF-DF" variants).
+    pub use_spf: bool,
+    /// Dynamic SM repartitioning (false → static 50/50, "Wo-SC").
+    pub dynamic_sm: bool,
+}
+
+impl Default for NexusFlags {
+    fn default() -> Self {
+        NexusFlags { use_spf: true, dynamic_sm: true }
+    }
+}
+
+struct Iter {
+    /// Decode iteration: ids receiving one token. Prefill iteration: empty.
+    decode_ids: Vec<usize>,
+    prefill_parts: Vec<(usize, usize)>,
+    start: f64,
+}
+
+pub struct NexusEngine<'c> {
+    cfg: &'c EngineCfg,
+    pub flags: NexusFlags,
+}
+
+impl<'c> NexusEngine<'c> {
+    pub fn new(cfg: &'c EngineCfg, flags: NexusFlags) -> Self {
+        NexusEngine { cfg, flags }
+    }
+
+    pub fn run(&mut self, trace: &[Request]) -> RunMetrics {
+        let cfg = self.cfg;
+        let cost: CostModel = calibrate(&cfg.gpu);
+        let mut sim = Sim::new(cfg.gpu, 2);
+        sim.set_partition(PREFILL_STREAM, 0.5);
+        sim.set_partition(DECODE_STREAM, 0.5);
+        let mut controller = PartitionController::new(cfg.partition);
+        let mut kv = cfg.kv_cache();
+        let mut metrics = RunMetrics::default();
+
+        let mut states: Vec<Option<ReqState>> = vec![None; trace.len()];
+        let mut waiting: Vec<usize> = Vec::new();
+        let mut running: Vec<usize> = Vec::new();
+        let mut inflight: [Option<Iter>; 2] = [None, None];
+        let mut feed = ArrivalFeed::new(trace);
+        let mut done = 0usize;
+        let mut tag = 0u64;
+        // Partition-trajectory accounting (time-weighted).
+        let mut rp_time = 0.0f64;
+        let mut decode_mode_time = 0.0f64;
+        let mut kv_time = 0.0f64;
+        let mut last_t = 0.0f64;
+
+        while done < trace.len() {
+            let t_arr = feed.peek_time();
+            let t_sim = sim.peek_next_completion();
+            let t = match (t_arr, t_sim) {
+                (Some(a), Some(s)) => a.min(s),
+                (Some(a), None) => a,
+                (None, Some(s)) => s,
+                (None, None) => sim.now(),
+            };
+            if t > cfg.max_virtual_time {
+                metrics.timeouts = trace.len() - done;
+                break;
+            }
+            let dt = (t - last_t).max(0.0);
+            rp_time += controller.r_p * dt;
+            kv_time += kv.usage() * dt;
+            metrics.peak_kv_usage = metrics.peak_kv_usage.max(kv.usage());
+            if controller.mode_for(kv.usage()) == crate::partition::Mode::DecodePrioritized {
+                decode_mode_time += dt;
+            }
+            last_t = t;
+            let completions = sim.advance_to(t + 1e-12);
+            for r in feed.pop_until(t) {
+                states[r.id] = Some(ReqState::new(*r));
+                waiting.push(r.id);
+            }
+            for c in completions {
+                let it = inflight[c.stream].take().expect("completion without inflight");
+                let now = c.time;
+                let dur = now - it.start;
+                for id in it.decode_ids {
+                    let st = states[id].as_mut().unwrap();
+                    st.exec_time += dur;
+                    st.note_token(now, dur);
+                    if st.decode_done() {
+                        let st = states[id].take().unwrap();
+                        kv.release(id);
+                        running.retain(|&x| x != id);
+                        metrics.push(st.into_record(now));
+                        done += 1;
+                    }
+                }
+                for (id, take) in it.prefill_parts {
+                    let st = states[id].as_mut().unwrap();
+                    st.exec_time += dur;
+                    st.queue_time += (it.start - st.queue_since).max(0.0);
+                    st.queue_since = now;
+                    st.prefilled += take;
+                    if st.prefill_done() {
+                        waiting.retain(|&x| x != id);
+                        if st.generated > 0 {
+                            running.push(id); // resumed after recompute
+                        } else {
+                            st.note_first_token(now);
+                            if st.decode_done() {
+                                let st = states[id].take().unwrap();
+                                kv.release(id);
+                                metrics.push(st.into_record(now));
+                                done += 1;
+                            } else {
+                                running.push(id);
+                            }
+                        }
+                    }
+                }
+            }
+
+            // Schedule idle streams. Decode first: it is latency-critical
+            // and its batch state feeds the partition decision.
+            for stream in [DECODE_STREAM, PREFILL_STREAM] {
+                if inflight[stream].is_none() {
+                    inflight[stream] = self.schedule_stream(
+                        stream, &mut sim, &cost, &mut controller, &mut kv, &mut states,
+                        &mut waiting, &mut running, &mut metrics, &mut tag,
+                    );
+                }
+            }
+
+            if inflight.iter().all(Option::is_none) && feed.exhausted() && done < trace.len() {
+                metrics.timeouts = trace.len() - done;
+                break;
+            }
+        }
+        metrics.repartitions = controller.applied_count;
+        metrics.suppressed_repartitions = controller.suppressed_count;
+        if last_t > 0.0 {
+            metrics.mean_rp = rp_time / last_t;
+            metrics.decode_mode_frac = decode_mode_time / last_t;
+            metrics.mean_kv_usage = kv_time / last_t;
+        }
+        metrics
+    }
+
+    /// Build, partition, and submit the next batch for one stream.
+    #[allow(clippy::too_many_arguments)]
+    fn schedule_stream(
+        &mut self,
+        stream: usize,
+        sim: &mut Sim,
+        cost: &CostModel,
+        controller: &mut PartitionController,
+        kv: &mut KvCache,
+        states: &mut [Option<ReqState>],
+        waiting: &mut Vec<usize>,
+        running: &mut Vec<usize>,
+        metrics: &mut RunMetrics,
+        tag: &mut u64,
+    ) -> Option<Iter> {
+        let wall = Instant::now();
+        let cfg = self.cfg;
+        let now = sim.now();
+
+        let (decode_ids, prefill_parts, ops) = if stream == DECODE_STREAM {
+            // FCFS decode: every running request contributes one token.
+            let mut ids: Vec<usize> = running.clone();
+            ids.truncate(cfg.max_batch);
+            let mut decode_ids = Vec::with_capacity(ids.len());
+            for id in ids {
+                loop {
+                    if kv.try_reserve(id, 1) {
+                        decode_ids.push(id);
+                        break;
+                    }
+                    let victim = running
+                        .iter()
+                        .copied()
+                        .filter(|&v| v != id)
+                        .max_by(|&a, &b| {
+                            let aa = states[a].as_ref().unwrap().req.arrival;
+                            let bb = states[b].as_ref().unwrap().req.arrival;
+                            aa.partial_cmp(&bb).unwrap()
+                        });
+                    match victim {
+                        Some(v) => {
+                            kv.release(v);
+                            running.retain(|&x| x != v);
+                            decode_ids.retain(|&x| x != v);
+                            states[v].as_mut().unwrap().restart_for_recompute(now);
+                            waiting.push(v);
+                            metrics.recomputes += 1;
+                        }
+                        None => break,
+                    }
+                }
+            }
+            if decode_ids.is_empty() {
+                return None;
+            }
+            let ctx: f64 = decode_ids.iter().map(|&id| kv.tokens(id) as f64).sum();
+            let ops = cfg.model.decode_ops(decode_ids.len(), ctx);
+            (decode_ids, Vec::new(), ops)
+        } else {
+            // Prefill: SPF (Algorithm 2) or FCFS ablation, over the token
+            // budget, chunking the head request if nothing fits whole.
+            let queue: Vec<PrefillItem> = waiting
+                .iter()
+                .map(|&id| {
+                    let st = states[id].as_ref().unwrap();
+                    PrefillItem {
+                        id,
+                        prompt_len: st.effective_prompt,
+                        prefilled: st.prefilled,
+                        arrival: st.req.arrival,
+                    }
+                })
+                .collect();
+            if queue.is_empty() {
+                return None;
+            }
+            let picked = if self.flags.use_spf {
+                spf_batch(&queue, now, cfg.token_budget, cfg.gamma)
+            } else {
+                fcfs_batch(&queue, cfg.token_budget, true)
+            };
+            let mut prefill_parts: Vec<(usize, usize)> = Vec::new();
+            let mut left = cfg.token_budget;
+            for qidx in picked {
+                let item = &queue[qidx];
+                let take = item.remaining().min(cfg.chunk_size).min(left);
+                if take == 0 {
+                    break;
+                }
+                if kv.try_reserve(item.id, take) {
+                    prefill_parts.push((item.id, take));
+                    left -= take;
+                }
+            }
+            if prefill_parts.is_empty() {
+                return None;
+            }
+            let n: usize = prefill_parts.iter().map(|&(_, t)| t).sum();
+            let mut pairs = 0.0;
+            let mut kv_read = 0.0;
+            let mut finishing = 0usize;
+            for &(id, take) in &prefill_parts {
+                let st = states[id].as_ref().unwrap();
+                pairs += chunk_attn_pairs(st.prefilled, take);
+                kv_read += (st.prefilled + take) as f64;
+                if st.prefilled + take >= st.effective_prompt {
+                    finishing += 1;
+                }
+            }
+            let ops = cfg.model.prefill_ops(n, pairs, kv_read, finishing);
+            (Vec::new(), prefill_parts, ops)
+        };
+
+        // Proactive per-batch partition decision (Algorithm 1). The other
+        // phase's ops are estimated from its current queue/batch state.
+        if self.flags.dynamic_sm {
+            let other_ops = if stream == DECODE_STREAM {
+                self.estimate_prefill_ops(states, waiting, cfg)
+            } else {
+                self.estimate_decode_ops(states, running, kv, cfg)
+            };
+            let (pre_ops, dec_ops): (&[OpWork], &[OpWork]) = if stream == DECODE_STREAM {
+                (&other_ops, &ops)
+            } else {
+                (&ops, &other_ops)
+            };
+            let decision = controller.decide(
+                cost,
+                &BatchState { prefill_ops: pre_ops, decode_ops: dec_ops, kv_usage: kv.usage() },
+            );
+            if decision.applied {
+                sim.set_partition(PREFILL_STREAM, decision.r_p);
+                sim.set_partition(DECODE_STREAM, decision.r_d);
+            }
+        }
+
+        *tag += 1;
+        sim.submit(stream, &ops, *tag);
+
+        let sched = wall.elapsed().as_secs_f64();
+        let parts = decode_ids.len() + prefill_parts.len();
+        let share = sched / parts.max(1) as f64;
+        for &id in &decode_ids {
+            states[id].as_mut().unwrap().sched_time += share;
+        }
+        for &(id, _) in &prefill_parts {
+            states[id].as_mut().unwrap().sched_time += share;
+        }
+
+        Some(Iter { decode_ids, prefill_parts, start: now })
+    }
+
+    /// Estimate the next prefill batch's ops for the partition decision.
+    fn estimate_prefill_ops(
+        &self,
+        states: &[Option<ReqState>],
+        waiting: &[usize],
+        cfg: &EngineCfg,
+    ) -> Vec<OpWork> {
+        if waiting.is_empty() {
+            return Vec::new();
+        }
+        let mut n = 0usize;
+        let mut pairs = 0.0;
+        let mut kv_read = 0.0;
+        for &id in waiting {
+            let st = states[id].as_ref().unwrap();
+            let take = (st.effective_prompt - st.prefilled)
+                .min(cfg.chunk_size)
+                .min(cfg.token_budget - n);
+            if take == 0 {
+                break;
+            }
+            pairs += chunk_attn_pairs(st.prefilled, take);
+            kv_read += (st.prefilled + take) as f64;
+            n += take;
+        }
+        if n == 0 {
+            return Vec::new();
+        }
+        cfg.model.prefill_ops(n, pairs, kv_read, 0)
+    }
+
+    /// Estimate the current decode batch's ops for the partition decision.
+    fn estimate_decode_ops(
+        &self,
+        states: &[Option<ReqState>],
+        running: &[usize],
+        kv: &KvCache,
+        cfg: &EngineCfg,
+    ) -> Vec<OpWork> {
+        if running.is_empty() {
+            return Vec::new();
+        }
+        let n = running.len().min(cfg.max_batch);
+        let ctx: f64 = running.iter().take(n).map(|&id| kv.tokens(id) as f64).sum();
+        let _ = states;
+        cfg.model.decode_ops(n, ctx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::monolithic::MonolithicEngine;
+    use crate::engine::EngineCfg;
+    use crate::model::ModelConfig;
+    use crate::workload::{generate, Dataset};
+
+    fn cfg() -> EngineCfg {
+        EngineCfg::new(ModelConfig::qwen3b(), 42)
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let cfg = cfg();
+        let trace = generate(Dataset::ShareGpt, 40, 4.0, 7);
+        let m = NexusEngine::new(&cfg, NexusFlags::default()).run(&trace);
+        assert_eq!(m.summary().completed, 40);
+        assert_eq!(m.timeouts, 0);
+    }
+
+    #[test]
+    fn beats_vllm_tbt_under_long_prompts() {
+        // Phase isolation must beat mixed batching on decode latency when
+        // long prefill chunks are in play (the paper's headline TBT claim).
+        let cfg = cfg();
+        let trace = generate(Dataset::LongData, 40, 2.5, 11);
+        let nexus = NexusEngine::new(&cfg, NexusFlags::default()).run(&trace).summary();
+        let vllm = MonolithicEngine::vllm(&cfg).run(&trace).summary();
+        assert!(
+            nexus.mean_tbt < vllm.mean_tbt,
+            "nexus TBT {} must beat vllm {}",
+            nexus.mean_tbt,
+            vllm.mean_tbt
+        );
+    }
+
+    #[test]
+    fn spf_improves_ttft_over_fcfs_variant() {
+        let cfg = cfg();
+        let trace = generate(Dataset::Mixed, 60, 3.0, 13);
+        let spf = NexusEngine::new(&cfg, NexusFlags { use_spf: true, dynamic_sm: true })
+            .run(&trace)
+            .summary();
+        let fcfs = NexusEngine::new(&cfg, NexusFlags { use_spf: false, dynamic_sm: true })
+            .run(&trace)
+            .summary();
+        assert!(
+            spf.mean_ttft < fcfs.mean_ttft,
+            "SPF TTFT {} must beat FCFS {}",
+            spf.mean_ttft,
+            fcfs.mean_ttft
+        );
+    }
+
+    #[test]
+    fn repartitions_happen_and_hysteresis_suppresses() {
+        let cfg = cfg();
+        let trace = generate(Dataset::Mixed, 80, 4.0, 17);
+        let m = NexusEngine::new(&cfg, NexusFlags::default()).run(&trace);
+        assert!(m.repartitions > 0, "dynamic workload must trigger repartitioning");
+        assert!(
+            m.suppressed_repartitions > 0,
+            "hysteresis should suppress some proposals"
+        );
+    }
+
+    #[test]
+    fn static_split_never_repartitions() {
+        let cfg = cfg();
+        let trace = generate(Dataset::ShareGpt, 30, 3.0, 19);
+        let m = NexusEngine::new(&cfg, NexusFlags { use_spf: true, dynamic_sm: false })
+            .run(&trace);
+        assert_eq!(m.repartitions, 0);
+        assert_eq!(m.summary().completed, 30);
+    }
+}

@@ -1,0 +1,619 @@
+//! Fluid-model GPU simulator — the hardware substrate for every experiment.
+//!
+//! The paper runs on an NVIDIA L20 partitioned with MPS / CUDA Green
+//! Context. No GPU is available in this environment, so this module
+//! implements the closest synthetic equivalent that exercises the same
+//! control-system code paths (DESIGN.md §2):
+//!
+//! * **SM partitioning** — streams (≈ green contexts) own a fraction of the
+//!   SM pool, quantized to hardware SM groups. In-flight kernels keep the
+//!   partition they launched with (non-preemptive, like real green-context
+//!   switching); new kernels pick up the new partition.
+//! * **Diminishing compute returns (§3.2)** — each operator class has a
+//!   smooth saturation curve `eff(r) = s·(1 − e^(−a·r/s))`: FFN keeps
+//!   scaling, decode attention saturates around 30–40% of SMs. These curves
+//!   are *ground truth*; the analytical cost model (paper Eq. 7) only
+//!   approximates them with its two-regime fit, so calibration error is
+//!   real, not circular.
+//! * **Memory-bandwidth contention (§3.3)** — concurrently executing
+//!   kernels share HBM bandwidth proportionally to their instantaneous
+//!   demand (fluid fixed-point), reproducing the "prefill KV reads slow
+//!   decode" effect of Fig. 6 mechanistically rather than via the model's
+//!   overlap-probability approximation (Eq. 8–9).
+//!
+//! Kernels within one stream execute serially (CUDA stream semantics);
+//! streams execute concurrently and contend. The engine layer submits
+//! per-iteration operator lists ([`crate::model::OpWork`]) tagged with a
+//! batch id and receives completion events in virtual time.
+
+use crate::model::{OpClass, OpWork};
+use std::collections::VecDeque;
+
+/// Physical GPU description. Defaults model an NVIDIA L20.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Number of streaming multiprocessors.
+    pub sm_count: usize,
+    /// Green-context partition granularity (SMs per group).
+    pub sm_group: usize,
+    /// Peak dense fp16/bf16 throughput (FLOP/s).
+    pub peak_flops: f64,
+    /// HBM bandwidth (bytes/s).
+    pub mem_bw: f64,
+    /// HBM capacity (bytes).
+    pub hbm_bytes: f64,
+    /// Inter-GPU link bandwidth (bytes/s) — PCIe Gen4 x16 effective.
+    pub link_bw: f64,
+    /// Stall applied to a stream when its partition is reconfigured (s).
+    pub switch_overhead: f64,
+    /// Fraction of SMs needed to saturate HBM bandwidth.
+    pub mem_sat_frac: f64,
+    /// Fixed per-kernel launch latency (s).
+    pub launch_overhead: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA L20: 92 SMs, 48 GB GDDR6, 864 GB/s, ~119.5 TFLOPS fp16.
+    pub fn l20() -> Self {
+        GpuSpec {
+            name: "L20",
+            sm_count: 92,
+            sm_group: 8,
+            peak_flops: 119.5e12,
+            mem_bw: 864.0e9,
+            hbm_bytes: 48.0 * 1024.0 * 1024.0 * 1024.0,
+            link_bw: 26.0e9,
+            switch_overhead: 50e-6,
+            mem_sat_frac: 0.25,
+            launch_overhead: 6e-6,
+        }
+    }
+
+    /// Quantize an SM fraction to whole SM groups (green-context constraint),
+    /// keeping at least one group.
+    pub fn quantize(&self, frac: f64) -> f64 {
+        let groups = (self.sm_count + self.sm_group - 1) / self.sm_group;
+        let g = (frac * groups as f64).round().max(1.0).min(groups as f64);
+        g / groups as f64
+    }
+
+    /// Ground-truth compute saturation: effective parallel fraction for an
+    /// operator class running on `r` of the SMs. Monotonic, concave,
+    /// `eff(r) ≤ min(r·a_boost, s)`.
+    pub fn eff_compute(&self, class: OpClass, r: f64) -> f64 {
+        let (s, a) = match class {
+            // (plateau, initial slope) — FFN scales furthest; decode-attention
+            // GEMV saturates earliest (Fig. 5b/5c).
+            OpClass::Ffn => (0.92, 2.6),
+            OpClass::Qkv => (0.72, 3.0),
+            OpClass::AttnLinear => (0.70, 3.0),
+            OpClass::AttnPrefill => (0.80, 2.8),
+            OpClass::AttnDecode => (0.34, 5.0),
+            OpClass::LmHead => (0.75, 2.8),
+            OpClass::Comm => (1.0, 1.0), // not compute-scaled
+        };
+        s * (1.0 - (-a * r / s).exp())
+    }
+
+    /// Max HBM bandwidth reachable by a kernel on `r` of the SMs.
+    pub fn bw_cap(&self, r: f64) -> f64 {
+        self.mem_bw * (r / self.mem_sat_frac).min(1.0)
+    }
+
+    /// Duration of one kernel running *alone* on fraction `r`.
+    pub fn solo_time(&self, op: &OpWork, r: f64) -> f64 {
+        if op.class == OpClass::Comm {
+            return op.bytes / self.link_bw + self.launch_overhead;
+        }
+        let tc = op.flops / (self.peak_flops * self.eff_compute(op.class, r)).max(1.0);
+        let tm = op.bytes / self.bw_cap(r).max(1.0);
+        tc.max(tm) + self.launch_overhead
+    }
+}
+
+/// Completion event: the tagged batch on `stream` finished at `time`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Completion {
+    pub time: f64,
+    pub stream: usize,
+    pub tag: u64,
+}
+
+/// Per-kernel trace record (enabled via [`Sim::record_kernels`]) — feeds the
+/// kernel-level breakdowns of Fig. 4b / 5b / 5c.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelTrace {
+    pub class: OpClass,
+    pub stream: usize,
+    pub start: f64,
+    pub end: f64,
+    pub sm_frac: f64,
+    pub tag: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Active {
+    op: OpWork,
+    tag: u64,
+    /// Partition fraction captured at launch (non-preemptive semantics).
+    r: f64,
+    /// Fraction of the kernel's work completed.
+    progress: f64,
+    /// Fixed compute-side duration (doesn't depend on contention).
+    tc: f64,
+    start: f64,
+    last_in_batch: bool,
+}
+
+#[derive(Debug, Default)]
+struct Stream {
+    queue: VecDeque<(OpWork, u64, bool)>,
+    active: Option<Active>,
+    sm_frac: f64,
+    /// Absolute time before which the stream may not launch (switch stall).
+    stalled_until: f64,
+}
+
+/// Virtual-time GPU simulator with `n` concurrent streams.
+#[derive(Debug)]
+pub struct Sim {
+    pub spec: GpuSpec,
+    now: f64,
+    streams: Vec<Stream>,
+    /// Completions that occurred during the last advance.
+    pending: VecDeque<Completion>,
+    pub record_kernels: bool,
+    pub kernel_trace: Vec<KernelTrace>,
+    /// Cumulative busy time per stream (utilization accounting).
+    pub busy_time: Vec<f64>,
+    // scratch buffers reused across rate computations (hot path)
+    scratch_t: Vec<f64>,
+    scratch_d: Vec<f64>,
+    scratch_r: Vec<f64>,
+    /// Rates are invalidated only by launches, completions and partition
+    /// changes — not by time passing — so peek/advance pairs share one
+    /// fixed-point solve.
+    rates_dirty: bool,
+}
+
+impl Sim {
+    pub fn new(spec: GpuSpec, n_streams: usize) -> Self {
+        let mut streams = Vec::with_capacity(n_streams);
+        for _ in 0..n_streams {
+            streams.push(Stream {
+                sm_frac: spec.quantize(1.0 / n_streams as f64),
+                ..Default::default()
+            });
+        }
+        Sim {
+            spec,
+            now: 0.0,
+            streams,
+            pending: VecDeque::new(),
+            record_kernels: false,
+            kernel_trace: Vec::new(),
+            busy_time: vec![0.0; n_streams],
+            scratch_t: Vec::new(),
+            scratch_d: Vec::new(),
+            scratch_r: Vec::new(),
+            rates_dirty: true,
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn sm_frac(&self, stream: usize) -> f64 {
+        self.streams[stream].sm_frac
+    }
+
+    /// Reconfigure a stream's SM partition (quantized to SM groups). The
+    /// in-flight kernel keeps its old allocation; the stream pays
+    /// `switch_overhead` before its next launch.
+    pub fn set_partition(&mut self, stream: usize, frac: f64) {
+        let q = self.spec.quantize(frac);
+        let st = &mut self.streams[stream];
+        if (q - st.sm_frac).abs() > 1e-9 {
+            st.sm_frac = q;
+            st.stalled_until = st.stalled_until.max(self.now + self.spec.switch_overhead);
+            // Note: in-flight kernels keep their captured `r`, so current
+            // rates are unaffected; the next launch picks up the change.
+        }
+    }
+
+    /// Enqueue the operator list of one batch iteration on `stream`; a
+    /// [`Completion`] with `tag` fires when the last operator finishes.
+    pub fn submit(&mut self, stream: usize, ops: &[OpWork], tag: u64) {
+        assert!(!ops.is_empty(), "empty op list");
+        let st = &mut self.streams[stream];
+        for (i, op) in ops.iter().enumerate() {
+            st.queue.push_back((*op, tag, i + 1 == ops.len()));
+        }
+        self.refill(stream);
+    }
+
+    /// True if the stream has queued or in-flight work.
+    pub fn busy(&self, stream: usize) -> bool {
+        let st = &self.streams[stream];
+        st.active.is_some() || !st.queue.is_empty()
+    }
+
+    pub fn any_busy(&self) -> bool {
+        (0..self.streams.len()).any(|s| self.busy(s))
+    }
+
+    fn refill(&mut self, stream: usize) {
+        let st = &mut self.streams[stream];
+        if st.active.is_none() {
+            if let Some((op, tag, last)) = st.queue.pop_front() {
+                self.rates_dirty = true;
+                let r = st.sm_frac;
+                let tc = if op.class == OpClass::Comm {
+                    op.bytes / self.spec.link_bw
+                } else {
+                    op.flops / (self.spec.peak_flops * self.spec.eff_compute(op.class, r)).max(1.0)
+                };
+                // A partition switch stalls the stream: the kernel launches at
+                // `start`, and progress only accrues after it (see advance_to).
+                let start = self.now.max(st.stalled_until);
+                st.active = Some(Active {
+                    op,
+                    tag,
+                    r,
+                    progress: 0.0,
+                    tc: tc + self.spec.launch_overhead,
+                    start,
+                    last_in_batch: last,
+                });
+            }
+        }
+    }
+
+    /// Instantaneous per-stream progress rates (1/duration), applying
+    /// proportional HBM-bandwidth sharing via a short fixed-point loop.
+    /// Results land in `self.scratch_r` (no allocation on the hot path);
+    /// memoized until the active set / partitions change.
+    fn rates(&mut self) {
+        if !self.rates_dirty {
+            return;
+        }
+        self.rates_dirty = false;
+        let n = self.streams.len();
+        let spec = self.spec;
+        self.scratch_t.clear();
+        self.scratch_t.resize(n, 0.0);
+        self.scratch_d.clear();
+        self.scratch_d.resize(n, 0.0);
+
+        // Initial durations assuming each kernel gets its solo bandwidth cap.
+        for (i, st) in self.streams.iter().enumerate() {
+            if let Some(a) = &st.active {
+                if a.op.class == OpClass::Comm {
+                    self.scratch_t[i] = a.tc; // link-bound, no HBM contention
+                } else {
+                    let tm = a.op.bytes / spec.bw_cap(a.r).max(1.0);
+                    self.scratch_t[i] = a.tc.max(tm);
+                }
+            }
+        }
+
+        // Fixed point: demand_i = bytes_i / T_i; if ΣD > B, split B
+        // proportionally (capped by each kernel's own bw ceiling).
+        for _ in 0..6 {
+            let mut total = 0.0;
+            for (i, st) in self.streams.iter().enumerate() {
+                self.scratch_d[i] = 0.0;
+                if let Some(a) = &st.active {
+                    if a.op.class != OpClass::Comm && self.scratch_t[i] > 0.0 {
+                        self.scratch_d[i] = a.op.bytes / self.scratch_t[i];
+                        total += self.scratch_d[i];
+                    }
+                }
+            }
+            if total <= spec.mem_bw {
+                break;
+            }
+            for (i, st) in self.streams.iter().enumerate() {
+                if let Some(a) = &st.active {
+                    if a.op.class != OpClass::Comm && self.scratch_d[i] > 0.0 {
+                        let share =
+                            (spec.mem_bw * self.scratch_d[i] / total).min(spec.bw_cap(a.r));
+                        let tm = a.op.bytes / share.max(1.0);
+                        self.scratch_t[i] = a.tc.max(tm);
+                    }
+                }
+            }
+        }
+
+        self.scratch_r.clear();
+        for i in 0..n {
+            self.scratch_r.push(
+                if self.streams[i].active.is_some() && self.scratch_t[i] > 0.0 {
+                    1.0 / self.scratch_t[i]
+                } else {
+                    0.0
+                },
+            );
+        }
+    }
+
+    /// Advance virtual time to `t`, processing every kernel completion on
+    /// the way; returns the completions in time order.
+    pub fn advance_to(&mut self, t: f64) -> Vec<Completion> {
+        assert!(t >= self.now - 1e-12, "time went backwards: {} -> {t}", self.now);
+        let mut out: Vec<Completion> = self.pending.drain(..).collect();
+        while self.now < t {
+            self.rates();
+            // Time until the earliest active kernel finishes.
+            let mut dt_min = t - self.now;
+            let mut who: Option<usize> = None;
+            for (i, st) in self.streams.iter().enumerate() {
+                if let Some(a) = &st.active {
+                    if self.scratch_r[i] > 0.0 {
+                        let stall = (a.start - self.now).max(0.0);
+                        let dt = stall + (1.0 - a.progress.max(0.0)) / self.scratch_r[i];
+                        if dt < dt_min - 1e-15 {
+                            dt_min = dt;
+                            who = Some(i);
+                        }
+                    }
+                }
+            }
+            let dt = dt_min.max(0.0);
+            // Progress every active kernel by dt (minus any launch stall).
+            for (i, st) in self.streams.iter_mut().enumerate() {
+                if let Some(a) = &mut st.active {
+                    let stall = (a.start - self.now).max(0.0);
+                    let run = (dt - stall).max(0.0);
+                    a.progress = a.progress.max(0.0) + run * self.scratch_r[i];
+                    self.busy_time[i] += run;
+                }
+            }
+            self.now += dt;
+            match who {
+                Some(i) => {
+                    let a = self.streams[i].active.take().unwrap();
+                    self.rates_dirty = true;
+                    if self.record_kernels {
+                        self.kernel_trace.push(KernelTrace {
+                            class: a.op.class,
+                            stream: i,
+                            start: a.start,
+                            end: self.now,
+                            sm_frac: a.r,
+                            tag: a.tag,
+                        });
+                    }
+                    if a.last_in_batch {
+                        out.push(Completion {
+                            time: self.now,
+                            stream: i,
+                            tag: a.tag,
+                        });
+                    }
+                    self.refill(i);
+                }
+                None => {
+                    // No completion before t: idle or partial progress only.
+                    self.now = t;
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Time of the next kernel completion if no new work arrives.
+    pub fn peek_next_completion(&mut self) -> Option<f64> {
+        if !self.pending.is_empty() {
+            return Some(self.now);
+        }
+        self.rates();
+        let mut best: Option<f64> = None;
+        for (i, st) in self.streams.iter().enumerate() {
+            if let Some(a) = &st.active {
+                if self.scratch_r[i] > 0.0 {
+                    let stall = (a.start - self.now).max(0.0);
+                    let dt = stall + (1.0 - a.progress.max(0.0)) / self.scratch_r[i];
+                    let t = self.now + dt;
+                    best = Some(best.map_or(t, |b: f64| b.min(t)));
+                }
+            }
+        }
+        best
+    }
+
+    /// Run until all queues drain; returns every completion.
+    pub fn drain(&mut self) -> Vec<Completion> {
+        let mut out = Vec::new();
+        while self.any_busy() {
+            let t = self
+                .peek_next_completion()
+                .expect("busy sim must have a next completion");
+            out.extend(self.advance_to(t + 1e-12));
+        }
+        out
+    }
+}
+
+/// Duration of one iteration's ops run back-to-back on a single stream with
+/// SM fraction `r`, nothing else running (used by calibration and Fig. 5).
+pub fn iteration_time_isolated(spec: &GpuSpec, ops: &[OpWork], r: f64) -> f64 {
+    let rq = spec.quantize(r);
+    ops.iter().map(|o| spec.solo_time(o, rq)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn op(class: OpClass, flops: f64, bytes: f64) -> OpWork {
+        OpWork { class, flops, bytes }
+    }
+
+    #[test]
+    fn quantize_respects_groups() {
+        let s = GpuSpec::l20();
+        let q = s.quantize(0.5);
+        let groups = 12.0; // ceil(92/8)
+        assert!((q * groups).fract().abs() < 1e-9);
+        assert!(s.quantize(0.0) > 0.0, "at least one group");
+        assert_eq!(s.quantize(1.0), 1.0);
+    }
+
+    #[test]
+    fn eff_compute_monotone_and_saturating() {
+        let s = GpuSpec::l20();
+        for class in [OpClass::Ffn, OpClass::AttnDecode, OpClass::Qkv] {
+            let mut prev = 0.0;
+            for i in 1..=10 {
+                let e = s.eff_compute(class, i as f64 / 10.0);
+                assert!(e > prev, "{class} must be monotone");
+                prev = e;
+            }
+        }
+        // Decode attention saturates far below FFN.
+        assert!(s.eff_compute(OpClass::AttnDecode, 1.0) < 0.4);
+        assert!(s.eff_compute(OpClass::Ffn, 1.0) > 0.8);
+        // Diminishing returns: marginal gain 0.3→0.4 exceeds 0.7→0.8.
+        let d1 = s.eff_compute(OpClass::Ffn, 0.4) - s.eff_compute(OpClass::Ffn, 0.3);
+        let d2 = s.eff_compute(OpClass::Ffn, 0.8) - s.eff_compute(OpClass::Ffn, 0.7);
+        assert!(d1 > d2);
+    }
+
+    #[test]
+    fn single_kernel_runs_at_roofline() {
+        let s = GpuSpec::l20();
+        let mut sim = Sim::new(s, 1);
+        sim.set_partition(0, 1.0);
+        // Pure-compute kernel: 1e12 flops of FFN on full GPU.
+        sim.submit(0, &[op(OpClass::Ffn, 1.0e12, 1.0e6)], 7);
+        let done = sim.drain();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].tag, 7);
+        let expect = 1.0e12 / (s.peak_flops * s.eff_compute(OpClass::Ffn, 1.0));
+        let rel = (done[0].time - expect).abs() / expect;
+        assert!(rel < 0.05, "time {} vs {}", done[0].time, expect);
+    }
+
+    #[test]
+    fn streams_serialize_within_and_overlap_across() {
+        let s = GpuSpec::l20();
+        let mut sim = Sim::new(s, 2);
+        sim.set_partition(0, 0.5);
+        sim.set_partition(1, 0.5);
+        let k = op(OpClass::Ffn, 5.0e11, 1.0e6);
+        // Two kernels on one stream = serial.
+        sim.submit(0, &[k], 1);
+        sim.submit(0, &[k], 2);
+        let done = sim.drain();
+        let t_serial = done.last().unwrap().time;
+
+        let mut sim2 = Sim::new(s, 2);
+        sim2.set_partition(0, 0.5);
+        sim2.set_partition(1, 0.5);
+        sim2.submit(0, &[k], 1);
+        sim2.submit(1, &[k], 2);
+        let done2 = sim2.drain();
+        let t_parallel = done2.last().unwrap().time;
+        assert!(
+            t_parallel < 0.6 * t_serial,
+            "parallel {t_parallel} vs serial {t_serial}"
+        );
+    }
+
+    #[test]
+    fn bandwidth_contention_slows_memory_bound_kernels() {
+        let s = GpuSpec::l20();
+        // Memory-bound kernel alone...
+        let mem = op(OpClass::AttnDecode, 1.0e9, 5.0e9);
+        let mut solo = Sim::new(s, 2);
+        solo.set_partition(0, 0.5);
+        solo.set_partition(1, 0.5);
+        solo.submit(0, &[mem], 1);
+        let t_solo = solo.drain().last().unwrap().time;
+
+        // ...vs co-running with a bandwidth-hungry prefill-attention kernel.
+        let mut both = Sim::new(s, 2);
+        both.set_partition(0, 0.5);
+        both.set_partition(1, 0.5);
+        both.submit(0, &[mem], 1);
+        both.submit(1, &[op(OpClass::AttnPrefill, 1.0e9, 20.0e9)], 2);
+        let done = both.drain();
+        let t_mem = done.iter().find(|c| c.tag == 1).unwrap().time;
+        assert!(
+            t_mem > 1.3 * t_solo,
+            "contention should inflate decode: {t_mem} vs {t_solo}"
+        );
+    }
+
+    #[test]
+    fn inflight_kernel_keeps_old_partition() {
+        let s = GpuSpec::l20();
+        let mut sim = Sim::new(s, 1);
+        sim.set_partition(0, 1.0);
+        sim.submit(0, &[op(OpClass::Ffn, 1.0e12, 1.0e6)], 1);
+        // Shrink partition mid-flight: completion time must match full-SM run.
+        let mid = sim.peek_next_completion().unwrap() / 2.0;
+        sim.advance_to(mid);
+        sim.set_partition(0, 0.1);
+        let done = sim.drain();
+        let expect = 1.0e12 / (s.peak_flops * s.eff_compute(OpClass::Ffn, 1.0));
+        let rel = (done[0].time - expect).abs() / expect;
+        assert!(rel < 0.05, "{} vs {}", done[0].time, expect);
+    }
+
+    #[test]
+    fn iteration_time_decreases_with_sm_then_flattens() {
+        let s = GpuSpec::l20();
+        let m = ModelConfig::qwen3b();
+        let ops = m.prefill_ops(512, 512.0 * 512.0, 512.0, 0);
+        let t30 = iteration_time_isolated(&s, &ops, 0.3);
+        let t40 = iteration_time_isolated(&s, &ops, 0.4);
+        let t70 = iteration_time_isolated(&s, &ops, 0.7);
+        let t80 = iteration_time_isolated(&s, &ops, 0.8);
+        assert!(t40 < t30 && t80 <= t70);
+        let gain_low = (t30 - t40) / t30;
+        let gain_high = (t70 - t80) / t70;
+        assert!(
+            gain_low > gain_high,
+            "diminishing returns: {gain_low} vs {gain_high}"
+        );
+    }
+
+    #[test]
+    fn advance_to_without_work_is_idle() {
+        let mut sim = Sim::new(GpuSpec::l20(), 2);
+        let done = sim.advance_to(5.0);
+        assert!(done.is_empty());
+        assert_eq!(sim.now(), 5.0);
+        assert!(!sim.any_busy());
+    }
+
+    #[test]
+    fn kernel_trace_records() {
+        let s = GpuSpec::l20();
+        let mut sim = Sim::new(s, 1);
+        sim.record_kernels = true;
+        sim.set_partition(0, 1.0);
+        sim.submit(0, &[op(OpClass::Qkv, 1e10, 1e8), op(OpClass::Ffn, 1e11, 1e8)], 3);
+        sim.drain();
+        assert_eq!(sim.kernel_trace.len(), 2);
+        assert_eq!(sim.kernel_trace[0].class, OpClass::Qkv);
+        assert!(sim.kernel_trace[0].end <= sim.kernel_trace[1].start + 1e-12);
+    }
+
+    #[test]
+    fn comm_kernel_uses_link_bandwidth() {
+        let s = GpuSpec::l20();
+        let mut sim = Sim::new(s, 1);
+        let bytes = 2.6e9; // 100 ms on a 26 GB/s link
+        sim.submit(0, &[op(OpClass::Comm, 0.0, bytes)], 1);
+        let done = sim.drain();
+        let expect = bytes / s.link_bw;
+        assert!((done[0].time - expect).abs() / expect < 0.01);
+    }
+}

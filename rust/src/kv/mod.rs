@@ -1,0 +1,303 @@
+//! Paged KV-cache manager (vLLM-style block allocator).
+//!
+//! Tracks per-request token counts in fixed-size blocks, exposes the live
+//! usage ratio `KV_u` that drives Nexus's objective-mode switching
+//! (paper §4.1.2), and models CPU swap / recompute (FastServe) and the
+//! finite KV-transfer buffer of engine-level P/D disaggregation (§6.2.2).
+
+use std::collections::HashMap;
+
+/// Block-granular KV allocator for one GPU.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    /// Tokens per block (vLLM default 16).
+    pub block_tokens: usize,
+    /// Total blocks available on the device.
+    pub total_blocks: usize,
+    used_blocks: usize,
+    /// req id -> (tokens, blocks) resident on GPU.
+    resident: HashMap<usize, (usize, usize)>,
+    /// req id -> tokens swapped out to host memory.
+    swapped: HashMap<usize, usize>,
+    /// KV bytes per token for the model this cache serves.
+    pub bytes_per_token: f64,
+    /// Cumulative swap traffic (bytes) for metrics.
+    pub swap_out_bytes: f64,
+    pub swap_in_bytes: f64,
+}
+
+impl KvCache {
+    pub fn new(total_blocks: usize, block_tokens: usize, bytes_per_token: f64) -> Self {
+        assert!(total_blocks > 0 && block_tokens > 0);
+        KvCache {
+            block_tokens,
+            total_blocks,
+            used_blocks: 0,
+            resident: HashMap::new(),
+            swapped: HashMap::new(),
+            bytes_per_token,
+            swap_out_bytes: 0.0,
+            swap_in_bytes: 0.0,
+        }
+    }
+
+    /// Size the cache from GPU memory left after weights, reserving
+    /// `activation_frac` of HBM for activations/workspace.
+    pub fn for_gpu(
+        hbm_bytes: f64,
+        weights_bytes: f64,
+        bytes_per_token: f64,
+        activation_frac: f64,
+        block_tokens: usize,
+    ) -> Self {
+        let avail = (hbm_bytes * (1.0 - activation_frac) - weights_bytes).max(0.0);
+        let tokens = (avail / bytes_per_token) as usize;
+        let blocks = (tokens / block_tokens).max(1);
+        KvCache::new(blocks, block_tokens, bytes_per_token)
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        (tokens + self.block_tokens - 1) / self.block_tokens
+    }
+
+    /// Grow request `id` by `new_tokens`; fails (allocating nothing) if the
+    /// device lacks free blocks.
+    pub fn try_reserve(&mut self, id: usize, new_tokens: usize) -> bool {
+        let (cur_tokens, cur_blocks) = self.resident.get(&id).copied().unwrap_or((0, 0));
+        let need_blocks = self.blocks_for(cur_tokens + new_tokens);
+        let extra = need_blocks.saturating_sub(cur_blocks);
+        if self.used_blocks + extra > self.total_blocks {
+            return false;
+        }
+        self.used_blocks += extra;
+        self.resident.insert(id, (cur_tokens + new_tokens, need_blocks));
+        true
+    }
+
+    /// Free every block of a finished request.
+    pub fn release(&mut self, id: usize) {
+        if let Some((_, blocks)) = self.resident.remove(&id) {
+            self.used_blocks -= blocks;
+        }
+        self.swapped.remove(&id);
+    }
+
+    /// Live usage ratio `KV_u` ∈ [0, 1].
+    pub fn usage(&self) -> f64 {
+        self.used_blocks as f64 / self.total_blocks as f64
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.total_blocks - self.used_blocks
+    }
+
+    /// Resident token count of a request (0 if absent/swapped).
+    pub fn tokens(&self, id: usize) -> usize {
+        self.resident.get(&id).map(|&(t, _)| t).unwrap_or(0)
+    }
+
+    /// Total resident tokens across all requests.
+    pub fn total_tokens(&self) -> usize {
+        self.resident.values().map(|&(t, _)| t).sum()
+    }
+
+    pub fn resident_requests(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// Move a request's KV to host memory; returns bytes transferred.
+    pub fn swap_out(&mut self, id: usize) -> f64 {
+        if let Some((tokens, blocks)) = self.resident.remove(&id) {
+            self.used_blocks -= blocks;
+            self.swapped.insert(id, tokens);
+            let bytes = tokens as f64 * self.bytes_per_token;
+            self.swap_out_bytes += bytes;
+            bytes
+        } else {
+            0.0
+        }
+    }
+
+    /// Bring a swapped request back; returns bytes transferred, or `None`
+    /// if there is no room (caller must evict or recompute).
+    pub fn swap_in(&mut self, id: usize) -> Option<f64> {
+        let tokens = *self.swapped.get(&id)?;
+        let blocks = self.blocks_for(tokens);
+        if self.used_blocks + blocks > self.total_blocks {
+            return None;
+        }
+        self.swapped.remove(&id);
+        self.used_blocks += blocks;
+        self.resident.insert(id, (tokens, blocks));
+        let bytes = tokens as f64 * self.bytes_per_token;
+        self.swap_in_bytes += bytes;
+        Some(bytes)
+    }
+
+    pub fn is_swapped(&self, id: usize) -> bool {
+        self.swapped.contains_key(&id)
+    }
+
+    pub fn swapped_tokens(&self, id: usize) -> usize {
+        self.swapped.get(&id).copied().unwrap_or(0)
+    }
+
+    /// Drop a request's KV entirely (eviction → recompute path).
+    pub fn evict(&mut self, id: usize) -> usize {
+        let tokens = self.tokens(id).max(self.swapped_tokens(id));
+        self.release(id);
+        tokens
+    }
+}
+
+/// Finite staging buffer between a prefill engine and a decode engine
+/// (vLLM-P/D). When full, new KV hand-offs force evictions on the prefill
+/// side, which the decode side must recompute — the §6.2.2 failure mode.
+#[derive(Debug, Clone)]
+pub struct TransferBuffer {
+    pub capacity_bytes: f64,
+    pub used_bytes: f64,
+    /// (req id, bytes) in FIFO order.
+    queue: Vec<(usize, f64)>,
+    pub evictions: usize,
+}
+
+impl TransferBuffer {
+    pub fn new(capacity_bytes: f64) -> Self {
+        TransferBuffer {
+            capacity_bytes,
+            used_bytes: 0.0,
+            queue: Vec::new(),
+            evictions: 0,
+        }
+    }
+
+    /// Stage a finished prefill's KV. Returns `false` (and records an
+    /// eviction) if the buffer cannot hold it.
+    pub fn push(&mut self, id: usize, bytes: f64) -> bool {
+        if self.used_bytes + bytes > self.capacity_bytes {
+            self.evictions += 1;
+            return false;
+        }
+        self.used_bytes += bytes;
+        self.queue.push((id, bytes));
+        true
+    }
+
+    /// Remove a request's staged KV once the decode side pulled it.
+    pub fn pop(&mut self, id: usize) -> Option<f64> {
+        let idx = self.queue.iter().position(|&(q, _)| q == id)?;
+        let (_, bytes) = self.queue.remove(idx);
+        self.used_bytes -= bytes;
+        Some(bytes)
+    }
+
+    pub fn occupancy(&self) -> f64 {
+        if self.capacity_bytes <= 0.0 {
+            1.0
+        } else {
+            self.used_bytes / self.capacity_bytes
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache() -> KvCache {
+        KvCache::new(100, 16, 1000.0)
+    }
+
+    #[test]
+    fn reserve_rounds_to_blocks() {
+        let mut kv = cache();
+        assert!(kv.try_reserve(1, 17)); // 2 blocks
+        assert_eq!(kv.free_blocks(), 98);
+        assert!(kv.try_reserve(1, 15)); // 32 tokens → still 2 blocks
+        assert_eq!(kv.free_blocks(), 98);
+        assert!(kv.try_reserve(1, 1)); // 33 tokens → 3 blocks
+        assert_eq!(kv.free_blocks(), 97);
+        assert_eq!(kv.tokens(1), 33);
+    }
+
+    #[test]
+    fn reserve_fails_when_full_and_is_atomic() {
+        let mut kv = KvCache::new(2, 16, 1.0);
+        assert!(kv.try_reserve(1, 32));
+        let before = kv.usage();
+        assert!(!kv.try_reserve(2, 1));
+        assert_eq!(kv.usage(), before, "failed reserve must not leak");
+        kv.release(1);
+        assert_eq!(kv.usage(), 0.0);
+        assert!(kv.try_reserve(2, 1));
+    }
+
+    #[test]
+    fn usage_tracks_blocks() {
+        let mut kv = cache();
+        kv.try_reserve(1, 160); // 10 blocks
+        assert!((kv.usage() - 0.1).abs() < 1e-12);
+        kv.try_reserve(2, 320);
+        assert!((kv.usage() - 0.3).abs() < 1e-12);
+        kv.release(1);
+        assert!((kv.usage() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn swap_roundtrip() {
+        let mut kv = cache();
+        kv.try_reserve(1, 64);
+        let out = kv.swap_out(1);
+        assert_eq!(out, 64.0 * 1000.0);
+        assert!(kv.is_swapped(1));
+        assert_eq!(kv.tokens(1), 0);
+        assert_eq!(kv.usage(), 0.0);
+        let back = kv.swap_in(1).unwrap();
+        assert_eq!(back, out);
+        assert_eq!(kv.tokens(1), 64);
+        assert!(!kv.is_swapped(1));
+    }
+
+    #[test]
+    fn swap_in_fails_when_full() {
+        let mut kv = KvCache::new(4, 16, 1.0);
+        kv.try_reserve(1, 64); // all 4 blocks
+        kv.swap_out(1);
+        kv.try_reserve(2, 64);
+        assert!(kv.swap_in(1).is_none());
+        assert!(kv.is_swapped(1));
+    }
+
+    #[test]
+    fn evict_clears_both_states() {
+        let mut kv = cache();
+        kv.try_reserve(1, 50);
+        assert_eq!(kv.evict(1), 50);
+        assert_eq!(kv.tokens(1), 0);
+        kv.try_reserve(2, 30);
+        kv.swap_out(2);
+        assert_eq!(kv.evict(2), 30);
+        assert!(!kv.is_swapped(2));
+    }
+
+    #[test]
+    fn for_gpu_sizing() {
+        // 48 GB HBM, 6 GB weights, 10% activations, 128 KB/token.
+        let kv = KvCache::for_gpu(48e9, 6e9, 131072.0, 0.1, 16);
+        let expect_tokens = ((48e9 * 0.9 - 6e9) / 131072.0) as usize;
+        assert_eq!(kv.total_blocks, expect_tokens / 16);
+    }
+
+    #[test]
+    fn transfer_buffer_eviction() {
+        let mut tb = TransferBuffer::new(100.0);
+        assert!(tb.push(1, 60.0));
+        assert!(!tb.push(2, 60.0));
+        assert_eq!(tb.evictions, 1);
+        assert_eq!(tb.pop(1), Some(60.0));
+        assert!(tb.push(2, 60.0));
+        assert!((tb.occupancy() - 0.6).abs() < 1e-12);
+        assert_eq!(tb.pop(99), None);
+    }
+}

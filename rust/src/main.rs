@@ -1,0 +1,252 @@
+//! `nexus` — CLI entrypoint for the serving system and its experiments.
+//!
+//! Subcommands:
+//!
+//! ```text
+//! nexus compare    --dataset mixed --model llama8b --n 200 --rate 3.0
+//! nexus serve      --engine nexus --dataset ldc --model qwen3b --n 100 --rate 2.5
+//! nexus throughput --engine vllm --dataset arxiv --model qwen3b --n 150
+//! nexus offline    --dataset ldc --model qwen3b --n 100
+//! nexus calibrate  [--model qwen3b]
+//! nexus trace      --dataset sharegpt --n 500 --rate 2.0 --out trace.json
+//! nexus live       [--artifacts DIR] [--requests 16] [--rate 4.0]
+//! ```
+//!
+//! `live` is the real-compute path: it loads the AOT artifacts (tiny model)
+//! through PJRT and serves actual token traffic; everything else runs on
+//! the calibrated L20 substrate.
+
+use nexus::coordinator::{offline_makespan, sustainable_throughput, Experiment, SloSpec};
+use nexus::costmodel::calibrate;
+use nexus::engine::EngineKind;
+use nexus::gpusim::GpuSpec;
+use nexus::metrics::Summary;
+use nexus::model::{ModelConfig, OpClass};
+use nexus::server::{ServeRequest, Server, ServerCfg};
+use nexus::util::cli::Args;
+use nexus::util::fmt::{dur, Table};
+use nexus::util::rng::Rng;
+use nexus::workload::{self, Dataset};
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "serve" => cmd_serve(&args),
+        "compare" => cmd_compare(&args),
+        "throughput" => cmd_throughput(&args),
+        "offline" => cmd_offline(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "trace" => cmd_trace(&args),
+        "live" => cmd_live(&args),
+        _ => {
+            print!("{}", include_str!("usage.txt"));
+        }
+    }
+}
+
+fn experiment(args: &Args) -> Experiment {
+    let model = ModelConfig::by_name(&args.get_or("model", "qwen3b"))
+        .unwrap_or_else(|| panic!("unknown --model (qwen3b|llama8b|qwen14b|tiny)"));
+    let dataset = Dataset::by_name(&args.get_or("dataset", "sharegpt"))
+        .unwrap_or_else(|| panic!("unknown --dataset (ldc|arxiv|sharegpt|mixed)"));
+    let mut exp = Experiment::new(
+        model,
+        dataset,
+        args.get_usize("n", 100),
+        args.get_f64("rate", 2.5),
+    );
+    exp.seed = args.get_u64("seed", 42);
+    exp
+}
+
+fn summary_row(name: &str, s: &Summary) -> Vec<String> {
+    vec![
+        name.to_string(),
+        format!("{}", s.completed),
+        dur(s.mean_ttft),
+        dur(s.p95_ttft),
+        dur(s.mean_tbt),
+        dur(s.p95_tbt),
+        dur(s.mean_norm),
+        dur(s.p95_norm),
+        format!("{:.2}", s.throughput_rps),
+    ]
+}
+
+const HDR: [&str; 9] =
+    ["engine", "done", "TTFT", "TTFT95", "TBT", "TBT95", "norm", "norm95", "req/s"];
+
+fn cmd_serve(args: &Args) {
+    let exp = experiment(args);
+    let kind = EngineKind::by_name(&args.get_or("engine", "nexus"))
+        .unwrap_or_else(|| panic!("unknown --engine"));
+    eprintln!(
+        "running {} on {} / {} ({} reqs @ {} req/s)...",
+        kind.name(),
+        exp.model.name,
+        exp.dataset.name(),
+        exp.n_requests,
+        exp.rate
+    );
+    let m = exp.run(kind);
+    let s = m.summary();
+    let mut t = Table::new("serving summary", &HDR);
+    t.row(&summary_row(kind.name(), &s));
+    t.print();
+    println!(
+        "repartitions: {} applied, {} suppressed | swaps {} | recomputes {} | timeouts {}",
+        m.repartitions, m.suppressed_repartitions, m.swaps, m.recomputes, m.timeouts
+    );
+    let b = m.breakdown();
+    println!(
+        "per-token breakdown: sched {} | queue {} | exec {}",
+        dur(b.sched),
+        dur(b.queue),
+        dur(b.exec)
+    );
+}
+
+fn cmd_compare(args: &Args) {
+    let exp = experiment(args);
+    let mut t = Table::new(
+        &format!(
+            "{} / {} — {} reqs @ {} req/s",
+            exp.model.name,
+            exp.dataset.name(),
+            exp.n_requests,
+            exp.rate
+        ),
+        &HDR,
+    );
+    for &kind in EngineKind::all() {
+        eprintln!("running {}...", kind.name());
+        let s = exp.run(kind).summary();
+        t.row(&summary_row(kind.name(), &s));
+    }
+    t.print();
+}
+
+fn cmd_throughput(args: &Args) {
+    let exp = experiment(args);
+    let kind = EngineKind::by_name(&args.get_or("engine", "nexus"))
+        .unwrap_or_else(|| panic!("unknown --engine"));
+    let slo = SloSpec {
+        p95_norm: args.get_f64("slo-norm", 0.2),
+        mean_ttft: args.get_f64("slo-ttft", 15.0),
+    };
+    let hi = args.get_f64("max-rate", 30.0);
+    let thr = sustainable_throughput(kind, &exp, slo, 0.25, hi, 0.25);
+    println!(
+        "{} sustainable throughput on {}/{}: {:.2} req/s (SLO: p95 norm ≤ {}s, mean TTFT ≤ {}s)",
+        kind.name(),
+        exp.model.name,
+        exp.dataset.name(),
+        thr,
+        slo.p95_norm,
+        slo.mean_ttft
+    );
+}
+
+fn cmd_offline(args: &Args) {
+    let exp = experiment(args);
+    let mut t = Table::new("offline makespan", &["engine", "makespan", "gpus"]);
+    for &kind in EngineKind::all() {
+        eprintln!("running {}...", kind.name());
+        match offline_makespan(kind, &exp) {
+            Some((mk, _)) => t.row(&[
+                kind.name().to_string(),
+                dur(mk),
+                format!("{}", kind.gpus(&exp.model)),
+            ]),
+            None => t.row(&[kind.name().to_string(), "X (timeout)".into(), String::new()]),
+        }
+    }
+    t.print();
+}
+
+fn cmd_calibrate(_args: &Args) {
+    let gpu = GpuSpec::l20();
+    let cm = calibrate(&gpu);
+    let mut t = Table::new(
+        &format!("calibrated Eq.-7 curves — {}", gpu.name),
+        &["operator", "C_eff (TFLOP/s)", "R_sat", "lambda"],
+    );
+    for &class in OpClass::all() {
+        if class == OpClass::Comm {
+            continue;
+        }
+        let c = cm.curve(class);
+        t.row(&[
+            class.name().to_string(),
+            format!("{:.1}", c.c_eff / 1e12),
+            format!("{:.2}", c.r_sat),
+            format!("{:.3}", c.lambda),
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_trace(args: &Args) {
+    let dataset = Dataset::by_name(&args.get_or("dataset", "sharegpt")).expect("dataset");
+    let trace = workload::generate(
+        dataset,
+        args.get_usize("n", 500),
+        args.get_f64("rate", 2.0),
+        args.get_u64("seed", 42),
+    );
+    let json = workload::trace_to_json(&trace).to_string();
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &json).expect("writing trace");
+            eprintln!("wrote {} requests to {path}", trace.len());
+        }
+        None => println!("{json}"),
+    }
+}
+
+fn cmd_live(args: &Args) {
+    let dir = std::path::PathBuf::from(args.get_or(
+        "artifacts",
+        nexus::runtime::Runtime::default_dir().to_str().unwrap(),
+    ));
+    let n = args.get_usize("requests", 16);
+    let rate = args.get_f64("rate", 4.0);
+    let seed = args.get_u64("seed", 42);
+    eprintln!("loading artifacts from {} ...", dir.display());
+    let mut server = Server::start(dir, ServerCfg::default()).expect("server start");
+    server.wait_ready().expect("artifact load");
+
+    let mut rng = Rng::new(seed);
+    let t0 = std::time::Instant::now();
+    for id in 0..n {
+        let len = rng.range_usize(4, 48);
+        let prompt: Vec<i32> = (0..len).map(|_| rng.below(512) as i32).collect();
+        let max_tokens = rng.range_usize(4, 24);
+        server.submit(ServeRequest { id, prompt, max_tokens }).unwrap();
+        std::thread::sleep(std::time::Duration::from_secs_f64(rng.exponential(rate)));
+    }
+    let mut ttfts = Vec::new();
+    let mut gaps = Vec::new();
+    let mut tokens = 0usize;
+    for _ in 0..n {
+        let r = server.recv().expect("response");
+        ttfts.push(r.ttft);
+        gaps.extend(r.gaps.iter().copied());
+        tokens += r.tokens.len();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    server.shutdown();
+    println!(
+        "live PJRT serving: {n} requests, {tokens} tokens in {:.2}s ({:.1} tok/s)",
+        wall,
+        tokens as f64 / wall
+    );
+    println!(
+        "  mean TTFT {} | p95 TTFT {} | mean TBT {} | p95 TBT {}",
+        dur(nexus::util::mean(&ttfts)),
+        dur(nexus::util::percentile(&ttfts, 95.0)),
+        dur(nexus::util::mean(&gaps)),
+        dur(nexus::util::percentile(&gaps, 95.0)),
+    );
+}

@@ -1,0 +1,146 @@
+//! Streaming log-bucketed histogram for latency distributions.
+//!
+//! Used by long benches where storing every sample would be wasteful; exact
+//! per-request records remain the source of truth for headline numbers.
+
+/// Log-spaced histogram covering [1µs, ~1000s) with ~4% relative resolution.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    lo: f64,
+    ratio: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        // 512 buckets, geometric from 1e-6 s; ratio chosen to reach ~2000 s.
+        let lo = 1e-6;
+        let hi: f64 = 2000.0;
+        let n = 512usize;
+        let ratio = (hi / lo).powf(1.0 / n as f64);
+        Histogram {
+            buckets: vec![0; n + 2], // + underflow/overflow
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            lo,
+            ratio,
+        }
+    }
+
+    fn index(&self, x: f64) -> usize {
+        if x < self.lo {
+            return 0;
+        }
+        let i = ((x / self.lo).ln() / self.ratio.ln()).floor() as usize + 1;
+        i.min(self.buckets.len() - 1)
+    }
+
+    pub fn record(&mut self, x: f64) {
+        debug_assert!(x.is_finite() && x >= 0.0, "histogram sample {x}");
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        let i = self.index(x);
+        self.buckets[i] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Approximate quantile (bucket upper edge), `q` in [0,1].
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                if i == 0 {
+                    return self.min;
+                }
+                let edge = self.lo * self.ratio.powi(i as i32);
+                return edge.min(self.max).max(self.min);
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.buckets.len(), other.buckets.len());
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_exact() {
+        let mut h = Histogram::new();
+        for x in [0.1, 0.2, 0.3] {
+            h.record(x);
+        }
+        assert!((h.mean() - 0.2).abs() < 1e-12);
+        assert_eq!(h.count(), 3);
+    }
+
+    #[test]
+    fn quantile_within_resolution() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-3); // 1ms..1s uniform
+        }
+        let p50 = h.quantile(0.5);
+        assert!((p50 - 0.5).abs() / 0.5 < 0.06, "p50={p50}");
+        let p95 = h.quantile(0.95);
+        assert!((p95 - 0.95).abs() / 0.95 < 0.06, "p95={p95}");
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(0.1);
+        b.record(0.3);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!((a.mean() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_quantile_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+    }
+}

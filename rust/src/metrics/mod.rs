@@ -1,0 +1,220 @@
+//! Serving metrics: TTFT, TBT, normalized latency, stage breakdown.
+//!
+//! The paper reports mean and P95 of three latency metrics (§6.1):
+//! *TTFT* (arrival → first output token), *TBT* (inter-token gap during
+//! decode), and *normalized latency* (end-to-end latency / output tokens).
+//! Figure 12 additionally decomposes per-token latency into scheduling,
+//! queuing, and execution stages.
+
+mod hist;
+pub use hist::Histogram;
+
+use crate::util::{mean, percentile};
+
+/// Per-request record accumulated by an engine run.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub id: usize,
+    pub arrival: f64,
+    /// Time the first output token was produced (end of prefill).
+    pub first_token: f64,
+    /// Completion time of the last token.
+    pub finish: f64,
+    pub prompt_len: usize,
+    pub output_len: usize,
+    /// Inter-token gaps observed during decode (seconds).
+    pub token_gaps: Vec<f64>,
+    /// Cumulative time spent in scheduler decision-making for this request.
+    pub sched_time: f64,
+    /// Cumulative time spent waiting in queues (not executing).
+    pub queue_time: f64,
+    /// Cumulative time spent in GPU execution.
+    pub exec_time: f64,
+}
+
+impl RequestRecord {
+    pub fn ttft(&self) -> f64 {
+        self.first_token - self.arrival
+    }
+    pub fn e2e(&self) -> f64 {
+        self.finish - self.arrival
+    }
+    /// End-to-end latency divided by output tokens (paper's normalized latency).
+    pub fn normalized_latency(&self) -> f64 {
+        self.e2e() / self.output_len.max(1) as f64
+    }
+}
+
+/// Aggregated metrics for one engine run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub records: Vec<RequestRecord>,
+    /// Virtual-time span of the run (first arrival → last finish).
+    pub makespan: f64,
+    /// Number of SM repartition events that actually applied (Nexus only).
+    pub repartitions: usize,
+    /// Number of repartition proposals suppressed by the hysteresis buffer.
+    pub suppressed_repartitions: usize,
+    /// KV-cache swap / eviction / recompute events (FastServe, vLLM-P/D).
+    pub swaps: usize,
+    pub recomputes: usize,
+    /// Requests that timed out / were rejected (offline runs).
+    pub timeouts: usize,
+    /// Time-weighted mean prefill SM share over the run (0.0 when the
+    /// engine does not report partitions).
+    pub mean_rp: f64,
+    /// Fraction of virtual time spent decode-prioritized (Nexus only).
+    pub decode_mode_frac: f64,
+    /// Time-weighted mean / peak KV-cache usage `KV_u` (engines that track it).
+    pub mean_kv_usage: f64,
+    pub peak_kv_usage: f64,
+}
+
+/// Summary statistics over a set of request records.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Summary {
+    pub mean_ttft: f64,
+    pub p95_ttft: f64,
+    pub mean_tbt: f64,
+    pub p95_tbt: f64,
+    pub mean_norm: f64,
+    pub p95_norm: f64,
+    pub throughput_rps: f64,
+    pub token_throughput: f64,
+    pub completed: usize,
+}
+
+impl RunMetrics {
+    pub fn push(&mut self, r: RequestRecord) {
+        self.makespan = self.makespan.max(r.finish);
+        self.records.push(r);
+    }
+
+    pub fn summary(&self) -> Summary {
+        let ttfts: Vec<f64> = self.records.iter().map(|r| r.ttft()).collect();
+        let norms: Vec<f64> = self.records.iter().map(|r| r.normalized_latency()).collect();
+        let gaps: Vec<f64> = self
+            .records
+            .iter()
+            .flat_map(|r| r.token_gaps.iter().copied())
+            .collect();
+        let span = self.span().max(1e-9);
+        let tokens: usize = self.records.iter().map(|r| r.output_len).sum();
+        Summary {
+            mean_ttft: mean(&ttfts),
+            p95_ttft: percentile(&ttfts, 95.0),
+            mean_tbt: mean(&gaps),
+            p95_tbt: percentile(&gaps, 95.0),
+            mean_norm: mean(&norms),
+            p95_norm: percentile(&norms, 95.0),
+            throughput_rps: self.records.len() as f64 / span,
+            token_throughput: tokens as f64 / span,
+            completed: self.records.len(),
+        }
+    }
+
+    /// First arrival → last finish.
+    pub fn span(&self) -> f64 {
+        let first = self
+            .records
+            .iter()
+            .map(|r| r.arrival)
+            .fold(f64::INFINITY, f64::min);
+        if self.records.is_empty() {
+            0.0
+        } else {
+            self.makespan - first
+        }
+    }
+
+    /// Figure-12 style decomposition, normalized per output token.
+    pub fn breakdown(&self) -> StageBreakdown {
+        let mut b = StageBreakdown::default();
+        let mut tokens = 0usize;
+        for r in &self.records {
+            b.sched += r.sched_time;
+            b.queue += r.queue_time;
+            b.exec += r.exec_time;
+            tokens += r.output_len.max(1);
+        }
+        if tokens > 0 {
+            b.sched /= tokens as f64;
+            b.queue /= tokens as f64;
+            b.exec /= tokens as f64;
+        }
+        b
+    }
+}
+
+/// Per-token latency decomposition (Figure 12).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageBreakdown {
+    pub sched: f64,
+    pub queue: f64,
+    pub exec: f64,
+}
+
+impl StageBreakdown {
+    pub fn total(&self) -> f64 {
+        self.sched + self.queue + self.exec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(arrival: f64, first: f64, finish: f64, out: usize) -> RequestRecord {
+        RequestRecord {
+            id: 0,
+            arrival,
+            first_token: first,
+            finish,
+            prompt_len: 100,
+            output_len: out,
+            token_gaps: vec![0.01; out.saturating_sub(1)],
+            sched_time: 0.001,
+            queue_time: 0.1,
+            exec_time: 0.2,
+        }
+    }
+
+    #[test]
+    fn ttft_and_normalized() {
+        let r = rec(1.0, 1.5, 3.0, 10);
+        assert!((r.ttft() - 0.5).abs() < 1e-12);
+        assert!((r.normalized_latency() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_aggregates() {
+        let mut m = RunMetrics::default();
+        m.push(rec(0.0, 0.5, 2.0, 5));
+        m.push(rec(1.0, 1.2, 4.0, 10));
+        let s = m.summary();
+        assert_eq!(s.completed, 2);
+        assert!((s.mean_ttft - 0.35).abs() < 1e-12);
+        assert!((s.mean_tbt - 0.01).abs() < 1e-12);
+        assert!(s.throughput_rps > 0.0);
+        assert!((m.span() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn breakdown_per_token() {
+        let mut m = RunMetrics::default();
+        m.push(rec(0.0, 0.5, 2.0, 10));
+        let b = m.breakdown();
+        assert!((b.queue - 0.01).abs() < 1e-12);
+        assert!((b.exec - 0.02).abs() < 1e-12);
+        assert!(b.total() > 0.0);
+    }
+
+    #[test]
+    fn empty_metrics_are_safe() {
+        let m = RunMetrics::default();
+        let s = m.summary();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.mean_ttft, 0.0);
+        assert_eq!(m.span(), 0.0);
+    }
+}

@@ -1,0 +1,495 @@
+//! Analytical transformer model: per-operator FLOPs and memory traffic.
+//!
+//! Implements the operator cost accounting of paper §2.2–§2.3 for
+//! decoder-only LLMs with GQA: Q/K/V projections (`O(n·d²)`), attention
+//! (`O(n·L·d)` prefill / `O(L·d)` GEMV decode), output projection, and the
+//! SwiGLU FFN (`O(n·d·d_ff)`). Dense-op memory traffic includes the *weight
+//! read*, which is what makes small-batch decode memory-bound: every decode
+//! iteration streams the full model weights plus the KV cache.
+//!
+//! These per-operator `(flops, bytes)` pairs are consumed by two layers:
+//! the GPU simulator ([`crate::gpusim`]) executes them as kernels, and the
+//! cost model ([`crate::costmodel`]) predicts their latency analytically
+//! (paper Eq. 5–9).
+
+use std::fmt;
+
+/// Operator classes distinguished by the paper's breakdowns (Fig. 4b/5b/5c).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpClass {
+    /// Q/K/V linear projections (compute-bound).
+    Qkv,
+    /// Prefill self-attention (matrix-matrix, compute-bound).
+    AttnPrefill,
+    /// Decode self-attention (GEMV over the KV cache, memory-bound).
+    AttnDecode,
+    /// Attention output projection (compute-bound).
+    AttnLinear,
+    /// Feed-forward network (most FLOP-intensive dense op).
+    Ffn,
+    /// LM head / logits projection.
+    LmHead,
+    /// Inter-GPU collective (tensor-parallel allreduce).
+    Comm,
+}
+
+pub const DENSE_CLASSES: [OpClass; 4] =
+    [OpClass::Qkv, OpClass::AttnLinear, OpClass::Ffn, OpClass::LmHead];
+
+/// Flash-attention q-tile height: each tile of query rows re-streams the
+/// full attended KV from HBM (SRAM can't hold it), so prefill-attention
+/// memory traffic is `ceil(n / FLASH_QTILE) × kv_bytes`.
+pub const FLASH_QTILE: usize = 64;
+
+/// Paged-KV gather inefficiency: the KV cache is read in 16-token blocks
+/// scattered across HBM (PagedAttention), so effective DRAM traffic per
+/// useful KV byte is ~2× a contiguous stream. Weights stream contiguously
+/// (factor 1). This is what makes attention the high-pressure bandwidth
+/// window of §3.3.
+pub const KV_GATHER_OVERHEAD: f64 = 2.0;
+
+impl OpClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpClass::Qkv => "kqv_linear",
+            OpClass::AttnPrefill => "prefill_attn",
+            OpClass::AttnDecode => "decode_attn",
+            OpClass::AttnLinear => "attn_linear",
+            OpClass::Ffn => "ffn",
+            OpClass::LmHead => "lm_head",
+            OpClass::Comm => "comm",
+        }
+    }
+
+    pub fn all() -> &'static [OpClass] {
+        &[
+            OpClass::Qkv,
+            OpClass::AttnPrefill,
+            OpClass::AttnDecode,
+            OpClass::AttnLinear,
+            OpClass::Ffn,
+            OpClass::LmHead,
+            OpClass::Comm,
+        ]
+    }
+}
+
+impl fmt::Display for OpClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One schedulable unit of GPU work: aggregate over all layers of a model
+/// for one operator class within one phase iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct OpWork {
+    pub class: OpClass,
+    /// Floating-point operations.
+    pub flops: f64,
+    /// Bytes moved to/from HBM (weights + activations + KV traffic).
+    pub bytes: f64,
+}
+
+/// Decoder-only transformer architecture description.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub layers: usize,
+    /// Hidden size d.
+    pub d: usize,
+    pub heads: usize,
+    /// KV heads (GQA); == heads for MHA.
+    pub kv_heads: usize,
+    /// FFN inner size (SwiGLU: three d×d_ff matrices).
+    pub d_ff: usize,
+    pub vocab: usize,
+    /// Bytes per element (2 = fp16/bf16).
+    pub dtype_bytes: usize,
+    /// Tensor-parallel degree this config is sharded over.
+    pub tp: usize,
+}
+
+impl ModelConfig {
+    /// Qwen2.5-3B-like (single-GPU experiments, LDC + ArXiv workloads).
+    pub fn qwen3b() -> Self {
+        ModelConfig {
+            name: "qwen2.5-3b",
+            layers: 36,
+            d: 2048,
+            heads: 16,
+            kv_heads: 2,
+            d_ff: 11008,
+            vocab: 151936,
+            dtype_bytes: 2,
+            tp: 1,
+        }
+    }
+
+    /// Llama3.1-8B-like (single-GPU Mixed workload).
+    pub fn llama8b() -> Self {
+        ModelConfig {
+            name: "llama3.1-8b",
+            layers: 32,
+            d: 4096,
+            heads: 32,
+            kv_heads: 8,
+            d_ff: 14336,
+            vocab: 128256,
+            dtype_bytes: 2,
+            tp: 1,
+        }
+    }
+
+    /// Qwen2.5-14B-like (dual-GPU TP=2 experiments).
+    pub fn qwen14b() -> Self {
+        ModelConfig {
+            name: "qwen2.5-14b",
+            layers: 48,
+            d: 5120,
+            heads: 40,
+            kv_heads: 8,
+            d_ff: 13824,
+            vocab: 152064,
+            dtype_bytes: 2,
+            tp: 1,
+        }
+    }
+
+    /// ~20M-param model actually executed on the PJRT CPU runtime
+    /// (matches `python/compile/model.py`).
+    pub fn tiny() -> Self {
+        ModelConfig {
+            name: "tiny-20m",
+            layers: 4,
+            d: 256,
+            heads: 4,
+            kv_heads: 4,
+            d_ff: 1024,
+            vocab: 512,
+            dtype_bytes: 4, // f32 on CPU
+            tp: 1,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "qwen3b" | "qwen2.5-3b" => Some(Self::qwen3b()),
+            "llama8b" | "llama3.1-8b" => Some(Self::llama8b()),
+            "qwen14b" | "qwen2.5-14b" => Some(Self::qwen14b()),
+            "tiny" | "tiny-20m" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d / self.heads
+    }
+
+    /// KV projection width (kv_heads × head_dim).
+    pub fn kv_dim(&self) -> usize {
+        self.kv_heads * self.head_dim()
+    }
+
+    /// Shard over `ways` GPUs (tensor parallelism). Heads and FFN split;
+    /// per-GPU op costs shrink accordingly, and [`Self::comm_bytes`] becomes
+    /// non-zero.
+    pub fn with_tp(&self, ways: usize) -> Self {
+        assert!(ways >= 1 && self.heads % ways == 0 && self.kv_heads.max(ways) % ways == 0);
+        let mut c = *self;
+        c.tp = ways;
+        c
+    }
+
+    /// Approximate parameter count.
+    pub fn params(&self) -> f64 {
+        let d = self.d as f64;
+        let attn = d * d // Wq
+            + 2.0 * d * self.kv_dim() as f64 // Wk, Wv
+            + d * d; // Wo
+        let ffn = 3.0 * d * self.d_ff as f64; // SwiGLU: gate, up, down
+        self.layers as f64 * (attn + ffn) + 2.0 * d * self.vocab as f64
+    }
+
+    /// Total weight bytes (whole model, before TP sharding).
+    pub fn weights_bytes(&self) -> f64 {
+        self.params() * self.dtype_bytes as f64
+    }
+
+    /// KV-cache bytes per token (both K and V, all layers, GQA width).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        (self.layers * 2 * self.kv_dim() * self.dtype_bytes) as f64
+    }
+
+    /// Per-layer allreduce traffic for `n` tokens under TP (two collectives
+    /// per layer: post-attention and post-FFN), in bytes *per GPU*.
+    pub fn comm_bytes(&self, n_tokens: f64) -> f64 {
+        if self.tp <= 1 {
+            return 0.0;
+        }
+        // Ring allreduce moves ~2·(tp-1)/tp of the buffer per GPU, twice per layer.
+        let buf = n_tokens * self.d as f64 * self.dtype_bytes as f64;
+        let factor = 2.0 * (self.tp as f64 - 1.0) / self.tp as f64;
+        2.0 * self.layers as f64 * buf * factor
+    }
+
+    fn shard(&self, x: f64) -> f64 {
+        x / self.tp as f64
+    }
+
+    /// Operator work for a *prefill* iteration processing `n_tokens` new
+    /// tokens whose attention spans `kv_tokens` total cached+current tokens
+    /// (summed over the requests in the batch: Σᵢ nᵢ·Lᵢ is passed
+    /// pre-aggregated as `attn_token_pairs`).
+    ///
+    /// `include_lm_head`: only the chunk that finishes a prompt computes
+    /// logits (one token per finishing request).
+    pub fn prefill_ops(
+        &self,
+        n_tokens: usize,
+        attn_token_pairs: f64,
+        kv_read_tokens: f64,
+        finishing: usize,
+    ) -> Vec<OpWork> {
+        let n = n_tokens as f64;
+        let d = self.d as f64;
+        let dff = self.d_ff as f64;
+        let kvd = self.kv_dim() as f64;
+        let l = self.layers as f64;
+        let b = self.dtype_bytes as f64;
+
+        let mut ops = Vec::with_capacity(6);
+
+        // Q/K/V projection: n·d·(d + 2·kv_dim) MACs per layer.
+        let qkv_flops = 2.0 * n * d * (d + 2.0 * kvd) * l;
+        let qkv_w = (d * d + 2.0 * d * kvd) * b * l;
+        let qkv_act = 2.0 * n * d * b * l;
+        ops.push(OpWork {
+            class: OpClass::Qkv,
+            flops: self.shard(qkv_flops),
+            bytes: self.shard(qkv_w) + qkv_act,
+        });
+
+        // Prefill attention: QKᵀ + AV = 4·Σ nᵢLᵢ·d flops per layer. Memory
+        // traffic follows the flash-attention schedule: each q-tile
+        // (FLASH_QTILE rows) re-streams the full attended KV through
+        // SRAM/VMEM, so HBM reads scale with ceil(n / tile) — this KV
+        // re-streaming is what makes long-context prefill attention a real
+        // bandwidth consumer (the §3.3 contention source).
+        let attn_flops = 4.0 * attn_token_pairs * d * l;
+        let qtiles = ((n_tokens + FLASH_QTILE - 1) / FLASH_QTILE).max(1) as f64;
+        let kv_bytes = kv_read_tokens * self.kv_bytes_per_token() * qtiles * KV_GATHER_OVERHEAD;
+        ops.push(OpWork {
+            class: OpClass::AttnPrefill,
+            flops: self.shard(attn_flops),
+            bytes: self.shard(kv_bytes) + 2.0 * n * d * b * l,
+        });
+
+        // Output projection.
+        let proj_flops = 2.0 * n * d * d * l;
+        ops.push(OpWork {
+            class: OpClass::AttnLinear,
+            flops: self.shard(proj_flops),
+            bytes: self.shard(d * d * b * l) + 2.0 * n * d * b * l,
+        });
+
+        // SwiGLU FFN: 3 matmuls of d×d_ff.
+        let ffn_flops = 3.0 * 2.0 * n * d * dff * l;
+        ops.push(OpWork {
+            class: OpClass::Ffn,
+            flops: self.shard(ffn_flops),
+            bytes: self.shard(3.0 * d * dff * b * l) + 2.0 * n * d * b * l,
+        });
+
+        if finishing > 0 {
+            let f = finishing as f64;
+            ops.push(OpWork {
+                class: OpClass::LmHead,
+                flops: self.shard(2.0 * f * d * self.vocab as f64),
+                bytes: self.shard(d * self.vocab as f64 * b) + f * d * b,
+            });
+        }
+
+        let comm = self.comm_bytes(n);
+        if comm > 0.0 {
+            ops.push(OpWork {
+                class: OpClass::Comm,
+                flops: 0.0,
+                bytes: comm,
+            });
+        }
+        ops
+    }
+
+    /// Operator work for a *decode* iteration over a batch of `batch`
+    /// requests whose cached contexts sum to `kv_tokens`.
+    pub fn decode_ops(&self, batch: usize, kv_tokens: f64) -> Vec<OpWork> {
+        let n = batch as f64;
+        let d = self.d as f64;
+        let dff = self.d_ff as f64;
+        let kvd = self.kv_dim() as f64;
+        let l = self.layers as f64;
+        let b = self.dtype_bytes as f64;
+
+        let mut ops = Vec::with_capacity(6);
+
+        let qkv_flops = 2.0 * n * d * (d + 2.0 * kvd) * l;
+        ops.push(OpWork {
+            class: OpClass::Qkv,
+            flops: self.shard(qkv_flops),
+            bytes: self.shard((d * d + 2.0 * d * kvd) * b * l) + 2.0 * n * d * b * l,
+        });
+
+        // Decode attention: GEMV per request, 4·Lᵢ·d flops; streams the whole
+        // KV cache of the batch once per layer (already summed in kv_tokens),
+        // through the paged-block gather.
+        let attn_flops = 4.0 * kv_tokens * d * l;
+        ops.push(OpWork {
+            class: OpClass::AttnDecode,
+            flops: self.shard(attn_flops),
+            bytes: self.shard(kv_tokens * self.kv_bytes_per_token() * KV_GATHER_OVERHEAD)
+                + 2.0 * n * d * b * l,
+        });
+
+        let proj_flops = 2.0 * n * d * d * l;
+        ops.push(OpWork {
+            class: OpClass::AttnLinear,
+            flops: self.shard(proj_flops),
+            bytes: self.shard(d * d * b * l) + 2.0 * n * d * b * l,
+        });
+
+        let ffn_flops = 3.0 * 2.0 * n * d * dff * l;
+        ops.push(OpWork {
+            class: OpClass::Ffn,
+            flops: self.shard(ffn_flops),
+            bytes: self.shard(3.0 * d * dff * b * l) + 2.0 * n * d * b * l,
+        });
+
+        ops.push(OpWork {
+            class: OpClass::LmHead,
+            flops: self.shard(2.0 * n * d * self.vocab as f64),
+            bytes: self.shard(d * self.vocab as f64 * b) + n * d * b,
+        });
+
+        let comm = self.comm_bytes(n);
+        if comm > 0.0 {
+            ops.push(OpWork {
+                class: OpClass::Comm,
+                flops: 0.0,
+                bytes: comm,
+            });
+        }
+        ops
+    }
+
+    /// Total FLOPs of a prefill iteration (for roofline sanity checks).
+    pub fn prefill_flops(&self, n_tokens: usize, attn_token_pairs: f64) -> f64 {
+        self.prefill_ops(n_tokens, attn_token_pairs, 0.0, 0)
+            .iter()
+            .map(|o| o.flops)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_are_plausible() {
+        // Within 35% of nominal sizes (embedding/norm details ignored).
+        let q3 = ModelConfig::qwen3b().params();
+        assert!((2.0e9..4.5e9).contains(&q3), "qwen3b params {q3:.2e}");
+        let l8 = ModelConfig::llama8b().params();
+        assert!((6.0e9..9.5e9).contains(&l8), "llama8b params {l8:.2e}");
+        let q14 = ModelConfig::qwen14b().params();
+        assert!((11.0e9..17.0e9).contains(&q14), "qwen14b params {q14:.2e}");
+        let t = ModelConfig::tiny().params();
+        assert!((2.0e6..30.0e6).contains(&t), "tiny params {t:.2e}");
+    }
+
+    #[test]
+    fn kv_bytes_per_token_gqa() {
+        let c = ModelConfig::llama8b();
+        // 32 layers × 2 (K,V) × 8 kv_heads × 128 head_dim × 2 bytes = 131072
+        assert_eq!(c.kv_bytes_per_token(), 131072.0);
+    }
+
+    #[test]
+    fn prefill_flops_track_2pn() {
+        // Dense prefill FLOPs ≈ 2 · params · n for short contexts.
+        let c = ModelConfig::llama8b();
+        let n = 512usize;
+        let dense: f64 = c
+            .prefill_ops(n, 0.0, 0.0, 0)
+            .iter()
+            .filter(|o| o.class != OpClass::AttnPrefill)
+            .map(|o| o.flops)
+            .sum();
+        let approx = 2.0 * (c.params() - 2.0 * (c.d * c.vocab) as f64) * n as f64;
+        let rel = (dense - approx).abs() / approx;
+        assert!(rel < 0.05, "dense={dense:.3e} approx={approx:.3e} rel={rel}");
+    }
+
+    #[test]
+    fn decode_is_memory_bound_dense() {
+        // At batch 1 the dense ops' arithmetic intensity must be tiny
+        // (weight-read dominated) — the §2.3 observation.
+        let c = ModelConfig::qwen3b();
+        for op in c.decode_ops(1, 4096.0) {
+            if DENSE_CLASSES.contains(&op.class) {
+                let intensity = op.flops / op.bytes;
+                assert!(
+                    intensity < 4.0,
+                    "{}: intensity {intensity} should be memory-bound",
+                    op.class
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_attention_scales_with_pairs() {
+        let c = ModelConfig::qwen3b();
+        let a = c.prefill_ops(256, 256.0 * 1000.0, 1000.0, 0);
+        let b = c.prefill_ops(256, 256.0 * 2000.0, 2000.0, 0);
+        let fa = a.iter().find(|o| o.class == OpClass::AttnPrefill).unwrap();
+        let fb = b.iter().find(|o| o.class == OpClass::AttnPrefill).unwrap();
+        assert!((fb.flops / fa.flops - 2.0).abs() < 1e-9);
+        assert!(fb.bytes > fa.bytes);
+    }
+
+    #[test]
+    fn tp_shards_flops_and_adds_comm() {
+        let c = ModelConfig::qwen14b();
+        let c2 = c.with_tp(2);
+        let ops1 = c.decode_ops(8, 8.0 * 2048.0);
+        let ops2 = c2.decode_ops(8, 8.0 * 2048.0);
+        let f1: f64 = ops1.iter().map(|o| o.flops).sum();
+        let f2: f64 = ops2.iter().map(|o| o.flops).sum();
+        assert!((f2 / f1 - 0.5).abs() < 1e-9, "TP2 halves per-GPU flops");
+        assert!(ops2.iter().any(|o| o.class == OpClass::Comm));
+        assert!(!ops1.iter().any(|o| o.class == OpClass::Comm));
+    }
+
+    #[test]
+    fn lm_head_only_when_finishing() {
+        let c = ModelConfig::qwen3b();
+        assert!(!c
+            .prefill_ops(128, 128.0 * 128.0, 128.0, 0)
+            .iter()
+            .any(|o| o.class == OpClass::LmHead));
+        assert!(c
+            .prefill_ops(128, 128.0 * 128.0, 128.0, 2)
+            .iter()
+            .any(|o| o.class == OpClass::LmHead));
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["qwen3b", "llama8b", "qwen14b", "tiny"] {
+            assert!(ModelConfig::by_name(n).is_some());
+        }
+        assert!(ModelConfig::by_name("gpt5").is_none());
+    }
+}

@@ -1,0 +1,386 @@
+//! PJRT runtime — the real-compute path.
+//!
+//! Loads the artifacts that `make artifacts` produced (Layer 2 JAX model +
+//! Layer 1 Pallas kernels, AOT-lowered to **HLO text** — the image's
+//! xla_extension 0.5.1 rejects jax≥0.5 serialized protos), compiles them on
+//! the PJRT CPU client, and exposes a typed prefill/decode API to the
+//! serving layer. Python never runs here: the artifacts directory is
+//! self-contained (`manifest.json` + `*.hlo.txt` + `weights.bin`).
+//!
+//! Entry signatures (shapes fixed at AOT time, see `python/compile/aot.py`):
+//!
+//! * `prefill(w…, tokens i32[P], len i32[])` → `(logits f32[V], kv f32[L,2,C,KVD])`
+//! * `decode(w…, tokens i32[B], pos i32[B], kv f32[B,L,2,C,KVD])`
+//!   → `(logits f32[B,V], kv f32[B,L,2,C,KVD])`
+//!
+//! Weights are uploaded to device once at load and reused across calls
+//! (`execute_b` with persistent `PjRtBuffer`s).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Architecture + AOT shape parameters recorded in `manifest.json`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TinyDims {
+    pub layers: usize,
+    pub d: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    /// Max prompt tokens the prefill entry accepts (padded).
+    pub max_prompt: usize,
+    /// Per-request KV capacity (tokens) baked into the decode entry.
+    pub kv_cap: usize,
+    /// Decode batch width baked into the decode entry.
+    pub decode_batch: usize,
+}
+
+impl TinyDims {
+    pub fn kv_dim(&self) -> usize {
+        self.kv_heads * (self.d / self.heads)
+    }
+
+    /// f32 elements of one request's KV cache: `[L, 2, C, KVD]`.
+    pub fn kv_elems(&self) -> usize {
+        self.layers * 2 * self.kv_cap * self.kv_dim()
+    }
+
+    /// f32 elements of the batched decode KV: `[B, L, 2, C, KVD]`.
+    pub fn batch_kv_elems(&self) -> usize {
+        self.decode_batch * self.kv_elems()
+    }
+}
+
+/// One weight tensor's manifest entry.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dims: TinyDims,
+    pub weights_file: String,
+    pub tensors: Vec<TensorSpec>,
+    pub prefill_hlo: String,
+    pub decode_hlo: String,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest.json: {e:?}"))?;
+        let num = |node: &Json, k: &str| -> Result<usize> {
+            node.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest: missing numeric '{k}'"))
+        };
+        let model = j.get("model").ok_or_else(|| anyhow!("manifest: missing 'model'"))?;
+        let dims = TinyDims {
+            layers: num(model, "layers")?,
+            d: num(model, "d")?,
+            heads: num(model, "heads")?,
+            kv_heads: num(model, "kv_heads")?,
+            d_ff: num(model, "d_ff")?,
+            vocab: num(model, "vocab")?,
+            max_prompt: num(model, "max_prompt")?,
+            kv_cap: num(model, "kv_cap")?,
+            decode_batch: num(model, "decode_batch")?,
+        };
+        let weights = j.get("weights").ok_or_else(|| anyhow!("manifest: missing 'weights'"))?;
+        let weights_file = weights
+            .get("file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest: weights.file"))?
+            .to_string();
+        let mut tensors = Vec::new();
+        for t in weights
+            .get("tensors")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: weights.tensors"))?
+        {
+            let name = t
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("manifest: tensor name"))?
+                .to_string();
+            let shape = t
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("manifest: tensor shape"))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| anyhow!("manifest: bad dim")))
+                .collect::<Result<Vec<usize>>>()?;
+            tensors.push(TensorSpec { name, shape });
+        }
+        let mut prefill_hlo = String::new();
+        let mut decode_hlo = String::new();
+        for e in j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing 'entries'"))?
+        {
+            let name = e.get("name").and_then(Json::as_str).unwrap_or("");
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("manifest: entry file"))?;
+            match name {
+                "prefill" => prefill_hlo = file.to_string(),
+                "decode" => decode_hlo = file.to_string(),
+                other => bail!("manifest: unknown entry '{other}'"),
+            }
+        }
+        if prefill_hlo.is_empty() || decode_hlo.is_empty() {
+            bail!("manifest: need both 'prefill' and 'decode' entries");
+        }
+        Ok(Manifest { dims, weights_file, tensors, prefill_hlo, decode_hlo })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn total_weight_elems(&self) -> usize {
+        self.tensors.iter().map(TensorSpec::elems).sum()
+    }
+}
+
+/// Result of one prefill call.
+#[derive(Debug, Clone)]
+pub struct PrefillOut {
+    /// Next-token logits for the last real prompt token: `[vocab]`.
+    pub logits: Vec<f32>,
+    /// Populated per-request KV cache: `[L, 2, C, KVD]` flattened.
+    pub kv: Vec<f32>,
+}
+
+/// The compiled model: PJRT client + executables + device-resident weights.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub dims: TinyDims,
+    pub dir: PathBuf,
+    prefill_exe: xla::PjRtLoadedExecutable,
+    decode_exe: xla::PjRtLoadedExecutable,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+}
+
+/// Read `weights.bin`: little-endian f32, tensors concatenated in manifest
+/// order.
+pub fn read_weights(path: &Path, expect_elems: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() != expect_elems * 4 {
+        bail!(
+            "{}: expected {} f32 ({} bytes), found {} bytes",
+            path.display(),
+            expect_elems,
+            expect_elems * 4,
+            bytes.len()
+        );
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+impl Runtime {
+    /// Load + compile every artifact under `dir` and upload the weights.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+
+        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        let prefill_exe = compile(&manifest.prefill_hlo)?;
+        let decode_exe = compile(&manifest.decode_hlo)?;
+
+        let flat = read_weights(&dir.join(&manifest.weights_file), manifest.total_weight_elems())?;
+        let mut weight_bufs = Vec::with_capacity(manifest.tensors.len());
+        let mut off = 0usize;
+        for t in &manifest.tensors {
+            let n = t.elems();
+            let buf = client.buffer_from_host_buffer(&flat[off..off + n], &t.shape, None)?;
+            weight_bufs.push(buf);
+            off += n;
+        }
+
+        Ok(Runtime {
+            client,
+            dims: manifest.dims,
+            dir: dir.to_path_buf(),
+            prefill_exe,
+            decode_exe,
+            weight_bufs,
+        })
+    }
+
+    /// Default artifacts directory: `$NEXUS_ARTIFACTS` or `artifacts/`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("NEXUS_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+            PathBuf::from("artifacts")
+        })
+    }
+
+    /// Run the prefill entry on a prompt (≤ `max_prompt` tokens).
+    pub fn prefill(&self, tokens: &[i32]) -> Result<PrefillOut> {
+        let d = &self.dims;
+        if tokens.is_empty() || tokens.len() > d.max_prompt {
+            bail!("prefill: prompt length {} not in 1..={}", tokens.len(), d.max_prompt);
+        }
+        let mut padded = vec![0i32; d.max_prompt];
+        padded[..tokens.len()].copy_from_slice(tokens);
+        let len = [tokens.len() as i32];
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        let tok_buf = self.client.buffer_from_host_buffer(&padded, &[d.max_prompt], None)?;
+        let len_buf = self.client.buffer_from_host_buffer(&len, &[], None)?;
+        args.push(&tok_buf);
+        args.push(&len_buf);
+
+        let out = self.decode_tuple(&self.prefill_exe, &args)?;
+        let (logits_l, kv_l) = match out.len() {
+            2 => (&out[0], &out[1]),
+            n => bail!("prefill: expected 2 outputs, got {n}"),
+        };
+        Ok(PrefillOut { logits: logits_l.to_vec::<f32>()?, kv: kv_l.to_vec::<f32>()? })
+    }
+
+    /// Run one batched decode step.
+    ///
+    /// `tokens`/`pos` are `[B]`; `kv` is the flattened `[B, L, 2, C, KVD]`
+    /// state, updated in place. Returns `[B, vocab]` logits (flattened).
+    pub fn decode(&self, tokens: &[i32], pos: &[i32], kv: &mut Vec<f32>) -> Result<Vec<f32>> {
+        let d = &self.dims;
+        if tokens.len() != d.decode_batch || pos.len() != d.decode_batch {
+            bail!("decode: batch must be exactly {}", d.decode_batch);
+        }
+        if kv.len() != d.batch_kv_elems() {
+            bail!("decode: kv has {} elems, want {}", kv.len(), d.batch_kv_elems());
+        }
+        let kvd = d.kv_dim();
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        let tok_buf = self.client.buffer_from_host_buffer(tokens, &[d.decode_batch], None)?;
+        let pos_buf = self.client.buffer_from_host_buffer(pos, &[d.decode_batch], None)?;
+        let kv_buf = self.client.buffer_from_host_buffer(
+            kv.as_slice(),
+            &[d.decode_batch, d.layers, 2, d.kv_cap, kvd],
+            None,
+        )?;
+        args.push(&tok_buf);
+        args.push(&pos_buf);
+        args.push(&kv_buf);
+
+        let out = self.decode_tuple(&self.decode_exe, &args)?;
+        let (logits_l, kv_l) = match out.len() {
+            2 => (&out[0], &out[1]),
+            n => bail!("decode: expected 2 outputs, got {n}"),
+        };
+        *kv = kv_l.to_vec::<f32>()?;
+        Ok(logits_l.to_vec::<f32>()?)
+    }
+
+    /// Execute and unpack the 1-tuple-of-N output convention
+    /// (`return_tuple=True` at lowering time).
+    fn decode_tuple(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let res = exe.execute_b(args)?;
+        let lit = res
+            .first()
+            .and_then(|replica| replica.first())
+            .ok_or_else(|| anyhow!("execute returned no outputs"))?
+            .to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Greedy (argmax) sampling from a logits row.
+    pub fn argmax(logits: &[f32]) -> i32 {
+        let mut best = 0usize;
+        for (i, &x) in logits.iter().enumerate() {
+            if x > logits[best] {
+                best = i;
+            }
+        }
+        best as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parse_roundtrip() {
+        let text = r#"{
+            "model": {"layers": 4, "d": 256, "heads": 4, "kv_heads": 4,
+                      "d_ff": 1024, "vocab": 512, "max_prompt": 128,
+                      "kv_cap": 192, "decode_batch": 4},
+            "weights": {"file": "weights.bin",
+                        "tensors": [{"name": "embed", "shape": [512, 256]},
+                                    {"name": "w1", "shape": [256, 1024]}]},
+            "entries": [{"name": "prefill", "file": "prefill.hlo.txt"},
+                        {"name": "decode", "file": "decode.hlo.txt"}]
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.dims.layers, 4);
+        assert_eq!(m.dims.kv_dim(), 256);
+        assert_eq!(m.tensors.len(), 2);
+        assert_eq!(m.total_weight_elems(), 512 * 256 + 256 * 1024);
+        assert_eq!(m.prefill_hlo, "prefill.hlo.txt");
+        assert_eq!(m.dims.kv_elems(), 4 * 2 * 192 * 256);
+        assert_eq!(m.dims.batch_kv_elems(), 4 * 4 * 2 * 192 * 256);
+    }
+
+    #[test]
+    fn manifest_rejects_missing_entries() {
+        assert!(Manifest::parse("{}").is_err());
+        let no_decode = r#"{
+            "model": {"layers":1,"d":8,"heads":1,"kv_heads":1,"d_ff":16,
+                      "vocab":32,"max_prompt":8,"kv_cap":8,"decode_batch":1},
+            "weights": {"file": "w.bin", "tensors": []},
+            "entries": [{"name": "prefill", "file": "p.txt"}]
+        }"#;
+        assert!(Manifest::parse(no_decode).is_err());
+    }
+
+    #[test]
+    fn argmax_picks_peak() {
+        assert_eq!(Runtime::argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(Runtime::argmax(&[3.0]), 0);
+    }
+
+    #[test]
+    fn read_weights_validates_size() {
+        let dir = std::env::temp_dir().join("nexus_rt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.bin");
+        let floats: Vec<f32> = vec![1.0, -2.5, 3.25];
+        let bytes: Vec<u8> = floats.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(&p, &bytes).unwrap();
+        let back = read_weights(&p, 3).unwrap();
+        assert_eq!(back, floats);
+        assert!(read_weights(&p, 4).is_err());
+    }
+}

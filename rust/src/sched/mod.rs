@@ -1,0 +1,383 @@
+//! Phase-specific schedulers (paper §4.3) and baseline scheduling policies.
+//!
+//! * [`spf_batch`] — Nexus's Shortest-Prompt-First prefill scheduler
+//!   (Algorithm 2) with the age-decay anti-starvation term
+//!   `score = remaining − γ·age`.
+//! * [`fcfs_batch`] — FCFS token-budget packing (vLLM/SGLang prefill, and
+//!   Nexus's decode queue admission).
+//! * [`mixed_batch`] — Sarathi-style chunked-prefill batching used by the
+//!   monolithic baselines: decode tokens share the iteration with a chunk
+//!   of the head-of-line prefill.
+//! * [`Mlfq`] — FastServe's skip-join multi-level feedback queue.
+//! * [`RadixCache`] — SGLang-style prefix-cache model: repeated prompt
+//!   prefixes skip recomputation, shortening effective prefill length.
+
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// A request waiting for (more) prefill.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefillItem {
+    pub id: usize,
+    pub prompt_len: usize,
+    /// Tokens already prefilled (chunked prefill may leave a remainder).
+    pub prefilled: usize,
+    pub arrival: f64,
+}
+
+impl PrefillItem {
+    pub fn remaining(&self) -> usize {
+        self.prompt_len - self.prefilled
+    }
+}
+
+/// Algorithm 2 — Shortest-Prompt-First with anti-starvation.
+///
+/// Ranks queue entries by `remaining − γ·(now − arrival)` and greedily packs
+/// them into a `budget`-token batch. Returns indices into `queue` in
+/// scheduling order; a prefix of each selected request may still be chunked
+/// by the caller if the last one does not fit entirely.
+pub fn spf_batch(queue: &[PrefillItem], now: f64, budget: usize, gamma: f64) -> Vec<usize> {
+    // Precompute scores once and sort by order-preserving integer keys:
+    // float comparators recompute/branch per comparison and are ~4x slower
+    // on deep queues (§Perf).
+    #[inline]
+    fn f64_key(x: f64) -> u64 {
+        let b = x.to_bits();
+        if x >= 0.0 {
+            b ^ 0x8000_0000_0000_0000
+        } else {
+            !b
+        }
+    }
+    let mut scored: Vec<(u64, u64, usize, usize)> = queue
+        .iter()
+        .enumerate()
+        .map(|(idx, r)| {
+            let score = r.remaining() as f64 - gamma * (now - r.arrival);
+            (f64_key(score), f64_key(r.arrival), r.id, idx)
+        })
+        .collect();
+    scored.sort_unstable();
+    let mut out = Vec::new();
+    let mut total = 0usize;
+    for &(_, _, _, idx) in &scored {
+        let rem = queue[idx].remaining();
+        if total + rem <= budget {
+            out.push(idx);
+            total += rem;
+        } else if total < budget && out.is_empty() {
+            // Nothing fits whole: chunk the best-scored request.
+            out.push(idx);
+            break;
+        }
+    }
+    out
+}
+
+/// FCFS token-budget packing: take requests in arrival order while the
+/// budget lasts; the first non-fitting head request is included for
+/// chunking when `chunk_head` is set.
+pub fn fcfs_batch(queue: &[PrefillItem], budget: usize, chunk_head: bool) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..queue.len()).collect();
+    order.sort_by(|&a, &b| {
+        queue[a]
+            .arrival
+            .partial_cmp(&queue[b].arrival)
+            .unwrap()
+            .then(queue[a].id.cmp(&queue[b].id))
+    });
+    let mut out = Vec::new();
+    let mut total = 0usize;
+    for idx in order {
+        let rem = queue[idx].remaining();
+        if total + rem <= budget {
+            out.push(idx);
+            total += rem;
+        } else {
+            if chunk_head && total < budget {
+                out.push(idx);
+            }
+            break;
+        }
+    }
+    out
+}
+
+/// A mixed (chunked-prefill) batch for monolithic engines.
+#[derive(Debug, Clone, Default)]
+pub struct MixedBatch {
+    /// Decode request ids included (1 token each).
+    pub decode_ids: Vec<usize>,
+    /// (queue index, tokens of prefill to run) — at most the chunk budget.
+    pub prefill_parts: Vec<(usize, usize)>,
+}
+
+impl MixedBatch {
+    pub fn prefill_tokens(&self) -> usize {
+        self.prefill_parts.iter().map(|&(_, t)| t).sum()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.decode_ids.is_empty() && self.prefill_parts.is_empty()
+    }
+}
+
+/// Sarathi-Serve / vLLM chunked-prefill batching: all running decodes join
+/// (one token each), then prefill chunks fill the remaining token budget
+/// FCFS, splitting the head request if needed (`chunk_size` caps any single
+/// request's share per iteration).
+pub fn mixed_batch(
+    decode_ids: &[usize],
+    prefill_queue: &[PrefillItem],
+    token_budget: usize,
+    chunk_size: usize,
+) -> MixedBatch {
+    let mut batch = MixedBatch {
+        decode_ids: decode_ids.to_vec(),
+        prefill_parts: Vec::new(),
+    };
+    let mut left = token_budget.saturating_sub(decode_ids.len());
+    let mut order: Vec<usize> = (0..prefill_queue.len()).collect();
+    order.sort_by(|&a, &b| {
+        prefill_queue[a]
+            .arrival
+            .partial_cmp(&prefill_queue[b].arrival)
+            .unwrap()
+            .then(prefill_queue[a].id.cmp(&prefill_queue[b].id))
+    });
+    for idx in order {
+        if left == 0 {
+            break;
+        }
+        let take = prefill_queue[idx].remaining().min(chunk_size).min(left);
+        if take > 0 {
+            batch.prefill_parts.push((idx, take));
+            left -= take;
+        }
+    }
+    batch
+}
+
+/// FastServe's skip-join multi-level feedback queue.
+///
+/// Queue levels have geometrically growing token quanta. New requests
+/// *skip-join* the level whose quantum covers their prefill length (so long
+/// prompts don't stall level 0), and are demoted when they exhaust their
+/// quantum of generated tokens.
+#[derive(Debug, Clone)]
+pub struct Mlfq {
+    /// Per-level quantum in tokens.
+    pub quanta: Vec<usize>,
+    /// levels[l] = FIFO of request ids.
+    levels: Vec<Vec<usize>>,
+    /// id -> (level, tokens consumed at this level).
+    state: HashMap<usize, (usize, usize)>,
+}
+
+impl Mlfq {
+    pub fn new(base_quantum: usize, levels: usize) -> Self {
+        let quanta: Vec<usize> = (0..levels).map(|l| base_quantum << l).collect();
+        Mlfq {
+            quanta,
+            levels: vec![Vec::new(); levels],
+            state: HashMap::new(),
+        }
+    }
+
+    /// Skip-join admission: enter the first level whose quantum ≥ prompt_len.
+    pub fn admit(&mut self, id: usize, prompt_len: usize) {
+        let lvl = self
+            .quanta
+            .iter()
+            .position(|&q| q >= prompt_len)
+            .unwrap_or(self.quanta.len() - 1);
+        self.levels[lvl].push(id);
+        self.state.insert(id, (lvl, 0));
+    }
+
+    /// Up to `max` ids in priority order: the highest non-empty level's
+    /// FIFO first, then lower levels while capacity remains (iteration-level
+    /// scheduling fills the batch rather than idling slots).
+    pub fn pick(&self, max: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        for lvl in &self.levels {
+            for &id in lvl {
+                if out.len() >= max {
+                    return out;
+                }
+                out.push(id);
+            }
+        }
+        out
+    }
+
+    /// Record `tokens` of service; demotes when the level quantum runs out.
+    pub fn charge(&mut self, id: usize, tokens: usize) {
+        if let Some(&(lvl, used)) = self.state.get(&id) {
+            let used = used + tokens;
+            if used >= self.quanta[lvl] && lvl + 1 < self.quanta.len() {
+                self.levels[lvl].retain(|&x| x != id);
+                self.levels[lvl + 1].push(id);
+                self.state.insert(id, (lvl + 1, 0));
+            } else {
+                self.state.insert(id, (lvl, used));
+            }
+        }
+    }
+
+    pub fn remove(&mut self, id: usize) {
+        if let Some((lvl, _)) = self.state.remove(&id) {
+            self.levels[lvl].retain(|&x| x != id);
+        }
+    }
+
+    pub fn level_of(&self, id: usize) -> Option<usize> {
+        self.state.get(&id).map(|&(l, _)| l)
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.state.is_empty()
+    }
+}
+
+/// SGLang RadixAttention model: a probabilistic prefix cache. A request's
+/// prompt shares a cached prefix with earlier traffic with probability
+/// `hit_prob`; on a hit, a Beta-ish distributed fraction of the prompt is
+/// served from cache, shrinking effective prefill work (and KV writes).
+#[derive(Debug, Clone)]
+pub struct RadixCache {
+    pub hit_prob: f64,
+    /// Mean cached fraction on a hit.
+    pub mean_frac: f64,
+    rng: Rng,
+    pub hits: usize,
+    pub misses: usize,
+}
+
+impl RadixCache {
+    pub fn new(hit_prob: f64, mean_frac: f64, seed: u64) -> Self {
+        RadixCache {
+            hit_prob,
+            mean_frac,
+            rng: Rng::new(seed),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Effective tokens that still need prefill for a `prompt_len` request.
+    pub fn effective_prefill(&mut self, prompt_len: usize) -> usize {
+        if self.rng.chance(self.hit_prob) {
+            self.hits += 1;
+            // Triangular-ish around mean_frac, clamped.
+            let f = (self.mean_frac + 0.3 * (self.rng.f64() - 0.5)).clamp(0.05, 0.95);
+            let cached = (prompt_len as f64 * f) as usize;
+            (prompt_len - cached).max(1)
+        } else {
+            self.misses += 1;
+            prompt_len
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(id: usize, len: usize, arrival: f64) -> PrefillItem {
+        PrefillItem {
+            id,
+            prompt_len: len,
+            prefilled: 0,
+            arrival,
+        }
+    }
+
+    #[test]
+    fn spf_prefers_short_prompts() {
+        let q = vec![item(0, 5000, 0.0), item(1, 100, 0.1), item(2, 800, 0.2)];
+        let picked = spf_batch(&q, 0.3, 1000, 0.0);
+        assert_eq!(picked, vec![1, 2], "short prompts first, long doesn't fit");
+    }
+
+    #[test]
+    fn spf_age_decay_promotes_old_requests() {
+        // With γ high enough, the old long request outranks the fresh short one.
+        let q = vec![item(0, 2000, 0.0), item(1, 100, 100.0)];
+        let now = 100.0;
+        let no_age = spf_batch(&q, now, 2000, 0.0);
+        assert_eq!(no_age[0], 1);
+        let aged = spf_batch(&q, now, 2000, 50.0);
+        assert_eq!(aged[0], 0, "γ=50 over 100s of age beats 1900-token gap");
+    }
+
+    #[test]
+    fn spf_respects_budget() {
+        let q = vec![item(0, 400, 0.0), item(1, 400, 0.0), item(2, 400, 0.0)];
+        let picked = spf_batch(&q, 1.0, 900, 0.0);
+        let total: usize = picked.iter().map(|&i| q[i].remaining()).sum();
+        assert!(total <= 900);
+        assert_eq!(picked.len(), 2);
+    }
+
+    #[test]
+    fn spf_chunks_when_nothing_fits() {
+        let q = vec![item(0, 5000, 0.0)];
+        let picked = spf_batch(&q, 1.0, 512, 0.0);
+        assert_eq!(picked, vec![0], "head request still scheduled for chunking");
+    }
+
+    #[test]
+    fn fcfs_is_arrival_ordered() {
+        let q = vec![item(0, 100, 5.0), item(1, 100, 1.0), item(2, 100, 3.0)];
+        let picked = fcfs_batch(&q, 250, false);
+        assert_eq!(picked, vec![1, 2]);
+    }
+
+    #[test]
+    fn mixed_batch_fills_after_decodes() {
+        let q = vec![item(7, 3000, 0.0), item(8, 200, 1.0)];
+        let b = mixed_batch(&[1, 2, 3], &q, 512, 256);
+        assert_eq!(b.decode_ids.len(), 3);
+        // 509 tokens left; head chunk capped at 256, then 200 from next, then 53 more head? No:
+        // FCFS order = [0 (id7), 1 (id8)]; head takes min(3000,256,509)=256, next takes min(200,253)=200.
+        assert_eq!(b.prefill_parts, vec![(0, 256), (1, 200)]);
+        assert!(b.prefill_tokens() + b.decode_ids.len() <= 512);
+    }
+
+    #[test]
+    fn mlfq_skip_join_and_demotion() {
+        let mut m = Mlfq::new(512, 4); // quanta 512,1024,2048,4096
+        m.admit(1, 100); // level 0
+        m.admit(2, 2000); // skip-joins level 2
+        assert_eq!(m.level_of(1), Some(0));
+        assert_eq!(m.level_of(2), Some(2));
+        assert_eq!(m.pick(10), vec![1, 2], "fill across levels, priority first");
+        assert_eq!(m.pick(1), vec![1], "capacity respected");
+        m.charge(1, 512); // exhaust level-0 quantum → demote
+        assert_eq!(m.level_of(1), Some(1));
+        m.remove(1);
+        assert_eq!(m.pick(10), vec![2]);
+        m.remove(2);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn radix_cache_shrinks_prompts() {
+        let mut rc = RadixCache::new(1.0, 0.5, 42);
+        let mut total = 0usize;
+        for _ in 0..200 {
+            total += rc.effective_prefill(1000);
+        }
+        let mean = total as f64 / 200.0;
+        assert!(mean < 700.0 && mean > 300.0, "mean effective {mean}");
+        assert_eq!(rc.hits, 200);
+
+        let mut rc0 = RadixCache::new(0.0, 0.5, 42);
+        assert_eq!(rc0.effective_prefill(1000), 1000);
+        assert_eq!(rc0.misses, 1);
+    }
+}

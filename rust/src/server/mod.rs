@@ -1,0 +1,321 @@
+//! Real-compute serving path: the Nexus scheduling policies driving the
+//! PJRT runtime on the tiny model, with wall-clock metrics.
+//!
+//! Architecture (CPU adaptation of the paper's two-stream design): request
+//! intake happens on arbitrary threads through an `mpsc` channel; a single
+//! *executor thread* owns the PJRT runtime (its handles are not `Send`-safe
+//! across concurrent use) and alternates between the two phases under the
+//! Nexus policy — SPF-ordered prefill admission, FCFS decode batches, and a
+//! phase-priority knob standing in for the SM split (on a CPU backend the
+//! "partition" degenerates to interleaving priority; the real SM-partition
+//! control system is exercised by the simulator engines).
+
+use crate::runtime::Runtime;
+use crate::sched::{spf_batch, PrefillItem};
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// A request submitted to the live server.
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    pub id: usize,
+    pub prompt: Vec<i32>,
+    pub max_tokens: usize,
+}
+
+/// Completed request with wall-clock latency metrics.
+#[derive(Debug, Clone)]
+pub struct ServeResponse {
+    pub id: usize,
+    pub tokens: Vec<i32>,
+    /// Arrival → first token (s).
+    pub ttft: f64,
+    /// Inter-token gaps (s).
+    pub gaps: Vec<f64>,
+    pub e2e: f64,
+}
+
+enum Msg {
+    Request(ServeRequest, Instant),
+    Shutdown,
+}
+
+/// Handle to a running server; dropping it shuts the executor down.
+pub struct Server {
+    tx: mpsc::Sender<Msg>,
+    rx_out: mpsc::Receiver<ServeResponse>,
+    rx_ready: Option<mpsc::Receiver<Result<(), String>>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Scheduling policy for the executor loop.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerCfg {
+    /// SPF age-decay γ; negative disables SPF (FCFS prefill).
+    pub gamma: f64,
+    /// Decode steps run per prefill admission when both phases have work
+    /// (the CPU stand-in for the SM split: higher favors decode/TBT).
+    pub decode_bias: usize,
+}
+
+impl Default for ServerCfg {
+    fn default() -> Self {
+        ServerCfg { gamma: 15.0, decode_bias: 2 }
+    }
+}
+
+struct LiveReq {
+    req: ServeRequest,
+    submitted: Instant,
+    tokens: Vec<i32>,
+    first_token: Option<Instant>,
+    last_token: Instant,
+    gaps: Vec<f64>,
+    /// KV length (prompt + generated so far).
+    pos: usize,
+    /// Decode slot index while active.
+    slot: usize,
+}
+
+impl Server {
+    /// Start the executor thread over artifacts in `dir`.
+    pub fn start(dir: std::path::PathBuf, cfg: ServerCfg) -> anyhow::Result<Server> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (tx_out, rx_out) = mpsc::channel::<ServeResponse>();
+        let (tx_ready, rx_ready) = mpsc::channel::<Result<(), String>>();
+        let handle = std::thread::Builder::new()
+            .name("nexus-executor".into())
+            .spawn(move || {
+                // Runtime is created on the executor thread and never leaves it.
+                let rt = match Runtime::load(&dir) {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        let _ = tx_ready.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                let _ = tx_ready.send(Ok(()));
+                executor_loop(rt, cfg, rx, tx_out);
+            })?;
+        Ok(Server { tx, rx_out, rx_ready: Some(rx_ready), handle: Some(handle) })
+    }
+
+    /// Block until the artifacts are loaded and compiled (so latency
+    /// metrics exclude the one-time AOT-compile cost).
+    pub fn wait_ready(&mut self) -> anyhow::Result<()> {
+        if let Some(rx) = self.rx_ready.take() {
+            match rx.recv() {
+                Ok(Ok(())) => Ok(()),
+                Ok(Err(e)) => Err(anyhow::anyhow!("artifact load failed: {e}")),
+                Err(_) => Err(anyhow::anyhow!("executor died before becoming ready")),
+            }
+        } else {
+            Ok(())
+        }
+    }
+
+    pub fn submit(&self, req: ServeRequest) -> anyhow::Result<()> {
+        self.tx
+            .send(Msg::Request(req, Instant::now()))
+            .map_err(|_| anyhow::anyhow!("server executor is gone"))
+    }
+
+    /// Block until the next completed response (None once shut down).
+    pub fn recv(&self) -> Option<ServeResponse> {
+        self.rx_out.recv().ok()
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn executor_loop(
+    rt: Runtime,
+    cfg: ServerCfg,
+    rx: mpsc::Receiver<Msg>,
+    tx_out: mpsc::Sender<ServeResponse>,
+) {
+    let dims = rt.dims;
+    let b = dims.decode_batch;
+    let mut waiting: VecDeque<LiveReq> = VecDeque::new();
+    // Fixed decode slots (the AOT decode entry has static batch width B).
+    let mut slots: Vec<Option<LiveReq>> = (0..b).map(|_| None).collect();
+    let mut kv = vec![0.0f32; dims.batch_kv_elems()];
+    let mut shutdown = false;
+    let start = Instant::now();
+
+    loop {
+        // Drain the intake channel (block only when fully idle).
+        let idle = waiting.is_empty() && slots.iter().all(Option::is_none);
+        if idle && !shutdown {
+            match rx.recv() {
+                Ok(Msg::Request(r, at)) => waiting.push_back(new_live(r, at)),
+                Ok(Msg::Shutdown) | Err(_) => shutdown = true,
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(Msg::Request(r, at)) => waiting.push_back(new_live(r, at)),
+                Ok(Msg::Shutdown) => shutdown = true,
+                Err(_) => break,
+            }
+        }
+        if shutdown && waiting.is_empty() && slots.iter().all(Option::is_none) {
+            return;
+        }
+
+        // Prefill admission: SPF (or FCFS) into free decode slots.
+        if let Some(free) = slots.iter().position(Option::is_none) {
+            if let Some(idx) = pick_prefill(&waiting, cfg, start) {
+                let mut live = waiting.remove(idx).unwrap();
+                match rt.prefill(&live.req.prompt) {
+                    Ok(out) => {
+                        let now = Instant::now();
+                        let tok = Runtime::argmax(&out.logits);
+                        live.tokens.push(tok);
+                        live.first_token = Some(now);
+                        live.last_token = now;
+                        live.pos = live.req.prompt.len();
+                        live.slot = free;
+                        // Install this request's KV into its batch slot.
+                        let per = dims.kv_elems();
+                        kv[free * per..(free + 1) * per].copy_from_slice(&out.kv);
+                        if live.tokens.len() >= live.req.max_tokens {
+                            finish(&tx_out, live);
+                        } else {
+                            slots[free] = Some(live);
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("nexus server: prefill failed for {}: {e:#}", live.req.id);
+                        finish(&tx_out, live);
+                    }
+                }
+            }
+        }
+
+        // Decode: run `decode_bias` steps over the active batch.
+        for _ in 0..cfg.decode_bias.max(1) {
+            if slots.iter().all(Option::is_none) {
+                break;
+            }
+            let mut tokens = vec![0i32; b];
+            let mut pos = vec![0i32; b];
+            for (i, s) in slots.iter().enumerate() {
+                if let Some(live) = s {
+                    tokens[i] = *live.tokens.last().unwrap();
+                    pos[i] = live.pos as i32;
+                }
+            }
+            match rt.decode(&tokens, &pos, &mut kv) {
+                Ok(logits) => {
+                    let now = Instant::now();
+                    for (i, s) in slots.iter_mut().enumerate() {
+                        let done = if let Some(live) = s.as_mut() {
+                            let row = &logits[i * dims.vocab..(i + 1) * dims.vocab];
+                            let tok = Runtime::argmax(row);
+                            live.tokens.push(tok);
+                            live.gaps.push(now.duration_since(live.last_token).as_secs_f64());
+                            live.last_token = now;
+                            live.pos += 1;
+                            live.tokens.len() >= live.req.max_tokens
+                                || live.pos >= dims.kv_cap
+                        } else {
+                            false
+                        };
+                        if done {
+                            finish(&tx_out, s.take().unwrap());
+                        }
+                    }
+                }
+                Err(e) => {
+                    eprintln!("nexus server: decode step failed: {e:#}");
+                    for s in slots.iter_mut() {
+                        if let Some(live) = s.take() {
+                            finish(&tx_out, live);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn new_live(req: ServeRequest, at: Instant) -> LiveReq {
+    LiveReq {
+        req,
+        submitted: at,
+        tokens: Vec::new(),
+        first_token: None,
+        last_token: at,
+        gaps: Vec::new(),
+        pos: 0,
+        slot: 0,
+    }
+}
+
+fn pick_prefill(waiting: &VecDeque<LiveReq>, cfg: ServerCfg, epoch: Instant) -> Option<usize> {
+    if waiting.is_empty() {
+        return None;
+    }
+    if cfg.gamma < 0.0 {
+        return Some(0); // FCFS
+    }
+    let items: Vec<PrefillItem> = waiting
+        .iter()
+        .enumerate()
+        .map(|(i, w)| PrefillItem {
+            id: i,
+            prompt_len: w.req.prompt.len(),
+            prefilled: 0,
+            arrival: w.submitted.duration_since(epoch).as_secs_f64(),
+        })
+        .collect();
+    let now = epoch.elapsed().as_secs_f64();
+    spf_batch(&items, now, usize::MAX, cfg.gamma).first().copied()
+}
+
+fn finish(tx: &mpsc::Sender<ServeResponse>, live: LiveReq) {
+    let now = Instant::now();
+    let first = live.first_token.unwrap_or(now);
+    let _ = tx.send(ServeResponse {
+        id: live.req.id,
+        tokens: live.tokens,
+        ttft: first.duration_since(live.submitted).as_secs_f64(),
+        gaps: live.gaps,
+        e2e: now.duration_since(live.submitted).as_secs_f64(),
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spf_pick_prefers_short_prompt() {
+        let epoch = Instant::now();
+        let mk = |len: usize| {
+            new_live(ServeRequest { id: 0, prompt: vec![1; len], max_tokens: 4 }, epoch)
+        };
+        let waiting: VecDeque<LiveReq> = [mk(100), mk(5), mk(50)].into_iter().collect();
+        let cfg = ServerCfg::default();
+        assert_eq!(pick_prefill(&waiting, cfg, epoch), Some(1));
+        let fcfs = ServerCfg { gamma: -1.0, ..cfg };
+        assert_eq!(pick_prefill(&waiting, fcfs, epoch), Some(0));
+        assert_eq!(pick_prefill(&VecDeque::new(), cfg, epoch), None);
+    }
+}

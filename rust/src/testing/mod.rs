@@ -1,0 +1,123 @@
+//! Mini property-testing harness (proptest is not vendored in this image).
+//!
+//! Usage:
+//! ```ignore
+//! use nexus::testing::prop;
+//! prop("shares sum to one", 200, |rng| {
+//!     let x = rng.f64();
+//!     if (x + (1.0 - x) - 1.0).abs() < 1e-12 { Ok(()) } else { Err(format!("x={x}")) }
+//! });
+//! ```
+//!
+//! Each case gets a deterministic per-case RNG derived from the run seed, so
+//! failures are reproducible: the panic message prints the run seed, the
+//! failing case index, and the property's own diagnostic. Override the seed
+//! or case count via `NEXUS_PROP_SEED` / `NEXUS_PROP_CASES`.
+
+use crate::util::rng::Rng;
+
+/// Default seed; override with `NEXUS_PROP_SEED`.
+const DEFAULT_SEED: u64 = 0x5EED_CAFE;
+
+fn env_u64(name: &str) -> Option<u64> {
+    std::env::var(name).ok().and_then(|v| v.parse().ok())
+}
+
+/// Run `cases` random cases of property `f`. Panics on the first failure
+/// with a reproducible (seed, case) pair.
+pub fn prop<F>(name: &str, cases: usize, f: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let seed = env_u64("NEXUS_PROP_SEED").unwrap_or(DEFAULT_SEED);
+    let cases = env_u64("NEXUS_PROP_CASES").map(|c| c as usize).unwrap_or(cases);
+    let mut master = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = master.fork();
+        if let Err(msg) = f(&mut case_rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (NEXUS_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Sized generators for common test inputs.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    /// Integer in [lo, hi] with a bias toward the extremes (edge cases).
+    pub fn int_biased(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        match rng.below(10) {
+            0 => lo,
+            1 => hi,
+            _ => rng.range_usize(lo, hi),
+        }
+    }
+
+    /// Vector of length in [0, max_len] with elements from `f`.
+    pub fn vec_of<T>(rng: &mut Rng, max_len: usize, mut f: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+        let n = rng.range_usize(0, max_len);
+        (0..n).map(|_| f(rng)).collect()
+    }
+
+    /// A fraction in (0, 1) avoiding exact endpoints.
+    pub fn frac(rng: &mut Rng) -> f64 {
+        rng.range_f64(0.01, 0.99)
+    }
+}
+
+/// Assert two floats are relatively close; returns a property-style error.
+pub fn close(got: f64, want: f64, rel_tol: f64, what: &str) -> Result<(), String> {
+    let denom = want.abs().max(1e-12);
+    let rel = (got - want).abs() / denom;
+    if rel <= rel_tol {
+        Ok(())
+    } else {
+        Err(format!("{what}: got {got}, want {want} (rel err {rel:.3} > {rel_tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        use std::cell::Cell;
+        let count = Cell::new(0usize);
+        prop("always true", 50, |rng| {
+            let _ = rng.f64();
+            count.set(count.get() + 1);
+            Ok(())
+        });
+        assert_eq!(count.get(), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false' failed")]
+    fn failing_property_panics_with_seed() {
+        prop("always false", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.001, 0.01, "x").is_ok());
+        assert!(close(1.0, 2.0, 0.01, "x").is_err());
+        assert!(close(0.0, 0.0, 0.01, "zero").is_ok());
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..1000 {
+            let x = gen::int_biased(&mut rng, 5, 10);
+            assert!((5..=10).contains(&x));
+            let f = gen::frac(&mut rng);
+            assert!((0.0..1.0).contains(&f) && f > 0.0);
+        }
+        let v = gen::vec_of(&mut rng, 8, |r| r.below(100));
+        assert!(v.len() <= 8);
+    }
+}

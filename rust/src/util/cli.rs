@@ -1,0 +1,129 @@
+//! Tiny CLI argument parser (clap is not vendored in this image).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! A bare `--name` followed by a non-`--` token is treated as `--key value`
+//! (there is no flag registry), so boolean flags adjacent to positional
+//! arguments must come last or use `--name=true`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| {
+                v.parse::<f64>()
+                    .unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| {
+                v.parse::<usize>()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| {
+                v.parse::<u64>()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        let a = parse(&["serve", "trace.json", "--rate", "2.5", "--model=qwen3b", "--verbose"]);
+        assert_eq!(a.positional, vec!["serve", "trace.json"]);
+        assert_eq!(a.get("rate"), Some("2.5"));
+        assert_eq!(a.get("model"), Some("qwen3b"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn greedy_value_consumption_is_documented_behavior() {
+        // `--verbose trace.json` binds trace.json as the option value.
+        let a = parse(&["--verbose", "trace.json"]);
+        assert_eq!(a.get("verbose"), Some("trace.json"));
+        assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["--rate", "2.5", "--n", "10"]);
+        assert_eq!(a.get_f64("rate", 0.0), 2.5);
+        assert_eq!(a.get_usize("n", 0), 10);
+        assert_eq!(a.get_usize("missing", 7), 7);
+        assert_eq!(a.get_or("missing", "x"), "x");
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--fast"]);
+        assert!(a.flag("fast"));
+        assert!(a.positional.is_empty());
+    }
+}

@@ -1,0 +1,202 @@
+//! Engine-level integration tests: cross-engine invariants, paper-shape
+//! assertions, and stress scenarios over the full simulated serving stack.
+
+use nexus::coordinator::{offline_makespan, sustainable_throughput, Experiment, SloSpec};
+use nexus::engine::{run_engine, EngineCfg, EngineKind, NexusFlags};
+use nexus::engine::nexus::NexusEngine;
+use nexus::metrics::RunMetrics;
+use nexus::model::ModelConfig;
+use nexus::workload::{generate, offline, Dataset};
+
+fn check_invariants(m: &RunMetrics, trace_len: usize, name: &str) {
+    assert_eq!(m.summary().completed + m.timeouts, trace_len, "{name}: lost requests");
+    for r in &m.records {
+        assert!(r.first_token >= r.arrival, "{name}: TTFT < 0 for {}", r.id);
+        assert!(r.finish >= r.first_token, "{name}: finish before first token");
+        assert_eq!(
+            r.token_gaps.len(),
+            r.output_len.saturating_sub(1),
+            "{name}: token count mismatch for {}",
+            r.id
+        );
+        assert!(r.token_gaps.iter().all(|&g| g >= 0.0), "{name}: negative gap");
+        assert!(r.queue_time >= 0.0 && r.exec_time > 0.0, "{name}: stage times");
+    }
+}
+
+#[test]
+fn all_engines_complete_all_workloads() {
+    let cfg = EngineCfg::new(ModelConfig::qwen3b(), 1);
+    for dataset in [Dataset::ShareGpt, Dataset::Arxiv, Dataset::Mixed] {
+        let trace = generate(dataset, 30, 3.0, 17);
+        for &kind in EngineKind::all() {
+            let m = run_engine(kind, &cfg, &trace);
+            check_invariants(&m, trace.len(), kind.name());
+            assert_eq!(m.timeouts, 0, "{} timed out on {}", kind.name(), dataset.name());
+        }
+    }
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let cfg = EngineCfg::new(ModelConfig::qwen3b(), 7);
+    let trace = generate(Dataset::Mixed, 40, 3.0, 7);
+    let a = run_engine(EngineKind::Nexus, &cfg, &trace);
+    let b = run_engine(EngineKind::Nexus, &cfg, &trace);
+    let (sa, sb) = (a.summary(), b.summary());
+    assert_eq!(sa.completed, sb.completed);
+    assert!((sa.mean_ttft - sb.mean_ttft).abs() < 1e-9);
+    assert!((sa.mean_tbt - sb.mean_tbt).abs() < 1e-9);
+    assert_eq!(a.repartitions, b.repartitions);
+}
+
+#[test]
+fn paper_shape_nexus_beats_vllm_on_mixed() {
+    // The headline single-GPU comparison (Fig. 9 row 3): under the Mixed
+    // workload Nexus must beat vLLM on TTFT, TBT, and normalized latency.
+    let exp = Experiment::new(ModelConfig::llama8b(), Dataset::Mixed, 80, 2.5);
+    let nexus = exp.run(EngineKind::Nexus).summary();
+    let vllm = exp.run(EngineKind::Vllm).summary();
+    assert!(
+        nexus.mean_ttft < vllm.mean_ttft,
+        "TTFT: nexus {} vs vllm {}",
+        nexus.mean_ttft,
+        vllm.mean_ttft
+    );
+    assert!(
+        nexus.mean_tbt < vllm.mean_tbt,
+        "TBT: nexus {} vs vllm {}",
+        nexus.mean_tbt,
+        vllm.mean_tbt
+    );
+    assert!(
+        nexus.mean_norm < vllm.mean_norm,
+        "norm: nexus {} vs vllm {}",
+        nexus.mean_norm,
+        vllm.mean_norm
+    );
+}
+
+#[test]
+fn paper_shape_ablation_ordering() {
+    // Fig. 13 shape (see EXPERIMENTS.md for the one divergence): SPF slashes
+    // TTFT; dynamic SM-changing further improves TTFT and normalized
+    // latency; the TBT cost of prioritizing prefill stays bounded (in our
+    // substrate decode saturates at ~25–34% SMs, so a static 50/50 split is
+    // already decode-optimal and the paper's −26% TBT is not reachable).
+    let mut cfg = EngineCfg::new(ModelConfig::llama8b(), 42);
+    cfg.kv_blocks_override = Some(6_000); // memory-pressured, as in §6.5
+    let trace = generate(Dataset::Mixed, 100, 3.5, 42);
+    let baseline = run_engine(EngineKind::PfDfWoSc, &cfg, &trace).summary();
+    let spf_only = run_engine(EngineKind::NexusWoSc, &cfg, &trace).summary();
+    let full = run_engine(EngineKind::Nexus, &cfg, &trace).summary();
+    assert!(
+        spf_only.mean_ttft < 0.7 * baseline.mean_ttft,
+        "SPF must cut TTFT: {} vs {}",
+        spf_only.mean_ttft,
+        baseline.mean_ttft
+    );
+    assert!(
+        full.mean_ttft < spf_only.mean_ttft,
+        "dynamic SM must further improve TTFT: {} vs {}",
+        full.mean_ttft,
+        spf_only.mean_ttft
+    );
+    assert!(
+        full.mean_norm <= spf_only.mean_norm * 1.05,
+        "full Nexus must hold normalized latency: {} vs {}",
+        full.mean_norm,
+        spf_only.mean_norm
+    );
+    assert!(
+        full.mean_tbt <= spf_only.mean_tbt * 1.35,
+        "TBT cost of prefill priority must stay bounded: {} vs {}",
+        full.mean_tbt,
+        spf_only.mean_tbt
+    );
+}
+
+#[test]
+fn nexus_sustains_higher_throughput_than_vllm() {
+    let exp = Experiment::new(ModelConfig::qwen3b(), Dataset::ShareGpt, 40, 1.0);
+    let slo = SloSpec::default();
+    let t_nexus = sustainable_throughput(EngineKind::Nexus, &exp, slo, 0.5, 40.0, 1.0);
+    let t_vllm = sustainable_throughput(EngineKind::Vllm, &exp, slo, 0.5, 40.0, 1.0);
+    assert!(
+        t_nexus >= t_vllm,
+        "nexus {} req/s must be ≥ vllm {} req/s",
+        t_nexus,
+        t_vllm
+    );
+}
+
+#[test]
+fn offline_makespan_all_engines_finish_sharegpt() {
+    let exp = Experiment::new(ModelConfig::qwen3b(), Dataset::ShareGpt, 40, 1.0);
+    for &kind in EngineKind::all() {
+        let r = offline_makespan(kind, &exp);
+        assert!(r.is_some(), "{} timed out offline", kind.name());
+    }
+}
+
+#[test]
+fn kv_pressure_forces_mode_switch_and_survives() {
+    // A tiny KV cache must drive KV_u over the switch threshold; Nexus must
+    // still complete (decode-prioritized mode drains memory).
+    let mut cfg = EngineCfg::new(ModelConfig::qwen3b(), 5);
+    cfg.kv_blocks_override = Some(4_000);
+    let trace = generate(Dataset::Mixed, 40, 4.0, 23);
+    let m = NexusEngine::new(&cfg, NexusFlags::default()).run(&trace);
+    check_invariants(&m, trace.len(), "nexus-tiny-kv");
+    assert!(m.repartitions > 0);
+}
+
+#[test]
+fn burst_of_identical_arrivals() {
+    // Degenerate offline burst: everything arrives at once with identical
+    // lengths — schedulers must not starve or double-serve anyone.
+    let cfg = EngineCfg::new(ModelConfig::qwen3b(), 9);
+    let trace = offline(Dataset::ShareGpt, 25, 3);
+    for &kind in EngineKind::all() {
+        let m = run_engine(kind, &cfg, &trace);
+        check_invariants(&m, trace.len(), kind.name());
+    }
+}
+
+#[test]
+fn single_request_latency_matches_isolated_prediction() {
+    // One request alone: its TTFT must be close to the cost model's
+    // isolated prefill estimate (sanity link between engine and model).
+    let cfg = EngineCfg::new(ModelConfig::qwen3b(), 11);
+    let trace = vec![nexus::workload::Request {
+        id: 0,
+        arrival: 0.0,
+        prompt_len: 1024,
+        output_len: 4,
+    }];
+    let m = run_engine(EngineKind::Vllm, &cfg, &trace);
+    let r = &m.records[0];
+    // 1024 tokens in 512-token chunks under a 2048 budget → 2 iterations.
+    let gpu = cfg.gpu;
+    let ops = cfg.model.prefill_ops(1024, 1024.0 * 512.0, 1024.0, 1);
+    let rough = nexus::gpusim::iteration_time_isolated(&gpu, &ops, 1.0);
+    assert!(
+        r.ttft() > 0.2 * rough && r.ttft() < 5.0 * rough,
+        "ttft {} vs rough isolated estimate {}",
+        r.ttft(),
+        rough
+    );
+}
+
+#[test]
+fn multi_gpu_tp2_runs_all_engines() {
+    // Fig.-10 configuration: Qwen14B with TP=2.
+    let model = ModelConfig::qwen14b().with_tp(2);
+    let cfg = EngineCfg::new(model, 3);
+    let trace = generate(Dataset::Mixed, 25, 2.0, 31);
+    for kind in [EngineKind::Vllm, EngineKind::Sglang, EngineKind::Nexus] {
+        let m = run_engine(kind, &cfg, &trace);
+        check_invariants(&m, trace.len(), kind.name());
+        assert_eq!(kind.gpus(&model), 2);
+    }
+}

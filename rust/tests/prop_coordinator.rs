@@ -1,0 +1,254 @@
+//! Property-based tests over the coordinator's invariants: routing,
+//! batching, partitioning, KV-cache accounting, and end-to-end request
+//! conservation, driven by the in-repo mini property harness
+//! (`nexus::testing`; proptest is not vendored).
+
+use nexus::costmodel::calibrate;
+use nexus::engine::{run_engine, EngineCfg, EngineKind};
+use nexus::gpusim::GpuSpec;
+use nexus::kv::KvCache;
+use nexus::model::ModelConfig;
+use nexus::partition::{BatchState, PartitionConfig, PartitionController};
+use nexus::sched::{fcfs_batch, mixed_batch, spf_batch, PrefillItem};
+use nexus::testing::{gen, prop};
+use nexus::util::rng::Rng;
+use nexus::workload::{generate, Dataset};
+
+fn random_queue(rng: &mut Rng, max_len: usize) -> Vec<PrefillItem> {
+    let n = rng.range_usize(0, max_len);
+    (0..n)
+        .map(|id| {
+            let prompt_len = gen::int_biased(rng, 1, 8000);
+            PrefillItem {
+                id,
+                prompt_len,
+                prefilled: rng.range_usize(0, prompt_len - 1),
+                arrival: rng.range_f64(0.0, 100.0),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_spf_batch_respects_budget_and_uniqueness() {
+    prop("spf batch budget", 300, |rng| {
+        let q = random_queue(rng, 40);
+        let budget = gen::int_biased(rng, 1, 4096);
+        let gamma = rng.range_f64(0.0, 50.0);
+        let picked = spf_batch(&q, rng.range_f64(0.0, 200.0), budget, gamma);
+        let mut seen = std::collections::HashSet::new();
+        for &i in &picked {
+            if i >= q.len() {
+                return Err(format!("index {i} out of range"));
+            }
+            if !seen.insert(i) {
+                return Err(format!("duplicate index {i}"));
+            }
+        }
+        let total: usize = picked.iter().map(|&i| q[i].remaining()).sum();
+        // Whole-fit batches respect the budget; the single chunked-head
+        // exception is allowed only when nothing fits.
+        if picked.len() > 1 && total > budget {
+            return Err(format!("total {total} > budget {budget} with {} items", picked.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fcfs_is_arrival_sorted_prefix() {
+    prop("fcfs ordering", 300, |rng| {
+        let q = random_queue(rng, 30);
+        let budget = gen::int_biased(rng, 1, 4096);
+        let picked = fcfs_batch(&q, budget, rng.chance(0.5));
+        for w in picked.windows(2) {
+            let (a, b) = (&q[w[0]], &q[w[1]]);
+            if (a.arrival, a.id) > (b.arrival, b.id) {
+                return Err(format!("not arrival-ordered: {:?} then {:?}", a, b));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mixed_batch_within_token_budget() {
+    prop("mixed batch budget", 300, |rng| {
+        let q = random_queue(rng, 30);
+        let n_dec = rng.range_usize(0, 64);
+        let decode_ids: Vec<usize> = (0..n_dec).collect();
+        let budget = gen::int_biased(rng, 1, 4096);
+        let chunk = gen::int_biased(rng, 16, 1024);
+        let b = mixed_batch(&decode_ids, &q, budget, chunk);
+        let tokens = b.prefill_tokens() + b.decode_ids.len();
+        if b.prefill_tokens() > 0 && tokens > budget.max(n_dec) {
+            return Err(format!("tokens {tokens} > budget {budget}"));
+        }
+        for &(idx, take) in &b.prefill_parts {
+            if take == 0 || take > chunk || take > q[idx].remaining() {
+                return Err(format!("bad chunk ({idx}, {take})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partition_shares_valid_and_constraint_holds() {
+    let cost = calibrate(&GpuSpec::l20());
+    let model = ModelConfig::qwen3b();
+    prop("partition decision validity", 120, |rng| {
+        let chunk = gen::int_biased(rng, 16, 2048);
+        let kv_len = rng.range_f64(64.0, 12000.0);
+        let batch = gen::int_biased(rng, 1, 256);
+        let ctx = rng.range_f64(16.0, 4000.0);
+        let pre = model.prefill_ops(chunk, chunk as f64 * kv_len, kv_len, 0);
+        let dec = model.decode_ops(batch, batch as f64 * ctx);
+        let mut ctl = PartitionController::new(PartitionConfig::default());
+        let d = ctl.decide(
+            &cost,
+            &BatchState { prefill_ops: &pre, decode_ops: &dec, kv_usage: rng.f64() },
+        );
+        if (d.r_p + d.r_d - 1.0).abs() > 1e-9 {
+            return Err(format!("shares must sum to 1: {} + {}", d.r_p, d.r_d));
+        }
+        if d.r_p < 0.05 - 1e-9 || d.r_d < 0.05 - 1e-9 {
+            return Err(format!("share below floor: {} / {}", d.r_p, d.r_d));
+        }
+        if d.queries > 250 {
+            return Err(format!("greedy search used {} queries", d.queries));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kv_cache_conservation() {
+    prop("kv cache accounting", 300, |rng| {
+        let blocks = gen::int_biased(rng, 4, 2000);
+        let mut kv = KvCache::new(blocks, 16, 100.0);
+        let mut live: Vec<usize> = Vec::new();
+        for step in 0..60 {
+            match rng.below(4) {
+                0 => {
+                    let id = step;
+                    if kv.try_reserve(id, rng.range_usize(1, 600)) {
+                        live.push(id);
+                    }
+                }
+                1 => {
+                    if let Some(&id) = live.get(rng.below(live.len().max(1)).min(live.len().saturating_sub(1))) {
+                        kv.try_reserve(id, rng.range_usize(1, 64));
+                    }
+                }
+                2 => {
+                    if !live.is_empty() {
+                        let id = live.swap_remove(rng.below(live.len()));
+                        kv.release(id);
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let id = live[rng.below(live.len())];
+                        if kv.tokens(id) > 0 {
+                            kv.swap_out(id);
+                            if kv.swap_in(id).is_none() {
+                                kv.evict(id);
+                                live.retain(|&x| x != id);
+                            }
+                        }
+                    }
+                }
+            }
+            let u = kv.usage();
+            if !(0.0..=1.0 + 1e-12).contains(&u) {
+                return Err(format!("usage out of range: {u}"));
+            }
+            if kv.free_blocks() > blocks {
+                return Err("free blocks exceed capacity".into());
+            }
+        }
+        for id in live {
+            kv.release(id);
+        }
+        if kv.total_tokens() != 0 {
+            return Err(format!("leaked tokens: {}", kv.total_tokens()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_every_engine_conserves_requests() {
+    // Random small workloads across random engines: requests are never
+    // lost or duplicated, and records are internally consistent.
+    prop("request conservation", 25, |rng| {
+        let dataset = *[Dataset::ShareGpt, Dataset::Arxiv, Dataset::Mixed]
+            .iter()
+            .nth(rng.below(3))
+            .unwrap();
+        let kinds = EngineKind::all();
+        let kind = kinds[rng.below(kinds.len())];
+        let n = rng.range_usize(5, 25);
+        let rate = rng.range_f64(0.5, 8.0);
+        let trace = generate(dataset, n, rate, rng.next_u64());
+        let mut cfg = EngineCfg::new(ModelConfig::qwen3b(), rng.next_u64());
+        if rng.chance(0.3) {
+            cfg.kv_blocks_override = Some(rng.range_usize(2_000, 40_000));
+        }
+        let m = run_engine(kind, &cfg, &trace);
+        if m.summary().completed + m.timeouts != n {
+            return Err(format!(
+                "{}: {} completed + {} timeouts != {n}",
+                kind.name(),
+                m.summary().completed,
+                m.timeouts
+            ));
+        }
+        let mut ids: Vec<usize> = m.records.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        if ids.len() != m.records.len() {
+            return Err(format!("{}: duplicate request records", kind.name()));
+        }
+        for r in &m.records {
+            if r.finish < r.first_token || r.first_token < r.arrival {
+                return Err(format!("{}: time order violated for {}", kind.name(), r.id));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hysteresis_never_applies_small_changes() {
+    let cost = calibrate(&GpuSpec::l20());
+    let model = ModelConfig::qwen3b();
+    prop("hysteresis threshold", 100, |rng| {
+        let delta = rng.range_f64(0.01, 0.3);
+        let cfg = PartitionConfig { delta, ..PartitionConfig::default() };
+        let mut ctl = PartitionController::new(cfg);
+        let mut last = ctl.r_p;
+        for _ in 0..10 {
+            let chunk = gen::int_biased(rng, 64, 2048);
+            let kv_len = rng.range_f64(64.0, 10000.0);
+            let pre = model.prefill_ops(chunk, chunk as f64 * kv_len, kv_len, 0);
+            let dec = model.decode_ops(gen::int_biased(rng, 1, 128), rng.range_f64(100.0, 1e5));
+            let d = ctl.decide(
+                &cost,
+                &BatchState { prefill_ops: &pre, decode_ops: &dec, kv_usage: rng.f64() },
+            );
+            if d.applied && (d.r_p - last).abs() < delta - 1e-9 {
+                return Err(format!(
+                    "applied sub-δ change: {} -> {} (δ={delta})",
+                    last, d.r_p
+                ));
+            }
+            if !d.applied && (d.r_p - last).abs() > 1e-9 {
+                return Err("suppressed decision must keep the old share".into());
+            }
+            last = d.r_p;
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,155 @@
+//! Cross-layer integration: the rust PJRT runtime must reproduce, token for
+//! token, the greedy generation that the JAX/Pallas stack computed at AOT
+//! time (recorded in `manifest.json` under `"reference"`).
+//!
+//! Requires `make artifacts`; every test skips cleanly when they are absent
+//! (e.g. in a rust-only environment).
+
+use nexus::runtime::{Manifest, Runtime};
+use nexus::server::{ServeRequest, Server, ServerCfg};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = std::env::var("NEXUS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn reference(dir: &PathBuf) -> (Vec<i32>, usize, Vec<i32>) {
+    let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    let j = nexus::util::json::Json::parse(&text).unwrap();
+    let r = j.get("reference").expect("manifest.reference (rebuild artifacts)");
+    let ints = |k: &str| -> Vec<i32> {
+        r.get(k)
+            .and_then(|x| x.as_arr())
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as i32)
+            .collect()
+    };
+    let steps = r.get("steps").and_then(|x| x.as_usize()).unwrap();
+    (ints("prompt"), steps, ints("tokens"))
+}
+
+#[test]
+fn manifest_loads_and_matches_dims() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let m = Manifest::load(&dir).unwrap();
+    assert_eq!(m.dims.vocab, 512);
+    assert!(m.total_weight_elems() > 1_000_000);
+    // Weight file size must match the tensor table exactly.
+    let len = std::fs::metadata(dir.join(&m.weights_file)).unwrap().len();
+    assert_eq!(len as usize, m.total_weight_elems() * 4);
+}
+
+#[test]
+fn greedy_generation_matches_jax_reference() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (prompt, steps, expect) = reference(&dir);
+    let rt = Runtime::load(&dir).unwrap();
+    let d = rt.dims;
+
+    // Prefill → first token.
+    let out = rt.prefill(&prompt).unwrap();
+    let mut tokens = vec![Runtime::argmax(&out.logits)];
+
+    // Decode loop in slot 0 of the batched entry.
+    let mut kv = vec![0.0f32; d.batch_kv_elems()];
+    kv[..d.kv_elems()].copy_from_slice(&out.kv);
+    for i in 0..steps - 1 {
+        let mut tok = vec![0i32; d.decode_batch];
+        let mut pos = vec![0i32; d.decode_batch];
+        tok[0] = *tokens.last().unwrap();
+        pos[0] = (prompt.len() + i) as i32;
+        let logits = rt.decode(&tok, &pos, &mut kv).unwrap();
+        tokens.push(Runtime::argmax(&logits[..d.vocab]));
+    }
+    assert_eq!(
+        tokens, expect,
+        "rust PJRT token loop diverged from the JAX/Pallas reference"
+    );
+}
+
+#[test]
+fn prefill_rejects_bad_lengths() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::load(&dir).unwrap();
+    assert!(rt.prefill(&[]).is_err());
+    let too_long = vec![1i32; rt.dims.max_prompt + 1];
+    assert!(rt.prefill(&too_long).is_err());
+}
+
+#[test]
+fn decode_rejects_bad_shapes() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::load(&dir).unwrap();
+    let d = rt.dims;
+    let mut kv = vec![0.0f32; d.batch_kv_elems()];
+    assert!(rt.decode(&[0], &[0], &mut kv).is_err(), "batch width must match");
+    let mut short_kv = vec![0.0f32; 8];
+    let tok = vec![0i32; d.decode_batch];
+    assert!(rt.decode(&tok, &tok, &mut short_kv).is_err(), "kv size must match");
+}
+
+#[test]
+fn server_serves_live_requests() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut server = Server::start(dir, ServerCfg::default()).unwrap();
+    server.wait_ready().unwrap();
+    let n = 6;
+    for id in 0..n {
+        server
+            .submit(ServeRequest {
+                id,
+                prompt: vec![(id as i32 % 500) + 1; 4 + id],
+                max_tokens: 5,
+            })
+            .unwrap();
+    }
+    let mut seen = Vec::new();
+    for _ in 0..n {
+        let r = server.recv().expect("response");
+        assert_eq!(r.tokens.len(), 5);
+        assert!(r.ttft >= 0.0 && r.e2e >= r.ttft);
+        assert_eq!(r.gaps.len(), 4);
+        seen.push(r.id);
+    }
+    seen.sort();
+    assert_eq!(seen, (0..n).collect::<Vec<_>>());
+    server.shutdown();
+}
+
+#[test]
+fn server_is_deterministic_across_runs() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let run = || {
+        let mut server = Server::start(dir.clone(), ServerCfg::default()).unwrap();
+        server.wait_ready().unwrap();
+        server
+            .submit(ServeRequest { id: 0, prompt: vec![3, 1, 4, 1, 5], max_tokens: 8 })
+            .unwrap();
+        let r = server.recv().unwrap();
+        server.shutdown();
+        r.tokens
+    };
+    assert_eq!(run(), run(), "same prompt must generate the same tokens");
+}
