@@ -1,0 +1,17 @@
+# Top-level targets for the Nexus reproduction.
+#
+#   make ci         — build + tests + fmt + clippy on the rust crate
+#   make test       — tier-1 verify (cargo build --release && cargo test -q)
+#   make artifacts  — AOT-lower the JAX/Pallas tiny model to PJRT artifacts
+#                     (needed only by the `pjrt` feature / `nexus live`)
+
+.PHONY: ci test artifacts
+
+ci:
+	./ci.sh
+
+test:
+	cd rust && cargo build --release && cargo test -q
+
+artifacts:
+	cd python && python3 compile/aot.py --out ../rust/artifacts

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# CI for the rust crate: build, tests, formatting, lints.
+# Usage: ./ci.sh   (or `make ci`)
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+run() {
+    echo
+    echo "==> $*"
+    "$@"
+}
+
+run cargo build --release
+run cargo test -q
+# fmt/clippy are advisory gates: present in some toolchain images, absent in
+# minimal ones. Fail on findings, skip cleanly when the component is missing.
+if cargo fmt --version >/dev/null 2>&1; then
+    run cargo fmt --all -- --check
+else
+    echo "==> cargo fmt not installed; skipping"
+fi
+if cargo clippy --version >/dev/null 2>&1; then
+    run cargo clippy --all-targets -- -D warnings
+else
+    echo "==> cargo clippy not installed; skipping"
+fi
+
+echo
+echo "CI OK"

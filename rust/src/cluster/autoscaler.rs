@@ -1,0 +1,275 @@
+//! Cost-model-driven fleet autoscaling with hysteresis.
+//!
+//! The fleet analogue of [`crate::partition::PartitionController`]: where
+//! the partition controller moves SMs between phases inside one GPU, the
+//! autoscaler moves whole replicas in and out of the fleet. Both are
+//! proactive (decisions come from the calibrated analytical cost model, not
+//! from reacting to SLO violations after the fact) and both damp
+//! oscillation with an explicit hysteresis mechanism — δ-suppression there,
+//! a cooldown window here.
+//!
+//! The capacity estimate asks the Eq. 5–9 cost model what one replica can
+//! sustain under a 50/50 SM split: the per-request prefill time (chunked,
+//! causal attention) and per-token decode time bound the replica's service
+//! rate by its slower pipeline stage. Demand over predicted capacity,
+//! corrected by live KV watermarks (the same `KV_u` signal Nexus's mode
+//! switch uses), yields the target replica count.
+
+use crate::costmodel::CostModel;
+use crate::engine::common::chunk_attn_pairs;
+use crate::engine::EngineCfg;
+
+/// Autoscaler parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct AutoscalerCfg {
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    /// Evaluation interval (virtual seconds between ticks).
+    pub interval: f64,
+    /// Hysteresis window: minimum virtual time between *applied* scale
+    /// actions. Proposals inside the window are suppressed, not queued.
+    pub cooldown: f64,
+    /// Target utilization of predicted per-replica capacity (< 1 leaves
+    /// headroom for bursts).
+    pub target_util: f64,
+    /// Fleet-max KV usage above which a replica is added regardless of the
+    /// demand estimate (memory-pressure relief, cf. `KV_switch`).
+    pub kv_high: f64,
+    /// Fleet-mean KV usage below which scale-down becomes permissible.
+    pub kv_low: f64,
+    /// Scale-down is vetoed while any replica holds more than this many
+    /// unfinished requests (drain would just migrate the backlog).
+    pub backlog_per_replica: usize,
+    /// EWMA weight on the newest arrival-rate sample.
+    pub ewma: f64,
+}
+
+impl Default for AutoscalerCfg {
+    fn default() -> Self {
+        AutoscalerCfg {
+            min_replicas: 1,
+            max_replicas: 8,
+            interval: 5.0,
+            cooldown: 20.0,
+            target_util: 0.75,
+            kv_high: 0.85,
+            kv_low: 0.45,
+            backlog_per_replica: 8,
+            ewma: 0.5,
+        }
+    }
+}
+
+/// Fleet state snapshot handed to the autoscaler at each tick.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetObs {
+    pub now: f64,
+    /// Arrivals per second observed since the previous tick.
+    pub arrival_rate: f64,
+    /// Replicas currently accepting traffic.
+    pub active_replicas: usize,
+    /// Admitted-but-unfinished requests across the fleet.
+    pub total_pending: usize,
+    /// Mean / max live KV usage across in-service replicas.
+    pub mean_kv: f64,
+    pub max_kv: f64,
+}
+
+/// Predict the request rate (req/s) one replica sustains for requests of
+/// the given mean shape, from the calibrated cost model at a 50/50 split.
+pub fn predict_replica_rate(
+    cost: &CostModel,
+    ecfg: &EngineCfg,
+    mean_prompt: f64,
+    mean_output: f64,
+) -> f64 {
+    // Prefill: the whole prompt in chunk-sized pieces (Eq. 5 per chunk).
+    let prompt = mean_prompt.round().max(1.0) as usize;
+    let mut prefill_t = 0.0;
+    let mut done = 0usize;
+    while done < prompt {
+        let take = ecfg.chunk_size.min(prompt - done);
+        let finishing = usize::from(done + take >= prompt);
+        let ops = ecfg.model.prefill_ops(
+            take,
+            chunk_attn_pairs(done, take),
+            (done + take) as f64,
+            finishing,
+        );
+        prefill_t += cost.prefill(&ops, 0.5).total;
+        done += take;
+    }
+    // Decode: per-token latency amortized over a reference batch (Eq. 6).
+    let batch = 16usize;
+    let ctx = batch as f64 * (mean_prompt + 0.5 * mean_output);
+    let per_iter = cost.decode(&ecfg.model.decode_ops(batch, ctx), 0.5, None);
+    let decode_t = mean_output.max(1.0) * per_iter / batch as f64;
+    // Phases run concurrently on disjoint SM partitions: a replica's
+    // steady-state rate is bounded by its slower pipeline stage.
+    1.0 / prefill_t.max(decode_t).max(1e-9)
+}
+
+/// Proactive replica-count controller.
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    pub cfg: AutoscalerCfg,
+    /// Cost-model-predicted sustainable rate of one replica (req/s).
+    pub replica_rate: f64,
+    rate_ewma: f64,
+    ticks: usize,
+    last_action: f64,
+    /// Applied / hysteresis-suppressed scale proposals (Fig.-8-style
+    /// stability accounting at fleet granularity).
+    pub applied: usize,
+    pub suppressed: usize,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscalerCfg, replica_rate: f64) -> Self {
+        assert!(cfg.min_replicas >= 1 && cfg.max_replicas >= cfg.min_replicas);
+        Autoscaler {
+            cfg,
+            replica_rate,
+            rate_ewma: 0.0,
+            ticks: 0,
+            last_action: f64::NEG_INFINITY,
+            applied: 0,
+            suppressed: 0,
+        }
+    }
+
+    /// One tick: returns `Some(target)` when a scale action should be
+    /// applied now, `None` when the fleet is already sized or the proposal
+    /// fell inside the hysteresis window.
+    pub fn decide(&mut self, obs: &FleetObs) -> Option<usize> {
+        self.rate_ewma = if self.ticks == 0 {
+            obs.arrival_rate
+        } else {
+            self.cfg.ewma * obs.arrival_rate + (1.0 - self.cfg.ewma) * self.rate_ewma
+        };
+        self.ticks += 1;
+
+        let capacity = (self.cfg.target_util * self.replica_rate).max(1e-9);
+        let demand = (self.rate_ewma / capacity).ceil() as usize;
+        let mut target = demand.clamp(self.cfg.min_replicas, self.cfg.max_replicas);
+
+        // KV-pressure relief: grow even when the demand estimate disagrees.
+        if obs.max_kv > self.cfg.kv_high {
+            target = target.max((obs.active_replicas + 1).min(self.cfg.max_replicas));
+        }
+        // Scale-down veto: never shed capacity while memory or queues are
+        // still loaded — the work would just pile onto the survivors.
+        if target < obs.active_replicas
+            && (obs.mean_kv > self.cfg.kv_low
+                || obs.total_pending
+                    > self.cfg.backlog_per_replica * obs.active_replicas)
+        {
+            target = obs.active_replicas;
+        }
+
+        if target == obs.active_replicas {
+            return None; // sized correctly: not an action, no hysteresis charge
+        }
+        if obs.now - self.last_action < self.cfg.cooldown {
+            self.suppressed += 1;
+            return None;
+        }
+        self.last_action = obs.now;
+        self.applied += 1;
+        Some(target)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::calibrate;
+    use crate::gpusim::GpuSpec;
+    use crate::model::ModelConfig;
+
+    fn scaler(cfg: AutoscalerCfg) -> Autoscaler {
+        Autoscaler::new(cfg, 4.0) // 4 req/s per replica
+    }
+
+    fn obs(now: f64, rate: f64, active: usize) -> FleetObs {
+        FleetObs {
+            now,
+            arrival_rate: rate,
+            active_replicas: active,
+            total_pending: 0,
+            mean_kv: 0.1,
+            max_kv: 0.2,
+        }
+    }
+
+    #[test]
+    fn capacity_prediction_is_positive_and_length_sensitive() {
+        let cost = calibrate(&GpuSpec::l20());
+        let ecfg = EngineCfg::new(ModelConfig::qwen3b(), 1);
+        let short = predict_replica_rate(&cost, &ecfg, 400.0, 100.0);
+        let long = predict_replica_rate(&cost, &ecfg, 6000.0, 200.0);
+        assert!(short.is_finite() && short > 0.0);
+        assert!(long > 0.0 && long < short, "long prompts must lower capacity");
+    }
+
+    #[test]
+    fn scales_up_under_demand() {
+        let mut a = scaler(AutoscalerCfg::default());
+        // 10 req/s against 0.75 × 4 = 3 req/s per replica → 4 replicas.
+        assert_eq!(a.decide(&obs(100.0, 10.0, 1)), Some(4));
+        assert_eq!(a.applied, 1);
+    }
+
+    #[test]
+    fn cooldown_suppresses_flapping() {
+        let mut a = scaler(AutoscalerCfg { cooldown: 30.0, ..AutoscalerCfg::default() });
+        assert_eq!(a.decide(&obs(10.0, 10.0, 1)), Some(4));
+        // Rate collapses immediately; the down-scale sits in the window.
+        assert_eq!(a.decide(&obs(15.0, 0.0, 4)), None);
+        assert!(a.suppressed >= 1);
+        // Past the window (and past the EWMA memory), shedding is allowed.
+        for i in 0..10 {
+            a.decide(&obs(20.0 + i as f64, 0.0, 4));
+        }
+        let d = a.decide(&obs(45.0, 0.0, 4));
+        assert_eq!(d, Some(1), "cold fleet must shrink to min after cooldown");
+    }
+
+    #[test]
+    fn bounds_are_respected() {
+        let cfg = AutoscalerCfg { min_replicas: 2, max_replicas: 3, ..AutoscalerCfg::default() };
+        let mut a = scaler(cfg);
+        assert_eq!(a.decide(&obs(0.0, 1000.0, 2)), Some(3), "clamped to max");
+        let mut b = scaler(cfg);
+        let d = b.decide(&obs(0.0, 0.0, 3));
+        assert_eq!(d, Some(2), "clamped to min");
+    }
+
+    #[test]
+    fn kv_pressure_forces_growth() {
+        let mut a = scaler(AutoscalerCfg::default());
+        let o = FleetObs {
+            now: 50.0,
+            arrival_rate: 0.5, // demand alone says 1 replica
+            active_replicas: 2,
+            total_pending: 0,
+            mean_kv: 0.9,
+            max_kv: 0.95,
+        };
+        assert_eq!(a.decide(&o), Some(3), "watermark breach must add a replica");
+    }
+
+    #[test]
+    fn backlog_vetoes_scale_down() {
+        let mut a = scaler(AutoscalerCfg::default());
+        let o = FleetObs {
+            now: 50.0,
+            arrival_rate: 0.0,
+            active_replicas: 4,
+            total_pending: 100,
+            mean_kv: 0.1,
+            max_kv: 0.2,
+        };
+        assert_eq!(a.decide(&o), None, "backlogged fleet must not shrink");
+    }
+}

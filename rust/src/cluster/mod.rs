@@ -1,0 +1,468 @@
+//! Cluster serving layer: N engine replicas co-simulated in one
+//! virtual-time loop.
+//!
+//! The intra-GPU work (partitioning, phase scheduling) lives in
+//! [`crate::engine`]; this module asks the production questions one layer
+//! up, in the spirit of DistServe/DynaServe-style engine-level serving:
+//!
+//! * a [`Router`] with pluggable policies dispatches every arrival to
+//!   exactly one active replica ([`router::RoutingPolicy`]);
+//! * an optional [`Autoscaler`] adds replicas or drains them, driven by the
+//!   calibrated cost model's capacity prediction plus live per-replica KV
+//!   watermarks, under an explicit hysteresis window
+//!   ([`autoscaler::AutoscalerCfg`]);
+//! * fleet metrics are aggregated by *merging* per-replica run metrics and
+//!   latency histograms ([`crate::metrics::RunMetrics::merge`],
+//!   [`crate::metrics::Histogram::merge`]).
+//!
+//! The co-simulation steps every in-service replica to the fleet-wide
+//! minimum next event (arrival, any replica's completion/transfer/retry, or
+//! an autoscaler tick), so no replica ever overshoots its own events and a
+//! single-replica cluster reproduces the single-engine loop exactly.
+
+pub mod autoscaler;
+pub mod replica;
+pub mod router;
+
+pub use autoscaler::{Autoscaler, AutoscalerCfg, FleetObs};
+pub use replica::{Replica, ReplicaState};
+pub use router::{ReplicaView, Router, RoutingPolicy};
+
+use crate::costmodel::calibrate;
+use crate::engine::common::ArrivalFeed;
+use crate::engine::{Engine, EngineCfg, EngineKind};
+use crate::metrics::{Histogram, RunMetrics, Summary};
+use crate::workload::Request;
+
+/// Fleet configuration.
+#[derive(Debug, Clone)]
+pub struct ClusterCfg {
+    pub kind: EngineKind,
+    pub engine: EngineCfg,
+    /// Initial replica count (clamped into the autoscaler's bounds when
+    /// autoscaling is enabled).
+    pub replicas: usize,
+    pub policy: RoutingPolicy,
+    pub autoscale: Option<AutoscalerCfg>,
+}
+
+impl ClusterCfg {
+    pub fn new(
+        kind: EngineKind,
+        engine: EngineCfg,
+        replicas: usize,
+        policy: RoutingPolicy,
+    ) -> Self {
+        assert!(replicas >= 1, "a cluster needs at least one replica");
+        ClusterCfg { kind, engine, replicas, policy, autoscale: None }
+    }
+}
+
+/// One applied scale action.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleEvent {
+    pub time: f64,
+    pub from: usize,
+    pub to: usize,
+}
+
+/// Per-replica accounting surfaced after a run.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaStats {
+    pub id: usize,
+    pub routed: usize,
+    pub completed: usize,
+    pub started_at: f64,
+    /// Retirement time; `None` for replicas alive at the end of the run.
+    pub retired_at: Option<f64>,
+}
+
+/// Fleet-level result: merged run metrics, merged latency histograms, and
+/// the scaling/routing trail.
+pub struct ClusterMetrics {
+    /// Per-request metrics merged across every replica.
+    pub fleet: RunMetrics,
+    pub replicas: Vec<ReplicaStats>,
+    pub scale_events: Vec<ScaleEvent>,
+    /// Hysteresis-suppressed scale proposals.
+    pub suppressed_scales: usize,
+    /// Integral of in-service replica count over virtual time — the cost
+    /// side of the autoscaling trade-off.
+    pub replica_seconds: f64,
+    pub peak_replicas: usize,
+    /// TTFT / TBT distributions, merged from per-replica histograms.
+    pub ttft_hist: Histogram,
+    pub tbt_hist: Histogram,
+}
+
+impl ClusterMetrics {
+    pub fn summary(&self) -> Summary {
+        self.fleet.summary()
+    }
+
+    /// Fraction of *offered* requests (completed + timed out) that finished
+    /// within both per-request SLOs.
+    pub fn slo_attainment(&self, ttft_slo: f64, norm_slo: f64) -> f64 {
+        let total = self.fleet.records.len() + self.fleet.timeouts;
+        if total == 0 {
+            return 1.0;
+        }
+        let ok = self
+            .fleet
+            .records
+            .iter()
+            .filter(|r| r.ttft() <= ttft_slo && r.normalized_latency() <= norm_slo)
+            .count();
+        ok as f64 / total as f64
+    }
+}
+
+fn mean_lengths(trace: &[Request]) -> (f64, f64) {
+    if trace.is_empty() {
+        return (1.0, 1.0);
+    }
+    let n = trace.len() as f64;
+    let p: usize = trace.iter().map(|r| r.prompt_len).sum();
+    let o: usize = trace.iter().map(|r| r.output_len).sum();
+    (p as f64 / n, o as f64 / n)
+}
+
+/// A replica fleet plus its router; one instance per run.
+pub struct Cluster {
+    pub cfg: ClusterCfg,
+    pub replicas: Vec<Replica>,
+    pub router: Router,
+}
+
+impl Cluster {
+    pub fn new(cfg: ClusterCfg) -> Self {
+        let policy = cfg.policy;
+        Cluster { cfg, replicas: Vec::new(), router: Router::new(policy) }
+    }
+
+    fn active_views(&self) -> Vec<ReplicaView> {
+        self.replicas.iter().filter(|r| r.is_active()).map(|r| r.view()).collect()
+    }
+
+    fn active_count(&self) -> usize {
+        self.replicas.iter().filter(|r| r.is_active()).count()
+    }
+
+    /// Co-simulate the fleet over a time-sorted trace.
+    pub fn run(&mut self, trace: &[Request]) -> ClusterMetrics {
+        let cfg = self.cfg.clone();
+        let n0 = match &cfg.autoscale {
+            Some(a) => cfg.replicas.clamp(a.min_replicas, a.max_replicas),
+            None => cfg.replicas,
+        };
+        self.replicas = (0..n0).map(|i| Replica::new(i, cfg.kind, &cfg.engine, 0.0)).collect();
+        self.router = Router::new(cfg.policy);
+        let mut scaler = cfg.autoscale.map(|acfg| {
+            let cost = calibrate(&cfg.engine.gpu);
+            let (mp, mo) = mean_lengths(trace);
+            Autoscaler::new(acfg, autoscaler::predict_replica_rate(&cost, &cfg.engine, mp, mo))
+        });
+        let mut next_tick = scaler.as_ref().map(|s| s.cfg.interval);
+
+        let mut feed = ArrivalFeed::new(trace);
+        let mut fleet = RunMetrics::default();
+        let mut ttft_hist = Histogram::new();
+        let mut tbt_hist = Histogram::new();
+        let mut scale_events: Vec<ScaleEvent> = Vec::new();
+        let mut replica_seconds = 0.0f64;
+        let mut peak_replicas = n0;
+        let mut last_t = 0.0f64;
+        let mut arrivals_since_tick = 0usize;
+        let mut next_id = n0;
+
+        loop {
+            let pending: usize = self.replicas.iter().map(|r| r.eng.pending()).sum();
+            if feed.exhausted() && pending == 0 {
+                break;
+            }
+
+            // Fleet-wide next event: earliest arrival, any in-service
+            // replica's internal event, or the next autoscaler tick.
+            let mut t = f64::INFINITY;
+            if let Some(a) = feed.peek_time() {
+                t = t.min(a);
+            }
+            for rep in self.replicas.iter_mut().filter(|r| r.in_service()) {
+                if let Some(e) = rep.eng.next_event() {
+                    t = t.min(e);
+                }
+            }
+            if let Some(tick) = next_tick {
+                t = t.min(tick);
+            }
+            if !t.is_finite() {
+                t = self.replicas.iter().map(|r| r.eng.now()).fold(last_t, f64::max);
+            }
+            if t > cfg.engine.max_virtual_time {
+                break;
+            }
+
+            // Replica-seconds accrue for every in-service replica.
+            let in_service = self.replicas.iter().filter(|r| r.in_service()).count();
+            replica_seconds += in_service as f64 * (t - last_t).max(0.0);
+            last_t = t;
+
+            // Route arrivals due at t. Views are rebuilt per arrival so
+            // load-aware policies see same-instant dispatches.
+            for r in feed.pop_until(t) {
+                let views = self.active_views();
+                let target = self.router.route(&views, r);
+                // Replicas are never removed from the vec (only retired in
+                // place), so fleet position == replica id.
+                let rep = &mut self.replicas[target];
+                debug_assert_eq!(rep.id, target);
+                rep.eng.inject(*r);
+                rep.routed += 1;
+                arrivals_since_tick += 1;
+            }
+
+            // Step every in-service replica to the global event time (never
+            // past any replica's own next event, by construction of t).
+            let mut any_busy = false;
+            for rep in self.replicas.iter_mut().filter(|r| r.in_service()) {
+                let out = rep.eng.step(t);
+                any_busy |= out.busy;
+            }
+
+            // Autoscaler tick: observe the post-step fleet, maybe act.
+            if let (Some(s), Some(tick)) = (scaler.as_mut(), next_tick) {
+                if t + 1e-12 >= tick {
+                    let views = self.active_views();
+                    let kvs: Vec<f64> = views.iter().map(|v| v.kv_usage).collect();
+                    let obs = FleetObs {
+                        now: t,
+                        arrival_rate: arrivals_since_tick as f64 / s.cfg.interval,
+                        active_replicas: views.len(),
+                        total_pending: self.replicas.iter().map(|r| r.eng.pending()).sum(),
+                        mean_kv: crate::util::mean(&kvs),
+                        max_kv: kvs.iter().fold(0.0f64, |a, &b| a.max(b)),
+                    };
+                    if let Some(target) = s.decide(&obs) {
+                        let from = views.len();
+                        self.rescale(target, t, &mut next_id, &cfg);
+                        scale_events.push(ScaleEvent { time: t, from, to: target });
+                    }
+                    next_tick = Some(tick + s.cfg.interval);
+                    arrivals_since_tick = 0;
+                }
+            }
+
+            // Retire drained replicas, merging their metrics into the pool.
+            for rep in self.replicas.iter_mut() {
+                if rep.drained() {
+                    let m = rep.retire(t);
+                    ttft_hist.merge(&m.ttft_histogram());
+                    tbt_hist.merge(&m.tbt_histogram());
+                    fleet.merge(m);
+                }
+            }
+
+            peak_replicas = peak_replicas.max(self.active_count());
+
+            let pending_after: usize = self.replicas.iter().map(|r| r.eng.pending()).sum();
+            if !any_busy && feed.exhausted() && pending_after > 0 {
+                // Nothing schedulable fleet-wide and nothing will arrive.
+                break;
+            }
+        }
+
+        // Collect the survivors.
+        for rep in self.replicas.iter_mut() {
+            if rep.in_service() {
+                rep.state = ReplicaState::Draining; // permit retire() bookkeeping
+                let m = rep.retire(last_t);
+                rep.retired_at = None; // still in service at end of run
+                ttft_hist.merge(&m.ttft_histogram());
+                tbt_hist.merge(&m.tbt_histogram());
+                fleet.merge(m);
+            }
+        }
+        fleet.timeouts = trace.len() - fleet.records.len();
+
+        let replicas = self
+            .replicas
+            .iter()
+            .map(|r| ReplicaStats {
+                id: r.id,
+                routed: r.routed,
+                completed: r.eng.completed(),
+                started_at: r.started_at,
+                retired_at: r.retired_at,
+            })
+            .collect();
+
+        ClusterMetrics {
+            fleet,
+            replicas,
+            scale_events,
+            suppressed_scales: scaler.as_ref().map_or(0, |s| s.suppressed),
+            replica_seconds,
+            peak_replicas,
+            ttft_hist,
+            tbt_hist,
+        }
+    }
+
+    /// Apply a scale decision: grow with fresh replicas, or drain the
+    /// least-loaded actives (they retire once their admitted work finishes).
+    fn rescale(&mut self, target: usize, now: f64, next_id: &mut usize, cfg: &ClusterCfg) {
+        let active: Vec<usize> = self
+            .replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.is_active())
+            .map(|(i, _)| i)
+            .collect();
+        if target > active.len() {
+            for _ in active.len()..target {
+                self.replicas.push(Replica::new(*next_id, cfg.kind, &cfg.engine, now));
+                *next_id += 1;
+            }
+        } else {
+            let mut by_load: Vec<(usize, usize)> =
+                active.iter().map(|&i| (self.replicas[i].eng.pending(), i)).collect();
+            by_load.sort_unstable();
+            for &(_, i) in by_load.iter().take(active.len() - target) {
+                self.replicas[i].drain();
+            }
+        }
+    }
+}
+
+/// Convenience: build and run a cluster in one call.
+pub fn run_cluster(cfg: &ClusterCfg, trace: &[Request]) -> ClusterMetrics {
+    Cluster::new(cfg.clone()).run(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::run_engine;
+    use crate::model::ModelConfig;
+    use crate::workload::{generate, Dataset};
+
+    fn ecfg() -> EngineCfg {
+        EngineCfg::new(ModelConfig::qwen3b(), 42)
+    }
+
+    #[test]
+    fn single_replica_reproduces_run_engine() {
+        // The acceptance bar for the stepping refactor: a 1-replica
+        // round-robin cluster is the single-engine loop.
+        let ecfg = ecfg();
+        let trace = generate(Dataset::Mixed, 30, 3.0, 7);
+        for kind in [EngineKind::Vllm, EngineKind::Nexus, EngineKind::FastServe] {
+            let solo = run_engine(kind, &ecfg, &trace);
+            let cc = ClusterCfg::new(kind, ecfg.clone(), 1, RoutingPolicy::RoundRobin);
+            let fleet = run_cluster(&cc, &trace);
+            let (a, b) = (solo.summary(), fleet.summary());
+            assert_eq!(a.completed, b.completed, "{}", kind.name());
+            assert!((a.mean_ttft - b.mean_ttft).abs() < 1e-12, "{}", kind.name());
+            assert!((a.mean_tbt - b.mean_tbt).abs() < 1e-12, "{}", kind.name());
+            assert!((a.p95_norm - b.p95_norm).abs() < 1e-12, "{}", kind.name());
+            assert_eq!(solo.recomputes, fleet.fleet.recomputes);
+            assert_eq!(solo.timeouts, fleet.fleet.timeouts);
+            assert!((solo.makespan - fleet.fleet.makespan).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fleet_completes_and_conserves_requests() {
+        let trace = generate(Dataset::ShareGpt, 60, 8.0, 13);
+        for &policy in RoutingPolicy::all() {
+            let cc = ClusterCfg::new(EngineKind::Nexus, ecfg(), 3, policy);
+            let m = run_cluster(&cc, &trace);
+            assert_eq!(
+                m.fleet.records.len() + m.fleet.timeouts,
+                60,
+                "{} lost requests",
+                policy.name()
+            );
+            let routed: usize = m.replicas.iter().map(|r| r.routed).sum();
+            assert_eq!(routed, 60, "{} routed != offered", policy.name());
+            assert_eq!(m.ttft_hist.count(), m.fleet.records.len() as u64);
+        }
+    }
+
+    #[test]
+    fn more_replicas_cut_latency_under_load() {
+        // Twice the fleet at the same offered rate must improve p95 TTFT.
+        let trace = generate(Dataset::ShareGpt, 80, 10.0, 21);
+        let one = run_cluster(
+            &ClusterCfg::new(EngineKind::Nexus, ecfg(), 1, RoutingPolicy::JoinShortestQueue),
+            &trace,
+        );
+        let four = run_cluster(
+            &ClusterCfg::new(EngineKind::Nexus, ecfg(), 4, RoutingPolicy::JoinShortestQueue),
+            &trace,
+        );
+        assert!(four.fleet.records.len() >= one.fleet.records.len());
+        assert!(
+            four.summary().p95_ttft < one.summary().p95_ttft,
+            "4 replicas p95 {} must beat 1 replica {}",
+            four.summary().p95_ttft,
+            one.summary().p95_ttft
+        );
+    }
+
+    #[test]
+    fn autoscaler_scales_and_respects_bounds() {
+        let acfg = AutoscalerCfg {
+            min_replicas: 1,
+            max_replicas: 4,
+            interval: 2.0,
+            cooldown: 6.0,
+            ..AutoscalerCfg::default()
+        };
+        let mut cc =
+            ClusterCfg::new(EngineKind::Nexus, ecfg(), 1, RoutingPolicy::JoinShortestQueue);
+        cc.autoscale = Some(acfg);
+        let trace = generate(Dataset::ShareGpt, 120, 12.0, 5);
+        let m = run_cluster(&cc, &trace);
+        assert_eq!(m.fleet.records.len() + m.fleet.timeouts, 120);
+        assert!(m.peak_replicas >= 1 && m.peak_replicas <= 4);
+        for e in &m.scale_events {
+            assert!(e.to >= 1 && e.to <= 4, "target out of bounds: {e:?}");
+        }
+        for w in m.scale_events.windows(2) {
+            assert!(
+                w[1].time - w[0].time >= acfg.cooldown - 1e-9,
+                "scale actions inside the hysteresis window: {:?}",
+                w
+            );
+        }
+        assert!(m.replica_seconds > 0.0);
+    }
+
+    #[test]
+    fn drain_loses_no_responses() {
+        // Force aggressive downs-scaling and check every request completes.
+        let acfg = AutoscalerCfg {
+            min_replicas: 1,
+            max_replicas: 3,
+            interval: 1.0,
+            cooldown: 2.0,
+            target_util: 0.9,
+            ..AutoscalerCfg::default()
+        };
+        let mut cc = ClusterCfg::new(EngineKind::Vllm, ecfg(), 3, RoutingPolicy::RoundRobin);
+        cc.autoscale = Some(acfg);
+        // A front-loaded burst followed by a trickle → the fleet shrinks
+        // while the burst's decodes are still in flight.
+        let mut trace = generate(Dataset::ShareGpt, 40, 20.0, 3);
+        let tail = generate(Dataset::ShareGpt, 20, 0.4, 4);
+        let t0 = trace.last().unwrap().arrival;
+        for (i, mut r) in tail.into_iter().enumerate() {
+            r.id = 40 + i;
+            r.arrival += t0;
+            trace.push(r);
+        }
+        let m = run_cluster(&cc, &trace);
+        assert_eq!(m.fleet.records.len() + m.fleet.timeouts, 60, "responses lost in drain");
+    }
+}

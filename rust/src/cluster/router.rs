@@ -1,0 +1,210 @@
+//! Request routing across engine replicas.
+//!
+//! The router is the cluster's only admission point: every arrival is
+//! dispatched to exactly one *active* replica. Policies range from
+//! state-oblivious (round-robin) to load-aware (join-shortest-queue,
+//! least-KV-pressure — the fleet-level analogue of Nexus's KV-watermark
+//! mode switching) to locality-aware (session affinity, which keeps a
+//! simulated user's traffic on one replica so prefix caches stay warm).
+
+use crate::workload::Request;
+use std::collections::HashMap;
+
+/// Simulated concurrent sessions for [`RoutingPolicy::SessionAffinity`]:
+/// request ids are interleaved round-robin across this many users.
+const AFFINITY_SESSIONS: usize = 64;
+
+/// Dispatch policy for arrivals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Cycle through active replicas regardless of load.
+    RoundRobin,
+    /// Fewest admitted-but-unfinished requests wins.
+    JoinShortestQueue,
+    /// Lowest live KV usage wins (ties broken by queue depth).
+    LeastKvPressure,
+    /// Sticky per-session placement with JSQ fallback on drain/overflow.
+    SessionAffinity,
+}
+
+impl RoutingPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutingPolicy::RoundRobin => "round-robin",
+            RoutingPolicy::JoinShortestQueue => "jsq",
+            RoutingPolicy::LeastKvPressure => "least-kv",
+            RoutingPolicy::SessionAffinity => "affinity",
+        }
+    }
+
+    /// Longer description for `--help` output.
+    pub fn describe(&self) -> &'static str {
+        match self {
+            RoutingPolicy::RoundRobin => "cycle through active replicas",
+            RoutingPolicy::JoinShortestQueue => "fewest in-flight requests wins",
+            RoutingPolicy::LeastKvPressure => "lowest KV-cache usage wins",
+            RoutingPolicy::SessionAffinity => "sticky per-session placement",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<RoutingPolicy> {
+        match name.to_ascii_lowercase().as_str() {
+            "rr" | "round-robin" | "roundrobin" => Some(RoutingPolicy::RoundRobin),
+            "jsq" | "join-shortest-queue" | "shortest-queue" => {
+                Some(RoutingPolicy::JoinShortestQueue)
+            }
+            "least-kv" | "kv" | "least-kv-pressure" => Some(RoutingPolicy::LeastKvPressure),
+            "affinity" | "session" | "session-affinity" => Some(RoutingPolicy::SessionAffinity),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> &'static [RoutingPolicy] {
+        &[
+            RoutingPolicy::RoundRobin,
+            RoutingPolicy::JoinShortestQueue,
+            RoutingPolicy::LeastKvPressure,
+            RoutingPolicy::SessionAffinity,
+        ]
+    }
+}
+
+/// Load snapshot of one routable (active) replica.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaView {
+    /// Absolute replica index in the fleet.
+    pub index: usize,
+    /// Admitted-but-unfinished requests.
+    pub pending: usize,
+    /// Live KV usage `KV_u` ∈ [0, 1].
+    pub kv_usage: f64,
+}
+
+/// Stateful dispatcher: one per cluster run.
+#[derive(Debug)]
+pub struct Router {
+    pub policy: RoutingPolicy,
+    rr_next: usize,
+    /// session key → replica index (affinity policy only).
+    sessions: HashMap<u64, usize>,
+    /// Total requests dispatched.
+    pub dispatched: usize,
+}
+
+impl Router {
+    pub fn new(policy: RoutingPolicy) -> Self {
+        Router { policy, rr_next: 0, sessions: HashMap::new(), dispatched: 0 }
+    }
+
+    fn jsq(views: &[ReplicaView]) -> usize {
+        views
+            .iter()
+            .min_by_key(|v| (v.pending, v.index))
+            .expect("router needs at least one active replica")
+            .index
+    }
+
+    /// Pick the target replica for one arrival. `views` must describe the
+    /// currently *active* replicas (non-empty; draining replicas excluded).
+    pub fn route(&mut self, views: &[ReplicaView], req: &Request) -> usize {
+        assert!(!views.is_empty(), "route with no active replicas");
+        self.dispatched += 1;
+        match self.policy {
+            RoutingPolicy::RoundRobin => {
+                let v = &views[self.rr_next % views.len()];
+                self.rr_next = self.rr_next.wrapping_add(1);
+                v.index
+            }
+            RoutingPolicy::JoinShortestQueue => Self::jsq(views),
+            RoutingPolicy::LeastKvPressure => {
+                views
+                    .iter()
+                    .min_by(|a, b| {
+                        (a.kv_usage, a.pending, a.index)
+                            .partial_cmp(&(b.kv_usage, b.pending, b.index))
+                            .unwrap()
+                    })
+                    .unwrap()
+                    .index
+            }
+            RoutingPolicy::SessionAffinity => {
+                let key = (req.id % AFFINITY_SESSIONS) as u64;
+                if let Some(&idx) = self.sessions.get(&key) {
+                    if views.iter().any(|v| v.index == idx) {
+                        return idx;
+                    }
+                }
+                // New session, or its replica drained: place by JSQ and pin.
+                let idx = Self::jsq(views);
+                self.sessions.insert(key, idx);
+                idx
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize) -> Request {
+        Request { id, arrival: 0.0, prompt_len: 100, output_len: 10 }
+    }
+
+    fn views(loads: &[(usize, usize, f64)]) -> Vec<ReplicaView> {
+        loads
+            .iter()
+            .map(|&(index, pending, kv_usage)| ReplicaView { index, pending, kv_usage })
+            .collect()
+    }
+
+    #[test]
+    fn policy_name_roundtrip() {
+        for &p in RoutingPolicy::all() {
+            assert_eq!(RoutingPolicy::by_name(p.name()), Some(p));
+            assert!(!p.describe().is_empty());
+        }
+        assert!(RoutingPolicy::by_name("random").is_none());
+    }
+
+    #[test]
+    fn round_robin_cycles_active_set() {
+        let mut r = Router::new(RoutingPolicy::RoundRobin);
+        let v = views(&[(0, 0, 0.0), (2, 0, 0.0), (5, 0, 0.0)]);
+        let picks: Vec<usize> = (0..6).map(|i| r.route(&v, &req(i))).collect();
+        assert_eq!(picks, vec![0, 2, 5, 0, 2, 5]);
+        assert_eq!(r.dispatched, 6);
+    }
+
+    #[test]
+    fn jsq_picks_least_loaded() {
+        let mut r = Router::new(RoutingPolicy::JoinShortestQueue);
+        let v = views(&[(0, 7, 0.1), (1, 2, 0.9), (2, 2, 0.3)]);
+        // Tie on pending=2 broken by index.
+        assert_eq!(r.route(&v, &req(0)), 1);
+    }
+
+    #[test]
+    fn least_kv_prefers_cold_cache() {
+        let mut r = Router::new(RoutingPolicy::LeastKvPressure);
+        let v = views(&[(0, 1, 0.8), (1, 9, 0.2), (2, 1, 0.5)]);
+        assert_eq!(r.route(&v, &req(0)), 1, "kv usage dominates queue depth");
+    }
+
+    #[test]
+    fn affinity_is_sticky_until_drain() {
+        let mut r = Router::new(RoutingPolicy::SessionAffinity);
+        let v = views(&[(0, 0, 0.0), (1, 5, 0.0)]);
+        let first = r.route(&v, &req(3));
+        assert_eq!(first, 0, "initial placement is JSQ");
+        // Same session (id ≡ 3 mod 64) sticks even when load flips.
+        let v_flipped = views(&[(0, 50, 0.0), (1, 0, 0.0)]);
+        assert_eq!(r.route(&v_flipped, &req(3 + 64)), 0);
+        // Replica 0 drained: session remaps to an active replica.
+        let v_drained = views(&[(1, 0, 0.0)]);
+        assert_eq!(r.route(&v_drained, &req(3 + 128)), 1);
+        // ...and stays remapped afterwards.
+        let v_back = views(&[(0, 0, 0.0), (1, 9, 0.0)]);
+        assert_eq!(r.route(&v_back, &req(3 + 192)), 1);
+    }
+}

@@ -1,10 +1,12 @@
-//! Experiment coordinator: trace construction, engine comparison runs, and
-//! the sustainable-throughput search used for Fig. 9/10 column 1–2.
+//! Experiment coordinator: trace construction, engine comparison runs, the
+//! sustainable-throughput search used for Fig. 9/10 column 1–2, and the
+//! fleet-level [`ClusterExperiment`] driver.
 
+use crate::cluster::{run_cluster, AutoscalerCfg, ClusterCfg, ClusterMetrics, RoutingPolicy};
 use crate::engine::{run_engine, EngineCfg, EngineKind};
 use crate::metrics::{RunMetrics, Summary};
 use crate::model::ModelConfig;
-use crate::workload::{self, Dataset};
+use crate::workload::{self, BurstyCfg, Dataset};
 
 /// One experiment's shape: which model/dataset, how many requests, at what
 /// Poisson rate (requests/second).
@@ -47,6 +49,46 @@ impl Experiment {
     /// Run all requested engines, returning (kind, metrics) pairs.
     pub fn run_all(&self, kinds: &[EngineKind]) -> Vec<(EngineKind, RunMetrics)> {
         kinds.iter().map(|&k| (k, self.run(k))).collect()
+    }
+}
+
+/// A fleet-level experiment: one [`Experiment`] shape served by a cluster
+/// of engine replicas instead of a single instance. Existing single-engine
+/// benches keep using [`Experiment`] untouched; fleet benches layer this on
+/// top.
+#[derive(Debug, Clone)]
+pub struct ClusterExperiment {
+    pub base: Experiment,
+    pub replicas: usize,
+    pub policy: RoutingPolicy,
+    pub autoscale: Option<AutoscalerCfg>,
+    /// When set, arrivals come from the bursty/diurnal process (the
+    /// `base.rate` field is ignored in favor of `bursty.base_rate`).
+    pub bursty: Option<BurstyCfg>,
+}
+
+impl ClusterExperiment {
+    pub fn new(base: Experiment, replicas: usize, policy: RoutingPolicy) -> Self {
+        ClusterExperiment { base, replicas, policy, autoscale: None, bursty: None }
+    }
+
+    pub fn trace(&self) -> Vec<workload::Request> {
+        match &self.bursty {
+            Some(b) => workload::generate_bursty(
+                self.base.dataset,
+                self.base.n_requests,
+                b,
+                self.base.seed,
+            ),
+            None => self.base.trace(),
+        }
+    }
+
+    /// Run the fleet with every replica running `kind`.
+    pub fn run(&self, kind: EngineKind) -> ClusterMetrics {
+        let mut cfg = ClusterCfg::new(kind, self.base.cfg(), self.replicas, self.policy);
+        cfg.autoscale = self.autoscale;
+        run_cluster(&cfg, &self.trace())
     }
 }
 
@@ -159,6 +201,32 @@ mod tests {
             sustainable_throughput(EngineKind::Vllm, &exp, strict, 0.5, 40.0, 2.0),
             0.0
         );
+    }
+
+    #[test]
+    fn cluster_experiment_runs_all_policies() {
+        let base = Experiment::new(ModelConfig::qwen3b(), Dataset::ShareGpt, 30, 6.0);
+        for &policy in RoutingPolicy::all() {
+            let exp = ClusterExperiment::new(base.clone(), 2, policy);
+            let m = exp.run(EngineKind::Nexus);
+            assert_eq!(
+                m.fleet.records.len() + m.fleet.timeouts,
+                30,
+                "{} lost requests",
+                policy.name()
+            );
+        }
+    }
+
+    #[test]
+    fn cluster_experiment_bursty_and_autoscaled() {
+        let base = Experiment::new(ModelConfig::qwen3b(), Dataset::ShareGpt, 40, 4.0);
+        let mut exp = ClusterExperiment::new(base, 1, RoutingPolicy::JoinShortestQueue);
+        exp.bursty = Some(BurstyCfg { base_rate: 8.0, ..BurstyCfg::default() });
+        exp.autoscale = Some(AutoscalerCfg { max_replicas: 3, ..AutoscalerCfg::default() });
+        let m = exp.run(EngineKind::Nexus);
+        assert_eq!(m.fleet.records.len() + m.fleet.timeouts, 40);
+        assert!(m.peak_replicas <= 3);
     }
 
     #[test]

@@ -6,8 +6,8 @@
 //! overrun the transfer buffer, forcing evictions whose KV must be
 //! recomputed — under bursty load the system livelocks on recompute.
 
-use super::common::{chunk_attn_pairs, ArrivalFeed, ReqState};
-use super::EngineCfg;
+use super::common::{chunk_attn_pairs, ReqState};
+use super::{Engine, EngineCfg, EngineKind, StepOutcome};
 use crate::gpusim::Sim;
 use crate::kv::{KvCache, TransferBuffer};
 use crate::metrics::RunMetrics;
@@ -35,214 +35,79 @@ struct InTransfer {
     bytes: f64,
 }
 
-pub struct DisaggEngine<'c> {
-    cfg: &'c EngineCfg,
+pub struct DisaggEngine {
+    cfg: EngineCfg,
+    // Two physical GPUs: independent simulators (no shared bandwidth).
+    psim: Sim,
+    dsim: Sim,
+    pkv: KvCache,
+    dkv: KvCache,
+    buffer: TransferBuffer,
+    metrics: RunMetrics,
+    states: Vec<Option<ReqState>>,
+    waiting: Vec<usize>, // prefill queue
+    transfers: Vec<InTransfer>,
+    running: Vec<usize>, // decoding on GPU 1
+    p_inflight: Option<PrefillIter>,
+    d_inflight: Option<DecodeIter>,
+    /// Requests evicted from the buffer retry prefill after a backoff.
+    retry_at: Vec<(usize, f64)>,
+    injected: usize,
+    done: usize,
+    tag: u64,
 }
 
-impl<'c> DisaggEngine<'c> {
-    pub fn new(cfg: &'c EngineCfg) -> Self {
-        DisaggEngine { cfg }
-    }
-
-    pub fn run(&mut self, trace: &[Request]) -> RunMetrics {
-        let cfg = self.cfg;
-        // Two physical GPUs: independent simulators (no shared bandwidth).
+impl DisaggEngine {
+    pub fn new(cfg: &EngineCfg) -> Self {
         let mut psim = Sim::new(cfg.gpu, 1);
         let mut dsim = Sim::new(cfg.gpu, 1);
         psim.set_partition(0, 1.0);
         dsim.set_partition(0, 1.0);
-        let mut pkv = cfg.kv_cache();
-        let mut dkv = cfg.kv_cache();
-        let mut buffer = TransferBuffer::new(cfg.gpu.hbm_bytes * cfg.transfer_buffer_frac);
-        let mut metrics = RunMetrics::default();
-
-        let mut states: Vec<Option<ReqState>> = vec![None; trace.len()];
-        let mut waiting: Vec<usize> = Vec::new(); // prefill queue
-        let mut transfers: Vec<InTransfer> = Vec::new();
-        let mut running: Vec<usize> = Vec::new(); // decoding on GPU 1
-        let mut p_inflight: Option<PrefillIter> = None;
-        let mut d_inflight: Option<DecodeIter> = None;
-        let mut feed = ArrivalFeed::new(trace);
-        let mut done = 0usize;
-        let mut tag = 0u64;
-        // Requests evicted from the buffer retry prefill after a backoff.
-        let mut retry_at: Vec<(usize, f64)> = Vec::new();
-
-        while done < trace.len() {
-            let mut t = f64::INFINITY;
-            if let Some(a) = feed.peek_time() {
-                t = t.min(a);
-            }
-            if p_inflight.is_some() {
-                if let Some(s) = psim.peek_next_completion() {
-                    t = t.min(s);
-                }
-            }
-            if d_inflight.is_some() {
-                if let Some(s) = dsim.peek_next_completion() {
-                    t = t.min(s);
-                }
-            }
-            for tr in &transfers {
-                t = t.min(tr.ready_at);
-            }
-            for &(_, at) in &retry_at {
-                t = t.min(at);
-            }
-            if !t.is_finite() {
-                t = psim.now().max(dsim.now());
-            }
-            if t > cfg.max_virtual_time {
-                // Livelocked (e.g. buffer-overrun recompute storm, §6.2.2).
-                metrics.timeouts = trace.len() - done;
-                break;
-            }
-
-            // Advance both GPUs to the global event time.
-            let now = t.max(psim.now()).max(dsim.now());
-            let p_done = psim.advance_to(now + 1e-12);
-            let d_done = dsim.advance_to(now + 1e-12);
-
-            for r in feed.pop_until(now) {
-                states[r.id] = Some(ReqState::new(*r));
-                waiting.push(r.id);
-            }
-            // Buffer-evicted requests rejoin the prefill queue.
-            retry_at.retain(|&(id, at)| {
-                if at <= now {
-                    waiting.push(id);
-                    false
-                } else {
-                    true
-                }
-            });
-
-            // Prefill GPU completions → stage KV into the transfer buffer.
-            for c in p_done {
-                let it = p_inflight.take().expect("prefill completion w/o inflight");
-                let end = c.time;
-                let dur = end - it.start;
-                for (id, take) in it.parts {
-                    let st = states[id].as_mut().unwrap();
-                    st.exec_time += dur;
-                    st.queue_time += (it.start - st.queue_since).max(0.0);
-                    st.queue_since = end;
-                    st.prefilled += take;
-                    if st.prefill_done() {
-                        waiting.retain(|&x| x != id);
-                        if st.generated == 0 {
-                            st.note_first_token(end);
-                        }
-                        if st.decode_done() {
-                            let st = states[id].take().unwrap();
-                            pkv.release(id);
-                            metrics.push(st.into_record(end));
-                            done += 1;
-                            continue;
-                        }
-                        let bytes = pkv.tokens(id) as f64 * pkv.bytes_per_token;
-                        pkv.release(id);
-                        if buffer.push(id, bytes) {
-                            transfers.push(InTransfer {
-                                id,
-                                ready_at: end + bytes / cfg.gpu.link_bw,
-                                bytes,
-                            });
-                        } else {
-                            // §6.2.2: buffer overrun → evict + recompute.
-                            metrics.recomputes += 1;
-                            let st = states[id].as_mut().unwrap();
-                            st.restart_for_recompute(end);
-                            retry_at.push((id, end + 0.25));
-                        }
-                    }
-                }
-            }
-
-            // Completed transfers → admit on the decode GPU.
-            let mut still: Vec<InTransfer> = Vec::new();
-            for tr in transfers.drain(..) {
-                if tr.ready_at <= now {
-                    let st = states[tr.id].as_ref().unwrap();
-                    let ctx = st.req.prompt_len + st.generated;
-                    if dkv.try_reserve(tr.id, ctx) {
-                        buffer.pop(tr.id);
-                        running.push(tr.id);
-                    } else {
-                        // Decode side full: KV waits in the buffer.
-                        let mut tr = tr;
-                        tr.ready_at = now + 0.05;
-                        still.push(tr);
-                    }
-                } else {
-                    still.push(tr);
-                }
-            }
-            transfers = still;
-
-            // Decode GPU completions.
-            for c in d_done {
-                let it = d_inflight.take().expect("decode completion w/o inflight");
-                let end = c.time;
-                let dur = end - it.start;
-                for id in it.ids {
-                    let st = states[id].as_mut().unwrap();
-                    st.exec_time += dur;
-                    st.note_token(end, dur);
-                    if st.decode_done() {
-                        let st = states[id].take().unwrap();
-                        dkv.release(id);
-                        running.retain(|&x| x != id);
-                        metrics.push(st.into_record(end));
-                        done += 1;
-                    }
-                }
-            }
-
-            // Schedule prefill GPU (FCFS chunked, prefill-only batches).
-            if p_inflight.is_none() {
-                p_inflight = self.schedule_prefill(
-                    &mut psim, &mut pkv, &mut states, &waiting, &mut tag,
-                );
-            }
-            // Schedule decode GPU (FCFS decode-only batches).
-            if d_inflight.is_none() {
-                d_inflight = self.schedule_decode(
-                    &mut dsim, &mut dkv, &mut states, &mut running, &mut waiting, &mut metrics,
-                    &mut tag,
-                );
-            }
-
-            if p_inflight.is_none()
-                && d_inflight.is_none()
-                && transfers.is_empty()
-                && retry_at.is_empty()
-                && feed.exhausted()
-                && done < trace.len()
-            {
-                metrics.timeouts = trace.len() - done;
-                break;
-            }
+        let pkv = cfg.kv_cache();
+        let dkv = cfg.kv_cache();
+        let buffer = TransferBuffer::new(cfg.gpu.hbm_bytes * cfg.transfer_buffer_frac);
+        DisaggEngine {
+            cfg: cfg.clone(),
+            psim,
+            dsim,
+            pkv,
+            dkv,
+            buffer,
+            metrics: RunMetrics::default(),
+            states: Vec::new(),
+            waiting: Vec::new(),
+            transfers: Vec::new(),
+            running: Vec::new(),
+            p_inflight: None,
+            d_inflight: None,
+            retry_at: Vec::new(),
+            injected: 0,
+            done: 0,
+            tag: 0,
         }
-        metrics.makespan = metrics.makespan.max(psim.now()).max(dsim.now());
-        metrics
     }
 
-    fn schedule_prefill(
-        &self,
-        sim: &mut Sim,
-        kv: &mut KvCache,
-        states: &mut [Option<ReqState>],
-        waiting: &[usize],
-        tag: &mut u64,
-    ) -> Option<PrefillIter> {
+    /// Run over a whole trace (fresh state each call).
+    pub fn run(&mut self, trace: &[Request]) -> RunMetrics {
+        let mut eng = Self::new(&self.cfg);
+        super::drive(&mut eng, trace, self.cfg.max_virtual_time)
+    }
+
+    fn slot(&mut self, id: usize) {
+        if id >= self.states.len() {
+            self.states.resize_with(id + 1, || None);
+        }
+    }
+
+    fn schedule_prefill(&mut self) -> Option<PrefillIter> {
         let wall = Instant::now();
-        let cfg = self.cfg;
-        let now = sim.now();
-        let queue: Vec<PrefillItem> = waiting
+        let cfg = &self.cfg;
+        let now = self.psim.now();
+        let queue: Vec<PrefillItem> = self
+            .waiting
             .iter()
             .map(|&id| {
-                let st = states[id].as_ref().unwrap();
+                let st = self.states[id].as_ref().unwrap();
                 PrefillItem {
                     id,
                     prompt_len: st.effective_prompt,
@@ -263,7 +128,7 @@ impl<'c> DisaggEngine<'c> {
             if take == 0 {
                 break;
             }
-            if kv.try_reserve(item.id, take) {
+            if self.pkv.try_reserve(item.id, take) {
                 parts.push((item.id, take));
                 left -= take;
             }
@@ -276,7 +141,7 @@ impl<'c> DisaggEngine<'c> {
         let mut kv_read = 0.0;
         let mut finishing = 0usize;
         for &(id, take) in &parts {
-            let st = states[id].as_ref().unwrap();
+            let st = self.states[id].as_ref().unwrap();
             pairs += chunk_attn_pairs(st.prefilled, take);
             kv_read += (st.prefilled + take) as f64;
             if st.prefilled + take >= st.effective_prompt {
@@ -284,55 +149,46 @@ impl<'c> DisaggEngine<'c> {
             }
         }
         let ops: Vec<OpWork> = cfg.model.prefill_ops(n, pairs, kv_read, finishing);
-        *tag += 1;
-        sim.submit(0, &ops, *tag);
+        self.tag += 1;
+        self.psim.submit(0, &ops, self.tag);
         let share = wall.elapsed().as_secs_f64() / parts.len() as f64;
         for &(id, _) in &parts {
-            states[id].as_mut().unwrap().sched_time += share;
+            self.states[id].as_mut().unwrap().sched_time += share;
         }
         Some(PrefillIter { parts, start: now })
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn schedule_decode(
-        &self,
-        sim: &mut Sim,
-        kv: &mut KvCache,
-        states: &mut [Option<ReqState>],
-        running: &mut Vec<usize>,
-        waiting: &mut Vec<usize>,
-        metrics: &mut RunMetrics,
-        tag: &mut u64,
-    ) -> Option<DecodeIter> {
+    fn schedule_decode(&mut self) -> Option<DecodeIter> {
         let wall = Instant::now();
-        let cfg = self.cfg;
-        let now = sim.now();
-        let mut ids: Vec<usize> = running.clone();
+        let cfg = &self.cfg;
+        let now = self.dsim.now();
+        let mut ids: Vec<usize> = self.running.clone();
         ids.truncate(cfg.max_batch);
         let mut decode_ids = Vec::with_capacity(ids.len());
         for id in ids {
             loop {
-                if kv.try_reserve(id, 1) {
+                if self.dkv.try_reserve(id, 1) {
                     decode_ids.push(id);
                     break;
                 }
-                let victim = running
+                let victim = self
+                    .running
                     .iter()
                     .copied()
                     .filter(|&v| v != id)
                     .max_by(|&a, &b| {
-                        let aa = states[a].as_ref().unwrap().req.arrival;
-                        let bb = states[b].as_ref().unwrap().req.arrival;
+                        let aa = self.states[a].as_ref().unwrap().req.arrival;
+                        let bb = self.states[b].as_ref().unwrap().req.arrival;
                         aa.partial_cmp(&bb).unwrap()
                     });
                 match victim {
                     Some(v) => {
-                        kv.release(v);
-                        running.retain(|&x| x != v);
+                        self.dkv.release(v);
+                        self.running.retain(|&x| x != v);
                         decode_ids.retain(|&x| x != v);
-                        states[v].as_mut().unwrap().restart_for_recompute(now);
-                        waiting.push(v);
-                        metrics.recomputes += 1;
+                        self.states[v].as_mut().unwrap().restart_for_recompute(now);
+                        self.waiting.push(v);
+                        self.metrics.recomputes += 1;
                     }
                     None => break,
                 }
@@ -341,15 +197,188 @@ impl<'c> DisaggEngine<'c> {
         if decode_ids.is_empty() {
             return None;
         }
-        let ctx: f64 = decode_ids.iter().map(|&id| kv.tokens(id) as f64).sum();
+        let ctx: f64 = decode_ids.iter().map(|&id| self.dkv.tokens(id) as f64).sum();
         let ops = cfg.model.decode_ops(decode_ids.len(), ctx);
-        *tag += 1;
-        sim.submit(0, &ops, *tag);
+        self.tag += 1;
+        self.dsim.submit(0, &ops, self.tag);
         let share = wall.elapsed().as_secs_f64() / decode_ids.len() as f64;
         for &id in &decode_ids {
-            states[id].as_mut().unwrap().sched_time += share;
+            self.states[id].as_mut().unwrap().sched_time += share;
         }
         Some(DecodeIter { ids: decode_ids, start: now })
+    }
+}
+
+impl Engine for DisaggEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::VllmPD
+    }
+
+    fn now(&self) -> f64 {
+        self.psim.now().max(self.dsim.now())
+    }
+
+    fn next_event(&mut self) -> Option<f64> {
+        let mut t = f64::INFINITY;
+        if self.p_inflight.is_some() {
+            if let Some(s) = self.psim.peek_next_completion() {
+                t = t.min(s);
+            }
+        }
+        if self.d_inflight.is_some() {
+            if let Some(s) = self.dsim.peek_next_completion() {
+                t = t.min(s);
+            }
+        }
+        for tr in &self.transfers {
+            t = t.min(tr.ready_at);
+        }
+        for &(_, at) in &self.retry_at {
+            t = t.min(at);
+        }
+        t.is_finite().then_some(t)
+    }
+
+    fn inject(&mut self, req: Request) {
+        self.slot(req.id);
+        self.states[req.id] = Some(ReqState::new(req));
+        self.waiting.push(req.id);
+        self.injected += 1;
+    }
+
+    fn step(&mut self, t: f64) -> StepOutcome {
+        // Advance both GPUs to the global event time.
+        let now = t.max(self.psim.now()).max(self.dsim.now());
+        let p_done = self.psim.advance_to(now + 1e-12);
+        let d_done = self.dsim.advance_to(now + 1e-12);
+        let mut finished = 0usize;
+
+        // Buffer-evicted requests rejoin the prefill queue.
+        let waiting = &mut self.waiting;
+        self.retry_at.retain(|&(id, at)| {
+            if at <= now {
+                waiting.push(id);
+                false
+            } else {
+                true
+            }
+        });
+
+        // Prefill GPU completions → stage KV into the transfer buffer.
+        for c in p_done {
+            let it = self.p_inflight.take().expect("prefill completion w/o inflight");
+            let end = c.time;
+            let dur = end - it.start;
+            for (id, take) in it.parts {
+                let st = self.states[id].as_mut().unwrap();
+                st.exec_time += dur;
+                st.queue_time += (it.start - st.queue_since).max(0.0);
+                st.queue_since = end;
+                st.prefilled += take;
+                if st.prefill_done() {
+                    self.waiting.retain(|&x| x != id);
+                    if st.generated == 0 {
+                        st.note_first_token(end);
+                    }
+                    if st.decode_done() {
+                        let st = self.states[id].take().unwrap();
+                        self.pkv.release(id);
+                        self.metrics.push(st.into_record(end));
+                        self.done += 1;
+                        finished += 1;
+                        continue;
+                    }
+                    let bytes = self.pkv.tokens(id) as f64 * self.pkv.bytes_per_token;
+                    self.pkv.release(id);
+                    if self.buffer.push(id, bytes) {
+                        self.transfers.push(InTransfer {
+                            id,
+                            ready_at: end + bytes / self.cfg.gpu.link_bw,
+                            bytes,
+                        });
+                    } else {
+                        // §6.2.2: buffer overrun → evict + recompute.
+                        self.metrics.recomputes += 1;
+                        let st = self.states[id].as_mut().unwrap();
+                        st.restart_for_recompute(end);
+                        self.retry_at.push((id, end + 0.25));
+                    }
+                }
+            }
+        }
+
+        // Completed transfers → admit on the decode GPU.
+        let mut still: Vec<InTransfer> = Vec::new();
+        for tr in self.transfers.drain(..) {
+            if tr.ready_at <= now {
+                let st = self.states[tr.id].as_ref().unwrap();
+                let ctx = st.req.prompt_len + st.generated;
+                if self.dkv.try_reserve(tr.id, ctx) {
+                    self.buffer.pop(tr.id);
+                    self.running.push(tr.id);
+                } else {
+                    // Decode side full: KV waits in the buffer.
+                    let mut tr = tr;
+                    tr.ready_at = now + 0.05;
+                    still.push(tr);
+                }
+            } else {
+                still.push(tr);
+            }
+        }
+        self.transfers = still;
+
+        // Decode GPU completions.
+        for c in d_done {
+            let it = self.d_inflight.take().expect("decode completion w/o inflight");
+            let end = c.time;
+            let dur = end - it.start;
+            for id in it.ids {
+                let st = self.states[id].as_mut().unwrap();
+                st.exec_time += dur;
+                st.note_token(end, dur);
+                if st.decode_done() {
+                    let st = self.states[id].take().unwrap();
+                    self.dkv.release(id);
+                    self.running.retain(|&x| x != id);
+                    self.metrics.push(st.into_record(end));
+                    self.done += 1;
+                    finished += 1;
+                }
+            }
+        }
+
+        // Schedule prefill GPU (FCFS chunked, prefill-only batches).
+        if self.p_inflight.is_none() {
+            self.p_inflight = self.schedule_prefill();
+        }
+        // Schedule decode GPU (FCFS decode-only batches).
+        if self.d_inflight.is_none() {
+            self.d_inflight = self.schedule_decode();
+        }
+
+        let busy = self.p_inflight.is_some()
+            || self.d_inflight.is_some()
+            || !self.transfers.is_empty()
+            || !self.retry_at.is_empty();
+        StepOutcome { completed: finished, busy }
+    }
+
+    fn pending(&self) -> usize {
+        self.injected - self.done
+    }
+
+    fn completed(&self) -> usize {
+        self.done
+    }
+
+    fn kv_usage(&self) -> f64 {
+        self.dkv.usage().max(self.pkv.usage())
+    }
+
+    fn take_metrics(&mut self) -> RunMetrics {
+        self.metrics.makespan = self.metrics.makespan.max(self.psim.now()).max(self.dsim.now());
+        std::mem::take(&mut self.metrics)
     }
 }
 

@@ -8,8 +8,8 @@
 //! memory over PCIe; when swap-in fails, the KV is dropped and recomputed —
 //! the collapse mode the paper observes under load (§6.2.1).
 
-use super::common::{chunk_attn_pairs, ArrivalFeed, ReqState};
-use super::EngineCfg;
+use super::common::{chunk_attn_pairs, ReqState};
+use super::{Engine, EngineCfg, EngineKind, StepOutcome};
 use crate::gpusim::Sim;
 use crate::kv::KvCache;
 use crate::metrics::RunMetrics;
@@ -25,120 +25,65 @@ const SWAP_LOW: f64 = 0.85;
 struct Iter {
     decode_ids: Vec<usize>,
     prefill_parts: Vec<(usize, usize)>,
-    /// PCIe bytes charged to this iteration (swaps).
     start: f64,
 }
 
-pub struct FastServeEngine<'c> {
-    cfg: &'c EngineCfg,
+pub struct FastServeEngine {
+    cfg: EngineCfg,
+    sim: Sim,
+    kv: KvCache,
+    mlfq: Mlfq,
+    metrics: RunMetrics,
+    states: Vec<Option<ReqState>>,
+    inflight: Option<Iter>,
+    injected: usize,
+    done: usize,
+    tag: u64,
 }
 
-impl<'c> FastServeEngine<'c> {
-    pub fn new(cfg: &'c EngineCfg) -> Self {
-        FastServeEngine { cfg }
-    }
-
-    pub fn run(&mut self, trace: &[Request]) -> RunMetrics {
-        let cfg = self.cfg;
+impl FastServeEngine {
+    pub fn new(cfg: &EngineCfg) -> Self {
         let mut sim = Sim::new(cfg.gpu, 1);
         sim.set_partition(0, 1.0);
-        let mut kv = cfg.kv_cache();
-        let mut mlfq = Mlfq::new(cfg.chunk_size, 6);
-        let mut metrics = RunMetrics::default();
-
-        let mut states: Vec<Option<ReqState>> = vec![None; trace.len()];
-        let mut inflight: Option<Iter> = None;
-        let mut feed = ArrivalFeed::new(trace);
-        let mut done = 0usize;
-        let mut tag = 0u64;
-
-        while done < trace.len() {
-            let t_arr = feed.peek_time();
-            let t_sim = if inflight.is_some() { sim.peek_next_completion() } else { None };
-            let t = match (t_arr, t_sim) {
-                (Some(a), Some(s)) => a.min(s),
-                (Some(a), None) => a,
-                (None, Some(s)) => s,
-                (None, None) => sim.now(),
-            };
-            if t > cfg.max_virtual_time {
-                metrics.timeouts = trace.len() - done;
-                break;
-            }
-            let completions = sim.advance_to(t + 1e-12);
-            for r in feed.pop_until(t) {
-                states[r.id] = Some(ReqState::new(*r));
-                mlfq.admit(r.id, r.prompt_len);
-            }
-            for c in completions {
-                let it = inflight.take().expect("completion without inflight");
-                debug_assert_eq!(c.tag, tag);
-                let now = c.time;
-                let dur = now - it.start;
-                for id in it.decode_ids {
-                    let st = states[id].as_mut().unwrap();
-                    st.exec_time += dur;
-                    st.note_token(now, dur);
-                    mlfq.charge(id, 1);
-                    if st.decode_done() {
-                        let st = states[id].take().unwrap();
-                        kv.release(id);
-                        mlfq.remove(id);
-                        metrics.push(st.into_record(now));
-                        done += 1;
-                    }
-                }
-                for (id, take) in it.prefill_parts {
-                    let st = states[id].as_mut().unwrap();
-                    st.exec_time += dur;
-                    st.queue_time += (it.start - st.queue_since).max(0.0);
-                    st.queue_since = now;
-                    st.prefilled += take;
-                    mlfq.charge(id, take);
-                    if st.prefill_done() && st.generated == 0 {
-                        st.note_first_token(now);
-                        if st.decode_done() {
-                            let st = states[id].take().unwrap();
-                            kv.release(id);
-                            mlfq.remove(id);
-                            metrics.push(st.into_record(now));
-                            done += 1;
-                        }
-                    }
-                }
-            }
-            if inflight.is_none() {
-                inflight =
-                    self.schedule(&mut sim, &mut kv, &mut mlfq, &mut states, &mut metrics, &mut tag);
-                if inflight.is_none() && feed.exhausted() && done < trace.len() {
-                    metrics.timeouts = trace.len() - done;
-                    break;
-                }
-            }
+        let kv = cfg.kv_cache();
+        let mlfq = Mlfq::new(cfg.chunk_size, 6);
+        FastServeEngine {
+            cfg: cfg.clone(),
+            sim,
+            kv,
+            mlfq,
+            metrics: RunMetrics::default(),
+            states: Vec::new(),
+            inflight: None,
+            injected: 0,
+            done: 0,
+            tag: 0,
         }
-        metrics
     }
 
-    fn schedule(
-        &mut self,
-        sim: &mut Sim,
-        kv: &mut KvCache,
-        mlfq: &mut Mlfq,
-        states: &mut [Option<ReqState>],
-        metrics: &mut RunMetrics,
-        tag: &mut u64,
-    ) -> Option<Iter> {
+    /// Run over a whole trace (fresh state each call).
+    pub fn run(&mut self, trace: &[Request]) -> RunMetrics {
+        let mut eng = Self::new(&self.cfg);
+        super::drive(&mut eng, trace, self.cfg.max_virtual_time)
+    }
+
+    fn slot(&mut self, id: usize) {
+        if id >= self.states.len() {
+            self.states.resize_with(id + 1, || None);
+        }
+    }
+
+    fn schedule(&mut self) -> Option<Iter> {
         let wall = Instant::now();
-        let cfg = self.cfg;
-        let now = sim.now();
+        let now = self.sim.now();
         let mut pcie_bytes = 0.0;
 
         // Head-level requests, FIFO. Prefill requests run their whole
         // remaining prompt (FastServe predates chunked prefill).
-        let picked = mlfq.pick(cfg.max_batch);
+        let picked = self.mlfq.pick(self.cfg.max_batch);
         let mut decode_ids: Vec<usize> = Vec::new();
         let mut prefill_parts: Vec<(usize, usize)> = Vec::new();
-        let mut budget = cfg.token_budget;
+        let mut budget = self.cfg.token_budget;
         let mut reserve_failed = false;
 
         let in_batch = |decode_ids: &[usize], prefill_parts: &[(usize, usize)], id: usize| {
@@ -146,48 +91,52 @@ impl<'c> FastServeEngine<'c> {
         };
         for pick_idx in 0..picked.len() {
             let id = picked[pick_idx];
-            let st = states[id].as_ref().unwrap();
+            let st = self.states[id].as_ref().unwrap();
             let needs_prefill = !st.prefill_done();
             let need_tokens = if needs_prefill { st.effective_prompt - st.prefilled } else { 1 };
             // FastServe does not chunk: an over-budget prompt may still run,
             // but at most one per iteration (joining the current decodes).
             if needs_prefill
                 && need_tokens > budget
-                && prefill_parts.iter().any(|&(p, _)| !states[p].as_ref().unwrap().prefill_done())
+                && prefill_parts
+                    .iter()
+                    .any(|&(p, _)| !self.states[p].as_ref().unwrap().prefill_done())
             {
                 continue;
             }
             // Bring swapped KV back before running.
-            if kv.is_swapped(id) {
-                match kv.swap_in(id) {
+            if self.kv.is_swapped(id) {
+                match self.kv.swap_in(id) {
                     Some(bytes) => {
                         pcie_bytes += bytes;
-                        metrics.swaps += 1;
+                        self.metrics.swaps += 1;
                     }
                     None => {
                         // No room: drop and recompute later.
-                        kv.evict(id);
-                        let st = states[id].as_mut().unwrap();
+                        self.kv.evict(id);
+                        let st = self.states[id].as_mut().unwrap();
                         st.restart_for_recompute(now);
-                        metrics.recomputes += 1;
+                        self.metrics.recomputes += 1;
                         continue;
                     }
                 }
             }
             // On OOM, swap out strictly lower-priority residents (later in
             // the MLFQ pick order / unpicked) to make room.
-            let mut reserved = kv.try_reserve(id, need_tokens);
+            let mut reserved = self.kv.try_reserve(id, need_tokens);
             while !reserved {
                 let victim = picked[pick_idx + 1..]
                     .iter()
                     .copied()
                     .rev() // deepest-priority first
-                    .find(|&v| kv.tokens(v) > 0 && !in_batch(&decode_ids, &prefill_parts, v));
+                    .find(|&v| {
+                        self.kv.tokens(v) > 0 && !in_batch(&decode_ids, &prefill_parts, v)
+                    });
                 match victim {
                     Some(v) => {
-                        pcie_bytes += kv.swap_out(v);
-                        metrics.swaps += 1;
-                        reserved = kv.try_reserve(id, need_tokens);
+                        pcie_bytes += self.kv.swap_out(v);
+                        self.metrics.swaps += 1;
+                        reserved = self.kv.try_reserve(id, need_tokens);
                     }
                     None => break,
                 }
@@ -207,23 +156,23 @@ impl<'c> FastServeEngine<'c> {
         // Proactive swap-out: push deep-level, non-batch requests to host
         // memory when usage crosses the high watermark or an admission
         // failed for lack of blocks.
-        if kv.usage() > SWAP_HIGH || reserve_failed {
-            let mut victims: Vec<usize> = (0..states.len())
+        if self.kv.usage() > SWAP_HIGH || reserve_failed {
+            let mut victims: Vec<usize> = (0..self.states.len())
                 .filter(|&id| {
-                    states[id].is_some()
-                        && kv.tokens(id) > 0
+                    self.states[id].is_some()
+                        && self.kv.tokens(id) > 0
                         && !decode_ids.contains(&id)
                         && !prefill_parts.iter().any(|&(p, _)| p == id)
                 })
                 .collect();
             // Deepest MLFQ level (lowest priority) first.
-            victims.sort_by_key(|&id| std::cmp::Reverse(mlfq.level_of(id).unwrap_or(0)));
+            victims.sort_by_key(|&id| std::cmp::Reverse(self.mlfq.level_of(id).unwrap_or(0)));
             for id in victims {
-                if kv.usage() <= SWAP_LOW {
+                if self.kv.usage() <= SWAP_LOW {
                     break;
                 }
-                pcie_bytes += kv.swap_out(id);
-                metrics.swaps += 1;
+                pcie_bytes += self.kv.swap_out(id);
+                self.metrics.swaps += 1;
             }
         }
 
@@ -237,8 +186,8 @@ impl<'c> FastServeEngine<'c> {
             ops.push(OpWork { class: OpClass::Comm, flops: 0.0, bytes: pcie_bytes });
         }
         if !decode_ids.is_empty() {
-            let ctx: f64 = decode_ids.iter().map(|&id| kv.tokens(id) as f64).sum();
-            ops.extend(cfg.model.decode_ops(decode_ids.len(), ctx));
+            let ctx: f64 = decode_ids.iter().map(|&id| self.kv.tokens(id) as f64).sum();
+            ops.extend(self.cfg.model.decode_ops(decode_ids.len(), ctx));
         }
         if !prefill_parts.is_empty() {
             let n: usize = prefill_parts.iter().map(|&(_, t)| t).sum();
@@ -246,30 +195,119 @@ impl<'c> FastServeEngine<'c> {
             let mut kv_read = 0.0;
             let mut finishing = 0usize;
             for &(id, take) in &prefill_parts {
-                let st = states[id].as_ref().unwrap();
+                let st = self.states[id].as_ref().unwrap();
                 pairs += chunk_attn_pairs(st.prefilled, take);
                 kv_read += (st.prefilled + take) as f64;
                 if st.prefilled + take >= st.effective_prompt {
                     finishing += 1;
                 }
             }
-            ops.extend(cfg.model.prefill_ops(n, pairs, kv_read, finishing));
+            ops.extend(self.cfg.model.prefill_ops(n, pairs, kv_read, finishing));
         }
 
-        *tag += 1;
-        sim.submit(0, &ops, *tag);
+        self.tag += 1;
+        self.sim.submit(0, &ops, self.tag);
 
         let sched = wall.elapsed().as_secs_f64();
         let parts = decode_ids.len() + prefill_parts.len();
         let share = sched / parts.max(1) as f64;
         for &id in &decode_ids {
-            states[id].as_mut().unwrap().sched_time += share;
+            self.states[id].as_mut().unwrap().sched_time += share;
         }
         for &(id, _) in &prefill_parts {
-            states[id].as_mut().unwrap().sched_time += share;
+            self.states[id].as_mut().unwrap().sched_time += share;
         }
 
         Some(Iter { decode_ids, prefill_parts, start: now })
+    }
+}
+
+impl Engine for FastServeEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::FastServe
+    }
+
+    fn now(&self) -> f64 {
+        self.sim.now()
+    }
+
+    fn next_event(&mut self) -> Option<f64> {
+        if self.inflight.is_some() {
+            self.sim.peek_next_completion()
+        } else {
+            None
+        }
+    }
+
+    fn inject(&mut self, req: Request) {
+        self.slot(req.id);
+        self.states[req.id] = Some(ReqState::new(req));
+        self.mlfq.admit(req.id, req.prompt_len);
+        self.injected += 1;
+    }
+
+    fn step(&mut self, t: f64) -> StepOutcome {
+        let completions = self.sim.advance_to(t + 1e-12);
+        let mut finished = 0usize;
+        for c in completions {
+            let it = self.inflight.take().expect("completion without inflight");
+            debug_assert_eq!(c.tag, self.tag);
+            let now = c.time;
+            let dur = now - it.start;
+            for id in it.decode_ids {
+                let st = self.states[id].as_mut().unwrap();
+                st.exec_time += dur;
+                st.note_token(now, dur);
+                self.mlfq.charge(id, 1);
+                if st.decode_done() {
+                    let st = self.states[id].take().unwrap();
+                    self.kv.release(id);
+                    self.mlfq.remove(id);
+                    self.metrics.push(st.into_record(now));
+                    self.done += 1;
+                    finished += 1;
+                }
+            }
+            for (id, take) in it.prefill_parts {
+                let st = self.states[id].as_mut().unwrap();
+                st.exec_time += dur;
+                st.queue_time += (it.start - st.queue_since).max(0.0);
+                st.queue_since = now;
+                st.prefilled += take;
+                self.mlfq.charge(id, take);
+                if st.prefill_done() && st.generated == 0 {
+                    st.note_first_token(now);
+                    if st.decode_done() {
+                        let st = self.states[id].take().unwrap();
+                        self.kv.release(id);
+                        self.mlfq.remove(id);
+                        self.metrics.push(st.into_record(now));
+                        self.done += 1;
+                        finished += 1;
+                    }
+                }
+            }
+        }
+        if self.inflight.is_none() {
+            self.inflight = self.schedule();
+        }
+        StepOutcome { completed: finished, busy: self.inflight.is_some() }
+    }
+
+    fn pending(&self) -> usize {
+        self.injected - self.done
+    }
+
+    fn completed(&self) -> usize {
+        self.done
+    }
+
+    fn kv_usage(&self) -> f64 {
+        self.kv.usage()
+    }
+
+    fn take_metrics(&mut self) -> RunMetrics {
+        std::mem::take(&mut self.metrics)
     }
 }
 

@@ -7,8 +7,8 @@
 //! tokens experience the full mixed-iteration latency — the fine-grained
 //! interference the paper measures in Fig. 4.
 
-use super::common::{chunk_attn_pairs, ArrivalFeed, ReqState};
-use super::EngineCfg;
+use super::common::{chunk_attn_pairs, ReqState};
+use super::{Engine, EngineCfg, EngineKind, StepOutcome};
 use crate::gpusim::Sim;
 use crate::kv::KvCache;
 use crate::metrics::RunMetrics;
@@ -25,171 +25,105 @@ struct Iter {
     start: f64,
 }
 
-pub struct MonolithicEngine<'c> {
-    cfg: &'c EngineCfg,
+pub struct MonolithicEngine {
+    cfg: EngineCfg,
     /// SGLang mode: prefix cache shrinking effective prefill lengths.
     radix: Option<RadixCache>,
+    sim: Sim,
+    kv: KvCache,
+    metrics: RunMetrics,
+    states: Vec<Option<ReqState>>,
+    waiting: Vec<usize>,
+    running: Vec<usize>,
+    inflight: Option<Iter>,
+    injected: usize,
+    done: usize,
+    tag: u64,
 }
 
-impl<'c> MonolithicEngine<'c> {
-    pub fn vllm(cfg: &'c EngineCfg) -> Self {
-        MonolithicEngine { cfg, radix: None }
+impl MonolithicEngine {
+    pub fn vllm(cfg: &EngineCfg) -> Self {
+        Self::build(cfg, None)
     }
 
-    pub fn sglang(cfg: &'c EngineCfg) -> Self {
+    pub fn sglang(cfg: &EngineCfg) -> Self {
         let (p, f) = cfg.radix;
-        MonolithicEngine { cfg, radix: Some(RadixCache::new(p, f, cfg.seed ^ 0x5617)) }
+        Self::build(cfg, Some(RadixCache::new(p, f, cfg.seed ^ 0x5617)))
     }
 
-    pub fn run(&mut self, trace: &[Request]) -> RunMetrics {
-        let cfg = self.cfg;
+    fn build(cfg: &EngineCfg, radix: Option<RadixCache>) -> Self {
         let mut sim = Sim::new(cfg.gpu, 1);
         sim.set_partition(0, 1.0);
-        let mut kv = cfg.kv_cache();
-        let mut metrics = RunMetrics::default();
-
-        let mut states: Vec<Option<ReqState>> = vec![None; trace.len()];
-        let mut waiting: Vec<usize> = Vec::new();
-        let mut running: Vec<usize> = Vec::new();
-        let mut inflight: Option<Iter> = None;
-        let mut feed = ArrivalFeed::new(trace);
-        let mut done = 0usize;
-        let mut tag = 0u64;
-
-        while done < trace.len() {
-            // Next event: arrival or iteration completion.
-            let t_arr = feed.peek_time();
-            let t_sim = if inflight.is_some() { sim.peek_next_completion() } else { None };
-            let t = match (t_arr, t_sim) {
-                (Some(a), Some(s)) => a.min(s),
-                (Some(a), None) => a,
-                (None, Some(s)) => s,
-                (None, None) => {
-                    // No arrivals, nothing in flight — but requests remain:
-                    // schedule must make progress below from current queues.
-                    sim.now()
-                }
-            };
-            if t > cfg.max_virtual_time {
-                metrics.timeouts = trace.len() - done;
-                break;
-            }
-            let completions = sim.advance_to(t + 1e-12);
-            for r in feed.pop_until(t) {
-                let mut st = ReqState::new(*r);
-                if let Some(radix) = &mut self.radix {
-                    st.effective_prompt = radix.effective_prefill(r.prompt_len);
-                }
-                states[r.id] = Some(st);
-                waiting.push(r.id);
-            }
-            for c in completions {
-                let it = inflight.take().expect("completion without inflight iter");
-                debug_assert_eq!(c.tag, tag);
-                let now = c.time;
-                let dur = now - it.start;
-                // Decode tokens.
-                for id in it.decode_ids {
-                    let st = states[id].as_mut().unwrap();
-                    st.exec_time += dur;
-                    st.note_token(now, dur);
-                    if st.decode_done() {
-                        let st = states[id].take().unwrap();
-                        kv.release(id);
-                        running.retain(|&x| x != id);
-                        metrics.push(st.into_record(now));
-                        done += 1;
-                    }
-                }
-                // Prefill chunks.
-                for (id, take) in it.prefill_parts {
-                    let st = states[id].as_mut().unwrap();
-                    st.exec_time += dur;
-                    st.queue_time += (it.start - st.queue_since).max(0.0);
-                    st.queue_since = now;
-                    st.prefilled += take;
-                    if st.prefill_done() {
-                        waiting.retain(|&x| x != id);
-                        if st.generated > 0 {
-                            // Recompute path: tokens already emitted; resume decode.
-                            running.push(id);
-                        } else {
-                            st.note_first_token(now);
-                            if st.decode_done() {
-                                let st = states[id].take().unwrap();
-                                kv.release(id);
-                                metrics.push(st.into_record(now));
-                                done += 1;
-                            } else {
-                                running.push(id);
-                            }
-                        }
-                    }
-                }
-            }
-            if inflight.is_none() {
-                inflight = self.schedule(
-                    &mut sim, &mut kv, &mut states, &mut waiting, &mut running, &mut metrics,
-                    &mut tag,
-                );
-                if inflight.is_none() && feed.exhausted() && done < trace.len() {
-                    // Nothing schedulable and nothing will arrive: requests
-                    // whose KV can never fit. Mark the rest as timeouts.
-                    metrics.timeouts = trace.len() - done;
-                    break;
-                }
-            }
+        let kv = cfg.kv_cache();
+        MonolithicEngine {
+            cfg: cfg.clone(),
+            radix,
+            sim,
+            kv,
+            metrics: RunMetrics::default(),
+            states: Vec::new(),
+            waiting: Vec::new(),
+            running: Vec::new(),
+            inflight: None,
+            injected: 0,
+            done: 0,
+            tag: 0,
         }
-        metrics
+    }
+
+    /// Run over a whole trace (fresh state each call).
+    pub fn run(&mut self, trace: &[Request]) -> RunMetrics {
+        let mut eng = if self.radix.is_some() {
+            Self::sglang(&self.cfg)
+        } else {
+            Self::vllm(&self.cfg)
+        };
+        super::drive(&mut eng, trace, self.cfg.max_virtual_time)
+    }
+
+    fn slot(&mut self, id: usize) {
+        if id >= self.states.len() {
+            self.states.resize_with(id + 1, || None);
+        }
     }
 
     /// Build and submit the next mixed iteration. Returns its manifest.
-    #[allow(clippy::too_many_arguments)]
-    fn schedule(
-        &mut self,
-        sim: &mut Sim,
-        kv: &mut KvCache,
-        states: &mut [Option<ReqState>],
-        waiting: &mut Vec<usize>,
-        running: &mut Vec<usize>,
-        metrics: &mut RunMetrics,
-        tag: &mut u64,
-    ) -> Option<Iter> {
+    fn schedule(&mut self) -> Option<Iter> {
         let wall = Instant::now();
-        let cfg = self.cfg;
-        let now = sim.now();
+        let now = self.sim.now();
 
         // Continuous batching: every running decode joins (capped), each
         // reserving one more KV token. On OOM, vLLM preempts the most
         // recently arrived running request (recompute-on-resume).
         let mut decode_ids: Vec<usize> = Vec::new();
-        let mut candidates = running.clone();
-        candidates.truncate(cfg.max_batch);
+        let mut candidates = self.running.clone();
+        candidates.truncate(self.cfg.max_batch);
         for id in candidates {
             loop {
-                if kv.try_reserve(id, 1) {
+                if self.kv.try_reserve(id, 1) {
                     decode_ids.push(id);
                     break;
                 }
                 // Preempt the newest running request that is not `id`.
-                let victim = running
+                let victim = self
+                    .running
                     .iter()
                     .copied()
                     .filter(|&v| v != id)
                     .max_by(|&a, &b| {
-                        let aa = states[a].as_ref().unwrap().req.arrival;
-                        let bb = states[b].as_ref().unwrap().req.arrival;
+                        let aa = self.states[a].as_ref().unwrap().req.arrival;
+                        let bb = self.states[b].as_ref().unwrap().req.arrival;
                         aa.partial_cmp(&bb).unwrap()
                     });
                 match victim {
                     Some(v) => {
-                        kv.release(v);
-                        running.retain(|&x| x != v);
+                        self.kv.release(v);
+                        self.running.retain(|&x| x != v);
                         decode_ids.retain(|&x| x != v);
-                        let st = states[v].as_mut().unwrap();
+                        let st = self.states[v].as_mut().unwrap();
                         st.restart_for_recompute(now);
-                        waiting.push(v);
-                        metrics.recomputes += 1;
+                        self.waiting.push(v);
+                        self.metrics.recomputes += 1;
                     }
                     None => break, // lone request can't grow: stall this tick
                 }
@@ -197,10 +131,11 @@ impl<'c> MonolithicEngine<'c> {
         }
 
         // FCFS prefill chunks fill the remaining token budget.
-        let queue: Vec<PrefillItem> = waiting
+        let queue: Vec<PrefillItem> = self
+            .waiting
             .iter()
             .map(|&id| {
-                let st = states[id].as_ref().unwrap();
+                let st = self.states[id].as_ref().unwrap();
                 PrefillItem {
                     id,
                     prompt_len: st.effective_prompt,
@@ -209,12 +144,12 @@ impl<'c> MonolithicEngine<'c> {
                 }
             })
             .collect();
-        let mixed = mixed_batch(&decode_ids, &queue, cfg.token_budget, cfg.chunk_size);
+        let mixed = mixed_batch(&decode_ids, &queue, self.cfg.token_budget, self.cfg.chunk_size);
 
         let mut prefill_parts: Vec<(usize, usize)> = Vec::new();
         for (qidx, take) in mixed.prefill_parts {
             let id = queue[qidx].id;
-            if kv.try_reserve(id, take) {
+            if self.kv.try_reserve(id, take) {
                 prefill_parts.push((id, take));
             }
             // On reserve failure the chunk is dropped this iteration; decode
@@ -229,8 +164,8 @@ impl<'c> MonolithicEngine<'c> {
         // that is exactly the interference mechanism).
         let mut ops: Vec<OpWork> = Vec::new();
         if !decode_ids.is_empty() {
-            let ctx: f64 = decode_ids.iter().map(|&id| kv.tokens(id) as f64).sum();
-            ops.extend(cfg.model.decode_ops(decode_ids.len(), ctx));
+            let ctx: f64 = decode_ids.iter().map(|&id| self.kv.tokens(id) as f64).sum();
+            ops.extend(self.cfg.model.decode_ops(decode_ids.len(), ctx));
         }
         if !prefill_parts.is_empty() {
             let n: usize = prefill_parts.iter().map(|&(_, t)| t).sum();
@@ -238,18 +173,18 @@ impl<'c> MonolithicEngine<'c> {
             let mut kv_read = 0.0;
             let mut finishing = 0usize;
             for &(id, take) in &prefill_parts {
-                let st = states[id].as_ref().unwrap();
+                let st = self.states[id].as_ref().unwrap();
                 pairs += chunk_attn_pairs(st.prefilled, take);
                 kv_read += (st.prefilled + take) as f64;
                 if st.prefilled + take >= st.effective_prompt {
                     finishing += 1;
                 }
             }
-            ops.extend(cfg.model.prefill_ops(n, pairs, kv_read, finishing));
+            ops.extend(self.cfg.model.prefill_ops(n, pairs, kv_read, finishing));
         }
 
-        *tag += 1;
-        sim.submit(0, &ops, *tag);
+        self.tag += 1;
+        self.sim.submit(0, &ops, self.tag);
 
         // Attribute real scheduler wall time across participants (Fig. 12).
         let sched = wall.elapsed().as_secs_f64();
@@ -257,14 +192,118 @@ impl<'c> MonolithicEngine<'c> {
         if parts > 0 {
             let share = sched / parts as f64;
             for &id in &decode_ids {
-                states[id].as_mut().unwrap().sched_time += share;
+                self.states[id].as_mut().unwrap().sched_time += share;
             }
             for &(id, _) in &prefill_parts {
-                states[id].as_mut().unwrap().sched_time += share;
+                self.states[id].as_mut().unwrap().sched_time += share;
             }
         }
 
         Some(Iter { decode_ids, prefill_parts, start: now })
+    }
+}
+
+impl Engine for MonolithicEngine {
+    fn kind(&self) -> EngineKind {
+        if self.radix.is_some() {
+            EngineKind::Sglang
+        } else {
+            EngineKind::Vllm
+        }
+    }
+
+    fn now(&self) -> f64 {
+        self.sim.now()
+    }
+
+    fn next_event(&mut self) -> Option<f64> {
+        if self.inflight.is_some() {
+            self.sim.peek_next_completion()
+        } else {
+            None
+        }
+    }
+
+    fn inject(&mut self, req: Request) {
+        let mut st = ReqState::new(req);
+        if let Some(radix) = &mut self.radix {
+            st.effective_prompt = radix.effective_prefill(req.prompt_len);
+        }
+        self.slot(req.id);
+        self.states[req.id] = Some(st);
+        self.waiting.push(req.id);
+        self.injected += 1;
+    }
+
+    fn step(&mut self, t: f64) -> StepOutcome {
+        let completions = self.sim.advance_to(t + 1e-12);
+        let mut finished = 0usize;
+        for c in completions {
+            let it = self.inflight.take().expect("completion without inflight iter");
+            debug_assert_eq!(c.tag, self.tag);
+            let now = c.time;
+            let dur = now - it.start;
+            // Decode tokens.
+            for id in it.decode_ids {
+                let st = self.states[id].as_mut().unwrap();
+                st.exec_time += dur;
+                st.note_token(now, dur);
+                if st.decode_done() {
+                    let st = self.states[id].take().unwrap();
+                    self.kv.release(id);
+                    self.running.retain(|&x| x != id);
+                    self.metrics.push(st.into_record(now));
+                    self.done += 1;
+                    finished += 1;
+                }
+            }
+            // Prefill chunks.
+            for (id, take) in it.prefill_parts {
+                let st = self.states[id].as_mut().unwrap();
+                st.exec_time += dur;
+                st.queue_time += (it.start - st.queue_since).max(0.0);
+                st.queue_since = now;
+                st.prefilled += take;
+                if st.prefill_done() {
+                    self.waiting.retain(|&x| x != id);
+                    if st.generated > 0 {
+                        // Recompute path: tokens already emitted; resume decode.
+                        self.running.push(id);
+                    } else {
+                        st.note_first_token(now);
+                        if st.decode_done() {
+                            let st = self.states[id].take().unwrap();
+                            self.kv.release(id);
+                            self.metrics.push(st.into_record(now));
+                            self.done += 1;
+                            finished += 1;
+                        } else {
+                            self.running.push(id);
+                        }
+                    }
+                }
+            }
+        }
+        if self.inflight.is_none() {
+            self.inflight = self.schedule();
+        }
+        StepOutcome { completed: finished, busy: self.inflight.is_some() }
+    }
+
+    fn pending(&self) -> usize {
+        self.injected - self.done
+    }
+
+    fn completed(&self) -> usize {
+        self.done
+    }
+
+    fn kv_usage(&self) -> f64 {
+        self.kv.usage()
+    }
+
+    fn take_metrics(&mut self) -> RunMetrics {
+        std::mem::take(&mut self.metrics)
     }
 }
 

@@ -12,14 +12,14 @@
 //! back to FCFS prefill ("PF-DF"); `dynamic_sm = false` pins a static 50/50
 //! split ("Wo-SC").
 
-use super::common::{chunk_attn_pairs, ArrivalFeed, ReqState};
-use super::EngineCfg;
+use super::common::{chunk_attn_pairs, ReqState};
+use super::{Engine, EngineCfg, EngineKind, StepOutcome};
 use crate::costmodel::{calibrate, CostModel};
 use crate::gpusim::Sim;
 use crate::kv::KvCache;
 use crate::metrics::RunMetrics;
 use crate::model::OpWork;
-use crate::partition::{BatchState, PartitionController};
+use crate::partition::{BatchState, Mode, PartitionController};
 use crate::sched::{fcfs_batch, spf_batch, PrefillItem};
 use crate::workload::Request;
 use std::time::Instant;
@@ -49,179 +49,108 @@ struct Iter {
     start: f64,
 }
 
-pub struct NexusEngine<'c> {
-    cfg: &'c EngineCfg,
+pub struct NexusEngine {
+    cfg: EngineCfg,
     pub flags: NexusFlags,
+    cost: CostModel,
+    sim: Sim,
+    controller: PartitionController,
+    kv: KvCache,
+    metrics: RunMetrics,
+    states: Vec<Option<ReqState>>,
+    waiting: Vec<usize>,
+    running: Vec<usize>,
+    inflight: [Option<Iter>; 2],
+    injected: usize,
+    done: usize,
+    tag: u64,
+    // Partition-trajectory accounting (time-weighted). `start_t` is the
+    // first step's time — NaN until then — so replicas spawned mid-run by
+    // the cluster autoscaler don't accrue pre-birth idle time.
+    rp_time: f64,
+    decode_mode_time: f64,
+    kv_time: f64,
+    start_t: f64,
+    last_t: f64,
 }
 
-impl<'c> NexusEngine<'c> {
-    pub fn new(cfg: &'c EngineCfg, flags: NexusFlags) -> Self {
-        NexusEngine { cfg, flags }
-    }
-
-    pub fn run(&mut self, trace: &[Request]) -> RunMetrics {
-        let cfg = self.cfg;
-        let cost: CostModel = calibrate(&cfg.gpu);
+impl NexusEngine {
+    pub fn new(cfg: &EngineCfg, flags: NexusFlags) -> Self {
+        let cost = calibrate(&cfg.gpu);
         let mut sim = Sim::new(cfg.gpu, 2);
         sim.set_partition(PREFILL_STREAM, 0.5);
         sim.set_partition(DECODE_STREAM, 0.5);
-        let mut controller = PartitionController::new(cfg.partition);
-        let mut kv = cfg.kv_cache();
-        let mut metrics = RunMetrics::default();
-
-        let mut states: Vec<Option<ReqState>> = vec![None; trace.len()];
-        let mut waiting: Vec<usize> = Vec::new();
-        let mut running: Vec<usize> = Vec::new();
-        let mut inflight: [Option<Iter>; 2] = [None, None];
-        let mut feed = ArrivalFeed::new(trace);
-        let mut done = 0usize;
-        let mut tag = 0u64;
-        // Partition-trajectory accounting (time-weighted).
-        let mut rp_time = 0.0f64;
-        let mut decode_mode_time = 0.0f64;
-        let mut kv_time = 0.0f64;
-        let mut last_t = 0.0f64;
-
-        while done < trace.len() {
-            let t_arr = feed.peek_time();
-            let t_sim = sim.peek_next_completion();
-            let t = match (t_arr, t_sim) {
-                (Some(a), Some(s)) => a.min(s),
-                (Some(a), None) => a,
-                (None, Some(s)) => s,
-                (None, None) => sim.now(),
-            };
-            if t > cfg.max_virtual_time {
-                metrics.timeouts = trace.len() - done;
-                break;
-            }
-            let dt = (t - last_t).max(0.0);
-            rp_time += controller.r_p * dt;
-            kv_time += kv.usage() * dt;
-            metrics.peak_kv_usage = metrics.peak_kv_usage.max(kv.usage());
-            if controller.mode_for(kv.usage()) == crate::partition::Mode::DecodePrioritized {
-                decode_mode_time += dt;
-            }
-            last_t = t;
-            let completions = sim.advance_to(t + 1e-12);
-            for r in feed.pop_until(t) {
-                states[r.id] = Some(ReqState::new(*r));
-                waiting.push(r.id);
-            }
-            for c in completions {
-                let it = inflight[c.stream].take().expect("completion without inflight");
-                let now = c.time;
-                let dur = now - it.start;
-                for id in it.decode_ids {
-                    let st = states[id].as_mut().unwrap();
-                    st.exec_time += dur;
-                    st.note_token(now, dur);
-                    if st.decode_done() {
-                        let st = states[id].take().unwrap();
-                        kv.release(id);
-                        running.retain(|&x| x != id);
-                        metrics.push(st.into_record(now));
-                        done += 1;
-                    }
-                }
-                for (id, take) in it.prefill_parts {
-                    let st = states[id].as_mut().unwrap();
-                    st.exec_time += dur;
-                    st.queue_time += (it.start - st.queue_since).max(0.0);
-                    st.queue_since = now;
-                    st.prefilled += take;
-                    if st.prefill_done() {
-                        waiting.retain(|&x| x != id);
-                        if st.generated > 0 {
-                            running.push(id); // resumed after recompute
-                        } else {
-                            st.note_first_token(now);
-                            if st.decode_done() {
-                                let st = states[id].take().unwrap();
-                                kv.release(id);
-                                metrics.push(st.into_record(now));
-                                done += 1;
-                            } else {
-                                running.push(id);
-                            }
-                        }
-                    }
-                }
-            }
-
-            // Schedule idle streams. Decode first: it is latency-critical
-            // and its batch state feeds the partition decision.
-            for stream in [DECODE_STREAM, PREFILL_STREAM] {
-                if inflight[stream].is_none() {
-                    inflight[stream] = self.schedule_stream(
-                        stream, &mut sim, &cost, &mut controller, &mut kv, &mut states,
-                        &mut waiting, &mut running, &mut metrics, &mut tag,
-                    );
-                }
-            }
-
-            if inflight.iter().all(Option::is_none) && feed.exhausted() && done < trace.len() {
-                metrics.timeouts = trace.len() - done;
-                break;
-            }
+        let controller = PartitionController::new(cfg.partition);
+        let kv = cfg.kv_cache();
+        NexusEngine {
+            cfg: cfg.clone(),
+            flags,
+            cost,
+            sim,
+            controller,
+            kv,
+            metrics: RunMetrics::default(),
+            states: Vec::new(),
+            waiting: Vec::new(),
+            running: Vec::new(),
+            inflight: [None, None],
+            injected: 0,
+            done: 0,
+            tag: 0,
+            rp_time: 0.0,
+            decode_mode_time: 0.0,
+            kv_time: 0.0,
+            start_t: f64::NAN,
+            last_t: 0.0,
         }
-        metrics.repartitions = controller.applied_count;
-        metrics.suppressed_repartitions = controller.suppressed_count;
-        if last_t > 0.0 {
-            metrics.mean_rp = rp_time / last_t;
-            metrics.decode_mode_frac = decode_mode_time / last_t;
-            metrics.mean_kv_usage = kv_time / last_t;
+    }
+
+    /// Run over a whole trace (fresh state each call).
+    pub fn run(&mut self, trace: &[Request]) -> RunMetrics {
+        let mut eng = Self::new(&self.cfg, self.flags);
+        super::drive(&mut eng, trace, self.cfg.max_virtual_time)
+    }
+
+    fn slot(&mut self, id: usize) {
+        if id >= self.states.len() {
+            self.states.resize_with(id + 1, || None);
         }
-        metrics
     }
 
     /// Build, partition, and submit the next batch for one stream.
-    #[allow(clippy::too_many_arguments)]
-    fn schedule_stream(
-        &mut self,
-        stream: usize,
-        sim: &mut Sim,
-        cost: &CostModel,
-        controller: &mut PartitionController,
-        kv: &mut KvCache,
-        states: &mut [Option<ReqState>],
-        waiting: &mut Vec<usize>,
-        running: &mut Vec<usize>,
-        metrics: &mut RunMetrics,
-        tag: &mut u64,
-    ) -> Option<Iter> {
+    fn schedule_stream(&mut self, stream: usize) -> Option<Iter> {
         let wall = Instant::now();
-        let cfg = self.cfg;
-        let now = sim.now();
+        let now = self.sim.now();
 
         let (decode_ids, prefill_parts, ops) = if stream == DECODE_STREAM {
             // FCFS decode: every running request contributes one token.
-            let mut ids: Vec<usize> = running.clone();
-            ids.truncate(cfg.max_batch);
+            let mut ids: Vec<usize> = self.running.clone();
+            ids.truncate(self.cfg.max_batch);
             let mut decode_ids = Vec::with_capacity(ids.len());
             for id in ids {
                 loop {
-                    if kv.try_reserve(id, 1) {
+                    if self.kv.try_reserve(id, 1) {
                         decode_ids.push(id);
                         break;
                     }
-                    let victim = running
+                    let victim = self
+                        .running
                         .iter()
                         .copied()
                         .filter(|&v| v != id)
                         .max_by(|&a, &b| {
-                            let aa = states[a].as_ref().unwrap().req.arrival;
-                            let bb = states[b].as_ref().unwrap().req.arrival;
+                            let aa = self.states[a].as_ref().unwrap().req.arrival;
+                            let bb = self.states[b].as_ref().unwrap().req.arrival;
                             aa.partial_cmp(&bb).unwrap()
                         });
                     match victim {
                         Some(v) => {
-                            kv.release(v);
-                            running.retain(|&x| x != v);
+                            self.kv.release(v);
+                            self.running.retain(|&x| x != v);
                             decode_ids.retain(|&x| x != v);
-                            states[v].as_mut().unwrap().restart_for_recompute(now);
-                            waiting.push(v);
-                            metrics.recomputes += 1;
+                            self.states[v].as_mut().unwrap().restart_for_recompute(now);
+                            self.waiting.push(v);
+                            self.metrics.recomputes += 1;
                         }
                         None => break,
                     }
@@ -230,16 +159,17 @@ impl<'c> NexusEngine<'c> {
             if decode_ids.is_empty() {
                 return None;
             }
-            let ctx: f64 = decode_ids.iter().map(|&id| kv.tokens(id) as f64).sum();
-            let ops = cfg.model.decode_ops(decode_ids.len(), ctx);
+            let ctx: f64 = decode_ids.iter().map(|&id| self.kv.tokens(id) as f64).sum();
+            let ops = self.cfg.model.decode_ops(decode_ids.len(), ctx);
             (decode_ids, Vec::new(), ops)
         } else {
             // Prefill: SPF (Algorithm 2) or FCFS ablation, over the token
             // budget, chunking the head request if nothing fits whole.
-            let queue: Vec<PrefillItem> = waiting
+            let queue: Vec<PrefillItem> = self
+                .waiting
                 .iter()
                 .map(|&id| {
-                    let st = states[id].as_ref().unwrap();
+                    let st = self.states[id].as_ref().unwrap();
                     PrefillItem {
                         id,
                         prompt_len: st.effective_prompt,
@@ -252,19 +182,19 @@ impl<'c> NexusEngine<'c> {
                 return None;
             }
             let picked = if self.flags.use_spf {
-                spf_batch(&queue, now, cfg.token_budget, cfg.gamma)
+                spf_batch(&queue, now, self.cfg.token_budget, self.cfg.gamma)
             } else {
-                fcfs_batch(&queue, cfg.token_budget, true)
+                fcfs_batch(&queue, self.cfg.token_budget, true)
             };
             let mut prefill_parts: Vec<(usize, usize)> = Vec::new();
-            let mut left = cfg.token_budget;
+            let mut left = self.cfg.token_budget;
             for qidx in picked {
                 let item = &queue[qidx];
-                let take = item.remaining().min(cfg.chunk_size).min(left);
+                let take = item.remaining().min(self.cfg.chunk_size).min(left);
                 if take == 0 {
                     break;
                 }
-                if kv.try_reserve(item.id, take) {
+                if self.kv.try_reserve(item.id, take) {
                     prefill_parts.push((item.id, take));
                     left -= take;
                 }
@@ -277,14 +207,14 @@ impl<'c> NexusEngine<'c> {
             let mut kv_read = 0.0;
             let mut finishing = 0usize;
             for &(id, take) in &prefill_parts {
-                let st = states[id].as_ref().unwrap();
+                let st = self.states[id].as_ref().unwrap();
                 pairs += chunk_attn_pairs(st.prefilled, take);
                 kv_read += (st.prefilled + take) as f64;
                 if st.prefilled + take >= st.effective_prompt {
                     finishing += 1;
                 }
             }
-            let ops = cfg.model.prefill_ops(n, pairs, kv_read, finishing);
+            let ops = self.cfg.model.prefill_ops(n, pairs, kv_read, finishing);
             (Vec::new(), prefill_parts, ops)
         };
 
@@ -292,56 +222,54 @@ impl<'c> NexusEngine<'c> {
         // phase's ops are estimated from its current queue/batch state.
         if self.flags.dynamic_sm {
             let other_ops = if stream == DECODE_STREAM {
-                self.estimate_prefill_ops(states, waiting, cfg)
+                self.estimate_prefill_ops()
             } else {
-                self.estimate_decode_ops(states, running, kv, cfg)
+                self.estimate_decode_ops()
             };
             let (pre_ops, dec_ops): (&[OpWork], &[OpWork]) = if stream == DECODE_STREAM {
                 (&other_ops, &ops)
             } else {
                 (&ops, &other_ops)
             };
-            let decision = controller.decide(
-                cost,
-                &BatchState { prefill_ops: pre_ops, decode_ops: dec_ops, kv_usage: kv.usage() },
-            );
+            let batch = BatchState {
+                prefill_ops: pre_ops,
+                decode_ops: dec_ops,
+                kv_usage: self.kv.usage(),
+            };
+            let decision = self.controller.decide(&self.cost, &batch);
             if decision.applied {
-                sim.set_partition(PREFILL_STREAM, decision.r_p);
-                sim.set_partition(DECODE_STREAM, decision.r_d);
+                self.sim.set_partition(PREFILL_STREAM, decision.r_p);
+                self.sim.set_partition(DECODE_STREAM, decision.r_d);
             }
         }
 
-        *tag += 1;
-        sim.submit(stream, &ops, *tag);
+        self.tag += 1;
+        self.sim.submit(stream, &ops, self.tag);
 
         let sched = wall.elapsed().as_secs_f64();
         let parts = decode_ids.len() + prefill_parts.len();
         let share = sched / parts.max(1) as f64;
         for &id in &decode_ids {
-            states[id].as_mut().unwrap().sched_time += share;
+            self.states[id].as_mut().unwrap().sched_time += share;
         }
         for &(id, _) in &prefill_parts {
-            states[id].as_mut().unwrap().sched_time += share;
+            self.states[id].as_mut().unwrap().sched_time += share;
         }
 
         Some(Iter { decode_ids, prefill_parts, start: now })
     }
 
     /// Estimate the next prefill batch's ops for the partition decision.
-    fn estimate_prefill_ops(
-        &self,
-        states: &[Option<ReqState>],
-        waiting: &[usize],
-        cfg: &EngineCfg,
-    ) -> Vec<OpWork> {
-        if waiting.is_empty() {
+    fn estimate_prefill_ops(&self) -> Vec<OpWork> {
+        if self.waiting.is_empty() {
             return Vec::new();
         }
+        let cfg = &self.cfg;
         let mut n = 0usize;
         let mut pairs = 0.0;
         let mut kv_read = 0.0;
-        for &id in waiting {
-            let st = states[id].as_ref().unwrap();
+        for &id in &self.waiting {
+            let st = self.states[id].as_ref().unwrap();
             let take = (st.effective_prompt - st.prefilled)
                 .min(cfg.chunk_size)
                 .min(cfg.token_budget - n);
@@ -359,20 +287,141 @@ impl<'c> NexusEngine<'c> {
     }
 
     /// Estimate the current decode batch's ops for the partition decision.
-    fn estimate_decode_ops(
-        &self,
-        states: &[Option<ReqState>],
-        running: &[usize],
-        kv: &KvCache,
-        cfg: &EngineCfg,
-    ) -> Vec<OpWork> {
-        if running.is_empty() {
+    fn estimate_decode_ops(&self) -> Vec<OpWork> {
+        if self.running.is_empty() {
             return Vec::new();
         }
-        let n = running.len().min(cfg.max_batch);
-        let ctx: f64 = running.iter().take(n).map(|&id| kv.tokens(id) as f64).sum();
-        let _ = states;
-        cfg.model.decode_ops(n, ctx)
+        let n = self.running.len().min(self.cfg.max_batch);
+        let ctx: f64 = self.running.iter().take(n).map(|&id| self.kv.tokens(id) as f64).sum();
+        self.cfg.model.decode_ops(n, ctx)
+    }
+}
+
+impl Engine for NexusEngine {
+    fn kind(&self) -> EngineKind {
+        match (self.flags.use_spf, self.flags.dynamic_sm) {
+            (true, true) => EngineKind::Nexus,
+            (true, false) => EngineKind::NexusWoSc,
+            (false, false) => EngineKind::PfDfWoSc,
+            (false, true) => EngineKind::PfDfWSc,
+        }
+    }
+
+    fn now(&self) -> f64 {
+        self.sim.now()
+    }
+
+    fn next_event(&mut self) -> Option<f64> {
+        self.sim.peek_next_completion()
+    }
+
+    fn inject(&mut self, req: Request) {
+        self.slot(req.id);
+        self.states[req.id] = Some(ReqState::new(req));
+        self.waiting.push(req.id);
+        self.injected += 1;
+    }
+
+    fn step(&mut self, t: f64) -> StepOutcome {
+        // Time-weighted partition/KV trajectory accounting. The integrands
+        // are piecewise-constant between engine events, so integrating at
+        // every driver step (even foreign cluster events) is exact.
+        if self.start_t.is_nan() {
+            self.start_t = t;
+            self.last_t = t;
+        }
+        let dt = (t - self.last_t).max(0.0);
+        self.rp_time += self.controller.r_p * dt;
+        self.kv_time += self.kv.usage() * dt;
+        self.metrics.peak_kv_usage = self.metrics.peak_kv_usage.max(self.kv.usage());
+        if self.controller.mode_for(self.kv.usage()) == Mode::DecodePrioritized {
+            self.decode_mode_time += dt;
+        }
+        self.last_t = t;
+
+        let completions = self.sim.advance_to(t + 1e-12);
+        let mut finished = 0usize;
+        for c in completions {
+            let it = self.inflight[c.stream].take().expect("completion without inflight");
+            let now = c.time;
+            let dur = now - it.start;
+            for id in it.decode_ids {
+                let st = self.states[id].as_mut().unwrap();
+                st.exec_time += dur;
+                st.note_token(now, dur);
+                if st.decode_done() {
+                    let st = self.states[id].take().unwrap();
+                    self.kv.release(id);
+                    self.running.retain(|&x| x != id);
+                    self.metrics.push(st.into_record(now));
+                    self.done += 1;
+                    finished += 1;
+                }
+            }
+            for (id, take) in it.prefill_parts {
+                let st = self.states[id].as_mut().unwrap();
+                st.exec_time += dur;
+                st.queue_time += (it.start - st.queue_since).max(0.0);
+                st.queue_since = now;
+                st.prefilled += take;
+                if st.prefill_done() {
+                    self.waiting.retain(|&x| x != id);
+                    if st.generated > 0 {
+                        self.running.push(id); // resumed after recompute
+                    } else {
+                        st.note_first_token(now);
+                        if st.decode_done() {
+                            let st = self.states[id].take().unwrap();
+                            self.kv.release(id);
+                            self.metrics.push(st.into_record(now));
+                            self.done += 1;
+                            finished += 1;
+                        } else {
+                            self.running.push(id);
+                        }
+                    }
+                }
+            }
+        }
+
+        // Schedule idle streams. Decode first: it is latency-critical
+        // and its batch state feeds the partition decision.
+        for stream in [DECODE_STREAM, PREFILL_STREAM] {
+            if self.inflight[stream].is_none() {
+                self.inflight[stream] = self.schedule_stream(stream);
+            }
+        }
+
+        StepOutcome {
+            completed: finished,
+            busy: self.inflight.iter().any(Option::is_some),
+        }
+    }
+
+    fn pending(&self) -> usize {
+        self.injected - self.done
+    }
+
+    fn completed(&self) -> usize {
+        self.done
+    }
+
+    fn kv_usage(&self) -> f64 {
+        self.kv.usage()
+    }
+
+    fn take_metrics(&mut self) -> RunMetrics {
+        self.metrics.repartitions = self.controller.applied_count;
+        self.metrics.suppressed_repartitions = self.controller.suppressed_count;
+        // Normalize over the engine's own lifetime (first step → last step)
+        // so late-spawned cluster replicas report honest trajectory means.
+        let span = self.last_t - self.start_t;
+        if span.is_finite() && span > 0.0 {
+            self.metrics.mean_rp = self.rp_time / span;
+            self.metrics.decode_mode_frac = self.decode_mode_time / span;
+            self.metrics.mean_kv_usage = self.kv_time / span;
+        }
+        std::mem::take(&mut self.metrics)
     }
 }
 

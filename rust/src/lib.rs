@@ -8,33 +8,39 @@
 //! phase-specific scheduling, KV-cache management, the contention-aware cost
 //! model, the greedy SM-partition controller with hysteresis, five serving
 //! engines (Nexus + four baselines), the GPU simulator substrate that stands
-//! in for an NVIDIA L20, the workload generators, and the benchmark harness
-//! that regenerates every table and figure of the paper's evaluation.
+//! in for an NVIDIA L20, the workload generators, the multi-replica cluster
+//! layer, and the benchmark harness that regenerates every table and figure
+//! of the paper's evaluation.
 //!
 //! Layer 2 (JAX model) and Layer 1 (Pallas kernels) live under `python/` and
 //! are only used at *build* time: `make artifacts` AOT-lowers them to HLO
 //! text which [`runtime`] loads and executes through the PJRT C API (`xla`
-//! crate) — Python is never on the request path.
+//! crate) — Python is never on the request path. The PJRT path needs the
+//! vendored `xla` crate closure and is gated behind the `pjrt` cargo
+//! feature; the default build is dependency-free so the simulator stack
+//! builds offline.
 //!
 //! ## Crate map
 //!
 //! | module | role |
 //! |---|---|
 //! | [`util`] | PRNG, JSON, CLI, table formatting (offline image: no serde/clap/rand) |
-//! | [`metrics`] | streaming histograms, TTFT/TBT/normalized latency, stage breakdown |
+//! | [`metrics`] | streaming histograms, TTFT/TBT/normalized latency, stage breakdown, fleet merge |
 //! | [`model`] | transformer operator FLOPs/bytes (paper §2.2–2.3), model configs |
 //! | [`gpusim`] | fluid-model GPU simulator: SM partitions, saturation, bandwidth contention |
 //! | [`kv`] | paged KV-cache allocator, usage watermarks, swap + transfer buffers |
 //! | [`costmodel`] | contention-aware analytical cost model (paper Eq. 5–9) + calibration |
 //! | [`partition`] | dual-objective greedy SM search (Alg. 1) + hysteresis control |
 //! | [`sched`] | SPF (Alg. 2), FCFS, chunked-prefill, MLFQ, radix-cache schedulers |
-//! | [`engine`] | Nexus + vLLM-like, SGLang-like, FastServe, disaggregated P/D engines |
-//! | [`workload`] | Table-1 dataset generators, Poisson arrivals, trace I/O |
+//! | [`engine`] | Nexus + vLLM-like, SGLang-like, FastServe, disaggregated P/D engines; stepping API |
+//! | [`cluster`] | multi-replica fleet: pluggable routing, cost-model autoscaling, metric merge |
+//! | [`workload`] | Table-1 dataset generators, Poisson + bursty/diurnal arrivals, trace I/O |
 //! | [`coordinator`] | virtual-time serving loop, throughput search, experiment drivers |
-//! | [`runtime`] | PJRT artifact loading + execution (real compute path) |
-//! | [`server`] | real-compute serving: threads + channels, wall-clock metrics |
+//! | [`runtime`] | PJRT artifact loading + execution (real compute path, `pjrt` feature) |
+//! | [`server`] | real-compute serving: threads + channels, wall-clock metrics (`pjrt` feature) |
 //! | [`testing`] | mini property-testing harness (proptest is not vendored) |
 
+pub mod cluster;
 pub mod coordinator;
 pub mod costmodel;
 pub mod engine;
@@ -43,8 +49,10 @@ pub mod kv;
 pub mod metrics;
 pub mod model;
 pub mod partition;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sched;
+#[cfg(feature = "pjrt")]
 pub mod server;
 pub mod testing;
 pub mod util;

@@ -5,28 +5,30 @@
 //! ```text
 //! nexus compare    --dataset mixed --model llama8b --n 200 --rate 3.0
 //! nexus serve      --engine nexus --dataset ldc --model qwen3b --n 100 --rate 2.5
+//! nexus cluster    --engine nexus --replicas 4 --policy jsq [--bursty] [--autoscale]
 //! nexus throughput --engine vllm --dataset arxiv --model qwen3b --n 150
 //! nexus offline    --dataset ldc --model qwen3b --n 100
 //! nexus calibrate  [--model qwen3b]
 //! nexus trace      --dataset sharegpt --n 500 --rate 2.0 --out trace.json
-//! nexus live       [--artifacts DIR] [--requests 16] [--rate 4.0]
+//! nexus live       [--artifacts DIR] [--requests 16] [--rate 4.0]   (pjrt feature)
 //! ```
 //!
 //! `live` is the real-compute path: it loads the AOT artifacts (tiny model)
 //! through PJRT and serves actual token traffic; everything else runs on
 //! the calibrated L20 substrate.
 
-use nexus::coordinator::{offline_makespan, sustainable_throughput, Experiment, SloSpec};
+use nexus::cluster::{AutoscalerCfg, RoutingPolicy};
+use nexus::coordinator::{
+    offline_makespan, sustainable_throughput, ClusterExperiment, Experiment, SloSpec,
+};
 use nexus::costmodel::calibrate;
 use nexus::engine::EngineKind;
 use nexus::gpusim::GpuSpec;
 use nexus::metrics::Summary;
 use nexus::model::{ModelConfig, OpClass};
-use nexus::server::{ServeRequest, Server, ServerCfg};
 use nexus::util::cli::Args;
 use nexus::util::fmt::{dur, Table};
-use nexus::util::rng::Rng;
-use nexus::workload::{self, Dataset};
+use nexus::workload::{self, BurstyCfg, Dataset};
 
 fn main() {
     let args = Args::from_env();
@@ -34,6 +36,7 @@ fn main() {
     match cmd {
         "serve" => cmd_serve(&args),
         "compare" => cmd_compare(&args),
+        "cluster" => cmd_cluster(&args),
         "throughput" => cmd_throughput(&args),
         "offline" => cmd_offline(&args),
         "calibrate" => cmd_calibrate(&args),
@@ -41,6 +44,10 @@ fn main() {
         "live" => cmd_live(&args),
         _ => {
             print!("{}", include_str!("usage.txt"));
+            println!("routing policies (cluster --policy):");
+            for p in RoutingPolicy::all() {
+                println!("  {:<12} {}", p.name(), p.describe());
+            }
         }
     }
 }
@@ -127,6 +134,77 @@ fn cmd_compare(args: &Args) {
     t.print();
 }
 
+fn cmd_cluster(args: &Args) {
+    let base = experiment(args);
+    let kind = EngineKind::by_name(&args.get_or("engine", "nexus"))
+        .unwrap_or_else(|| panic!("unknown --engine"));
+    let policy = RoutingPolicy::by_name(&args.get_or("policy", "jsq")).unwrap_or_else(|| {
+        let names: Vec<&str> = RoutingPolicy::all().iter().map(|p| p.name()).collect();
+        panic!("unknown --policy (one of: {})", names.join("|"))
+    });
+    let replicas = args.get_usize("replicas", 4);
+    let mut exp = ClusterExperiment::new(base, replicas, policy);
+    if args.is_set("bursty") {
+        exp.bursty = Some(BurstyCfg {
+            base_rate: exp.base.rate,
+            burst_shape: args.get_f64("burst-shape", 0.5),
+            ..BurstyCfg::default()
+        });
+    }
+    if args.is_set("autoscale") {
+        exp.autoscale = Some(AutoscalerCfg {
+            min_replicas: args.get_usize("min", 1),
+            max_replicas: args.get_usize("max", replicas.max(2) * 2),
+            ..AutoscalerCfg::default()
+        });
+    }
+    eprintln!(
+        "running {} x{} [{}] on {} / {} ({} reqs @ {} req/s{}{})...",
+        kind.name(),
+        replicas,
+        policy.name(),
+        exp.base.model.name,
+        exp.base.dataset.name(),
+        exp.base.n_requests,
+        exp.base.rate,
+        if exp.bursty.is_some() { ", bursty" } else { "" },
+        if exp.autoscale.is_some() { ", autoscaled" } else { "" },
+    );
+    let m = exp.run(kind);
+    let mut t = Table::new("fleet summary", &HDR);
+    t.row(&summary_row(&format!("{} x{}", kind.name(), replicas), &m.summary()));
+    t.print();
+    println!(
+        "replicas: peak {} | replica-seconds {:.1} | scale events {} ({} suppressed) | timeouts {}",
+        m.peak_replicas,
+        m.replica_seconds,
+        m.scale_events.len(),
+        m.suppressed_scales,
+        m.fleet.timeouts
+    );
+    let mut rt = Table::new("per-replica", &["replica", "routed", "completed", "lifetime"]);
+    for r in &m.replicas {
+        let end = r.retired_at.map_or("end".to_string(), |at| format!("{at:.1}s"));
+        rt.row(&[
+            format!("{}", r.id),
+            format!("{}", r.routed),
+            format!("{}", r.completed),
+            format!("{:.1}s..{}", r.started_at, end),
+        ]);
+    }
+    rt.print();
+    for e in &m.scale_events {
+        println!("  scale @ {:>8.1}s: {} -> {}", e.time, e.from, e.to);
+    }
+    println!(
+        "merged histograms: p50/p95/p99 TTFT {} / {} / {} | p95 TBT {}",
+        dur(m.ttft_hist.quantile(0.50)),
+        dur(m.ttft_hist.quantile(0.95)),
+        dur(m.ttft_hist.quantile(0.99)),
+        dur(m.tbt_hist.quantile(0.95)),
+    );
+}
+
 fn cmd_throughput(args: &Args) {
     let exp = experiment(args);
     let kind = EngineKind::by_name(&args.get_or("engine", "nexus"))
@@ -205,7 +283,11 @@ fn cmd_trace(args: &Args) {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_live(args: &Args) {
+    use nexus::server::{ServeRequest, Server, ServerCfg};
+    use nexus::util::rng::Rng;
+
     let dir = std::path::PathBuf::from(args.get_or(
         "artifacts",
         nexus::runtime::Runtime::default_dir().to_str().unwrap(),
@@ -249,4 +331,14 @@ fn cmd_live(args: &Args) {
         dur(nexus::util::mean(&gaps)),
         dur(nexus::util::percentile(&gaps, 95.0)),
     );
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_live(_args: &Args) {
+    eprintln!(
+        "`nexus live` needs the real-compute PJRT path: declare the vendored \
+         xla/anyhow crates in Cargo.toml (see the [features] comment there) \
+         and rebuild with `cargo build --features pjrt`."
+    );
+    std::process::exit(2);
 }

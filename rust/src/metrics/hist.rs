@@ -143,4 +143,45 @@ mod tests {
         let h = Histogram::new();
         assert_eq!(h.quantile(0.5), 0.0);
     }
+
+    #[test]
+    fn merged_percentiles_equal_concatenated_samples() {
+        // Fleet-aggregation correctness: merging per-replica histograms
+        // must yield the same percentiles as one histogram over the
+        // concatenation of all samples (exactly), and both must agree with
+        // the exact sample percentiles within the bucket resolution.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xF1EE7);
+        let mut shards: Vec<Vec<f64>> = Vec::new();
+        for shard in 0..4 {
+            // Deliberately different latency regimes per "replica".
+            let scale = 10f64.powi(shard - 2); // 10ms .. 10s
+            shards.push((0..500).map(|_| scale * (0.1 + rng.f64())).collect());
+        }
+        let mut merged = Histogram::new();
+        for s in &shards {
+            let mut h = Histogram::new();
+            for &x in s {
+                h.record(x);
+            }
+            merged.merge(&h);
+        }
+        let all: Vec<f64> = shards.concat();
+        let mut concat = Histogram::new();
+        for &x in &all {
+            concat.record(x);
+        }
+        assert_eq!(merged.count(), all.len() as u64);
+        assert!((merged.mean() - concat.mean()).abs() < 1e-9);
+        for q in [0.1, 0.5, 0.9, 0.95, 0.99] {
+            let qm = merged.quantile(q);
+            let qc = concat.quantile(q);
+            assert_eq!(qm, qc, "merge must be exact at q={q}");
+            // Against the exact (nearest-rank) percentile of the samples:
+            // within the histogram's ~4–5% relative bucket resolution.
+            let exact = crate::util::percentile(&all, q * 100.0);
+            let rel = (qm - exact).abs() / exact.max(1e-12);
+            assert!(rel < 0.06, "q={q}: hist {qm} vs exact {exact} (rel {rel:.3})");
+        }
+    }
 }

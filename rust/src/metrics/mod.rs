@@ -127,6 +127,50 @@ impl RunMetrics {
         }
     }
 
+    /// Merge another run's metrics into this one (fleet aggregation).
+    ///
+    /// Records and event counters are concatenated/summed; the
+    /// time-weighted trajectory means (`mean_rp`, `decode_mode_frac`,
+    /// `mean_kv_usage`) are combined weighted by each side's makespan, so
+    /// merging into an empty `RunMetrics::default()` is the identity.
+    pub fn merge(&mut self, other: RunMetrics) {
+        let (wa, wb) = (self.makespan, other.makespan);
+        if wa + wb > 0.0 {
+            let mix = |a: f64, b: f64| (a * wa + b * wb) / (wa + wb);
+            self.mean_rp = mix(self.mean_rp, other.mean_rp);
+            self.decode_mode_frac = mix(self.decode_mode_frac, other.decode_mode_frac);
+            self.mean_kv_usage = mix(self.mean_kv_usage, other.mean_kv_usage);
+        }
+        self.makespan = self.makespan.max(other.makespan);
+        self.repartitions += other.repartitions;
+        self.suppressed_repartitions += other.suppressed_repartitions;
+        self.swaps += other.swaps;
+        self.recomputes += other.recomputes;
+        self.timeouts += other.timeouts;
+        self.peak_kv_usage = self.peak_kv_usage.max(other.peak_kv_usage);
+        self.records.extend(other.records);
+    }
+
+    /// TTFT distribution of this run (one sample per completed request).
+    pub fn ttft_histogram(&self) -> Histogram {
+        let mut h = Histogram::new();
+        for r in &self.records {
+            h.record(r.ttft().max(0.0));
+        }
+        h
+    }
+
+    /// Inter-token-gap (TBT) distribution of this run.
+    pub fn tbt_histogram(&self) -> Histogram {
+        let mut h = Histogram::new();
+        for r in &self.records {
+            for &g in &r.token_gaps {
+                h.record(g.max(0.0));
+            }
+        }
+        h
+    }
+
     /// Figure-12 style decomposition, normalized per output token.
     pub fn breakdown(&self) -> StageBreakdown {
         let mut b = StageBreakdown::default();
@@ -216,5 +260,53 @@ mod tests {
         assert_eq!(s.completed, 0);
         assert_eq!(s.mean_ttft, 0.0);
         assert_eq!(m.span(), 0.0);
+    }
+
+    #[test]
+    fn merge_into_default_is_identity() {
+        let mut a = RunMetrics::default();
+        let mut b = RunMetrics::default();
+        b.push(rec(0.0, 0.5, 2.0, 5));
+        b.push(rec(1.0, 1.2, 4.0, 10));
+        b.recomputes = 3;
+        b.mean_rp = 0.6;
+        b.mean_kv_usage = 0.4;
+        b.peak_kv_usage = 0.9;
+        let want = b.summary();
+        a.merge(b);
+        let got = a.summary();
+        assert_eq!(got.completed, want.completed);
+        assert!((got.mean_ttft - want.mean_ttft).abs() < 1e-12);
+        assert_eq!(a.recomputes, 3);
+        assert!((a.mean_rp - 0.6).abs() < 1e-12);
+        assert!((a.peak_kv_usage - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_concatenates_and_weights() {
+        let mut a = RunMetrics::default();
+        a.push(rec(0.0, 0.5, 2.0, 5));
+        a.mean_kv_usage = 0.2;
+        let mut b = RunMetrics::default();
+        b.push(rec(0.0, 1.0, 6.0, 5));
+        b.mean_kv_usage = 0.8;
+        a.merge(b);
+        assert_eq!(a.records.len(), 2);
+        assert!((a.makespan - 6.0).abs() < 1e-12);
+        // Weighted 2:6 → 0.2·0.25 + 0.8·0.75 = 0.65.
+        assert!((a.mean_kv_usage - 0.65).abs() < 1e-12, "got {}", a.mean_kv_usage);
+    }
+
+    #[test]
+    fn run_histograms_match_records() {
+        let mut m = RunMetrics::default();
+        m.push(rec(0.0, 0.5, 2.0, 5));
+        m.push(rec(1.0, 1.2, 4.0, 10));
+        let th = m.ttft_histogram();
+        assert_eq!(th.count(), 2);
+        assert!((th.mean() - 0.35).abs() < 1e-12);
+        let gh = m.tbt_histogram();
+        assert_eq!(gh.count(), 4 + 9);
+        assert!((gh.mean() - 0.01).abs() < 1e-12);
     }
 }

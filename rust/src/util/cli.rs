@@ -53,6 +53,17 @@ impl Args {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// True when `--name` appeared at all — as a bare flag, or (because the
+    /// parser greedily binds a following token as the value) as an option
+    /// whose value is not "false"/"0". Lets boolean switches like
+    /// `--autoscale` work in any argument position.
+    pub fn is_set(&self, name: &str) -> bool {
+        if self.flag(name) {
+            return true;
+        }
+        matches!(self.get(name), Some(v) if v != "false" && v != "0")
+    }
+
     pub fn get_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
@@ -125,5 +136,17 @@ mod tests {
         let a = parse(&["--fast"]);
         assert!(a.flag("fast"));
         assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn is_set_tolerates_greedy_binding() {
+        // Trailing flag form.
+        assert!(parse(&["--autoscale"]).is_set("autoscale"));
+        // Greedy form: the next token was bound as the value.
+        assert!(parse(&["--autoscale", "cluster"]).is_set("autoscale"));
+        // Explicit disable and absence.
+        assert!(!parse(&["--autoscale=false"]).is_set("autoscale"));
+        assert!(!parse(&["--autoscale", "0"]).is_set("autoscale"));
+        assert!(!parse(&["--other"]).is_set("autoscale"));
     }
 }

@@ -104,6 +104,31 @@ impl Rng {
         -self.f64().max(1e-300).ln() / lambda
     }
 
+    /// Gamma(shape k, scale θ) via Marsaglia–Tsang squeeze (k ≥ 1) with the
+    /// `U^(1/k)` boost for k < 1. Mean `k·θ`, variance `k·θ²` — used by the
+    /// Gamma-modulated (doubly-stochastic) arrival process in `workload`.
+    pub fn gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        assert!(shape > 0.0 && scale > 0.0, "gamma({shape}, {scale})");
+        if shape < 1.0 {
+            // Gamma(k) = Gamma(k+1) · U^(1/k)
+            let boost = self.f64().max(1e-300).powf(1.0 / shape);
+            return self.gamma(shape + 1.0, scale) * boost;
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64().max(1e-300);
+            if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+                return d * v * scale;
+            }
+        }
+    }
+
     /// Fork an independent stream (for per-request decisions that must not
     /// perturb the arrival sequence).
     pub fn fork(&mut self) -> Rng {
@@ -184,6 +209,28 @@ mod tests {
         let n = 100_000;
         let mean: f64 = (0..n).map(|_| r.exponential(lambda)).sum::<f64>() / n as f64;
         assert!((mean - 1.0 / lambda).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        // Mean k·θ and variance k·θ², for shapes below and above 1.
+        let mut r = Rng::new(17);
+        for (k, theta) in [(0.4, 2.5), (1.0, 1.0), (4.0, 0.5)] {
+            let n = 100_000;
+            let mut sum = 0.0;
+            let mut sq = 0.0;
+            for _ in 0..n {
+                let x = r.gamma(k, theta);
+                assert!(x > 0.0 && x.is_finite());
+                sum += x;
+                sq += x * x;
+            }
+            let mean = sum / n as f64;
+            let var = sq / n as f64 - mean * mean;
+            let (em, ev) = (k * theta, k * theta * theta);
+            assert!((mean - em).abs() / em < 0.03, "k={k}: mean {mean} vs {em}");
+            assert!((var - ev).abs() / ev < 0.08, "k={k}: var {var} vs {ev}");
+        }
     }
 
     #[test]

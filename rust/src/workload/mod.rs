@@ -147,6 +147,69 @@ pub fn generate(dataset: Dataset, n: usize, rate: f64, seed: u64) -> Vec<Request
         .collect()
 }
 
+/// Bursty/diurnal arrival process: a Gamma-modulated Poisson rate under a
+/// sinusoidal diurnal envelope (a doubly-stochastic Cox process).
+///
+/// The instantaneous rate is piecewise-constant over `epoch`-second
+/// windows: `rate(t) = base_rate · (1 + diurnal_amp·sin(2πt/diurnal_period))
+/// · G_e`, where each epoch draws an independent burst factor
+/// `G_e ~ Gamma(burst_shape, 1/burst_shape)` (mean 1). Lower `burst_shape`
+/// means heavier bursts; `burst_shape → ∞` recovers plain [`generate`]
+/// modulo the envelope.
+#[derive(Debug, Clone, Copy)]
+pub struct BurstyCfg {
+    /// Long-run mean arrival rate (req/s).
+    pub base_rate: f64,
+    /// Gamma shape `k` of the per-epoch burst factor (mean-1, var `1/k`).
+    pub burst_shape: f64,
+    /// Seconds per burst-factor resample.
+    pub epoch: f64,
+    /// Diurnal amplitude ∈ [0, 1).
+    pub diurnal_amp: f64,
+    /// Seconds per diurnal cycle.
+    pub diurnal_period: f64,
+}
+
+impl Default for BurstyCfg {
+    fn default() -> Self {
+        BurstyCfg {
+            base_rate: 4.0,
+            burst_shape: 0.5,
+            epoch: 20.0,
+            diurnal_amp: 0.6,
+            diurnal_period: 600.0,
+        }
+    }
+}
+
+/// Generate `n` requests from the bursty/diurnal process (see [`BurstyCfg`]).
+pub fn generate_bursty(dataset: Dataset, n: usize, cfg: &BurstyCfg, seed: u64) -> Vec<Request> {
+    assert!(cfg.base_rate > 0.0 && cfg.epoch > 0.0 && cfg.burst_shape > 0.0);
+    assert!((0.0..1.0).contains(&cfg.diurnal_amp));
+    let mut rng = Rng::new(seed);
+    let mut lens_rng = rng.fork();
+    let mut out = Vec::with_capacity(n);
+    let mut epoch_start = 0.0f64;
+    while out.len() < n {
+        let mid = epoch_start + 0.5 * cfg.epoch;
+        let envelope =
+            1.0 + cfg.diurnal_amp * (2.0 * std::f64::consts::PI * mid / cfg.diurnal_period).sin();
+        let factor = rng.gamma(cfg.burst_shape, 1.0 / cfg.burst_shape);
+        let rate = (cfg.base_rate * envelope * factor).max(1e-3);
+        let mut t = epoch_start;
+        loop {
+            t += rng.exponential(rate);
+            if t >= epoch_start + cfg.epoch || out.len() >= n {
+                break;
+            }
+            let (prompt_len, output_len) = dataset.sample(&mut lens_rng);
+            out.push(Request { id: out.len(), arrival: t, prompt_len, output_len });
+        }
+        epoch_start += cfg.epoch;
+    }
+    out
+}
+
 /// Generate an *offline* batch: all `n` requests arrive at t=0 (§6.3).
 pub fn offline(dataset: Dataset, n: usize, seed: u64) -> Vec<Request> {
     let mut rng = Rng::new(seed);
@@ -283,6 +346,81 @@ mod tests {
         let frac_short = short as f64 / tr.len() as f64;
         assert!((frac_short - 0.6).abs() < 0.06, "short frac {frac_short}");
         assert!(long > 0);
+    }
+
+    #[test]
+    fn bursty_is_monotone_deterministic_and_complete() {
+        let cfg = BurstyCfg::default();
+        let tr = generate_bursty(Dataset::ShareGpt, 400, &cfg, 11);
+        assert_eq!(tr.len(), 400);
+        for (i, w) in tr.windows(2).enumerate() {
+            assert!(w[1].arrival >= w[0].arrival, "order broken at {i}");
+        }
+        for (i, r) in tr.iter().enumerate() {
+            assert_eq!(r.id, i, "ids must be dense and ordered");
+        }
+        let again = generate_bursty(Dataset::ShareGpt, 400, &cfg, 11);
+        assert_eq!(tr, again);
+        assert_ne!(tr, generate_bursty(Dataset::ShareGpt, 400, &cfg, 12));
+    }
+
+    #[test]
+    fn bursty_is_overdispersed_vs_poisson() {
+        // Index of dispersion of per-window counts: 1 for Poisson, ≫ 1 for
+        // the Gamma-modulated process with a small shape.
+        let cfg = BurstyCfg {
+            base_rate: 4.0,
+            burst_shape: 0.3,
+            epoch: 10.0,
+            diurnal_amp: 0.0, // isolate the burst modulation
+            diurnal_period: 600.0,
+        };
+        let dispersion = |tr: &[Request], window: f64| -> f64 {
+            let horizon = tr.last().unwrap().arrival;
+            let bins = (horizon / window).ceil() as usize;
+            let mut counts = vec![0.0f64; bins.max(1)];
+            for r in tr {
+                let b = ((r.arrival / window) as usize).min(counts.len() - 1);
+                counts[b] += 1.0;
+            }
+            let m = mean(&counts);
+            let var =
+                counts.iter().map(|c| (c - m) * (c - m)).sum::<f64>() / counts.len() as f64;
+            var / m.max(1e-9)
+        };
+        let bursty = generate_bursty(Dataset::ShareGpt, 2000, &cfg, 7);
+        let poisson = generate(Dataset::ShareGpt, 2000, 4.0, 7);
+        let db = dispersion(&bursty, cfg.epoch);
+        let dp = dispersion(&poisson, cfg.epoch);
+        assert!(db > 2.0, "bursty dispersion {db} should be ≫ 1");
+        assert!(db > 2.0 * dp, "bursty {db} must exceed Poisson {dp}");
+    }
+
+    #[test]
+    fn diurnal_envelope_shifts_load_across_phases() {
+        // With a strong envelope and mild bursts, the sin-peak half of each
+        // cycle must carry clearly more arrivals than the trough half.
+        let cfg = BurstyCfg {
+            base_rate: 4.0,
+            burst_shape: 50.0, // nearly deterministic epochs
+            epoch: 5.0,
+            diurnal_amp: 0.9,
+            diurnal_period: 200.0,
+        };
+        let tr = generate_bursty(Dataset::ShareGpt, 3000, &cfg, 5);
+        let (mut peak, mut trough) = (0usize, 0usize);
+        for r in &tr {
+            let phase = (r.arrival / cfg.diurnal_period).fract();
+            if phase < 0.5 {
+                peak += 1; // sin ≥ 0 half-cycle
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(
+            peak as f64 > 1.5 * trough as f64,
+            "peak {peak} vs trough {trough} under amp 0.9"
+        );
     }
 
     #[test]

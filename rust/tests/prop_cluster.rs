@@ -1,0 +1,206 @@
+//! Property-based tests over the cluster layer's invariants: routing
+//! conservation, drain safety, autoscaler bounds and hysteresis, and
+//! single-replica equivalence with the plain engine loop — driven by the
+//! in-repo mini property harness (`nexus::testing`).
+
+use nexus::cluster::{run_cluster, AutoscalerCfg, ClusterCfg, RoutingPolicy};
+use nexus::engine::{run_engine, EngineCfg, EngineKind};
+use nexus::model::ModelConfig;
+use nexus::testing::prop;
+use nexus::util::rng::Rng;
+use nexus::workload::{generate, generate_bursty, BurstyCfg, Dataset, Request};
+
+fn random_policy(rng: &mut Rng) -> RoutingPolicy {
+    let all = RoutingPolicy::all();
+    all[rng.below(all.len())]
+}
+
+fn random_kind(rng: &mut Rng) -> EngineKind {
+    let kinds = EngineKind::all();
+    kinds[rng.below(kinds.len())]
+}
+
+fn random_trace(rng: &mut Rng, n: usize) -> Vec<Request> {
+    let dataset = [Dataset::ShareGpt, Dataset::Arxiv, Dataset::Mixed][rng.below(3)];
+    if rng.chance(0.5) {
+        let cfg = BurstyCfg {
+            base_rate: rng.range_f64(2.0, 20.0),
+            burst_shape: rng.range_f64(0.3, 2.0),
+            epoch: rng.range_f64(2.0, 20.0),
+            diurnal_amp: rng.range_f64(0.0, 0.9),
+            diurnal_period: rng.range_f64(60.0, 600.0),
+        };
+        generate_bursty(dataset, n, &cfg, rng.next_u64())
+    } else {
+        generate(dataset, n, rng.range_f64(1.0, 15.0), rng.next_u64())
+    }
+}
+
+#[test]
+fn prop_every_request_routed_exactly_once() {
+    prop("cluster routing conservation", 20, |rng| {
+        let n = rng.range_usize(10, 40);
+        let trace = random_trace(rng, n);
+        let kind = random_kind(rng);
+        let policy = random_policy(rng);
+        let replicas = rng.range_usize(1, 5);
+        let ecfg = EngineCfg::new(ModelConfig::qwen3b(), rng.next_u64());
+        let cc = ClusterCfg::new(kind, ecfg, replicas, policy);
+        let m = run_cluster(&cc, &trace);
+        // Dispatched exactly once each...
+        let routed: usize = m.replicas.iter().map(|r| r.routed).sum();
+        if routed != n {
+            return Err(format!(
+                "{} x{} [{}]: routed {routed} != offered {n}",
+                kind.name(),
+                replicas,
+                policy.name()
+            ));
+        }
+        // ...and answered (or accounted as a timeout) exactly once each.
+        if m.fleet.records.len() + m.fleet.timeouts != n {
+            return Err(format!(
+                "{} records + {} timeouts != {n}",
+                m.fleet.records.len(),
+                m.fleet.timeouts
+            ));
+        }
+        let mut ids: Vec<usize> = m.fleet.records.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        if ids.len() != m.fleet.records.len() {
+            return Err("duplicate response records across replicas".into());
+        }
+        // Histogram aggregation covers every completed request.
+        if m.ttft_hist.count() != m.fleet.records.len() as u64 {
+            return Err(format!(
+                "ttft hist {} != records {}",
+                m.ttft_hist.count(),
+                m.fleet.records.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_no_response_lost_across_drain() {
+    // Aggressive autoscaling (tiny interval/cooldown) against spiky traffic
+    // forces scale-downs while work is in flight; draining must never drop
+    // or duplicate a response.
+    prop("drain safety", 12, |rng| {
+        let n = rng.range_usize(20, 50);
+        let trace = random_trace(rng, n);
+        let kind = [EngineKind::Vllm, EngineKind::Nexus, EngineKind::FastServe][rng.below(3)];
+        let ecfg = EngineCfg::new(ModelConfig::qwen3b(), rng.next_u64());
+        let mut cc =
+            ClusterCfg::new(kind, ecfg, rng.range_usize(2, 4), random_policy(rng));
+        cc.autoscale = Some(AutoscalerCfg {
+            min_replicas: 1,
+            max_replicas: 4,
+            interval: rng.range_f64(0.5, 3.0),
+            cooldown: rng.range_f64(1.0, 5.0),
+            target_util: rng.range_f64(0.5, 0.95),
+            ..AutoscalerCfg::default()
+        });
+        let m = run_cluster(&cc, &trace);
+        if m.fleet.records.len() + m.fleet.timeouts != n {
+            return Err(format!(
+                "{}: {} records + {} timeouts != {n} ({} scale events)",
+                kind.name(),
+                m.fleet.records.len(),
+                m.fleet.timeouts,
+                m.scale_events.len()
+            ));
+        }
+        let mut ids: Vec<usize> = m.fleet.records.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        if ids.len() != m.fleet.records.len() {
+            return Err(format!("{}: duplicated response after drain", kind.name()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_autoscaler_bounded_and_damped() {
+    prop("autoscaler bounds + hysteresis", 12, |rng| {
+        let n = rng.range_usize(30, 60);
+        let trace = random_trace(rng, n);
+        let min_replicas = rng.range_usize(1, 2);
+        let max_replicas = min_replicas + rng.range_usize(1, 4);
+        let cooldown = rng.range_f64(3.0, 20.0);
+        let ecfg = EngineCfg::new(ModelConfig::qwen3b(), rng.next_u64());
+        let mut cc = ClusterCfg::new(
+            EngineKind::Nexus,
+            ecfg,
+            min_replicas,
+            RoutingPolicy::JoinShortestQueue,
+        );
+        cc.autoscale = Some(AutoscalerCfg {
+            min_replicas,
+            max_replicas,
+            interval: rng.range_f64(1.0, 4.0),
+            cooldown,
+            ..AutoscalerCfg::default()
+        });
+        let m = run_cluster(&cc, &trace);
+        if m.peak_replicas > max_replicas {
+            return Err(format!("peak {} > max {max_replicas}", m.peak_replicas));
+        }
+        for e in &m.scale_events {
+            if e.to < min_replicas || e.to > max_replicas {
+                return Err(format!(
+                    "scale target {} outside [{min_replicas}, {max_replicas}]",
+                    e.to
+                ));
+            }
+            if e.from == e.to {
+                return Err("no-op scale event recorded".into());
+            }
+        }
+        for w in m.scale_events.windows(2) {
+            if w[1].time - w[0].time < cooldown - 1e-9 {
+                return Err(format!(
+                    "flap: actions at {:.3} and {:.3} inside cooldown {cooldown}",
+                    w[0].time, w[1].time
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_single_replica_cluster_equals_engine_loop() {
+    // The stepping refactor is behavior-preserving: for any engine, seed,
+    // and workload, a 1-replica cluster reproduces the plain engine run.
+    prop("single-replica equivalence", 10, |rng| {
+        let n = rng.range_usize(8, 25);
+        let trace = random_trace(rng, n);
+        let kind = random_kind(rng);
+        let ecfg = EngineCfg::new(ModelConfig::qwen3b(), rng.next_u64());
+        let solo = run_engine(kind, &ecfg, &trace);
+        let cc = ClusterCfg::new(kind, ecfg, 1, RoutingPolicy::RoundRobin);
+        let fleet = run_cluster(&cc, &trace);
+        let (a, b) = (solo.summary(), fleet.summary());
+        if a.completed != b.completed {
+            return Err(format!("{}: completed {} vs {}", kind.name(), a.completed, b.completed));
+        }
+        for (x, y, what) in [
+            (a.mean_ttft, b.mean_ttft, "mean ttft"),
+            (a.p95_ttft, b.p95_ttft, "p95 ttft"),
+            (a.mean_tbt, b.mean_tbt, "mean tbt"),
+            (a.mean_norm, b.mean_norm, "mean norm"),
+        ] {
+            if (x - y).abs() > 1e-9 {
+                return Err(format!("{}: {what} diverged: {x} vs {y}", kind.name()));
+            }
+        }
+        if solo.recomputes != fleet.fleet.recomputes || solo.swaps != fleet.fleet.swaps {
+            return Err(format!("{}: event counters diverged", kind.name()));
+        }
+        Ok(())
+    });
+}

@@ -3,7 +3,9 @@
 //! time (recorded in `manifest.json` under `"reference"`).
 //!
 //! Requires `make artifacts`; every test skips cleanly when they are absent
-//! (e.g. in a rust-only environment).
+//! (e.g. in a rust-only environment). The whole file is compiled only with
+//! the `pjrt` feature (the default build has no PJRT dependency).
+#![cfg(feature = "pjrt")]
 
 use nexus::runtime::{Manifest, Runtime};
 use nexus::server::{ServeRequest, Server, ServerCfg};
