@@ -1,17 +1,22 @@
 # Top-level targets for the Nexus reproduction.
 #
-#   make ci         — build + tests + fmt + clippy on the rust crate
+#   make ci         — build + tests + bench compile + fmt + clippy on the rust crate
 #   make test       — tier-1 verify (cargo build --release && cargo test -q)
+#   make bench-json — regenerate BENCH_hotpath.json (fleet macro-benchmark +
+#                     hot-path microbenchmarks; schema in ROADMAP §Perf)
 #   make artifacts  — AOT-lower the JAX/Pallas tiny model to PJRT artifacts
 #                     (needed only by the `pjrt` feature / `nexus live`)
 
-.PHONY: ci test artifacts
+.PHONY: ci test bench-json artifacts
 
 ci:
 	./ci.sh
 
 test:
 	cd rust && cargo build --release && cargo test -q
+
+bench-json:
+	cd rust && cargo bench --bench perf_hotpath
 
 artifacts:
 	cd python && python3 compile/aot.py --out ../rust/artifacts

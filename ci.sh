@@ -12,6 +12,9 @@ run() {
 
 run cargo build --release
 run cargo test -q
+# Benches are the perf harness of record (BENCH_hotpath.json); keep them
+# compiling without paying their runtime in CI.
+run cargo bench --no-run
 # fmt/clippy are advisory gates: present in some toolchain images, absent in
 # minimal ones. Fail on findings, skip cleanly when the component is missing.
 if cargo fmt --version >/dev/null 2>&1; then

@@ -8,6 +8,7 @@
 //! cargo run --release --example quickstart
 //! ```
 
+use nexus::cluster::{run_cluster, ClusterCfg, RoutingPolicy};
 use nexus::coordinator::Experiment;
 use nexus::costmodel::calibrate;
 use nexus::engine::EngineKind;
@@ -61,5 +62,20 @@ fn main() {
             dur(s.mean_norm)
         );
     }
+    // --- 4. the same workload on a small replica fleet (cluster layer,
+    //        event-queue co-simulation).
+    let cc = ClusterCfg::new(
+        EngineKind::Nexus,
+        exp.cfg(),
+        4,
+        RoutingPolicy::JoinShortestQueue,
+    );
+    let fleet = run_cluster(&cc, &exp.trace());
+    println!(
+        "fleet 4x Nexus (JSQ): p95 TTFT {} over {} virtual events",
+        dur(fleet.summary().p95_ttft),
+        fleet.events
+    );
+
     println!("done — see `nexus compare` and rust/benches/ for the full evaluation");
 }

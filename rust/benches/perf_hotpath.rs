@@ -1,19 +1,31 @@
-//! §Perf — hot-path microbenchmarks for the L3 coordinator. These anchor
-//! the EXPERIMENTS.md §Perf iteration log: the partition decision must be
-//! ≪ 1 ms (it runs per batch inside the serving loop), the simulator event
-//! loop bounds experiment turnaround, and the schedulers must stay
-//! negligible (Fig. 12's "scheduling overhead" row).
+//! §Perf — hot-path benchmarks for the L3 coordinator. These anchor the
+//! ROADMAP §Perf iteration log: the partition decision must be ≪ 1 ms (it
+//! runs per batch inside the serving loop), the simulator event loop bounds
+//! experiment turnaround, and the schedulers must stay negligible (Fig. 12's
+//! "scheduling overhead" row).
+//!
+//! Besides the microbenchmarks, this harness runs the fleet-scale
+//! macro-benchmark behind the PR-2 event-queue overhaul: the cluster
+//! co-simulation at 16 and 64 replicas on a bursty ShareGPT trace, timed
+//! under both the optimized O(log R) heap loop ([`Cluster::run`]) and the
+//! retained pre-refactor O(R)-scan loop ([`Cluster::run_reference`]), with
+//! a ≤ 1 ns structural-deviation check proving both loops served
+//! identically. Results
+//! are emitted machine-readably to `BENCH_hotpath.json` at the repo root
+//! (schema documented in ROADMAP §Perf; regenerate with `make bench-json`).
 //!
 //! `cargo bench --bench perf_hotpath`
 
+use nexus::cluster::{Cluster, ClusterCfg, RoutingPolicy};
 use nexus::coordinator::Experiment;
 use nexus::costmodel::calibrate;
-use nexus::engine::EngineKind;
+use nexus::engine::{EngineCfg, EngineKind};
 use nexus::gpusim::{GpuSpec, Sim};
 use nexus::model::ModelConfig;
 use nexus::partition::{BatchState, PartitionConfig, PartitionController};
 use nexus::sched::{spf_batch, PrefillItem};
 use nexus::util::fmt::Table;
+use nexus::util::json::Json;
 use nexus::util::rng::Rng;
 use std::time::Instant;
 
@@ -25,10 +37,18 @@ fn time_it<F: FnMut()>(iters: usize, mut f: F) -> f64 {
     t0.elapsed().as_secs_f64() / iters as f64
 }
 
+fn micro_row(name: &str, seconds_per_op: f64) -> Json {
+    Json::obj(vec![
+        ("name", name.into()),
+        ("seconds_per_op", seconds_per_op.into()),
+    ])
+}
+
 fn main() {
     let gpu = GpuSpec::l20();
     let cost = calibrate(&gpu);
     let model = ModelConfig::qwen3b();
+    let mut micro: Vec<Json> = Vec::new();
     let mut t = Table::new("L3 hot-path microbenchmarks", &["path", "per op", "note"]);
 
     // 1. Cost-model query (one phase prediction).
@@ -38,10 +58,12 @@ fn main() {
         std::hint::black_box(cost.prefill(std::hint::black_box(&pre), 0.6));
     });
     t.row(&["cost model: prefill query".into(), fmt_ns(per), "Eq. 5+8".into()]);
+    micro.push(micro_row("costmodel_prefill_query", per));
     let per = time_it(200_000, || {
         std::hint::black_box(cost.decode(std::hint::black_box(&dec), 0.4, None));
     });
     t.row(&["cost model: decode query".into(), fmt_ns(per), "Eq. 6+9".into()]);
+    micro.push(micro_row("costmodel_decode_query", per));
 
     // 2. Full partition decision (Algorithm 1).
     let mut ctl = PartitionController::new(PartitionConfig::default());
@@ -54,6 +76,7 @@ fn main() {
         fmt_ns(per),
         "target ≪ 1 ms/batch".into(),
     ]);
+    micro.push(micro_row("partition_decision", per));
 
     // 3. SPF scheduling over a deep queue.
     let mut rng = Rng::new(1);
@@ -69,6 +92,7 @@ fn main() {
         std::hint::black_box(spf_batch(std::hint::black_box(&queue), 50.0, 2048, 15.0));
     });
     t.row(&["SPF batch over 10k queue".into(), fmt_ns(per), "Alg. 2".into()]);
+    micro.push(micro_row("spf_batch_10k", per));
 
     // 4. Simulator kernel throughput (events/sec).
     let ops = model.decode_ops(16, 16.0 * 1000.0);
@@ -96,6 +120,7 @@ fn main() {
         fmt_ns(per_kernel),
         format!("{:.1}M kernels/s", 1e-6 / per_kernel),
     ]);
+    micro.push(micro_row("gpusim_kernel_event", per_kernel));
 
     // 5. End-to-end experiment turnaround (sim seconds per wall second).
     let exp = Experiment::new(model, nexus::workload::Dataset::ShareGpt, 60, 4.0);
@@ -107,8 +132,85 @@ fn main() {
         format!("{:.2}s wall", wall),
         format!("{:.0}x realtime ({:.1}s sim)", m.makespan / wall, m.makespan),
     ]);
+    micro.push(micro_row("nexus_engine_end_to_end_wall_s", wall));
 
     t.print();
+
+    // 6. Fleet-scale macro-benchmark: event-queue loop vs. reference loop.
+    let mut ft = Table::new(
+        "fleet macro-benchmark (bursty ShareGPT, Nexus engine, JSQ)",
+        &["replicas", "events", "ref ev/s", "opt ev/s", "speedup"],
+    );
+    let mut fleet_rows: Vec<Json> = Vec::new();
+    for &(replicas, n_req, rate) in &[(16usize, 1200usize, 28.0f64), (64, 2400, 110.0)] {
+        let bursty = nexus::workload::BurstyCfg {
+            base_rate: rate,
+            ..nexus::workload::BurstyCfg::default()
+        };
+        let trace = nexus::workload::generate_bursty(
+            nexus::workload::Dataset::ShareGpt,
+            n_req,
+            &bursty,
+            97,
+        );
+        let cc = ClusterCfg::new(
+            EngineKind::Nexus,
+            EngineCfg::new(model, 5),
+            replicas,
+            RoutingPolicy::JoinShortestQueue,
+        );
+        eprintln!("  fleet x{replicas}: reference loop ({n_req} requests)...");
+        let t0 = Instant::now();
+        let m_ref = Cluster::new(cc.clone()).run_reference(&trace);
+        let wall_ref = t0.elapsed().as_secs_f64();
+        eprintln!("  fleet x{replicas}: optimized loop...");
+        let t0 = Instant::now();
+        let m_opt = Cluster::new(cc).run(&trace);
+        let wall_opt = t0.elapsed().as_secs_f64();
+        let dev = m_opt.fleet.deviation(&m_ref.fleet);
+        assert!(
+            matches!(dev, Some(d) if d <= 1e-9),
+            "optimized loop diverged from reference in the macro-benchmark \
+             (deviation {dev:?})"
+        );
+        let eps_ref = m_ref.events as f64 / wall_ref.max(1e-12);
+        let eps_opt = m_opt.events as f64 / wall_opt.max(1e-12);
+        ft.row(&[
+            format!("{replicas}"),
+            format!("{}", m_opt.events),
+            format!("{:.0}", eps_ref),
+            format!("{:.0}", eps_opt),
+            format!("{:.2}x", eps_opt / eps_ref),
+        ]);
+        fleet_rows.push(Json::obj(vec![
+            ("replicas", replicas.into()),
+            ("engine", "nexus".into()),
+            ("policy", "jsq".into()),
+            ("dataset", "sharegpt-bursty".into()),
+            ("requests", n_req.into()),
+            ("completed", m_opt.fleet.records.len().into()),
+            ("events_reference", m_ref.events.into()),
+            ("events_optimized", m_opt.events.into()),
+            ("wall_s_reference", wall_ref.into()),
+            ("wall_s_optimized", wall_opt.into()),
+            ("events_per_sec_reference", eps_ref.into()),
+            ("events_per_sec_optimized", eps_opt.into()),
+            ("speedup", (eps_opt / eps_ref).into()),
+        ]));
+    }
+    ft.print();
+
+    // Machine-readable dump for the perf trajectory (ROADMAP §Perf).
+    let out = Json::obj(vec![
+        ("bench", "perf_hotpath".into()),
+        ("schema_version", 1usize.into()),
+        ("status", "measured".into()),
+        ("fleet", Json::Arr(fleet_rows)),
+        ("micro", Json::Arr(micro)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_hotpath.json");
+    std::fs::write(&path, format!("{out}\n")).expect("write BENCH_hotpath.json");
+    println!("wrote {}", path.display());
 }
 
 fn fmt_ns(secs: f64) -> String {

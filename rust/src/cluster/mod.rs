@@ -15,10 +15,44 @@
 //!   latency histograms ([`crate::metrics::RunMetrics::merge`],
 //!   [`crate::metrics::Histogram::merge`]).
 //!
-//! The co-simulation steps every in-service replica to the fleet-wide
-//! minimum next event (arrival, any replica's completion/transfer/retry, or
-//! an autoscaler tick), so no replica ever overshoots its own events and a
-//! single-replica cluster reproduces the single-engine loop exactly.
+//! ## Event-queue co-simulation (§Perf)
+//!
+//! [`Cluster::run`] is an event-driven loop over a binary min-heap keyed by
+//! each replica's next internal event time, so one virtual event costs
+//! O(log R) instead of the O(R) full-fleet scan of the historical loop
+//! (retained verbatim as [`Cluster::run_reference`] for differential
+//! testing and the before/after benchmark). Invariants:
+//!
+//! * **Key authority.** `key_of[i]` holds replica `i`'s authoritative next
+//!   event time (`NaN` = none). Heap entries are *hints*: an entry whose
+//!   integer key does not match `f64_total_key(key_of[i])`, or whose
+//!   replica has retired, is stale and is lazily dropped at pop time.
+//!   Entries are never removed eagerly; a replica may have several stale
+//!   entries but at most one live entry.
+//! * **Key refresh.** A replica's next event can only change when it is
+//!   stepped or injected into, so keys are refreshed exactly once per
+//!   (replica, processed event) — after the step — and nowhere else.
+//! * **Monotonicity.** Every key pushed after a step at time `t` is > `t`,
+//!   and arrivals/ticks are consumed in order, so processed event times
+//!   are nondecreasing (property-tested in `tests/prop_cluster.rs`).
+//! * **Priming.** New replicas (initial fleet and autoscaler-spawned)
+//!   carry no event key (fresh engines expose no events) but are queued in
+//!   a pending-first-step list, drained into the step set at the next
+//!   processed event — exactly when the reference loop first steps them,
+//!   which pins the engines' trajectory-accounting start time. The list
+//!   never feeds the next-event minimum, so a fresh replica can neither
+//!   pull the fleet clock backward nor conjure a spurious event.
+//! * **Equivalence.** A replica that is *not* stepped at a foreign event
+//!   cannot change observable state (pending, KV usage, completions), so
+//!   skipping it is behavior-preserving; `tests/golden_digest.rs` asserts
+//!   `RunMetrics` equivalence (structural identity, virtual times within
+//!   1 ns — see [`crate::metrics::RunMetrics::deviation`]) against
+//!   [`Cluster::run_reference`] across engines, fleet sizes, policies,
+//!   and autoscale configs.
+//!
+//! Alongside the event queue, the loop maintains the fleet pending count
+//! and in-service/active counts incrementally (the reference loop re-sums
+//! them every event) and reuses one `ReplicaView` buffer for routing.
 
 pub mod autoscaler;
 pub mod replica;
@@ -32,7 +66,10 @@ use crate::costmodel::calibrate;
 use crate::engine::common::ArrivalFeed;
 use crate::engine::{Engine, EngineCfg, EngineKind};
 use crate::metrics::{Histogram, RunMetrics, Summary};
+use crate::util::f64_total_key;
 use crate::workload::Request;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// Fleet configuration.
 #[derive(Debug, Clone)]
@@ -90,6 +127,10 @@ pub struct ClusterMetrics {
     /// side of the autoscaling trade-off.
     pub replica_seconds: f64,
     pub peak_replicas: usize,
+    /// Virtual-time events the co-simulation loop processed (arrivals,
+    /// replica completions, autoscaler ticks) — divided by wall time, this
+    /// is the events/sec figure in `BENCH_hotpath.json`.
+    pub events: usize,
     /// TTFT / TBT distributions, merged from per-replica histograms.
     pub ttft_hist: Histogram,
     pub tbt_hist: Histogram,
@@ -117,6 +158,31 @@ impl ClusterMetrics {
     }
 }
 
+/// Staleness predicate shared by every heap inspection: a popped/peeked
+/// entry `(k, i)` is live iff it still matches replica i's authoritative
+/// key (`key_of[i]`, `NaN` = no event) and the replica is still in
+/// service. Anything else is a lazily-dropped leftover.
+fn entry_live(key_of: &[f64], replicas: &[Replica], k: u64, i: usize) -> bool {
+    i < key_of.len()
+        && !key_of[i].is_nan()
+        && f64_total_key(key_of[i]) == k
+        && replicas[i].in_service()
+}
+
+/// Register newly created replicas (indices `key_of.len()..n`): no event
+/// key yet (fresh engines expose none), but queued in `primed` so each
+/// one's first step lands on the next global event after its creation —
+/// matching when the reference loop first steps it, which pins the
+/// engines' trajectory-accounting start time. Crucially the primed list
+/// does NOT feed the next-event minimum: a fresh replica must never pull
+/// the fleet clock backward or conjure an event of its own.
+fn prime_new_replicas(key_of: &mut Vec<f64>, primed: &mut Vec<usize>, n: usize) {
+    while key_of.len() < n {
+        primed.push(key_of.len());
+        key_of.push(f64::NAN);
+    }
+}
+
 fn mean_lengths(trace: &[Request]) -> (f64, f64) {
     if trace.is_empty() {
         return (1.0, 1.0);
@@ -132,12 +198,22 @@ pub struct Cluster {
     pub cfg: ClusterCfg,
     pub replicas: Vec<Replica>,
     pub router: Router,
+    /// When set, [`Cluster::run`] records every processed event time into
+    /// [`Cluster::event_times`] (property tests assert monotonicity).
+    pub record_event_times: bool,
+    pub event_times: Vec<f64>,
 }
 
 impl Cluster {
     pub fn new(cfg: ClusterCfg) -> Self {
         let policy = cfg.policy;
-        Cluster { cfg, replicas: Vec::new(), router: Router::new(policy) }
+        Cluster {
+            cfg,
+            replicas: Vec::new(),
+            router: Router::new(policy),
+            record_event_times: false,
+            event_times: Vec::new(),
+        }
     }
 
     fn active_views(&self) -> Vec<ReplicaView> {
@@ -148,7 +224,20 @@ impl Cluster {
         self.replicas.iter().filter(|r| r.is_active()).count()
     }
 
-    /// Co-simulate the fleet over a time-sorted trace.
+    /// Build the autoscaler (if configured) for a fresh run.
+    fn build_scaler(&self, trace: &[Request]) -> Option<Autoscaler> {
+        self.cfg.autoscale.map(|acfg| {
+            let cost = calibrate(&self.cfg.engine.gpu);
+            let (mp, mo) = mean_lengths(trace);
+            Autoscaler::new(
+                acfg,
+                autoscaler::predict_replica_rate(&cost, &self.cfg.engine, mp, mo),
+            )
+        })
+    }
+
+    /// Co-simulate the fleet over a time-sorted trace with the O(log R)
+    /// event-queue loop (see the module docs for the queue invariants).
     pub fn run(&mut self, trace: &[Request]) -> ClusterMetrics {
         let cfg = self.cfg.clone();
         let n0 = match &cfg.autoscale {
@@ -157,11 +246,8 @@ impl Cluster {
         };
         self.replicas = (0..n0).map(|i| Replica::new(i, cfg.kind, &cfg.engine, 0.0)).collect();
         self.router = Router::new(cfg.policy);
-        let mut scaler = cfg.autoscale.map(|acfg| {
-            let cost = calibrate(&cfg.engine.gpu);
-            let (mp, mo) = mean_lengths(trace);
-            Autoscaler::new(acfg, autoscaler::predict_replica_rate(&cost, &cfg.engine, mp, mo))
-        });
+        self.event_times.clear();
+        let mut scaler = self.build_scaler(trace);
         let mut next_tick = scaler.as_ref().map(|s| s.cfg.interval);
 
         let mut feed = ArrivalFeed::new(trace);
@@ -174,6 +260,288 @@ impl Cluster {
         let mut last_t = 0.0f64;
         let mut arrivals_since_tick = 0usize;
         let mut next_id = n0;
+        let mut events = 0usize;
+
+        // Event-queue state. `key_of[i]` is replica i's authoritative next
+        // event time (NaN = none); heap entries are lazily-invalidated
+        // hints; `live_events` counts in-service replicas with a key.
+        let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+        let mut key_of: Vec<f64> = Vec::new();
+        let mut live_events = 0usize;
+        // Replicas awaiting their first step (stepped at the next event).
+        let mut primed: Vec<usize> = Vec::new();
+        // Incremental fleet counters (the reference loop re-sums these).
+        let mut pending_total = 0usize;
+        let mut in_service = n0;
+        let mut active_cnt = n0;
+        // Reusable per-event scratch.
+        let mut stepped: Vec<usize> = Vec::new();
+        let mut views_buf: Vec<ReplicaView> = Vec::new();
+        let mut kv_buf: Vec<f64> = Vec::new();
+
+        prime_new_replicas(&mut key_of, &mut primed, self.replicas.len());
+
+        loop {
+            if feed.exhausted() && pending_total == 0 {
+                break;
+            }
+
+            // Earliest live replica event (skim stale heap entries).
+            let heap_min = loop {
+                match heap.peek() {
+                    None => break None,
+                    Some(&Reverse((k, i))) => {
+                        if entry_live(&key_of, &self.replicas, k, i) {
+                            break Some(key_of[i]);
+                        }
+                        heap.pop();
+                    }
+                }
+            };
+
+            // Fleet-wide next event: earliest arrival, earliest replica
+            // event, or the next autoscaler tick.
+            let mut t = f64::INFINITY;
+            if let Some(a) = feed.peek_time() {
+                t = t.min(a);
+            }
+            if let Some(h) = heap_min {
+                t = t.min(h);
+            }
+            if let Some(tick) = next_tick {
+                t = t.min(tick);
+            }
+            if !t.is_finite() {
+                t = self.replicas.iter().map(|r| r.eng.now()).fold(last_t, f64::max);
+            }
+            if t > cfg.engine.max_virtual_time {
+                break;
+            }
+
+            // Replica-seconds accrue for every in-service replica.
+            replica_seconds += in_service as f64 * (t - last_t).max(0.0);
+            last_t = t;
+            events += 1;
+            if self.record_event_times {
+                self.event_times.push(t);
+            }
+
+            stepped.clear();
+
+            // Route arrivals due at t. Views are rebuilt per arrival (into
+            // the reused buffer) so load-aware policies see same-instant
+            // dispatches.
+            for r in feed.pop_until(t) {
+                views_buf.clear();
+                views_buf.extend(
+                    self.replicas.iter().filter(|x| x.is_active()).map(|x| x.view()),
+                );
+                let target = self.router.route(&views_buf, r);
+                // Replicas are never removed from the vec (only retired in
+                // place), so fleet position == replica id.
+                let rep = &mut self.replicas[target];
+                debug_assert_eq!(rep.id, target);
+                rep.eng.inject(*r);
+                rep.routed += 1;
+                pending_total += 1;
+                arrivals_since_tick += 1;
+                stepped.push(target);
+            }
+
+            // Pop every replica whose event is due at t.
+            while let Some(&Reverse((k, i))) = heap.peek() {
+                if !entry_live(&key_of, &self.replicas, k, i) {
+                    heap.pop();
+                    continue;
+                }
+                if key_of[i] <= t {
+                    heap.pop();
+                    key_of[i] = f64::NAN;
+                    live_events -= 1;
+                    stepped.push(i);
+                } else {
+                    break;
+                }
+            }
+
+            // Replicas spawned since the previous event take their first
+            // step now (the reference loop steps every replica every event).
+            stepped.append(&mut primed);
+
+            // Step the affected replicas to t in replica order (matching the
+            // reference loop's full-fleet iteration order), then refresh
+            // their event keys.
+            stepped.sort_unstable();
+            stepped.dedup();
+            let mut drained_any = false;
+            for &i in &stepped {
+                let rep = &mut self.replicas[i];
+                if !rep.in_service() {
+                    continue;
+                }
+                let out = rep.eng.step(t);
+                pending_total -= out.completed;
+                match rep.eng.next_event() {
+                    Some(e) => {
+                        if key_of[i].is_nan() {
+                            key_of[i] = e;
+                            live_events += 1;
+                            heap.push(Reverse((f64_total_key(e), i)));
+                        } else if key_of[i] != e {
+                            key_of[i] = e;
+                            heap.push(Reverse((f64_total_key(e), i)));
+                        }
+                    }
+                    None => {
+                        if !key_of[i].is_nan() {
+                            key_of[i] = f64::NAN;
+                            live_events -= 1;
+                        }
+                    }
+                }
+                if rep.drained() {
+                    drained_any = true;
+                }
+            }
+
+            // Autoscaler tick: observe the post-step fleet, maybe act.
+            if let (Some(s), Some(tick)) = (scaler.as_mut(), next_tick) {
+                if t + 1e-12 >= tick {
+                    views_buf.clear();
+                    views_buf.extend(
+                        self.replicas.iter().filter(|x| x.is_active()).map(|x| x.view()),
+                    );
+                    kv_buf.clear();
+                    kv_buf.extend(views_buf.iter().map(|v| v.kv_usage));
+                    let obs = FleetObs {
+                        now: t,
+                        arrival_rate: arrivals_since_tick as f64 / s.cfg.interval,
+                        active_replicas: views_buf.len(),
+                        total_pending: pending_total,
+                        mean_kv: crate::util::mean(&kv_buf),
+                        max_kv: kv_buf.iter().fold(0.0f64, |a, &b| a.max(b)),
+                    };
+                    if let Some(target) = s.decide(&obs) {
+                        let from = views_buf.len();
+                        self.rescale(target, t, &mut next_id, &cfg);
+                        scale_events.push(ScaleEvent { time: t, from, to: target });
+                        // Scale actions are rare: recount the fleet and
+                        // prime any freshly spawned replicas.
+                        prime_new_replicas(&mut key_of, &mut primed, self.replicas.len());
+                        in_service = self.replicas.iter().filter(|r| r.in_service()).count();
+                        active_cnt = self.active_count();
+                        drained_any = true; // a drained-empty replica may retire now
+                    }
+                    next_tick = Some(tick + s.cfg.interval);
+                    arrivals_since_tick = 0;
+                }
+            }
+
+            // Retire drained replicas, merging their metrics into the pool.
+            // (Only reachable right after a step or scale-down, so the scan
+            // runs on a vanishing fraction of events.)
+            if drained_any {
+                for i in 0..self.replicas.len() {
+                    if self.replicas[i].drained() {
+                        // A replica drained by a scale action (rather than
+                        // by its own step) syncs to t first, so trajectory
+                        // accounting ends at the same instant as in the
+                        // reference loop.
+                        if self.replicas[i].eng.now() < t {
+                            self.replicas[i].eng.step(t);
+                        }
+                        if !key_of[i].is_nan() {
+                            key_of[i] = f64::NAN;
+                            live_events -= 1;
+                        }
+                        let m = self.replicas[i].retire(t);
+                        ttft_hist.merge(&m.ttft_histogram());
+                        tbt_hist.merge(&m.tbt_histogram());
+                        fleet.merge(m);
+                        in_service -= 1;
+                    }
+                }
+            }
+
+            peak_replicas = peak_replicas.max(active_cnt);
+
+            if live_events == 0 && feed.exhausted() && pending_total > 0 {
+                // Nothing schedulable fleet-wide and nothing will arrive.
+                break;
+            }
+        }
+
+        // Collect the survivors, syncing each engine to the loop's final
+        // event time (the reference loop stepped every replica there).
+        for rep in self.replicas.iter_mut() {
+            if rep.in_service() {
+                if rep.eng.now() < last_t {
+                    rep.eng.step(last_t);
+                }
+                rep.state = ReplicaState::Draining; // permit retire() bookkeeping
+                let m = rep.retire(last_t);
+                rep.retired_at = None; // still in service at end of run
+                ttft_hist.merge(&m.ttft_histogram());
+                tbt_hist.merge(&m.tbt_histogram());
+                fleet.merge(m);
+            }
+        }
+        fleet.timeouts = trace.len() - fleet.records.len();
+
+        let replicas = self
+            .replicas
+            .iter()
+            .map(|r| ReplicaStats {
+                id: r.id,
+                routed: r.routed,
+                completed: r.eng.completed(),
+                started_at: r.started_at,
+                retired_at: r.retired_at,
+            })
+            .collect();
+
+        ClusterMetrics {
+            fleet,
+            replicas,
+            scale_events,
+            suppressed_scales: scaler.as_ref().map_or(0, |s| s.suppressed),
+            replica_seconds,
+            peak_replicas,
+            events,
+            ttft_hist,
+            tbt_hist,
+        }
+    }
+
+    /// The historical O(R)-per-event co-simulation loop: every iteration
+    /// re-sums fleet pending, scans every replica for the minimum next
+    /// event, and steps the whole fleet. Retained as the behavioral
+    /// reference for [`Cluster::run`] — `tests/golden_digest.rs` asserts
+    /// both produce equivalent metrics (structural identity, times within
+    /// 1 ns) — and as the baseline side of the `BENCH_hotpath.json` fleet
+    /// macro-benchmark.
+    pub fn run_reference(&mut self, trace: &[Request]) -> ClusterMetrics {
+        let cfg = self.cfg.clone();
+        let n0 = match &cfg.autoscale {
+            Some(a) => cfg.replicas.clamp(a.min_replicas, a.max_replicas),
+            None => cfg.replicas,
+        };
+        self.replicas = (0..n0).map(|i| Replica::new(i, cfg.kind, &cfg.engine, 0.0)).collect();
+        self.router = Router::new(cfg.policy);
+        let mut scaler = self.build_scaler(trace);
+        let mut next_tick = scaler.as_ref().map(|s| s.cfg.interval);
+
+        let mut feed = ArrivalFeed::new(trace);
+        let mut fleet = RunMetrics::default();
+        let mut ttft_hist = Histogram::new();
+        let mut tbt_hist = Histogram::new();
+        let mut scale_events: Vec<ScaleEvent> = Vec::new();
+        let mut replica_seconds = 0.0f64;
+        let mut peak_replicas = n0;
+        let mut last_t = 0.0f64;
+        let mut arrivals_since_tick = 0usize;
+        let mut next_id = n0;
+        let mut events = 0usize;
 
         loop {
             let pending: usize = self.replicas.iter().map(|r| r.eng.pending()).sum();
@@ -206,6 +574,7 @@ impl Cluster {
             let in_service = self.replicas.iter().filter(|r| r.in_service()).count();
             replica_seconds += in_service as f64 * (t - last_t).max(0.0);
             last_t = t;
+            events += 1;
 
             // Route arrivals due at t. Views are rebuilt per arrival so
             // load-aware policies see same-instant dispatches.
@@ -303,6 +672,7 @@ impl Cluster {
             suppressed_scales: scaler.as_ref().map_or(0, |s| s.suppressed),
             replica_seconds,
             peak_replicas,
+            events,
             ttft_hist,
             tbt_hist,
         }
@@ -386,6 +756,7 @@ mod tests {
             let routed: usize = m.replicas.iter().map(|r| r.routed).sum();
             assert_eq!(routed, 60, "{} routed != offered", policy.name());
             assert_eq!(m.ttft_hist.count(), m.fleet.records.len() as u64);
+            assert!(m.events > 0, "event counter must track loop iterations");
         }
     }
 
@@ -464,5 +835,27 @@ mod tests {
         }
         let m = run_cluster(&cc, &trace);
         assert_eq!(m.fleet.records.len() + m.fleet.timeouts, 60, "responses lost in drain");
+    }
+
+    #[test]
+    fn event_loop_matches_reference_loop() {
+        // The heap loop and the O(R)-scan reference loop must agree on the
+        // full metric surface (the exhaustive digest comparison lives in
+        // tests/golden_digest.rs).
+        let trace = generate(Dataset::Mixed, 50, 6.0, 31);
+        for replicas in [1usize, 3] {
+            let policy = RoutingPolicy::JoinShortestQueue;
+            let cc = ClusterCfg::new(EngineKind::Nexus, ecfg(), replicas, policy);
+            let a = Cluster::new(cc.clone()).run(&trace);
+            let b = Cluster::new(cc).run_reference(&trace);
+            assert_eq!(a.fleet.records.len(), b.fleet.records.len());
+            assert_eq!(a.fleet.timeouts, b.fleet.timeouts);
+            assert_eq!(a.fleet.recomputes, b.fleet.recomputes);
+            let (sa, sb) = (a.summary(), b.summary());
+            assert!((sa.mean_ttft - sb.mean_ttft).abs() < 1e-9, "x{replicas} ttft");
+            assert!((sa.mean_tbt - sb.mean_tbt).abs() < 1e-9, "x{replicas} tbt");
+            assert!((a.replica_seconds - b.replica_seconds).abs() < 1e-6);
+            assert_eq!(a.peak_replicas, b.peak_replicas);
+        }
     }
 }

@@ -39,16 +39,23 @@ impl Replica {
         }
     }
 
+    #[inline]
     pub fn is_active(&self) -> bool {
         self.state == ReplicaState::Active
     }
 
     /// Consuming capacity (and replica-seconds): active or draining.
+    /// Retired replicas' stale event-queue entries are lazily dropped by
+    /// the cluster loop (see the invariants in [`crate::cluster`]).
+    #[inline]
     pub fn in_service(&self) -> bool {
         self.state != ReplicaState::Retired
     }
 
-    /// Routing snapshot (callers filter to active replicas).
+    /// Routing snapshot (callers filter to active replicas). Called once
+    /// per active replica per arrival on the routing hot path — both
+    /// accessors are O(1) counter/ratio reads, no engine scan.
+    #[inline]
     pub fn view(&self) -> ReplicaView {
         ReplicaView {
             index: self.id,

@@ -106,6 +106,11 @@ impl Router {
 
     /// Pick the target replica for one arrival. `views` must describe the
     /// currently *active* replicas (non-empty; draining replicas excluded).
+    ///
+    /// The router never retains `views` past the call, so the cluster loop
+    /// refills one reusable buffer per arrival instead of allocating a
+    /// fresh snapshot (§Perf) — same-instant dispatches still see each
+    /// other because the buffer is rebuilt between arrivals.
     pub fn route(&mut self, views: &[ReplicaView], req: &Request) -> usize {
         assert!(!views.is_empty(), "route with no active replicas");
         self.dispatched += 1;

@@ -5,14 +5,20 @@
 //! Reproduces the §6.2.2 failure mode: an aggressive prefill side can
 //! overrun the transfer buffer, forcing evictions whose KV must be
 //! recomputed — under bursty load the system livelocks on recompute.
+//!
+//! Hot-path layout (§Perf): `waiting` / `running` are insertion-ordered
+//! indexed sets with O(1) membership updates; in-flight transfers are
+//! compacted in place instead of rebuilt; batch assembly reuses
+//! engine-owned buffers throughout.
 
 use super::common::{chunk_attn_pairs, ReqState};
 use super::{Engine, EngineCfg, EngineKind, StepOutcome};
-use crate::gpusim::Sim;
+use crate::gpusim::{Completion, Sim};
 use crate::kv::{KvCache, TransferBuffer};
 use crate::metrics::RunMetrics;
 use crate::model::OpWork;
-use crate::sched::{fcfs_batch, PrefillItem};
+use crate::sched::{fcfs_batch_into, PrefillItem, SchedScratch};
+use crate::util::OrderedIdSet;
 use crate::workload::Request;
 use std::time::Instant;
 
@@ -45,9 +51,9 @@ pub struct DisaggEngine {
     buffer: TransferBuffer,
     metrics: RunMetrics,
     states: Vec<Option<ReqState>>,
-    waiting: Vec<usize>, // prefill queue
+    waiting: OrderedIdSet, // prefill queue
     transfers: Vec<InTransfer>,
-    running: Vec<usize>, // decoding on GPU 1
+    running: OrderedIdSet, // decoding on GPU 1
     p_inflight: Option<PrefillIter>,
     d_inflight: Option<DecodeIter>,
     /// Requests evicted from the buffer retry prefill after a backoff.
@@ -55,6 +61,17 @@ pub struct DisaggEngine {
     injected: usize,
     done: usize,
     tag: u64,
+    // Reusable hot-path buffers (§Perf).
+    cand_buf: Vec<usize>,
+    queue_buf: Vec<PrefillItem>,
+    picked_buf: Vec<usize>,
+    ops_buf: Vec<OpWork>,
+    p_comp_buf: Vec<Completion>,
+    d_comp_buf: Vec<Completion>,
+    scratch: SchedScratch,
+    /// Recycled iteration vectors (returned on completion, reused on schedule).
+    spare_ids: Vec<Vec<usize>>,
+    spare_parts: Vec<Vec<(usize, usize)>>,
 }
 
 impl DisaggEngine {
@@ -75,15 +92,24 @@ impl DisaggEngine {
             buffer,
             metrics: RunMetrics::default(),
             states: Vec::new(),
-            waiting: Vec::new(),
+            waiting: OrderedIdSet::new(),
             transfers: Vec::new(),
-            running: Vec::new(),
+            running: OrderedIdSet::new(),
             p_inflight: None,
             d_inflight: None,
             retry_at: Vec::new(),
             injected: 0,
             done: 0,
             tag: 0,
+            cand_buf: Vec::new(),
+            queue_buf: Vec::new(),
+            picked_buf: Vec::new(),
+            ops_buf: Vec::new(),
+            p_comp_buf: Vec::new(),
+            d_comp_buf: Vec::new(),
+            scratch: SchedScratch::default(),
+            spare_ids: Vec::new(),
+            spare_parts: Vec::new(),
         }
     }
 
@@ -101,30 +127,38 @@ impl DisaggEngine {
 
     fn schedule_prefill(&mut self) -> Option<PrefillIter> {
         let wall = Instant::now();
-        let cfg = &self.cfg;
         let now = self.psim.now();
-        let queue: Vec<PrefillItem> = self
-            .waiting
-            .iter()
-            .map(|&id| {
-                let st = self.states[id].as_ref().unwrap();
+        self.queue_buf.clear();
+        {
+            let queue_buf = &mut self.queue_buf;
+            let states = &self.states;
+            queue_buf.extend(self.waiting.iter().map(|id| {
+                let st = states[id].as_ref().unwrap();
                 PrefillItem {
                     id,
                     prompt_len: st.effective_prompt,
                     prefilled: st.prefilled,
                     arrival: st.req.arrival,
                 }
-            })
-            .collect();
-        if queue.is_empty() {
+            }));
+        }
+        if self.queue_buf.is_empty() {
             return None;
         }
-        let picked = fcfs_batch(&queue, cfg.token_budget, true);
-        let mut parts: Vec<(usize, usize)> = Vec::new();
-        let mut left = cfg.token_budget;
-        for qidx in picked {
-            let item = &queue[qidx];
-            let take = item.remaining().min(cfg.chunk_size).min(left);
+        let mut picked = std::mem::take(&mut self.picked_buf);
+        fcfs_batch_into(
+            &self.queue_buf,
+            self.cfg.token_budget,
+            true,
+            &mut self.scratch,
+            &mut picked,
+        );
+        let mut parts = self.spare_parts.pop().unwrap_or_default();
+        parts.clear();
+        let mut left = self.cfg.token_budget;
+        for &qidx in &picked {
+            let item = self.queue_buf[qidx];
+            let take = item.remaining().min(self.cfg.chunk_size).min(left);
             if take == 0 {
                 break;
             }
@@ -133,7 +167,9 @@ impl DisaggEngine {
                 left -= take;
             }
         }
+        self.picked_buf = picked;
         if parts.is_empty() {
+            self.spare_parts.push(parts);
             return None;
         }
         let n: usize = parts.iter().map(|&(_, t)| t).sum();
@@ -148,9 +184,10 @@ impl DisaggEngine {
                 finishing += 1;
             }
         }
-        let ops: Vec<OpWork> = cfg.model.prefill_ops(n, pairs, kv_read, finishing);
+        self.ops_buf.clear();
+        self.cfg.model.prefill_ops_into(n, pairs, kv_read, finishing, &mut self.ops_buf);
         self.tag += 1;
-        self.psim.submit(0, &ops, self.tag);
+        self.psim.submit(0, &self.ops_buf, self.tag);
         let share = wall.elapsed().as_secs_f64() / parts.len() as f64;
         for &(id, _) in &parts {
             self.states[id].as_mut().unwrap().sched_time += share;
@@ -160,47 +197,56 @@ impl DisaggEngine {
 
     fn schedule_decode(&mut self) -> Option<DecodeIter> {
         let wall = Instant::now();
-        let cfg = &self.cfg;
         let now = self.dsim.now();
-        let mut ids: Vec<usize> = self.running.clone();
-        ids.truncate(cfg.max_batch);
-        let mut decode_ids = Vec::with_capacity(ids.len());
-        for id in ids {
+        let mut cand = std::mem::take(&mut self.cand_buf);
+        cand.clear();
+        cand.extend(self.running.iter().take(self.cfg.max_batch));
+        let mut decode_ids = self.spare_ids.pop().unwrap_or_default();
+        decode_ids.clear();
+        for &id in &cand {
             loop {
                 if self.dkv.try_reserve(id, 1) {
                     decode_ids.push(id);
                     break;
                 }
-                let victim = self
-                    .running
-                    .iter()
-                    .copied()
-                    .filter(|&v| v != id)
-                    .max_by(|&a, &b| {
-                        let aa = self.states[a].as_ref().unwrap().req.arrival;
-                        let bb = self.states[b].as_ref().unwrap().req.arrival;
-                        aa.partial_cmp(&bb).unwrap()
-                    });
+                // Preempt the newest running request that is not `id` (ties
+                // break toward the latest-ordered entry, like the historical
+                // `Iterator::max_by` over the running vec).
+                let mut victim: Option<usize> = None;
+                let mut victim_arrival = f64::NEG_INFINITY;
+                for v in self.running.iter() {
+                    if v == id {
+                        continue;
+                    }
+                    let a = self.states[v].as_ref().unwrap().req.arrival;
+                    if a >= victim_arrival {
+                        victim_arrival = a;
+                        victim = Some(v);
+                    }
+                }
                 match victim {
                     Some(v) => {
                         self.dkv.release(v);
-                        self.running.retain(|&x| x != v);
+                        self.running.remove(v);
                         decode_ids.retain(|&x| x != v);
                         self.states[v].as_mut().unwrap().restart_for_recompute(now);
-                        self.waiting.push(v);
+                        self.waiting.insert(v);
                         self.metrics.recomputes += 1;
                     }
                     None => break,
                 }
             }
         }
+        self.cand_buf = cand;
         if decode_ids.is_empty() {
+            self.spare_ids.push(decode_ids);
             return None;
         }
         let ctx: f64 = decode_ids.iter().map(|&id| self.dkv.tokens(id) as f64).sum();
-        let ops = cfg.model.decode_ops(decode_ids.len(), ctx);
+        self.ops_buf.clear();
+        self.cfg.model.decode_ops_into(decode_ids.len(), ctx, &mut self.ops_buf);
         self.tag += 1;
-        self.dsim.submit(0, &ops, self.tag);
+        self.dsim.submit(0, &self.ops_buf, self.tag);
         let share = wall.elapsed().as_secs_f64() / decode_ids.len() as f64;
         for &id in &decode_ids {
             self.states[id].as_mut().unwrap().sched_time += share;
@@ -242,22 +288,24 @@ impl Engine for DisaggEngine {
     fn inject(&mut self, req: Request) {
         self.slot(req.id);
         self.states[req.id] = Some(ReqState::new(req));
-        self.waiting.push(req.id);
+        self.waiting.insert(req.id);
         self.injected += 1;
     }
 
     fn step(&mut self, t: f64) -> StepOutcome {
         // Advance both GPUs to the global event time.
         let now = t.max(self.psim.now()).max(self.dsim.now());
-        let p_done = self.psim.advance_to(now + 1e-12);
-        let d_done = self.dsim.advance_to(now + 1e-12);
+        let mut p_done = std::mem::take(&mut self.p_comp_buf);
+        self.psim.advance_to_into(now + 1e-12, &mut p_done);
+        let mut d_done = std::mem::take(&mut self.d_comp_buf);
+        self.dsim.advance_to_into(now + 1e-12, &mut d_done);
         let mut finished = 0usize;
 
         // Buffer-evicted requests rejoin the prefill queue.
         let waiting = &mut self.waiting;
         self.retry_at.retain(|&(id, at)| {
             if at <= now {
-                waiting.push(id);
+                waiting.insert(id);
                 false
             } else {
                 true
@@ -265,18 +313,18 @@ impl Engine for DisaggEngine {
         });
 
         // Prefill GPU completions → stage KV into the transfer buffer.
-        for c in p_done {
+        for &c in &p_done {
             let it = self.p_inflight.take().expect("prefill completion w/o inflight");
             let end = c.time;
             let dur = end - it.start;
-            for (id, take) in it.parts {
+            for &(id, take) in &it.parts {
                 let st = self.states[id].as_mut().unwrap();
                 st.exec_time += dur;
                 st.queue_time += (it.start - st.queue_since).max(0.0);
                 st.queue_since = end;
                 st.prefilled += take;
                 if st.prefill_done() {
-                    self.waiting.retain(|&x| x != id);
+                    self.waiting.remove(id);
                     if st.generated == 0 {
                         st.note_first_token(end);
                     }
@@ -305,48 +353,52 @@ impl Engine for DisaggEngine {
                     }
                 }
             }
+            self.spare_parts.push(it.parts);
         }
+        self.p_comp_buf = p_done;
 
-        // Completed transfers → admit on the decode GPU.
-        let mut still: Vec<InTransfer> = Vec::new();
-        for tr in self.transfers.drain(..) {
+        // Completed transfers → admit on the decode GPU (in-place
+        // compaction; relative order of still-pending transfers preserved).
+        let mut keep = 0usize;
+        for i in 0..self.transfers.len() {
+            let mut tr = self.transfers[i];
             if tr.ready_at <= now {
                 let st = self.states[tr.id].as_ref().unwrap();
                 let ctx = st.req.prompt_len + st.generated;
                 if self.dkv.try_reserve(tr.id, ctx) {
                     self.buffer.pop(tr.id);
-                    self.running.push(tr.id);
-                } else {
-                    // Decode side full: KV waits in the buffer.
-                    let mut tr = tr;
-                    tr.ready_at = now + 0.05;
-                    still.push(tr);
+                    self.running.insert(tr.id);
+                    continue;
                 }
-            } else {
-                still.push(tr);
+                // Decode side full: KV waits in the buffer.
+                tr.ready_at = now + 0.05;
             }
+            self.transfers[keep] = tr;
+            keep += 1;
         }
-        self.transfers = still;
+        self.transfers.truncate(keep);
 
         // Decode GPU completions.
-        for c in d_done {
+        for &c in &d_done {
             let it = self.d_inflight.take().expect("decode completion w/o inflight");
             let end = c.time;
             let dur = end - it.start;
-            for id in it.ids {
+            for &id in &it.ids {
                 let st = self.states[id].as_mut().unwrap();
                 st.exec_time += dur;
                 st.note_token(end, dur);
                 if st.decode_done() {
                     let st = self.states[id].take().unwrap();
                     self.dkv.release(id);
-                    self.running.retain(|&x| x != id);
+                    self.running.remove(id);
                     self.metrics.push(st.into_record(end));
                     self.done += 1;
                     finished += 1;
                 }
             }
+            self.spare_ids.push(it.ids);
         }
+        self.d_comp_buf = d_done;
 
         // Schedule prefill GPU (FCFS chunked, prefill-only batches).
         if self.p_inflight.is_none() {

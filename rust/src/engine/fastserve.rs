@@ -7,10 +7,15 @@
 //! service. Under KV pressure, low-priority requests are swapped to host
 //! memory over PCIe; when swap-in fails, the KV is dropped and recomputed —
 //! the collapse mode the paper observes under load (§6.2.1).
+//!
+//! Hot-path layout (§Perf): MLFQ levels are insertion-ordered indexed sets
+//! with O(1) demotion/removal, and the per-iteration pick list, swap-victim
+//! list, operator list, completion list, and batch manifests all reuse
+//! engine-owned buffers.
 
 use super::common::{chunk_attn_pairs, ReqState};
 use super::{Engine, EngineCfg, EngineKind, StepOutcome};
-use crate::gpusim::Sim;
+use crate::gpusim::{Completion, Sim};
 use crate::kv::KvCache;
 use crate::metrics::RunMetrics;
 use crate::model::{OpClass, OpWork};
@@ -39,6 +44,14 @@ pub struct FastServeEngine {
     injected: usize,
     done: usize,
     tag: u64,
+    // Reusable hot-path buffers (§Perf).
+    picked_buf: Vec<usize>,
+    victims_buf: Vec<usize>,
+    ops_buf: Vec<OpWork>,
+    comp_buf: Vec<Completion>,
+    /// Recycled `Iter` vectors (returned on completion, reused on schedule).
+    spare_ids: Vec<Vec<usize>>,
+    spare_parts: Vec<Vec<(usize, usize)>>,
 }
 
 impl FastServeEngine {
@@ -58,6 +71,12 @@ impl FastServeEngine {
             injected: 0,
             done: 0,
             tag: 0,
+            picked_buf: Vec::new(),
+            victims_buf: Vec::new(),
+            ops_buf: Vec::new(),
+            comp_buf: Vec::new(),
+            spare_ids: Vec::new(),
+            spare_parts: Vec::new(),
         }
     }
 
@@ -80,9 +99,12 @@ impl FastServeEngine {
 
         // Head-level requests, FIFO. Prefill requests run their whole
         // remaining prompt (FastServe predates chunked prefill).
-        let picked = self.mlfq.pick(self.cfg.max_batch);
-        let mut decode_ids: Vec<usize> = Vec::new();
-        let mut prefill_parts: Vec<(usize, usize)> = Vec::new();
+        let mut picked = std::mem::take(&mut self.picked_buf);
+        self.mlfq.pick_into(self.cfg.max_batch, &mut picked);
+        let mut decode_ids = self.spare_ids.pop().unwrap_or_default();
+        decode_ids.clear();
+        let mut prefill_parts = self.spare_parts.pop().unwrap_or_default();
+        prefill_parts.clear();
         let mut budget = self.cfg.token_budget;
         let mut reserve_failed = false;
 
@@ -152,42 +174,46 @@ impl FastServeEngine {
             }
             budget = budget.saturating_sub(need_tokens.min(budget));
         }
+        self.picked_buf = picked;
 
         // Proactive swap-out: push deep-level, non-batch requests to host
         // memory when usage crosses the high watermark or an admission
         // failed for lack of blocks.
         if self.kv.usage() > SWAP_HIGH || reserve_failed {
-            let mut victims: Vec<usize> = (0..self.states.len())
-                .filter(|&id| {
-                    self.states[id].is_some()
-                        && self.kv.tokens(id) > 0
-                        && !decode_ids.contains(&id)
-                        && !prefill_parts.iter().any(|&(p, _)| p == id)
-                })
-                .collect();
+            let mut victims = std::mem::take(&mut self.victims_buf);
+            victims.clear();
+            victims.extend((0..self.states.len()).filter(|&id| {
+                self.states[id].is_some()
+                    && self.kv.tokens(id) > 0
+                    && !decode_ids.contains(&id)
+                    && !prefill_parts.iter().any(|&(p, _)| p == id)
+            }));
             // Deepest MLFQ level (lowest priority) first.
             victims.sort_by_key(|&id| std::cmp::Reverse(self.mlfq.level_of(id).unwrap_or(0)));
-            for id in victims {
+            for &id in &victims {
                 if self.kv.usage() <= SWAP_LOW {
                     break;
                 }
                 pcie_bytes += self.kv.swap_out(id);
                 self.metrics.swaps += 1;
             }
+            self.victims_buf = victims;
         }
 
         if decode_ids.is_empty() && prefill_parts.is_empty() {
+            self.spare_ids.push(decode_ids);
+            self.spare_parts.push(prefill_parts);
             return None;
         }
 
-        let mut ops: Vec<OpWork> = Vec::new();
+        self.ops_buf.clear();
         // Swap traffic occupies PCIe and stalls the iteration.
         if pcie_bytes > 0.0 {
-            ops.push(OpWork { class: OpClass::Comm, flops: 0.0, bytes: pcie_bytes });
+            self.ops_buf.push(OpWork { class: OpClass::Comm, flops: 0.0, bytes: pcie_bytes });
         }
         if !decode_ids.is_empty() {
             let ctx: f64 = decode_ids.iter().map(|&id| self.kv.tokens(id) as f64).sum();
-            ops.extend(self.cfg.model.decode_ops(decode_ids.len(), ctx));
+            self.cfg.model.decode_ops_into(decode_ids.len(), ctx, &mut self.ops_buf);
         }
         if !prefill_parts.is_empty() {
             let n: usize = prefill_parts.iter().map(|&(_, t)| t).sum();
@@ -202,11 +228,11 @@ impl FastServeEngine {
                     finishing += 1;
                 }
             }
-            ops.extend(self.cfg.model.prefill_ops(n, pairs, kv_read, finishing));
+            self.cfg.model.prefill_ops_into(n, pairs, kv_read, finishing, &mut self.ops_buf);
         }
 
         self.tag += 1;
-        self.sim.submit(0, &ops, self.tag);
+        self.sim.submit(0, &self.ops_buf, self.tag);
 
         let sched = wall.elapsed().as_secs_f64();
         let parts = decode_ids.len() + prefill_parts.len();
@@ -247,14 +273,15 @@ impl Engine for FastServeEngine {
     }
 
     fn step(&mut self, t: f64) -> StepOutcome {
-        let completions = self.sim.advance_to(t + 1e-12);
+        let mut comps = std::mem::take(&mut self.comp_buf);
+        self.sim.advance_to_into(t + 1e-12, &mut comps);
         let mut finished = 0usize;
-        for c in completions {
+        for &c in &comps {
             let it = self.inflight.take().expect("completion without inflight");
             debug_assert_eq!(c.tag, self.tag);
             let now = c.time;
             let dur = now - it.start;
-            for id in it.decode_ids {
+            for &id in &it.decode_ids {
                 let st = self.states[id].as_mut().unwrap();
                 st.exec_time += dur;
                 st.note_token(now, dur);
@@ -268,7 +295,7 @@ impl Engine for FastServeEngine {
                     finished += 1;
                 }
             }
-            for (id, take) in it.prefill_parts {
+            for &(id, take) in &it.prefill_parts {
                 let st = self.states[id].as_mut().unwrap();
                 st.exec_time += dur;
                 st.queue_time += (it.start - st.queue_since).max(0.0);
@@ -287,7 +314,11 @@ impl Engine for FastServeEngine {
                     }
                 }
             }
+            // Recycle the manifest's vectors for future iterations.
+            self.spare_ids.push(it.decode_ids);
+            self.spare_parts.push(it.prefill_parts);
         }
+        self.comp_buf = comps;
         if self.inflight.is_none() {
             self.inflight = self.schedule();
         }

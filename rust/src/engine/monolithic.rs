@@ -6,14 +6,22 @@
 //! Because the whole iteration completes as a unit, lightweight decode
 //! tokens experience the full mixed-iteration latency — the fine-grained
 //! interference the paper measures in Fig. 4.
+//!
+//! Hot-path layout (§Perf): `waiting` / `running` are insertion-ordered
+//! indexed sets ([`OrderedIdSet`]) so membership updates are O(1) instead of
+//! the historical `Vec::retain` scans, and every per-iteration collection
+//! (candidate list, prefill queue, operator list, completion list, batch
+//! manifests) draws from reusable buffers — steady-state batch assembly
+//! performs zero allocations.
 
 use super::common::{chunk_attn_pairs, ReqState};
 use super::{Engine, EngineCfg, EngineKind, StepOutcome};
-use crate::gpusim::Sim;
+use crate::gpusim::{Completion, Sim};
 use crate::kv::KvCache;
 use crate::metrics::RunMetrics;
 use crate::model::OpWork;
-use crate::sched::{mixed_batch, PrefillItem, RadixCache};
+use crate::sched::{mixed_batch_into, MixedBatch, PrefillItem, RadixCache, SchedScratch};
+use crate::util::OrderedIdSet;
 use crate::workload::Request;
 use std::time::Instant;
 
@@ -33,12 +41,22 @@ pub struct MonolithicEngine {
     kv: KvCache,
     metrics: RunMetrics,
     states: Vec<Option<ReqState>>,
-    waiting: Vec<usize>,
-    running: Vec<usize>,
+    waiting: OrderedIdSet,
+    running: OrderedIdSet,
     inflight: Option<Iter>,
     injected: usize,
     done: usize,
     tag: u64,
+    // Reusable hot-path buffers (§Perf).
+    cand_buf: Vec<usize>,
+    queue_buf: Vec<PrefillItem>,
+    ops_buf: Vec<OpWork>,
+    comp_buf: Vec<Completion>,
+    mixed_buf: MixedBatch,
+    scratch: SchedScratch,
+    /// Recycled `Iter` vectors (returned on completion, reused on schedule).
+    spare_ids: Vec<Vec<usize>>,
+    spare_parts: Vec<Vec<(usize, usize)>>,
 }
 
 impl MonolithicEngine {
@@ -62,12 +80,20 @@ impl MonolithicEngine {
             kv,
             metrics: RunMetrics::default(),
             states: Vec::new(),
-            waiting: Vec::new(),
-            running: Vec::new(),
+            waiting: OrderedIdSet::new(),
+            running: OrderedIdSet::new(),
             inflight: None,
             injected: 0,
             done: 0,
             tag: 0,
+            cand_buf: Vec::new(),
+            queue_buf: Vec::new(),
+            ops_buf: Vec::new(),
+            comp_buf: Vec::new(),
+            mixed_buf: MixedBatch::default(),
+            scratch: SchedScratch::default(),
+            spare_ids: Vec::new(),
+            spare_parts: Vec::new(),
         }
     }
 
@@ -95,77 +121,97 @@ impl MonolithicEngine {
         // Continuous batching: every running decode joins (capped), each
         // reserving one more KV token. On OOM, vLLM preempts the most
         // recently arrived running request (recompute-on-resume).
-        let mut decode_ids: Vec<usize> = Vec::new();
-        let mut candidates = self.running.clone();
-        candidates.truncate(self.cfg.max_batch);
-        for id in candidates {
+        let mut decode_ids = self.spare_ids.pop().unwrap_or_default();
+        decode_ids.clear();
+        let mut cand = std::mem::take(&mut self.cand_buf);
+        cand.clear();
+        cand.extend(self.running.iter().take(self.cfg.max_batch));
+        for &id in &cand {
             loop {
                 if self.kv.try_reserve(id, 1) {
                     decode_ids.push(id);
                     break;
                 }
-                // Preempt the newest running request that is not `id`.
-                let victim = self
-                    .running
-                    .iter()
-                    .copied()
-                    .filter(|&v| v != id)
-                    .max_by(|&a, &b| {
-                        let aa = self.states[a].as_ref().unwrap().req.arrival;
-                        let bb = self.states[b].as_ref().unwrap().req.arrival;
-                        aa.partial_cmp(&bb).unwrap()
-                    });
+                // Preempt the newest running request that is not `id` (ties
+                // break toward the latest-ordered entry, like the historical
+                // `Iterator::max_by` over the running vec).
+                let mut victim: Option<usize> = None;
+                let mut victim_arrival = f64::NEG_INFINITY;
+                for v in self.running.iter() {
+                    if v == id {
+                        continue;
+                    }
+                    let a = self.states[v].as_ref().unwrap().req.arrival;
+                    if a >= victim_arrival {
+                        victim_arrival = a;
+                        victim = Some(v);
+                    }
+                }
                 match victim {
                     Some(v) => {
                         self.kv.release(v);
-                        self.running.retain(|&x| x != v);
+                        self.running.remove(v);
                         decode_ids.retain(|&x| x != v);
                         let st = self.states[v].as_mut().unwrap();
                         st.restart_for_recompute(now);
-                        self.waiting.push(v);
+                        self.waiting.insert(v);
                         self.metrics.recomputes += 1;
                     }
                     None => break, // lone request can't grow: stall this tick
                 }
             }
         }
+        self.cand_buf = cand;
 
         // FCFS prefill chunks fill the remaining token budget.
-        let queue: Vec<PrefillItem> = self
-            .waiting
-            .iter()
-            .map(|&id| {
-                let st = self.states[id].as_ref().unwrap();
+        self.queue_buf.clear();
+        {
+            let queue_buf = &mut self.queue_buf;
+            let states = &self.states;
+            queue_buf.extend(self.waiting.iter().map(|id| {
+                let st = states[id].as_ref().unwrap();
                 PrefillItem {
                     id,
                     prompt_len: st.effective_prompt,
                     prefilled: st.prefilled,
                     arrival: st.req.arrival,
                 }
-            })
-            .collect();
-        let mixed = mixed_batch(&decode_ids, &queue, self.cfg.token_budget, self.cfg.chunk_size);
+            }));
+        }
+        mixed_batch_into(
+            decode_ids.len(),
+            &self.queue_buf,
+            self.cfg.token_budget,
+            self.cfg.chunk_size,
+            &mut self.scratch,
+            &mut self.mixed_buf,
+        );
 
-        let mut prefill_parts: Vec<(usize, usize)> = Vec::new();
-        for (qidx, take) in mixed.prefill_parts {
-            let id = queue[qidx].id;
+        let mixed = std::mem::take(&mut self.mixed_buf);
+        let mut prefill_parts = self.spare_parts.pop().unwrap_or_default();
+        prefill_parts.clear();
+        for &(qidx, take) in &mixed.prefill_parts {
+            let id = self.queue_buf[qidx].id;
             if self.kv.try_reserve(id, take) {
                 prefill_parts.push((id, take));
             }
             // On reserve failure the chunk is dropped this iteration; decode
             // completions free blocks and the request retries next tick.
         }
+        self.mixed_buf = mixed;
 
         if decode_ids.is_empty() && prefill_parts.is_empty() {
+            self.spare_ids.push(decode_ids);
+            self.spare_parts.push(prefill_parts);
             return None;
         }
 
         // Compose the iteration's operator list (decode + prefill share it —
         // that is exactly the interference mechanism).
-        let mut ops: Vec<OpWork> = Vec::new();
+        self.ops_buf.clear();
         if !decode_ids.is_empty() {
             let ctx: f64 = decode_ids.iter().map(|&id| self.kv.tokens(id) as f64).sum();
-            ops.extend(self.cfg.model.decode_ops(decode_ids.len(), ctx));
+            self.cfg.model.decode_ops_into(decode_ids.len(), ctx, &mut self.ops_buf);
         }
         if !prefill_parts.is_empty() {
             let n: usize = prefill_parts.iter().map(|&(_, t)| t).sum();
@@ -180,11 +226,11 @@ impl MonolithicEngine {
                     finishing += 1;
                 }
             }
-            ops.extend(self.cfg.model.prefill_ops(n, pairs, kv_read, finishing));
+            self.cfg.model.prefill_ops_into(n, pairs, kv_read, finishing, &mut self.ops_buf);
         }
 
         self.tag += 1;
-        self.sim.submit(0, &ops, self.tag);
+        self.sim.submit(0, &self.ops_buf, self.tag);
 
         // Attribute real scheduler wall time across participants (Fig. 12).
         let sched = wall.elapsed().as_secs_f64();
@@ -231,44 +277,45 @@ impl Engine for MonolithicEngine {
         }
         self.slot(req.id);
         self.states[req.id] = Some(st);
-        self.waiting.push(req.id);
+        self.waiting.insert(req.id);
         self.injected += 1;
     }
 
     fn step(&mut self, t: f64) -> StepOutcome {
-        let completions = self.sim.advance_to(t + 1e-12);
+        let mut comps = std::mem::take(&mut self.comp_buf);
+        self.sim.advance_to_into(t + 1e-12, &mut comps);
         let mut finished = 0usize;
-        for c in completions {
+        for &c in &comps {
             let it = self.inflight.take().expect("completion without inflight iter");
             debug_assert_eq!(c.tag, self.tag);
             let now = c.time;
             let dur = now - it.start;
             // Decode tokens.
-            for id in it.decode_ids {
+            for &id in &it.decode_ids {
                 let st = self.states[id].as_mut().unwrap();
                 st.exec_time += dur;
                 st.note_token(now, dur);
                 if st.decode_done() {
                     let st = self.states[id].take().unwrap();
                     self.kv.release(id);
-                    self.running.retain(|&x| x != id);
+                    self.running.remove(id);
                     self.metrics.push(st.into_record(now));
                     self.done += 1;
                     finished += 1;
                 }
             }
             // Prefill chunks.
-            for (id, take) in it.prefill_parts {
+            for &(id, take) in &it.prefill_parts {
                 let st = self.states[id].as_mut().unwrap();
                 st.exec_time += dur;
                 st.queue_time += (it.start - st.queue_since).max(0.0);
                 st.queue_since = now;
                 st.prefilled += take;
                 if st.prefill_done() {
-                    self.waiting.retain(|&x| x != id);
+                    self.waiting.remove(id);
                     if st.generated > 0 {
                         // Recompute path: tokens already emitted; resume decode.
-                        self.running.push(id);
+                        self.running.insert(id);
                     } else {
                         st.note_first_token(now);
                         if st.decode_done() {
@@ -278,12 +325,16 @@ impl Engine for MonolithicEngine {
                             self.done += 1;
                             finished += 1;
                         } else {
-                            self.running.push(id);
+                            self.running.insert(id);
                         }
                     }
                 }
             }
+            // Recycle the manifest's vectors for future iterations.
+            self.spare_ids.push(it.decode_ids);
+            self.spare_parts.push(it.prefill_parts);
         }
+        self.comp_buf = comps;
         if self.inflight.is_none() {
             self.inflight = self.schedule();
         }

@@ -11,16 +11,23 @@
 //! Ablation flags reproduce the Fig.-13 variants: `use_spf = false` falls
 //! back to FCFS prefill ("PF-DF"); `dynamic_sm = false` pins a static 50/50
 //! split ("Wo-SC").
+//!
+//! Hot-path layout (§Perf): `waiting` / `running` are insertion-ordered
+//! indexed sets ([`OrderedIdSet`]) with O(1) membership updates, and batch
+//! assembly (candidate lists, prefill queue, operator lists, estimate ops,
+//! completion lists, iteration manifests) reuses engine-owned buffers so the
+//! per-iteration path allocates nothing in steady state.
 
 use super::common::{chunk_attn_pairs, ReqState};
 use super::{Engine, EngineCfg, EngineKind, StepOutcome};
 use crate::costmodel::{calibrate, CostModel};
-use crate::gpusim::Sim;
+use crate::gpusim::{Completion, Sim};
 use crate::kv::KvCache;
 use crate::metrics::RunMetrics;
 use crate::model::OpWork;
 use crate::partition::{BatchState, Mode, PartitionController};
-use crate::sched::{fcfs_batch, spf_batch, PrefillItem};
+use crate::sched::{fcfs_batch_into, spf_batch_into, PrefillItem, SchedScratch};
+use crate::util::OrderedIdSet;
 use crate::workload::Request;
 use std::time::Instant;
 
@@ -58,8 +65,8 @@ pub struct NexusEngine {
     kv: KvCache,
     metrics: RunMetrics,
     states: Vec<Option<ReqState>>,
-    waiting: Vec<usize>,
-    running: Vec<usize>,
+    waiting: OrderedIdSet,
+    running: OrderedIdSet,
     inflight: [Option<Iter>; 2],
     injected: usize,
     done: usize,
@@ -72,6 +79,17 @@ pub struct NexusEngine {
     kv_time: f64,
     start_t: f64,
     last_t: f64,
+    // Reusable hot-path buffers (§Perf).
+    cand_buf: Vec<usize>,
+    queue_buf: Vec<PrefillItem>,
+    picked_buf: Vec<usize>,
+    ops_buf: Vec<OpWork>,
+    est_buf: Vec<OpWork>,
+    comp_buf: Vec<Completion>,
+    scratch: SchedScratch,
+    /// Recycled `Iter` vectors (returned on completion, reused on schedule).
+    spare_ids: Vec<Vec<usize>>,
+    spare_parts: Vec<Vec<(usize, usize)>>,
 }
 
 impl NexusEngine {
@@ -91,8 +109,8 @@ impl NexusEngine {
             kv,
             metrics: RunMetrics::default(),
             states: Vec::new(),
-            waiting: Vec::new(),
-            running: Vec::new(),
+            waiting: OrderedIdSet::new(),
+            running: OrderedIdSet::new(),
             inflight: [None, None],
             injected: 0,
             done: 0,
@@ -102,6 +120,15 @@ impl NexusEngine {
             kv_time: 0.0,
             start_t: f64::NAN,
             last_t: 0.0,
+            cand_buf: Vec::new(),
+            queue_buf: Vec::new(),
+            picked_buf: Vec::new(),
+            ops_buf: Vec::new(),
+            est_buf: Vec::new(),
+            comp_buf: Vec::new(),
+            scratch: SchedScratch::default(),
+            spare_ids: Vec::new(),
+            spare_parts: Vec::new(),
         }
     }
 
@@ -122,74 +149,103 @@ impl NexusEngine {
         let wall = Instant::now();
         let now = self.sim.now();
 
-        let (decode_ids, prefill_parts, ops) = if stream == DECODE_STREAM {
+        let mut decode_ids = self.spare_ids.pop().unwrap_or_default();
+        decode_ids.clear();
+        let mut prefill_parts = self.spare_parts.pop().unwrap_or_default();
+        prefill_parts.clear();
+        self.ops_buf.clear();
+
+        if stream == DECODE_STREAM {
             // FCFS decode: every running request contributes one token.
-            let mut ids: Vec<usize> = self.running.clone();
-            ids.truncate(self.cfg.max_batch);
-            let mut decode_ids = Vec::with_capacity(ids.len());
-            for id in ids {
+            let mut cand = std::mem::take(&mut self.cand_buf);
+            cand.clear();
+            cand.extend(self.running.iter().take(self.cfg.max_batch));
+            for &id in &cand {
                 loop {
                     if self.kv.try_reserve(id, 1) {
                         decode_ids.push(id);
                         break;
                     }
-                    let victim = self
-                        .running
-                        .iter()
-                        .copied()
-                        .filter(|&v| v != id)
-                        .max_by(|&a, &b| {
-                            let aa = self.states[a].as_ref().unwrap().req.arrival;
-                            let bb = self.states[b].as_ref().unwrap().req.arrival;
-                            aa.partial_cmp(&bb).unwrap()
-                        });
+                    // Preempt the newest running request that is not `id`
+                    // (ties break toward the latest-ordered entry, like the
+                    // historical `Iterator::max_by` over the running vec).
+                    let mut victim: Option<usize> = None;
+                    let mut victim_arrival = f64::NEG_INFINITY;
+                    for v in self.running.iter() {
+                        if v == id {
+                            continue;
+                        }
+                        let a = self.states[v].as_ref().unwrap().req.arrival;
+                        if a >= victim_arrival {
+                            victim_arrival = a;
+                            victim = Some(v);
+                        }
+                    }
                     match victim {
                         Some(v) => {
                             self.kv.release(v);
-                            self.running.retain(|&x| x != v);
+                            self.running.remove(v);
                             decode_ids.retain(|&x| x != v);
                             self.states[v].as_mut().unwrap().restart_for_recompute(now);
-                            self.waiting.push(v);
+                            self.waiting.insert(v);
                             self.metrics.recomputes += 1;
                         }
                         None => break,
                     }
                 }
             }
+            self.cand_buf = cand;
             if decode_ids.is_empty() {
+                self.spare_ids.push(decode_ids);
+                self.spare_parts.push(prefill_parts);
                 return None;
             }
             let ctx: f64 = decode_ids.iter().map(|&id| self.kv.tokens(id) as f64).sum();
-            let ops = self.cfg.model.decode_ops(decode_ids.len(), ctx);
-            (decode_ids, Vec::new(), ops)
+            self.cfg.model.decode_ops_into(decode_ids.len(), ctx, &mut self.ops_buf);
         } else {
             // Prefill: SPF (Algorithm 2) or FCFS ablation, over the token
             // budget, chunking the head request if nothing fits whole.
-            let queue: Vec<PrefillItem> = self
-                .waiting
-                .iter()
-                .map(|&id| {
-                    let st = self.states[id].as_ref().unwrap();
+            self.queue_buf.clear();
+            {
+                let queue_buf = &mut self.queue_buf;
+                let states = &self.states;
+                queue_buf.extend(self.waiting.iter().map(|id| {
+                    let st = states[id].as_ref().unwrap();
                     PrefillItem {
                         id,
                         prompt_len: st.effective_prompt,
                         prefilled: st.prefilled,
                         arrival: st.req.arrival,
                     }
-                })
-                .collect();
-            if queue.is_empty() {
+                }));
+            }
+            if self.queue_buf.is_empty() {
+                self.spare_ids.push(decode_ids);
+                self.spare_parts.push(prefill_parts);
                 return None;
             }
-            let picked = if self.flags.use_spf {
-                spf_batch(&queue, now, self.cfg.token_budget, self.cfg.gamma)
+            let mut picked = std::mem::take(&mut self.picked_buf);
+            if self.flags.use_spf {
+                spf_batch_into(
+                    &self.queue_buf,
+                    now,
+                    self.cfg.token_budget,
+                    self.cfg.gamma,
+                    &mut self.scratch,
+                    &mut picked,
+                );
             } else {
-                fcfs_batch(&queue, self.cfg.token_budget, true)
-            };
-            let mut prefill_parts: Vec<(usize, usize)> = Vec::new();
+                fcfs_batch_into(
+                    &self.queue_buf,
+                    self.cfg.token_budget,
+                    true,
+                    &mut self.scratch,
+                    &mut picked,
+                );
+            }
             let mut left = self.cfg.token_budget;
-            for qidx in picked {
-                let item = &queue[qidx];
+            for &qidx in &picked {
+                let item = self.queue_buf[qidx];
                 let take = item.remaining().min(self.cfg.chunk_size).min(left);
                 if take == 0 {
                     break;
@@ -199,7 +255,10 @@ impl NexusEngine {
                     left -= take;
                 }
             }
+            self.picked_buf = picked;
             if prefill_parts.is_empty() {
+                self.spare_ids.push(decode_ids);
+                self.spare_parts.push(prefill_parts);
                 return None;
             }
             let n: usize = prefill_parts.iter().map(|&(_, t)| t).sum();
@@ -214,22 +273,21 @@ impl NexusEngine {
                     finishing += 1;
                 }
             }
-            let ops = self.cfg.model.prefill_ops(n, pairs, kv_read, finishing);
-            (Vec::new(), prefill_parts, ops)
-        };
+            self.cfg.model.prefill_ops_into(n, pairs, kv_read, finishing, &mut self.ops_buf);
+        }
 
         // Proactive per-batch partition decision (Algorithm 1). The other
         // phase's ops are estimated from its current queue/batch state.
         if self.flags.dynamic_sm {
-            let other_ops = if stream == DECODE_STREAM {
-                self.estimate_prefill_ops()
+            if stream == DECODE_STREAM {
+                self.estimate_prefill_ops();
             } else {
-                self.estimate_decode_ops()
-            };
+                self.estimate_decode_ops();
+            }
             let (pre_ops, dec_ops): (&[OpWork], &[OpWork]) = if stream == DECODE_STREAM {
-                (&other_ops, &ops)
+                (&self.est_buf, &self.ops_buf)
             } else {
-                (&ops, &other_ops)
+                (&self.ops_buf, &self.est_buf)
             };
             let batch = BatchState {
                 prefill_ops: pre_ops,
@@ -244,7 +302,7 @@ impl NexusEngine {
         }
 
         self.tag += 1;
-        self.sim.submit(stream, &ops, self.tag);
+        self.sim.submit(stream, &self.ops_buf, self.tag);
 
         let sched = wall.elapsed().as_secs_f64();
         let parts = decode_ids.len() + prefill_parts.len();
@@ -259,41 +317,47 @@ impl NexusEngine {
         Some(Iter { decode_ids, prefill_parts, start: now })
     }
 
-    /// Estimate the next prefill batch's ops for the partition decision.
-    fn estimate_prefill_ops(&self) -> Vec<OpWork> {
-        if self.waiting.is_empty() {
-            return Vec::new();
-        }
-        let cfg = &self.cfg;
-        let mut n = 0usize;
-        let mut pairs = 0.0;
-        let mut kv_read = 0.0;
-        for &id in &self.waiting {
-            let st = self.states[id].as_ref().unwrap();
-            let take = (st.effective_prompt - st.prefilled)
-                .min(cfg.chunk_size)
-                .min(cfg.token_budget - n);
-            if take == 0 {
-                break;
+    /// Estimate the next prefill batch's ops for the partition decision,
+    /// writing into the reusable `est_buf`.
+    fn estimate_prefill_ops(&mut self) {
+        let mut out = std::mem::take(&mut self.est_buf);
+        out.clear();
+        if !self.waiting.is_empty() {
+            let cfg = &self.cfg;
+            let mut n = 0usize;
+            let mut pairs = 0.0;
+            let mut kv_read = 0.0;
+            for id in self.waiting.iter() {
+                let st = self.states[id].as_ref().unwrap();
+                let take = (st.effective_prompt - st.prefilled)
+                    .min(cfg.chunk_size)
+                    .min(cfg.token_budget - n);
+                if take == 0 {
+                    break;
+                }
+                pairs += chunk_attn_pairs(st.prefilled, take);
+                kv_read += (st.prefilled + take) as f64;
+                n += take;
             }
-            pairs += chunk_attn_pairs(st.prefilled, take);
-            kv_read += (st.prefilled + take) as f64;
-            n += take;
+            if n > 0 {
+                cfg.model.prefill_ops_into(n, pairs, kv_read, 0, &mut out);
+            }
         }
-        if n == 0 {
-            return Vec::new();
-        }
-        cfg.model.prefill_ops(n, pairs, kv_read, 0)
+        self.est_buf = out;
     }
 
-    /// Estimate the current decode batch's ops for the partition decision.
-    fn estimate_decode_ops(&self) -> Vec<OpWork> {
-        if self.running.is_empty() {
-            return Vec::new();
+    /// Estimate the current decode batch's ops for the partition decision,
+    /// writing into the reusable `est_buf`.
+    fn estimate_decode_ops(&mut self) {
+        let mut out = std::mem::take(&mut self.est_buf);
+        out.clear();
+        if !self.running.is_empty() {
+            let n = self.running.len().min(self.cfg.max_batch);
+            let ctx: f64 =
+                self.running.iter().take(n).map(|id| self.kv.tokens(id) as f64).sum();
+            self.cfg.model.decode_ops_into(n, ctx, &mut out);
         }
-        let n = self.running.len().min(self.cfg.max_batch);
-        let ctx: f64 = self.running.iter().take(n).map(|&id| self.kv.tokens(id) as f64).sum();
-        self.cfg.model.decode_ops(n, ctx)
+        self.est_buf = out;
     }
 }
 
@@ -318,7 +382,7 @@ impl Engine for NexusEngine {
     fn inject(&mut self, req: Request) {
         self.slot(req.id);
         self.states[req.id] = Some(ReqState::new(req));
-        self.waiting.push(req.id);
+        self.waiting.insert(req.id);
         self.injected += 1;
     }
 
@@ -339,35 +403,36 @@ impl Engine for NexusEngine {
         }
         self.last_t = t;
 
-        let completions = self.sim.advance_to(t + 1e-12);
+        let mut comps = std::mem::take(&mut self.comp_buf);
+        self.sim.advance_to_into(t + 1e-12, &mut comps);
         let mut finished = 0usize;
-        for c in completions {
+        for &c in &comps {
             let it = self.inflight[c.stream].take().expect("completion without inflight");
             let now = c.time;
             let dur = now - it.start;
-            for id in it.decode_ids {
+            for &id in &it.decode_ids {
                 let st = self.states[id].as_mut().unwrap();
                 st.exec_time += dur;
                 st.note_token(now, dur);
                 if st.decode_done() {
                     let st = self.states[id].take().unwrap();
                     self.kv.release(id);
-                    self.running.retain(|&x| x != id);
+                    self.running.remove(id);
                     self.metrics.push(st.into_record(now));
                     self.done += 1;
                     finished += 1;
                 }
             }
-            for (id, take) in it.prefill_parts {
+            for &(id, take) in &it.prefill_parts {
                 let st = self.states[id].as_mut().unwrap();
                 st.exec_time += dur;
                 st.queue_time += (it.start - st.queue_since).max(0.0);
                 st.queue_since = now;
                 st.prefilled += take;
                 if st.prefill_done() {
-                    self.waiting.retain(|&x| x != id);
+                    self.waiting.remove(id);
                     if st.generated > 0 {
-                        self.running.push(id); // resumed after recompute
+                        self.running.insert(id); // resumed after recompute
                     } else {
                         st.note_first_token(now);
                         if st.decode_done() {
@@ -377,12 +442,16 @@ impl Engine for NexusEngine {
                             self.done += 1;
                             finished += 1;
                         } else {
-                            self.running.push(id);
+                            self.running.insert(id);
                         }
                     }
                 }
             }
+            // Recycle the manifest's vectors for future iterations.
+            self.spare_ids.push(it.decode_ids);
+            self.spare_parts.push(it.prefill_parts);
         }
+        self.comp_buf = comps;
 
         // Schedule idle streams. Decode first: it is latency-critical
         // and its batch state feeds the partition decision.

@@ -153,12 +153,17 @@ impl KvCache {
 /// Finite staging buffer between a prefill engine and a decode engine
 /// (vLLM-P/D). When full, new KV hand-offs force evictions on the prefill
 /// side, which the decode side must recompute — the §6.2.2 failure mode.
+///
+/// Staged entries are keyed by request id: the decode side pulls each
+/// request's KV individually (completion order follows the per-request
+/// transfer timers, not buffer order), so [`TransferBuffer::pop`] is an
+/// O(1) map removal rather than the historical O(n) scan + `Vec::remove`.
 #[derive(Debug, Clone)]
 pub struct TransferBuffer {
     pub capacity_bytes: f64,
     pub used_bytes: f64,
-    /// (req id, bytes) in FIFO order.
-    queue: Vec<(usize, f64)>,
+    /// req id -> staged bytes.
+    staged: HashMap<usize, f64>,
     pub evictions: usize,
 }
 
@@ -167,7 +172,7 @@ impl TransferBuffer {
         TransferBuffer {
             capacity_bytes,
             used_bytes: 0.0,
-            queue: Vec::new(),
+            staged: HashMap::new(),
             evictions: 0,
         }
     }
@@ -180,16 +185,24 @@ impl TransferBuffer {
             return false;
         }
         self.used_bytes += bytes;
-        self.queue.push((id, bytes));
+        self.staged.insert(id, bytes);
         true
     }
 
     /// Remove a request's staged KV once the decode side pulled it.
     pub fn pop(&mut self, id: usize) -> Option<f64> {
-        let idx = self.queue.iter().position(|&(q, _)| q == id)?;
-        let (_, bytes) = self.queue.remove(idx);
+        let bytes = self.staged.remove(&id)?;
         self.used_bytes -= bytes;
         Some(bytes)
+    }
+
+    /// Number of requests currently staged.
+    pub fn len(&self) -> usize {
+        self.staged.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.staged.is_empty()
     }
 
     pub fn occupancy(&self) -> f64 {

@@ -171,6 +171,112 @@ impl RunMetrics {
         h
     }
 
+    /// Behavioral digest of a run: an FNV-1a hash over every per-request
+    /// record (sorted by id, so fleet merge order is irrelevant) plus the
+    /// run-level event counters, with all virtual times quantized to 1 ns.
+    ///
+    /// The golden-digest tests use this to pin behavior where two code
+    /// paths advance the simulators in *identical* time slices (re-running
+    /// the same loop, or a 1-replica cluster vs. the plain engine drive):
+    /// there the virtual times are bit-identical and any reordering,
+    /// dropped token, or changed preemption shows up as a mismatch. For
+    /// comparisons across *different* slicings (the event-queue fleet loop
+    /// vs. the step-everyone reference loop), quantized hashing is not
+    /// boundary-safe — use [`RunMetrics::deviation`] with a tolerance
+    /// instead. Wall-clock-derived fields (`sched_time`) and the
+    /// time-weighted trajectory means are excluded from the digest.
+    pub fn digest(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        fn mix(h: &mut u64, x: u64) {
+            for b in x.to_le_bytes() {
+                *h ^= b as u64;
+                *h = h.wrapping_mul(FNV_PRIME);
+            }
+        }
+        /// Quantize a virtual time / ratio to integer nanoseconds.
+        fn q(x: f64) -> u64 {
+            (x * 1e9).round() as i64 as u64
+        }
+        let mut order: Vec<usize> = (0..self.records.len()).collect();
+        order.sort_by_key(|&i| self.records[i].id);
+        let mut h = FNV_OFFSET;
+        for &i in &order {
+            let r = &self.records[i];
+            mix(&mut h, r.id as u64);
+            mix(&mut h, q(r.arrival));
+            mix(&mut h, q(r.first_token));
+            mix(&mut h, q(r.finish));
+            mix(&mut h, r.prompt_len as u64);
+            mix(&mut h, r.output_len as u64);
+            mix(&mut h, r.token_gaps.len() as u64);
+            for &g in &r.token_gaps {
+                mix(&mut h, q(g));
+            }
+            mix(&mut h, q(r.queue_time));
+            mix(&mut h, q(r.exec_time));
+        }
+        mix(&mut h, self.records.len() as u64);
+        mix(&mut h, q(self.makespan));
+        mix(&mut h, self.repartitions as u64);
+        mix(&mut h, self.suppressed_repartitions as u64);
+        mix(&mut h, self.swaps as u64);
+        mix(&mut h, self.recomputes as u64);
+        mix(&mut h, self.timeouts as u64);
+        mix(&mut h, q(self.peak_kv_usage));
+        h
+    }
+
+    /// Structural-equivalence check against another run: `None` when the
+    /// runs differ structurally (request sets, per-request token counts, or
+    /// any event counter), otherwise the maximum absolute deviation across
+    /// every virtual-time field (records matched by id, so fleet merge
+    /// order is irrelevant).
+    ///
+    /// Two serving loops that made identical scheduling decisions deviate
+    /// only by float-associativity noise from advancing the GPU simulators
+    /// in different time slices (≪ 1 ns); any real behavioral change either
+    /// shifts times by whole iteration durations or trips a counter. The
+    /// differential tests assert `deviation ≤ 1e-9` — unlike quantized
+    /// digest equality, a tolerance cannot be defeated by a value landing
+    /// on a rounding-bucket boundary.
+    pub fn deviation(&self, other: &RunMetrics) -> Option<f64> {
+        if self.records.len() != other.records.len()
+            || self.repartitions != other.repartitions
+            || self.suppressed_repartitions != other.suppressed_repartitions
+            || self.swaps != other.swaps
+            || self.recomputes != other.recomputes
+            || self.timeouts != other.timeouts
+        {
+            return None;
+        }
+        let mut a: Vec<&RequestRecord> = self.records.iter().collect();
+        let mut b: Vec<&RequestRecord> = other.records.iter().collect();
+        a.sort_by_key(|r| r.id);
+        b.sort_by_key(|r| r.id);
+        let mut dev = (self.makespan - other.makespan)
+            .abs()
+            .max((self.peak_kv_usage - other.peak_kv_usage).abs());
+        for (x, y) in a.iter().zip(&b) {
+            if x.id != y.id
+                || x.prompt_len != y.prompt_len
+                || x.output_len != y.output_len
+                || x.token_gaps.len() != y.token_gaps.len()
+            {
+                return None;
+            }
+            dev = dev.max((x.arrival - y.arrival).abs());
+            dev = dev.max((x.first_token - y.first_token).abs());
+            dev = dev.max((x.finish - y.finish).abs());
+            dev = dev.max((x.queue_time - y.queue_time).abs());
+            dev = dev.max((x.exec_time - y.exec_time).abs());
+            for (g, h) in x.token_gaps.iter().zip(&y.token_gaps) {
+                dev = dev.max((g - h).abs());
+            }
+        }
+        Some(dev)
+    }
+
     /// Figure-12 style decomposition, normalized per output token.
     pub fn breakdown(&self) -> StageBreakdown {
         let mut b = StageBreakdown::default();
@@ -295,6 +401,50 @@ mod tests {
         assert!((a.makespan - 6.0).abs() < 1e-12);
         // Weighted 2:6 → 0.2·0.25 + 0.8·0.75 = 0.65.
         assert!((a.mean_kv_usage - 0.65).abs() < 1e-12, "got {}", a.mean_kv_usage);
+    }
+
+    #[test]
+    fn digest_pins_behavior_and_ignores_record_order() {
+        let mut a = RunMetrics::default();
+        a.push(rec(0.0, 0.5, 2.0, 5));
+        a.push(rec(1.0, 1.2, 4.0, 10));
+        a.records[1].id = 1;
+        let mut b = RunMetrics::default();
+        b.push(rec(1.0, 1.2, 4.0, 10));
+        b.push(rec(0.0, 0.5, 2.0, 5));
+        b.records[0].id = 1;
+        assert_eq!(a.digest(), b.digest(), "merge order must not matter");
+        // Sub-ns drift is absorbed; a real change is not.
+        let mut c = a.clone();
+        c.records[0].finish += 1e-13;
+        assert_eq!(a.digest(), c.digest(), "1e-13 drift must be quantized away");
+        c.records[0].finish += 1e-3;
+        assert_ne!(a.digest(), c.digest(), "1 ms shift must change the digest");
+        let mut d = a.clone();
+        d.recomputes += 1;
+        assert_ne!(a.digest(), d.digest(), "counters are part of the digest");
+    }
+
+    #[test]
+    fn deviation_measures_drift_and_rejects_structural_change() {
+        let mut a = RunMetrics::default();
+        a.push(rec(0.0, 0.5, 2.0, 5));
+        a.push(rec(1.0, 1.2, 4.0, 10));
+        a.records[1].id = 1;
+        let mut b = a.clone();
+        // Reordered records with sub-ns drift: tiny deviation, not None.
+        b.records.swap(0, 1);
+        b.records[0].finish += 3e-13;
+        let dev = a.deviation(&b).expect("structurally identical");
+        assert!(dev >= 3e-13 - 1e-15 && dev < 1e-9, "dev {dev}");
+        // A counter change is structural.
+        let mut c = a.clone();
+        c.recomputes = 1;
+        assert!(a.deviation(&c).is_none());
+        // A missing token gap is structural.
+        let mut d = a.clone();
+        d.records[0].token_gaps.pop();
+        assert!(a.deviation(&d).is_none());
     }
 
     #[test]

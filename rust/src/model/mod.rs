@@ -251,14 +251,29 @@ impl ModelConfig {
         kv_read_tokens: f64,
         finishing: usize,
     ) -> Vec<OpWork> {
+        let mut ops = Vec::with_capacity(6);
+        self.prefill_ops_into(n_tokens, attn_token_pairs, kv_read_tokens, finishing, &mut ops);
+        ops
+    }
+
+    /// Allocation-free [`Self::prefill_ops`]: *appends* the operator list to
+    /// `ops` (callers clear their reused buffer first; engines exploit the
+    /// append contract to compose decode + prefill + comm work into one
+    /// buffer per iteration without allocating — §Perf).
+    pub fn prefill_ops_into(
+        &self,
+        n_tokens: usize,
+        attn_token_pairs: f64,
+        kv_read_tokens: f64,
+        finishing: usize,
+        ops: &mut Vec<OpWork>,
+    ) {
         let n = n_tokens as f64;
         let d = self.d as f64;
         let dff = self.d_ff as f64;
         let kvd = self.kv_dim() as f64;
         let l = self.layers as f64;
         let b = self.dtype_bytes as f64;
-
-        let mut ops = Vec::with_capacity(6);
 
         // Q/K/V projection: n·d·(d + 2·kv_dim) MACs per layer.
         let qkv_flops = 2.0 * n * d * (d + 2.0 * kvd) * l;
@@ -318,20 +333,25 @@ impl ModelConfig {
                 bytes: comm,
             });
         }
-        ops
     }
 
     /// Operator work for a *decode* iteration over a batch of `batch`
     /// requests whose cached contexts sum to `kv_tokens`.
     pub fn decode_ops(&self, batch: usize, kv_tokens: f64) -> Vec<OpWork> {
+        let mut ops = Vec::with_capacity(6);
+        self.decode_ops_into(batch, kv_tokens, &mut ops);
+        ops
+    }
+
+    /// Allocation-free [`Self::decode_ops`]: *appends* the operator list to
+    /// `ops` (see [`Self::prefill_ops_into`] for the append contract).
+    pub fn decode_ops_into(&self, batch: usize, kv_tokens: f64, ops: &mut Vec<OpWork>) {
         let n = batch as f64;
         let d = self.d as f64;
         let dff = self.d_ff as f64;
         let kvd = self.kv_dim() as f64;
         let l = self.layers as f64;
         let b = self.dtype_bytes as f64;
-
-        let mut ops = Vec::with_capacity(6);
 
         let qkv_flops = 2.0 * n * d * (d + 2.0 * kvd) * l;
         ops.push(OpWork {
@@ -379,7 +399,6 @@ impl ModelConfig {
                 bytes: comm,
             });
         }
-        ops
     }
 
     /// Total FLOPs of a prefill iteration (for roofline sanity checks).
@@ -483,6 +502,25 @@ mod tests {
             .prefill_ops(128, 128.0 * 128.0, 128.0, 2)
             .iter()
             .any(|o| o.class == OpClass::LmHead));
+    }
+
+    #[test]
+    fn ops_into_appends_and_matches_allocating_api() {
+        let c = ModelConfig::qwen3b();
+        let mut buf = vec![OpWork { class: OpClass::Comm, flops: 0.0, bytes: 1.0 }];
+        c.decode_ops_into(8, 8.0 * 1024.0, &mut buf);
+        c.prefill_ops_into(256, 256.0 * 900.0, 900.0, 1, &mut buf);
+        let want: Vec<OpWork> = c
+            .decode_ops(8, 8.0 * 1024.0)
+            .into_iter()
+            .chain(c.prefill_ops(256, 256.0 * 900.0, 900.0, 1))
+            .collect();
+        assert_eq!(buf.len(), 1 + want.len(), "into variants must append");
+        for (got, want) in buf[1..].iter().zip(&want) {
+            assert_eq!(got.class, want.class);
+            assert_eq!(got.flops, want.flops);
+            assert_eq!(got.bytes, want.bytes);
+        }
     }
 
     #[test]

@@ -13,7 +13,17 @@
 //!   prefixes skip recomputation, shortening effective prefill length.
 
 use crate::util::rng::Rng;
+use crate::util::{f64_total_key, OrderedIdSet};
 use std::collections::HashMap;
+
+/// Reusable sort scratch for the `*_into` batch builders, so the per-batch
+/// hot path allocates nothing: engines own one and thread it through every
+/// scheduling call (§Perf).
+#[derive(Debug, Clone, Default)]
+pub struct SchedScratch {
+    /// (primary key, secondary key, id, queue index) sort records.
+    keys: Vec<(u64, u64, usize, usize)>,
+}
 
 /// A request waiting for (more) prefill.
 #[derive(Debug, Clone, Copy)]
@@ -38,30 +48,33 @@ impl PrefillItem {
 /// scheduling order; a prefix of each selected request may still be chunked
 /// by the caller if the last one does not fit entirely.
 pub fn spf_batch(queue: &[PrefillItem], now: f64, budget: usize, gamma: f64) -> Vec<usize> {
+    let mut out = Vec::new();
+    spf_batch_into(queue, now, budget, gamma, &mut SchedScratch::default(), &mut out);
+    out
+}
+
+/// Allocation-free [`spf_batch`]: clears and fills `out` with indices into
+/// `queue` in scheduling order, reusing `scratch` for the sort records.
+pub fn spf_batch_into(
+    queue: &[PrefillItem],
+    now: f64,
+    budget: usize,
+    gamma: f64,
+    scratch: &mut SchedScratch,
+    out: &mut Vec<usize>,
+) {
+    out.clear();
     // Precompute scores once and sort by order-preserving integer keys:
     // float comparators recompute/branch per comparison and are ~4x slower
     // on deep queues (§Perf).
-    #[inline]
-    fn f64_key(x: f64) -> u64 {
-        let b = x.to_bits();
-        if x >= 0.0 {
-            b ^ 0x8000_0000_0000_0000
-        } else {
-            !b
-        }
-    }
-    let mut scored: Vec<(u64, u64, usize, usize)> = queue
-        .iter()
-        .enumerate()
-        .map(|(idx, r)| {
-            let score = r.remaining() as f64 - gamma * (now - r.arrival);
-            (f64_key(score), f64_key(r.arrival), r.id, idx)
-        })
-        .collect();
-    scored.sort_unstable();
-    let mut out = Vec::new();
+    scratch.keys.clear();
+    scratch.keys.extend(queue.iter().enumerate().map(|(idx, r)| {
+        let score = r.remaining() as f64 - gamma * (now - r.arrival);
+        (f64_total_key(score), f64_total_key(r.arrival), r.id, idx)
+    }));
+    scratch.keys.sort_unstable();
     let mut total = 0usize;
-    for &(_, _, _, idx) in &scored {
+    for &(_, _, _, idx) in &scratch.keys {
         let rem = queue[idx].remaining();
         if total + rem <= budget {
             out.push(idx);
@@ -72,24 +85,37 @@ pub fn spf_batch(queue: &[PrefillItem], now: f64, budget: usize, gamma: f64) -> 
             break;
         }
     }
-    out
 }
 
 /// FCFS token-budget packing: take requests in arrival order while the
 /// budget lasts; the first non-fitting head request is included for
 /// chunking when `chunk_head` is set.
 pub fn fcfs_batch(queue: &[PrefillItem], budget: usize, chunk_head: bool) -> Vec<usize> {
-    let mut order: Vec<usize> = (0..queue.len()).collect();
-    order.sort_by(|&a, &b| {
-        queue[a]
-            .arrival
-            .partial_cmp(&queue[b].arrival)
-            .unwrap()
-            .then(queue[a].id.cmp(&queue[b].id))
-    });
     let mut out = Vec::new();
+    fcfs_batch_into(queue, budget, chunk_head, &mut SchedScratch::default(), &mut out);
+    out
+}
+
+/// Allocation-free [`fcfs_batch`]: clears and fills `out` with indices into
+/// `queue` in (arrival, id) order, reusing `scratch` for the sort records.
+pub fn fcfs_batch_into(
+    queue: &[PrefillItem],
+    budget: usize,
+    chunk_head: bool,
+    scratch: &mut SchedScratch,
+    out: &mut Vec<usize>,
+) {
+    out.clear();
+    scratch.keys.clear();
+    scratch.keys.extend(
+        queue
+            .iter()
+            .enumerate()
+            .map(|(idx, r)| (f64_total_key(r.arrival), r.id as u64, idx, 0)),
+    );
+    scratch.keys.sort_unstable();
     let mut total = 0usize;
-    for idx in order {
+    for &(_, _, idx, _) in &scratch.keys {
         let rem = queue[idx].remaining();
         if total + rem <= budget {
             out.push(idx);
@@ -101,7 +127,6 @@ pub fn fcfs_batch(queue: &[PrefillItem], budget: usize, chunk_head: bool) -> Vec
             break;
         }
     }
-    out
 }
 
 /// A mixed (chunked-prefill) batch for monolithic engines.
@@ -132,20 +157,44 @@ pub fn mixed_batch(
     token_budget: usize,
     chunk_size: usize,
 ) -> MixedBatch {
-    let mut batch = MixedBatch {
-        decode_ids: decode_ids.to_vec(),
-        prefill_parts: Vec::new(),
-    };
-    let mut left = token_budget.saturating_sub(decode_ids.len());
-    let mut order: Vec<usize> = (0..prefill_queue.len()).collect();
-    order.sort_by(|&a, &b| {
-        prefill_queue[a]
-            .arrival
-            .partial_cmp(&prefill_queue[b].arrival)
-            .unwrap()
-            .then(prefill_queue[a].id.cmp(&prefill_queue[b].id))
-    });
-    for idx in order {
+    let mut batch = MixedBatch::default();
+    batch.decode_ids.extend_from_slice(decode_ids);
+    mixed_batch_into(
+        decode_ids.len(),
+        prefill_queue,
+        token_budget,
+        chunk_size,
+        &mut SchedScratch::default(),
+        &mut batch,
+    );
+    batch
+}
+
+/// Allocation-free core of [`mixed_batch`]: clears and refills
+/// `batch.prefill_parts` in place, reusing `scratch` for the FCFS sort
+/// records. `batch.decode_ids` is left untouched — the engine hot path
+/// already owns its decode set, so copying it per iteration would be dead
+/// work; only the decode *count* matters here (it charges the token
+/// budget).
+pub fn mixed_batch_into(
+    decode_count: usize,
+    prefill_queue: &[PrefillItem],
+    token_budget: usize,
+    chunk_size: usize,
+    scratch: &mut SchedScratch,
+    batch: &mut MixedBatch,
+) {
+    batch.prefill_parts.clear();
+    let mut left = token_budget.saturating_sub(decode_count);
+    scratch.keys.clear();
+    scratch.keys.extend(
+        prefill_queue
+            .iter()
+            .enumerate()
+            .map(|(idx, r)| (f64_total_key(r.arrival), r.id as u64, idx, 0)),
+    );
+    scratch.keys.sort_unstable();
+    for &(_, _, idx, _) in &scratch.keys {
         if left == 0 {
             break;
         }
@@ -155,7 +204,6 @@ pub fn mixed_batch(
             left -= take;
         }
     }
-    batch
 }
 
 /// FastServe's skip-join multi-level feedback queue.
@@ -168,8 +216,8 @@ pub fn mixed_batch(
 pub struct Mlfq {
     /// Per-level quantum in tokens.
     pub quanta: Vec<usize>,
-    /// levels[l] = FIFO of request ids.
-    levels: Vec<Vec<usize>>,
+    /// levels[l] = FIFO of request ids (insertion-ordered, O(1) removal).
+    levels: Vec<OrderedIdSet>,
     /// id -> (level, tokens consumed at this level).
     state: HashMap<usize, (usize, usize)>,
 }
@@ -179,7 +227,7 @@ impl Mlfq {
         let quanta: Vec<usize> = (0..levels).map(|l| base_quantum << l).collect();
         Mlfq {
             quanta,
-            levels: vec![Vec::new(); levels],
+            levels: vec![OrderedIdSet::new(); levels],
             state: HashMap::new(),
         }
     }
@@ -191,7 +239,7 @@ impl Mlfq {
             .iter()
             .position(|&q| q >= prompt_len)
             .unwrap_or(self.quanta.len() - 1);
-        self.levels[lvl].push(id);
+        self.levels[lvl].insert(id);
         self.state.insert(id, (lvl, 0));
     }
 
@@ -200,15 +248,21 @@ impl Mlfq {
     /// scheduling fills the batch rather than idling slots).
     pub fn pick(&self, max: usize) -> Vec<usize> {
         let mut out = Vec::new();
+        self.pick_into(max, &mut out);
+        out
+    }
+
+    /// Allocation-free [`Mlfq::pick`]: clears and fills `out`.
+    pub fn pick_into(&self, max: usize, out: &mut Vec<usize>) {
+        out.clear();
         for lvl in &self.levels {
-            for &id in lvl {
+            for id in lvl.iter() {
                 if out.len() >= max {
-                    return out;
+                    return;
                 }
                 out.push(id);
             }
         }
-        out
     }
 
     /// Record `tokens` of service; demotes when the level quantum runs out.
@@ -216,8 +270,8 @@ impl Mlfq {
         if let Some(&(lvl, used)) = self.state.get(&id) {
             let used = used + tokens;
             if used >= self.quanta[lvl] && lvl + 1 < self.quanta.len() {
-                self.levels[lvl].retain(|&x| x != id);
-                self.levels[lvl + 1].push(id);
+                self.levels[lvl].remove(id);
+                self.levels[lvl + 1].insert(id);
                 self.state.insert(id, (lvl + 1, 0));
             } else {
                 self.state.insert(id, (lvl, used));
@@ -227,7 +281,7 @@ impl Mlfq {
 
     pub fn remove(&mut self, id: usize) {
         if let Some((lvl, _)) = self.state.remove(&id) {
-            self.levels[lvl].retain(|&x| x != id);
+            self.levels[lvl].remove(id);
         }
     }
 

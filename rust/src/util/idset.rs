@@ -1,0 +1,180 @@
+//! Insertion-ordered id set with O(1) insert / remove / membership.
+//!
+//! The serving engines keep their `waiting` / `running` request sets as
+//! insertion-ordered sequences: admission order *is* the FCFS order the
+//! schedulers consume. The historical representation (`Vec<usize>` +
+//! `retain(|&x| x != id)`) pays O(n) per removal, which turns every batch
+//! completion into a linear scan (§Perf). `OrderedIdSet` keeps the exact
+//! same observable order while making removal O(1) amortized: removed
+//! slots are tombstoned and the backing vector is compacted once
+//! tombstones outnumber live entries.
+
+/// Marker for a removed slot in `items` / an absent id in `pos`.
+const NONE: usize = usize::MAX;
+
+/// An insertion-ordered set of `usize` ids (ids must be `< usize::MAX`).
+///
+/// Semantically identical to a `Vec<usize>` maintained with `push` +
+/// `retain(|&x| x != id)`: iteration yields live ids in insertion order,
+/// and removals never reorder the survivors.
+#[derive(Debug, Clone, Default)]
+pub struct OrderedIdSet {
+    /// Ids in insertion order; removed entries become `NONE` tombstones.
+    items: Vec<usize>,
+    /// id -> index into `items` (`NONE` when absent). Sized to the largest
+    /// id ever inserted, which is fine for the dense request-id space.
+    pos: Vec<usize>,
+    live: usize,
+}
+
+impl OrderedIdSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    pub fn contains(&self, id: usize) -> bool {
+        match self.pos.get(id) {
+            Some(&p) => p != NONE,
+            None => false,
+        }
+    }
+
+    /// Append `id` at the back of the order; no-op if already present.
+    pub fn insert(&mut self, id: usize) {
+        debug_assert!(id != NONE, "id space excludes usize::MAX");
+        if self.contains(id) {
+            return;
+        }
+        if id >= self.pos.len() {
+            self.pos.resize(id + 1, NONE);
+        }
+        self.pos[id] = self.items.len();
+        self.items.push(id);
+        self.live += 1;
+    }
+
+    /// Remove `id`, preserving the relative order of the survivors.
+    /// Returns whether the id was present.
+    pub fn remove(&mut self, id: usize) -> bool {
+        let p = match self.pos.get(id) {
+            Some(&p) if p != NONE => p,
+            _ => return false,
+        };
+        self.items[p] = NONE;
+        self.pos[id] = NONE;
+        self.live -= 1;
+        // Amortized O(1): each compaction touches ≤ 2×live slots and at
+        // least `live` removals must happen before the next one.
+        if self.items.len() > 16 && self.items.len() >= 2 * self.live {
+            self.compact();
+        }
+        true
+    }
+
+    /// Drop every tombstone and re-densify the position map.
+    fn compact(&mut self) {
+        self.items.retain(|&x| x != NONE);
+        for (i, &id) in self.items.iter().enumerate() {
+            self.pos[id] = i;
+        }
+    }
+
+    /// Live ids in insertion order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.items.iter().copied().filter(|&x| x != NONE)
+    }
+
+    /// Oldest live id, if any.
+    pub fn first(&self) -> Option<usize> {
+        self.iter().next()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn insert_remove_contains() {
+        let mut s = OrderedIdSet::new();
+        assert!(s.is_empty());
+        s.insert(5);
+        s.insert(1);
+        s.insert(9);
+        assert_eq!(s.len(), 3);
+        assert!(s.contains(5) && s.contains(1) && s.contains(9));
+        assert!(!s.contains(2) && !s.contains(100));
+        assert!(s.remove(1));
+        assert!(!s.remove(1), "double remove is a no-op");
+        assert!(!s.contains(1));
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![5, 9]);
+        assert_eq!(s.first(), Some(5));
+    }
+
+    #[test]
+    fn duplicate_insert_is_noop() {
+        let mut s = OrderedIdSet::new();
+        s.insert(3);
+        s.insert(3);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![3]);
+    }
+
+    #[test]
+    fn order_matches_vec_retain_model() {
+        // Differential test: OrderedIdSet must be observationally identical
+        // to the Vec + retain bookkeeping it replaces, across random
+        // insert/remove interleavings (including re-insertion after removal,
+        // which must re-enter at the back — exactly what push does).
+        let mut rng = Rng::new(0xD1FF);
+        for _ in 0..200 {
+            let mut set = OrderedIdSet::new();
+            let mut model: Vec<usize> = Vec::new();
+            for _ in 0..rng.range_usize(1, 120) {
+                let id = rng.below(40);
+                if rng.chance(0.6) {
+                    if !model.contains(&id) {
+                        model.push(id);
+                    }
+                    set.insert(id);
+                } else {
+                    model.retain(|&x| x != id);
+                    set.remove(id);
+                }
+                assert_eq!(set.iter().collect::<Vec<_>>(), model);
+                assert_eq!(set.len(), model.len());
+                assert_eq!(set.first(), model.first().copied());
+            }
+        }
+    }
+
+    #[test]
+    fn compaction_preserves_order() {
+        let mut s = OrderedIdSet::new();
+        for id in 0..100 {
+            s.insert(id);
+        }
+        // Remove enough to trigger compaction several times.
+        for id in (0..100).step_by(2) {
+            s.remove(id);
+        }
+        let got: Vec<usize> = s.iter().collect();
+        let want: Vec<usize> = (1..100).step_by(2).collect();
+        assert_eq!(got, want);
+        // Survivors still removable / re-insertable after compaction.
+        assert!(s.remove(51));
+        s.insert(51);
+        let mut want: Vec<usize> = (1..100).step_by(2).filter(|&x| x != 51).collect();
+        want.push(51);
+        assert_eq!(s.iter().collect::<Vec<_>>(), want);
+    }
+}

@@ -6,8 +6,25 @@
 
 pub mod cli;
 pub mod fmt;
+pub mod idset;
 pub mod json;
 pub mod rng;
+
+pub use idset::OrderedIdSet;
+
+/// Order-preserving integer key for a (non-NaN) `f64`: `a < b` ⇔
+/// `f64_total_key(a) < f64_total_key(b)`. Lets hot paths sort or heap
+/// floats on cheap integer comparisons instead of `partial_cmp` (§Perf).
+#[inline]
+pub fn f64_total_key(x: f64) -> u64 {
+    debug_assert!(!x.is_nan(), "f64_total_key is undefined for NaN");
+    let b = x.to_bits();
+    if x >= 0.0 {
+        b ^ 0x8000_0000_0000_0000
+    } else {
+        !b
+    }
+}
 
 /// Clamp a float to a closed interval.
 #[inline]
@@ -49,6 +66,26 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn f64_key_is_order_preserving() {
+        let xs = [
+            f64::NEG_INFINITY,
+            -1.0e30,
+            -2.5,
+            -1.0e-300,
+            0.0,
+            1.0e-300,
+            1.0,
+            3.5,
+            1.0e30,
+            f64::INFINITY,
+        ];
+        for w in xs.windows(2) {
+            assert!(f64_total_key(w[0]) < f64_total_key(w[1]), "{} vs {}", w[0], w[1]);
+        }
+        assert_eq!(f64_total_key(1.5), f64_total_key(1.5));
+    }
 
     #[test]
     fn clamp_bounds() {

@@ -1,0 +1,161 @@
+//! Golden-digest behavior-preservation tests for the event-queue hot-path
+//! overhaul (§Perf).
+//!
+//! The optimized paths — the O(log R) heap-based fleet loop, the
+//! indexed-slot-set engine bookkeeping, and the allocation-free batch
+//! assembly — must be *observationally identical* to the historical
+//! implementations. The pre-refactor fleet loop is retained verbatim as
+//! `Cluster::run_reference`. Two comparison instruments, chosen by
+//! slicing:
+//!
+//! * `RunMetrics::digest` — an FNV-1a hash over the full per-request
+//!   record set (times quantized to 1 ns) plus every event counter. Used
+//!   where both sides advance the simulators in identical time slices
+//!   (re-runs; 1-replica cluster vs. plain drive), where times are
+//!   bit-identical.
+//! * `RunMetrics::deviation` — structural identity plus a ≤ 1 ns bound on
+//!   every virtual-time field. Used for heap loop vs. reference loop,
+//!   whose different slicing leaves float-associativity noise that would
+//!   make quantized hashing flaky at rounding-bucket boundaries.
+//!
+//! Either way, any scheduling, preemption, ordering, or accounting change
+//! shows up as a failure.
+
+use nexus::cluster::{run_cluster, AutoscalerCfg, Cluster, ClusterCfg, RoutingPolicy};
+use nexus::engine::{build_engine, drive, run_engine, EngineCfg, EngineKind};
+use nexus::model::ModelConfig;
+use nexus::workload::{generate, generate_bursty, BurstyCfg, Dataset};
+
+fn ecfg(seed: u64) -> EngineCfg {
+    EngineCfg::new(ModelConfig::qwen3b(), seed)
+}
+
+#[test]
+fn engine_digests_are_seed_deterministic() {
+    // Two independent runs of the same (engine, seed, trace) must agree
+    // exactly — no wall-clock or iteration-order leakage into virtual time.
+    for &kind in EngineKind::all() {
+        let cfg = ecfg(11);
+        let trace = generate(Dataset::Mixed, 25, 3.0, 17);
+        let a = run_engine(kind, &cfg, &trace).digest();
+        let mut eng = build_engine(kind, &cfg);
+        let b = drive(eng.as_mut(), &trace, cfg.max_virtual_time).digest();
+        assert_eq!(a, b, "{} digest unstable across runs", kind.name());
+    }
+}
+
+#[test]
+fn single_replica_cluster_digest_equals_engine_digest() {
+    // The event-queue cluster loop at R=1 must reproduce the plain engine
+    // drive bit-for-bit (at ns quantization), per engine kind and seed.
+    for &kind in EngineKind::all() {
+        for seed in [3u64, 29] {
+            let cfg = ecfg(seed);
+            let trace = generate(Dataset::ShareGpt, 30, 4.0, seed ^ 0xA5);
+            let solo = run_engine(kind, &cfg, &trace);
+            let cc = ClusterCfg::new(kind, cfg, 1, RoutingPolicy::RoundRobin);
+            let fleet = run_cluster(&cc, &trace);
+            assert_eq!(
+                solo.digest(),
+                fleet.fleet.digest(),
+                "{} seed {seed}: 1-replica cluster diverged from run_engine",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn fleet_event_loop_matches_reference_per_kind() {
+    // N-replica clusters: the heap loop vs. the pre-refactor O(R)-scan
+    // loop, across every engine kind and two fleet sizes. The two loops
+    // advance the GPU simulators in different time slices, so virtual
+    // times may carry float-associativity noise: compare structurally
+    // with a 1 ns deviation bound instead of quantized digest equality.
+    let trace = generate(Dataset::Mixed, 60, 8.0, 23);
+    for &kind in EngineKind::all() {
+        for &replicas in &[2usize, 5] {
+            let cc =
+                ClusterCfg::new(kind, ecfg(7), replicas, RoutingPolicy::JoinShortestQueue);
+            let a = Cluster::new(cc.clone()).run(&trace);
+            let b = Cluster::new(cc).run_reference(&trace);
+            let dev = a.fleet.deviation(&b.fleet);
+            assert!(
+                matches!(dev, Some(d) if d <= 1e-9),
+                "{} x{replicas}: event loop diverged from reference (deviation {dev:?})",
+                kind.name()
+            );
+            // Time-weighted trajectory means are excluded from the digest
+            // (float-associativity drift); pin them with tolerances.
+            assert!((a.fleet.mean_rp - b.fleet.mean_rp).abs() < 1e-9);
+            assert!((a.fleet.mean_kv_usage - b.fleet.mean_kv_usage).abs() < 1e-9);
+            assert!((a.fleet.decode_mode_frac - b.fleet.decode_mode_frac).abs() < 1e-9);
+            assert!((a.replica_seconds - b.replica_seconds).abs() < 1e-6);
+            assert_eq!(a.peak_replicas, b.peak_replicas);
+            assert_eq!(a.ttft_hist.count(), b.ttft_hist.count());
+            assert_eq!(a.tbt_hist.count(), b.tbt_hist.count());
+            assert_eq!(a.replicas.len(), b.replicas.len());
+            for (x, y) in a.replicas.iter().zip(&b.replicas) {
+                assert_eq!(
+                    (x.id, x.routed, x.completed),
+                    (y.id, y.routed, y.completed),
+                    "{} x{replicas}: per-replica accounting diverged",
+                    kind.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fleet_event_loop_matches_reference_per_policy() {
+    // Routing policies see per-arrival view snapshots; the reused view
+    // buffer must not change any routing decision.
+    let trace = generate(Dataset::ShareGpt, 70, 9.0, 37);
+    for &policy in RoutingPolicy::all() {
+        let cc = ClusterCfg::new(EngineKind::Nexus, ecfg(19), 3, policy);
+        let a = Cluster::new(cc.clone()).run(&trace);
+        let b = Cluster::new(cc).run_reference(&trace);
+        let dev = a.fleet.deviation(&b.fleet);
+        assert!(
+            matches!(dev, Some(d) if d <= 1e-9),
+            "{}: event loop diverged from reference (deviation {dev:?})",
+            policy.name()
+        );
+        let ra: Vec<usize> = a.replicas.iter().map(|r| r.routed).collect();
+        let rb: Vec<usize> = b.replicas.iter().map(|r| r.routed).collect();
+        assert_eq!(ra, rb, "{}: routing decisions diverged", policy.name());
+    }
+}
+
+#[test]
+fn autoscaled_fleet_matches_reference() {
+    // Autoscaler ticks are loop events too: decisions, scale times, and
+    // hysteresis suppression must be identical under the heap loop.
+    let bursty = BurstyCfg { base_rate: 10.0, ..BurstyCfg::default() };
+    let trace = generate_bursty(Dataset::ShareGpt, 80, &bursty, 41);
+    let mut cc =
+        ClusterCfg::new(EngineKind::Nexus, ecfg(13), 1, RoutingPolicy::JoinShortestQueue);
+    cc.autoscale = Some(AutoscalerCfg {
+        min_replicas: 1,
+        max_replicas: 4,
+        interval: 2.0,
+        cooldown: 5.0,
+        ..AutoscalerCfg::default()
+    });
+    let a = Cluster::new(cc.clone()).run(&trace);
+    let b = Cluster::new(cc).run_reference(&trace);
+    let dev = a.fleet.deviation(&b.fleet);
+    assert!(
+        matches!(dev, Some(d) if d <= 1e-9),
+        "autoscaled fleet diverged (deviation {dev:?})"
+    );
+    assert_eq!(a.scale_events.len(), b.scale_events.len());
+    for (ea, eb) in a.scale_events.iter().zip(&b.scale_events) {
+        assert!((ea.time - eb.time).abs() < 1e-9, "scale time diverged");
+        assert_eq!((ea.from, ea.to), (eb.from, eb.to), "scale decision diverged");
+    }
+    assert_eq!(a.suppressed_scales, b.suppressed_scales);
+    assert_eq!(a.peak_replicas, b.peak_replicas);
+    assert!((a.replica_seconds - b.replica_seconds).abs() < 1e-6);
+}

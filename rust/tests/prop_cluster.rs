@@ -3,7 +3,7 @@
 //! single-replica equivalence with the plain engine loop — driven by the
 //! in-repo mini property harness (`nexus::testing`).
 
-use nexus::cluster::{run_cluster, AutoscalerCfg, ClusterCfg, RoutingPolicy};
+use nexus::cluster::{run_cluster, AutoscalerCfg, Cluster, ClusterCfg, RoutingPolicy};
 use nexus::engine::{run_engine, EngineCfg, EngineKind};
 use nexus::model::ModelConfig;
 use nexus::testing::prop;
@@ -167,6 +167,85 @@ fn prop_autoscaler_bounded_and_damped() {
                     w[0].time, w[1].time
                 ));
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_event_queue_fires_in_nondecreasing_time_order() {
+    // The heap-based fleet loop's core invariant: processed event times
+    // never regress, for any engine, fleet size, policy, or autoscaling.
+    prop("event-queue monotonicity", 15, |rng| {
+        let n = rng.range_usize(10, 40);
+        let trace = random_trace(rng, n);
+        let kind = random_kind(rng);
+        let mut cc = ClusterCfg::new(
+            kind,
+            EngineCfg::new(ModelConfig::qwen3b(), rng.next_u64()),
+            rng.range_usize(1, 5),
+            random_policy(rng),
+        );
+        if rng.chance(0.4) {
+            cc.autoscale = Some(AutoscalerCfg {
+                min_replicas: 1,
+                max_replicas: 4,
+                interval: rng.range_f64(1.0, 4.0),
+                cooldown: rng.range_f64(2.0, 8.0),
+                ..AutoscalerCfg::default()
+            });
+        }
+        let mut cluster = Cluster::new(cc);
+        cluster.record_event_times = true;
+        let m = cluster.run(&trace);
+        if m.events != cluster.event_times.len() {
+            return Err(format!(
+                "event counter {} != recorded times {}",
+                m.events,
+                cluster.event_times.len()
+            ));
+        }
+        if m.events == 0 {
+            return Err("loop processed no events for a non-empty trace".into());
+        }
+        for w in cluster.event_times.windows(2) {
+            if w[1] < w[0] {
+                return Err(format!("event time regressed: {} -> {}", w[0], w[1]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_event_loop_matches_reference_loop() {
+    // Randomized differential check of the O(log R) loop against the
+    // retained pre-refactor loop, at full digest strength.
+    prop("event loop == reference loop", 10, |rng| {
+        let n = rng.range_usize(10, 40);
+        let trace = random_trace(rng, n);
+        let kind = random_kind(rng);
+        let policy = random_policy(rng);
+        let replicas = rng.range_usize(1, 5);
+        let ecfg = EngineCfg::new(ModelConfig::qwen3b(), rng.next_u64());
+        let cc = ClusterCfg::new(kind, ecfg, replicas, policy);
+        let a = Cluster::new(cc.clone()).run(&trace);
+        let b = Cluster::new(cc).run_reference(&trace);
+        // Deviation tolerates float-associativity noise from the different
+        // simulator time-slicing; None means a structural divergence.
+        let dev = a.fleet.deviation(&b.fleet);
+        if !matches!(dev, Some(d) if d <= 1e-9) {
+            return Err(format!(
+                "{} x{} [{}]: optimized loop diverged from reference \
+                 (deviation {dev:?}; {} vs {} records, {} vs {} timeouts)",
+                kind.name(),
+                replicas,
+                policy.name(),
+                a.fleet.records.len(),
+                b.fleet.records.len(),
+                a.fleet.timeouts,
+                b.fleet.timeouts
+            ));
         }
         Ok(())
     });
