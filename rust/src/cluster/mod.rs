@@ -66,6 +66,7 @@ use crate::costmodel::calibrate;
 use crate::engine::common::ArrivalFeed;
 use crate::engine::{Engine, EngineCfg, EngineKind};
 use crate::metrics::{Histogram, RunMetrics, Summary};
+use crate::trace::{EventKind, Sampler, Tracer, FLEET};
 use crate::util::f64_total_key;
 use crate::workload::Request;
 use std::cmp::Reverse;
@@ -202,6 +203,10 @@ pub struct Cluster {
     /// [`Cluster::event_times`] (property tests assert monotonicity).
     pub record_event_times: bool,
     pub event_times: Vec<f64>,
+    /// Trace handle shared by the fleet loop, router hooks, autoscaler
+    /// hooks, and (via [`crate::engine::Engine::set_tracer`]) every replica
+    /// engine. Disabled by default — see [`crate::trace`].
+    pub tracer: Tracer,
 }
 
 impl Cluster {
@@ -213,7 +218,61 @@ impl Cluster {
             router: Router::new(policy),
             record_event_times: false,
             event_times: Vec::new(),
+            tracer: Tracer::default(),
         }
+    }
+
+    /// Attach the cluster tracer to every freshly built replica and emit
+    /// its `ReplicaStart`. Shared by both loops and [`Cluster::rescale`].
+    fn trace_replica_start(&mut self, idx: usize, now: f64) {
+        let rep = &mut self.replicas[idx];
+        rep.eng.set_tracer(self.tracer.for_replica(rep.id as u32));
+        self.tracer.emit_for(rep.id as u32, now, EventKind::ReplicaStart);
+    }
+
+    /// Emit one `Sample` per in-service replica for every sampling grid
+    /// point crossed since the previous event (no-op unless the tracer has
+    /// both a sink and a sampling interval). Purely observational: adds no
+    /// loop events, so digests and event counters match untraced runs.
+    fn trace_samples(&self, sampler: &mut Option<Sampler>, t: f64) {
+        let Some(s) = sampler.as_mut() else { return };
+        s.due(t, |ts| {
+            for rep in self.replicas.iter().filter(|r| r.in_service()) {
+                let snap = rep.eng.snapshot();
+                self.tracer.emit_for(
+                    rep.id as u32,
+                    ts,
+                    EventKind::Sample {
+                        kv_usage: snap.kv_usage,
+                        waiting: snap.waiting,
+                        running: snap.running,
+                        pending: rep.eng.pending(),
+                        sm_prefill: snap.sm_prefill,
+                        inflight: snap.inflight,
+                    },
+                );
+            }
+        });
+    }
+
+    /// Emit the fleet-level `Arrival` + `Route` pair for one dispatch.
+    fn trace_route(&self, r: &Request, target: usize, views: &[ReplicaView], t: f64) {
+        if !self.tracer.enabled() {
+            return;
+        }
+        self.tracer.emit_for(FLEET, r.arrival, EventKind::Arrival { req: r.id });
+        let v = views.iter().find(|v| v.index == target);
+        self.tracer.emit_for(
+            FLEET,
+            t,
+            EventKind::Route {
+                req: r.id,
+                target,
+                policy: self.router.policy.name(),
+                pending: v.map_or(0, |v| v.pending),
+                kv_usage: v.map_or(0.0, |v| v.kv_usage),
+            },
+        );
     }
 
     fn active_views(&self) -> Vec<ReplicaView> {
@@ -247,6 +306,10 @@ impl Cluster {
         self.replicas = (0..n0).map(|i| Replica::new(i, cfg.kind, &cfg.engine, 0.0)).collect();
         self.router = Router::new(cfg.policy);
         self.event_times.clear();
+        for i in 0..n0 {
+            self.trace_replica_start(i, 0.0);
+        }
+        let mut sampler = Sampler::new(&self.tracer);
         let mut scaler = self.build_scaler(trace);
         let mut next_tick = scaler.as_ref().map(|s| s.cfg.interval);
 
@@ -317,6 +380,7 @@ impl Cluster {
             if t > cfg.engine.max_virtual_time {
                 break;
             }
+            self.trace_samples(&mut sampler, t);
 
             // Replica-seconds accrue for every in-service replica.
             replica_seconds += in_service as f64 * (t - last_t).max(0.0);
@@ -337,6 +401,7 @@ impl Cluster {
                     self.replicas.iter().filter(|x| x.is_active()).map(|x| x.view()),
                 );
                 let target = self.router.route(&views_buf, r);
+                self.trace_route(r, target, &views_buf, t);
                 // Replicas are never removed from the vec (only retired in
                 // place), so fleet position == replica id.
                 let rep = &mut self.replicas[target];
@@ -423,6 +488,7 @@ impl Cluster {
                     };
                     if let Some(target) = s.decide(&obs) {
                         let from = views_buf.len();
+                        self.tracer.emit_for(FLEET, t, EventKind::Scale { from, to: target });
                         self.rescale(target, t, &mut next_id, &cfg);
                         scale_events.push(ScaleEvent { time: t, from, to: target });
                         // Scale actions are rare: recount the fleet and
@@ -454,6 +520,8 @@ impl Cluster {
                             key_of[i] = f64::NAN;
                             live_events -= 1;
                         }
+                        let id = self.replicas[i].id as u32;
+                        self.tracer.emit_for(id, t, EventKind::ReplicaRetire);
                         let m = self.replicas[i].retire(t);
                         ttft_hist.merge(&m.ttft_histogram());
                         tbt_hist.merge(&m.tbt_histogram());
@@ -528,6 +596,10 @@ impl Cluster {
         };
         self.replicas = (0..n0).map(|i| Replica::new(i, cfg.kind, &cfg.engine, 0.0)).collect();
         self.router = Router::new(cfg.policy);
+        for i in 0..n0 {
+            self.trace_replica_start(i, 0.0);
+        }
+        let mut sampler = Sampler::new(&self.tracer);
         let mut scaler = self.build_scaler(trace);
         let mut next_tick = scaler.as_ref().map(|s| s.cfg.interval);
 
@@ -569,6 +641,7 @@ impl Cluster {
             if t > cfg.engine.max_virtual_time {
                 break;
             }
+            self.trace_samples(&mut sampler, t);
 
             // Replica-seconds accrue for every in-service replica.
             let in_service = self.replicas.iter().filter(|r| r.in_service()).count();
@@ -581,6 +654,7 @@ impl Cluster {
             for r in feed.pop_until(t) {
                 let views = self.active_views();
                 let target = self.router.route(&views, r);
+                self.trace_route(r, target, &views, t);
                 // Replicas are never removed from the vec (only retired in
                 // place), so fleet position == replica id.
                 let rep = &mut self.replicas[target];
@@ -613,6 +687,7 @@ impl Cluster {
                     };
                     if let Some(target) = s.decide(&obs) {
                         let from = views.len();
+                        self.tracer.emit_for(FLEET, t, EventKind::Scale { from, to: target });
                         self.rescale(target, t, &mut next_id, &cfg);
                         scale_events.push(ScaleEvent { time: t, from, to: target });
                     }
@@ -624,6 +699,7 @@ impl Cluster {
             // Retire drained replicas, merging their metrics into the pool.
             for rep in self.replicas.iter_mut() {
                 if rep.drained() {
+                    self.tracer.emit_for(rep.id as u32, t, EventKind::ReplicaRetire);
                     let m = rep.retire(t);
                     ttft_hist.merge(&m.ttft_histogram());
                     tbt_hist.merge(&m.tbt_histogram());
@@ -692,6 +768,7 @@ impl Cluster {
             for _ in active.len()..target {
                 self.replicas.push(Replica::new(*next_id, cfg.kind, &cfg.engine, now));
                 *next_id += 1;
+                self.trace_replica_start(self.replicas.len() - 1, now);
             }
         } else {
             let mut by_load: Vec<(usize, usize)> =
@@ -699,6 +776,7 @@ impl Cluster {
             by_load.sort_unstable();
             for &(_, i) in by_load.iter().take(active.len() - target) {
                 self.replicas[i].drain();
+                self.tracer.emit_for(self.replicas[i].id as u32, now, EventKind::ReplicaDrain);
             }
         }
     }

@@ -2,10 +2,11 @@
 //! sustainable-throughput search used for Fig. 9/10 column 1–2, and the
 //! fleet-level [`ClusterExperiment`] driver.
 
-use crate::cluster::{run_cluster, AutoscalerCfg, ClusterCfg, ClusterMetrics, RoutingPolicy};
+use crate::cluster::{AutoscalerCfg, Cluster, ClusterCfg, ClusterMetrics, RoutingPolicy};
 use crate::engine::{run_engine, EngineCfg, EngineKind};
 use crate::metrics::{RunMetrics, Summary};
 use crate::model::ModelConfig;
+use crate::trace::Tracer;
 use crate::workload::{self, BurstyCfg, Dataset};
 
 /// One experiment's shape: which model/dataset, how many requests, at what
@@ -86,9 +87,19 @@ impl ClusterExperiment {
 
     /// Run the fleet with every replica running `kind`.
     pub fn run(&self, kind: EngineKind) -> ClusterMetrics {
+        self.run_traced(kind, &Tracer::default())
+    }
+
+    /// Run the fleet with a trace handle attached to the loop, router,
+    /// autoscaler, and every replica engine. Drain the recorded events
+    /// afterwards with [`Tracer::take`]; pass `Tracer::default()` for an
+    /// untraced run (this is exactly [`ClusterExperiment::run`]).
+    pub fn run_traced(&self, kind: EngineKind, tracer: &Tracer) -> ClusterMetrics {
         let mut cfg = ClusterCfg::new(kind, self.base.cfg(), self.replicas, self.policy);
         cfg.autoscale = self.autoscale;
-        run_cluster(&cfg, &self.trace())
+        let mut cluster = Cluster::new(cfg);
+        cluster.tracer = tracer.clone();
+        cluster.run(&self.trace())
     }
 }
 

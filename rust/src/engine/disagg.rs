@@ -18,6 +18,7 @@ use crate::kv::{KvCache, TransferBuffer};
 use crate::metrics::RunMetrics;
 use crate::model::OpWork;
 use crate::sched::{fcfs_batch_into, PrefillItem, SchedScratch};
+use crate::trace::{EngineSnapshot, EventKind, PreemptKind, TracePhase, Tracer};
 use crate::util::OrderedIdSet;
 use crate::workload::Request;
 use std::time::Instant;
@@ -72,6 +73,7 @@ pub struct DisaggEngine {
     /// Recycled iteration vectors (returned on completion, reused on schedule).
     spare_ids: Vec<Vec<usize>>,
     spare_parts: Vec<Vec<(usize, usize)>>,
+    tracer: Tracer,
 }
 
 impl DisaggEngine {
@@ -110,6 +112,7 @@ impl DisaggEngine {
             scratch: SchedScratch::default(),
             spare_ids: Vec::new(),
             spare_parts: Vec::new(),
+            tracer: Tracer::default(),
         }
     }
 
@@ -165,6 +168,16 @@ impl DisaggEngine {
             if self.pkv.try_reserve(item.id, take) {
                 parts.push((item.id, take));
                 left -= take;
+                if self.tracer.enabled() {
+                    self.tracer.emit(
+                        now,
+                        EventKind::KvAlloc {
+                            req: item.id,
+                            tokens: take,
+                            usage: self.pkv.usage(),
+                        },
+                    );
+                }
             }
         }
         self.picked_buf = picked;
@@ -188,6 +201,12 @@ impl DisaggEngine {
         self.cfg.model.prefill_ops_into(n, pairs, kv_read, finishing, &mut self.ops_buf);
         self.tag += 1;
         self.psim.submit(0, &self.ops_buf, self.tag);
+        if self.tracer.enabled() {
+            self.tracer.emit(
+                now,
+                EventKind::BatchStart { phase: TracePhase::Prefill, seqs: parts.len(), tokens: n },
+            );
+        }
         let share = wall.elapsed().as_secs_f64() / parts.len() as f64;
         for &(id, _) in &parts {
             self.states[id].as_mut().unwrap().sched_time += share;
@@ -232,6 +251,10 @@ impl DisaggEngine {
                         self.states[v].as_mut().unwrap().restart_for_recompute(now);
                         self.waiting.insert(v);
                         self.metrics.recomputes += 1;
+                        self.tracer.emit(
+                            now,
+                            EventKind::Preempt { req: v, kind: PreemptKind::Recompute },
+                        );
                     }
                     None => break,
                 }
@@ -247,6 +270,16 @@ impl DisaggEngine {
         self.cfg.model.decode_ops_into(decode_ids.len(), ctx, &mut self.ops_buf);
         self.tag += 1;
         self.dsim.submit(0, &self.ops_buf, self.tag);
+        if self.tracer.enabled() {
+            self.tracer.emit(
+                now,
+                EventKind::BatchStart {
+                    phase: TracePhase::Decode,
+                    seqs: decode_ids.len(),
+                    tokens: decode_ids.len(),
+                },
+            );
+        }
         let share = wall.elapsed().as_secs_f64() / decode_ids.len() as f64;
         for &id in &decode_ids {
             self.states[id].as_mut().unwrap().sched_time += share;
@@ -290,6 +323,7 @@ impl Engine for DisaggEngine {
         self.states[req.id] = Some(ReqState::new(req));
         self.waiting.insert(req.id);
         self.injected += 1;
+        self.tracer.emit(req.arrival, EventKind::Admit { req: req.id });
     }
 
     fn step(&mut self, t: f64) -> StepOutcome {
@@ -317,16 +351,34 @@ impl Engine for DisaggEngine {
             let it = self.p_inflight.take().expect("prefill completion w/o inflight");
             let end = c.time;
             let dur = end - it.start;
+            if self.tracer.enabled() {
+                let tokens: usize = it.parts.iter().map(|&(_, t)| t).sum();
+                self.tracer.emit(
+                    end,
+                    EventKind::BatchEnd {
+                        phase: TracePhase::Prefill,
+                        seqs: it.parts.len(),
+                        tokens,
+                        dur,
+                    },
+                );
+            }
             for &(id, take) in &it.parts {
                 let st = self.states[id].as_mut().unwrap();
                 st.exec_time += dur;
                 st.queue_time += (it.start - st.queue_since).max(0.0);
                 st.queue_since = end;
                 st.prefilled += take;
-                if st.prefill_done() {
+                let prefill_done = st.prefill_done();
+                self.tracer.emit(
+                    end,
+                    EventKind::PrefillChunk { req: id, take, done: prefill_done, dur },
+                );
+                if prefill_done {
                     self.waiting.remove(id);
                     if st.generated == 0 {
                         st.note_first_token(end);
+                        self.tracer.emit(end, EventKind::FirstToken { req: id });
                     }
                     if st.decode_done() {
                         let st = self.states[id].take().unwrap();
@@ -334,6 +386,7 @@ impl Engine for DisaggEngine {
                         self.metrics.push(st.into_record(end));
                         self.done += 1;
                         finished += 1;
+                        self.tracer.emit(end, EventKind::Complete { req: id });
                         continue;
                     }
                     let bytes = self.pkv.tokens(id) as f64 * self.pkv.bytes_per_token;
@@ -344,12 +397,24 @@ impl Engine for DisaggEngine {
                             ready_at: end + bytes / self.cfg.gpu.link_bw,
                             bytes,
                         });
+                        self.tracer.emit(
+                            end,
+                            EventKind::Transfer {
+                                req: id,
+                                bytes,
+                                dur: bytes / self.cfg.gpu.link_bw,
+                            },
+                        );
                     } else {
                         // §6.2.2: buffer overrun → evict + recompute.
                         self.metrics.recomputes += 1;
                         let st = self.states[id].as_mut().unwrap();
                         st.restart_for_recompute(end);
                         self.retry_at.push((id, end + 0.25));
+                        self.tracer.emit(
+                            end,
+                            EventKind::Preempt { req: id, kind: PreemptKind::BufferEvict },
+                        );
                     }
                 }
             }
@@ -368,6 +433,16 @@ impl Engine for DisaggEngine {
                 if self.dkv.try_reserve(tr.id, ctx) {
                     self.buffer.pop(tr.id);
                     self.running.insert(tr.id);
+                    if self.tracer.enabled() {
+                        self.tracer.emit(
+                            now,
+                            EventKind::KvAlloc {
+                                req: tr.id,
+                                tokens: ctx,
+                                usage: self.dkv.usage(),
+                            },
+                        );
+                    }
                     continue;
                 }
                 // Decode side full: KV waits in the buffer.
@@ -383,6 +458,17 @@ impl Engine for DisaggEngine {
             let it = self.d_inflight.take().expect("decode completion w/o inflight");
             let end = c.time;
             let dur = end - it.start;
+            if self.tracer.enabled() {
+                self.tracer.emit(
+                    end,
+                    EventKind::BatchEnd {
+                        phase: TracePhase::Decode,
+                        seqs: it.ids.len(),
+                        tokens: it.ids.len(),
+                        dur,
+                    },
+                );
+            }
             for &id in &it.ids {
                 let st = self.states[id].as_mut().unwrap();
                 st.exec_time += dur;
@@ -394,6 +480,7 @@ impl Engine for DisaggEngine {
                     self.metrics.push(st.into_record(end));
                     self.done += 1;
                     finished += 1;
+                    self.tracer.emit(end, EventKind::Complete { req: id });
                 }
             }
             self.spare_ids.push(it.ids);
@@ -426,6 +513,21 @@ impl Engine for DisaggEngine {
 
     fn kv_usage(&self) -> f64 {
         self.dkv.usage().max(self.pkv.usage())
+    }
+
+    fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
+    }
+
+    fn snapshot(&self) -> EngineSnapshot {
+        EngineSnapshot {
+            waiting: self.waiting.len(),
+            running: self.running.len(),
+            kv_usage: self.dkv.usage().max(self.pkv.usage()),
+            sm_prefill: 1.0,
+            inflight: usize::from(self.p_inflight.is_some())
+                + usize::from(self.d_inflight.is_some()),
+        }
     }
 
     fn take_metrics(&mut self) -> RunMetrics {

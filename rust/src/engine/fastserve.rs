@@ -20,6 +20,7 @@ use crate::kv::KvCache;
 use crate::metrics::RunMetrics;
 use crate::model::{OpClass, OpWork};
 use crate::sched::Mlfq;
+use crate::trace::{EngineSnapshot, EventKind, PreemptKind, TracePhase, Tracer};
 use crate::workload::Request;
 use std::time::Instant;
 
@@ -52,6 +53,7 @@ pub struct FastServeEngine {
     /// Recycled `Iter` vectors (returned on completion, reused on schedule).
     spare_ids: Vec<Vec<usize>>,
     spare_parts: Vec<Vec<(usize, usize)>>,
+    tracer: Tracer,
 }
 
 impl FastServeEngine {
@@ -77,6 +79,7 @@ impl FastServeEngine {
             comp_buf: Vec::new(),
             spare_ids: Vec::new(),
             spare_parts: Vec::new(),
+            tracer: Tracer::default(),
         }
     }
 
@@ -132,6 +135,10 @@ impl FastServeEngine {
                     Some(bytes) => {
                         pcie_bytes += bytes;
                         self.metrics.swaps += 1;
+                        self.tracer.emit(
+                            now,
+                            EventKind::Preempt { req: id, kind: PreemptKind::SwapIn },
+                        );
                     }
                     None => {
                         // No room: drop and recompute later.
@@ -139,6 +146,10 @@ impl FastServeEngine {
                         let st = self.states[id].as_mut().unwrap();
                         st.restart_for_recompute(now);
                         self.metrics.recomputes += 1;
+                        self.tracer.emit(
+                            now,
+                            EventKind::Preempt { req: id, kind: PreemptKind::Recompute },
+                        );
                         continue;
                     }
                 }
@@ -158,6 +169,10 @@ impl FastServeEngine {
                     Some(v) => {
                         pcie_bytes += self.kv.swap_out(v);
                         self.metrics.swaps += 1;
+                        self.tracer.emit(
+                            now,
+                            EventKind::Preempt { req: v, kind: PreemptKind::SwapOut },
+                        );
                         reserved = self.kv.try_reserve(id, need_tokens);
                     }
                     None => break,
@@ -196,6 +211,7 @@ impl FastServeEngine {
                 }
                 pcie_bytes += self.kv.swap_out(id);
                 self.metrics.swaps += 1;
+                self.tracer.emit(now, EventKind::Preempt { req: id, kind: PreemptKind::SwapOut });
             }
             self.victims_buf = victims;
         }
@@ -233,6 +249,18 @@ impl FastServeEngine {
 
         self.tag += 1;
         self.sim.submit(0, &self.ops_buf, self.tag);
+        if self.tracer.enabled() {
+            let tokens: usize =
+                decode_ids.len() + prefill_parts.iter().map(|&(_, t)| t).sum::<usize>();
+            self.tracer.emit(
+                now,
+                EventKind::BatchStart {
+                    phase: TracePhase::of(decode_ids.len(), prefill_parts.len()),
+                    seqs: decode_ids.len() + prefill_parts.len(),
+                    tokens,
+                },
+            );
+        }
 
         let sched = wall.elapsed().as_secs_f64();
         let parts = decode_ids.len() + prefill_parts.len();
@@ -270,6 +298,7 @@ impl Engine for FastServeEngine {
         self.states[req.id] = Some(ReqState::new(req));
         self.mlfq.admit(req.id, req.prompt_len);
         self.injected += 1;
+        self.tracer.emit(req.arrival, EventKind::Admit { req: req.id });
     }
 
     fn step(&mut self, t: f64) -> StepOutcome {
@@ -281,6 +310,19 @@ impl Engine for FastServeEngine {
             debug_assert_eq!(c.tag, self.tag);
             let now = c.time;
             let dur = now - it.start;
+            if self.tracer.enabled() {
+                let tokens: usize = it.decode_ids.len()
+                    + it.prefill_parts.iter().map(|&(_, t)| t).sum::<usize>();
+                self.tracer.emit(
+                    now,
+                    EventKind::BatchEnd {
+                        phase: TracePhase::of(it.decode_ids.len(), it.prefill_parts.len()),
+                        seqs: it.decode_ids.len() + it.prefill_parts.len(),
+                        tokens,
+                        dur,
+                    },
+                );
+            }
             for &id in &it.decode_ids {
                 let st = self.states[id].as_mut().unwrap();
                 st.exec_time += dur;
@@ -293,6 +335,7 @@ impl Engine for FastServeEngine {
                     self.metrics.push(st.into_record(now));
                     self.done += 1;
                     finished += 1;
+                    self.tracer.emit(now, EventKind::Complete { req: id });
                 }
             }
             for &(id, take) in &it.prefill_parts {
@@ -302,8 +345,14 @@ impl Engine for FastServeEngine {
                 st.queue_since = now;
                 st.prefilled += take;
                 self.mlfq.charge(id, take);
-                if st.prefill_done() && st.generated == 0 {
+                let prefill_done = st.prefill_done();
+                self.tracer.emit(
+                    now,
+                    EventKind::PrefillChunk { req: id, take, done: prefill_done, dur },
+                );
+                if prefill_done && st.generated == 0 {
                     st.note_first_token(now);
+                    self.tracer.emit(now, EventKind::FirstToken { req: id });
                     if st.decode_done() {
                         let st = self.states[id].take().unwrap();
                         self.kv.release(id);
@@ -311,6 +360,7 @@ impl Engine for FastServeEngine {
                         self.metrics.push(st.into_record(now));
                         self.done += 1;
                         finished += 1;
+                        self.tracer.emit(now, EventKind::Complete { req: id });
                     }
                 }
             }
@@ -339,6 +389,22 @@ impl Engine for FastServeEngine {
 
     fn take_metrics(&mut self) -> RunMetrics {
         std::mem::take(&mut self.metrics)
+    }
+
+    fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
+    }
+
+    fn snapshot(&self) -> EngineSnapshot {
+        let waiting = self.states.iter().flatten().filter(|st| !st.prefill_done()).count();
+        let total = self.states.iter().flatten().count();
+        EngineSnapshot {
+            waiting,
+            running: total - waiting,
+            kv_usage: self.kv.usage(),
+            sm_prefill: 1.0,
+            inflight: usize::from(self.inflight.is_some()),
+        }
     }
 }
 

@@ -30,6 +30,7 @@ use crate::kv::KvCache;
 use crate::metrics::RunMetrics;
 use crate::model::ModelConfig;
 use crate::partition::PartitionConfig;
+use crate::trace::{EngineSnapshot, EventKind, Sampler, Tracer};
 use crate::workload::Request;
 
 /// Engine selection, including the Fig.-13 ablation variants.
@@ -215,6 +216,17 @@ pub trait Engine {
     /// Finalize run-level aggregates (partition trajectory means, makespan
     /// fixups) and hand the metrics over, leaving the engine drained.
     fn take_metrics(&mut self) -> RunMetrics;
+
+    /// Attach a tracer for lifecycle-event emission. The default keeps the
+    /// engine silent; all five built-in engines override it. Detaching is
+    /// passing `Tracer::default()`.
+    fn set_tracer(&mut self, _tracer: Tracer) {}
+
+    /// Point-in-time state for the periodic telemetry sampler. The default
+    /// reports only KV usage; engines with queues override.
+    fn snapshot(&self) -> EngineSnapshot {
+        EngineSnapshot { kv_usage: self.kv_usage(), sm_prefill: 1.0, ..Default::default() }
+    }
 }
 
 /// Drive one engine over a whole time-sorted trace — the single-replica
@@ -222,6 +234,22 @@ pub trait Engine {
 /// requests (virtual-time ceiling exceeded, or unschedulable with no
 /// arrivals left) are reported as timeouts.
 pub fn drive(eng: &mut dyn Engine, trace: &[Request], max_virtual_time: f64) -> RunMetrics {
+    drive_traced(eng, trace, max_virtual_time, &Tracer::default())
+}
+
+/// [`drive`] with a tracer: the engine gets the sink attached (as replica 0)
+/// for lifecycle events, the loop emits `Arrival`s, and — when sampling is
+/// enabled — periodic [`EngineSnapshot`] samples on the tracer's grid. With
+/// a disabled tracer this is byte-identical to the untraced loop (pinned by
+/// `tests/golden_trace.rs`).
+pub fn drive_traced(
+    eng: &mut dyn Engine,
+    trace: &[Request],
+    max_virtual_time: f64,
+    tracer: &Tracer,
+) -> RunMetrics {
+    eng.set_tracer(tracer.for_replica(0));
+    let mut sampler = Sampler::new(tracer);
     let mut feed = ArrivalFeed::new(trace);
     loop {
         if feed.exhausted() && eng.pending() == 0 {
@@ -236,7 +264,25 @@ pub fn drive(eng: &mut dyn Engine, trace: &[Request], max_virtual_time: f64) -> 
         if t > max_virtual_time {
             break;
         }
+        if let Some(s) = sampler.as_mut() {
+            s.due(t, |ts| {
+                let snap = eng.snapshot();
+                tracer.emit_for(
+                    0,
+                    ts,
+                    EventKind::Sample {
+                        kv_usage: snap.kv_usage,
+                        waiting: snap.waiting,
+                        running: snap.running,
+                        pending: eng.pending(),
+                        sm_prefill: snap.sm_prefill,
+                        inflight: snap.inflight,
+                    },
+                );
+            });
+        }
         for r in feed.pop_until(t) {
+            tracer.emit(r.arrival, EventKind::Arrival { req: r.id });
             eng.inject(*r);
         }
         let out = eng.step(t);
@@ -246,6 +292,7 @@ pub fn drive(eng: &mut dyn Engine, trace: &[Request], max_virtual_time: f64) -> 
             break;
         }
     }
+    eng.set_tracer(Tracer::default());
     let mut m = eng.take_metrics();
     m.timeouts = trace.len() - m.records.len();
     m
@@ -281,6 +328,18 @@ pub fn build_engine(kind: EngineKind, cfg: &EngineCfg) -> Box<dyn Engine> {
 pub fn run_engine(kind: EngineKind, cfg: &EngineCfg, trace: &[Request]) -> RunMetrics {
     let mut eng = build_engine(kind, cfg);
     drive(eng.as_mut(), trace, cfg.max_virtual_time)
+}
+
+/// [`run_engine`] with a trace handle attached; drain events afterwards
+/// with [`Tracer::take`].
+pub fn run_engine_traced(
+    kind: EngineKind,
+    cfg: &EngineCfg,
+    trace: &[Request],
+    tracer: &Tracer,
+) -> RunMetrics {
+    let mut eng = build_engine(kind, cfg);
+    drive_traced(eng.as_mut(), trace, cfg.max_virtual_time, tracer)
 }
 
 #[cfg(test)]

@@ -21,6 +21,7 @@ use crate::kv::KvCache;
 use crate::metrics::RunMetrics;
 use crate::model::OpWork;
 use crate::sched::{mixed_batch_into, MixedBatch, PrefillItem, RadixCache, SchedScratch};
+use crate::trace::{EngineSnapshot, EventKind, PreemptKind, TracePhase, Tracer};
 use crate::util::OrderedIdSet;
 use crate::workload::Request;
 use std::time::Instant;
@@ -57,6 +58,7 @@ pub struct MonolithicEngine {
     /// Recycled `Iter` vectors (returned on completion, reused on schedule).
     spare_ids: Vec<Vec<usize>>,
     spare_parts: Vec<Vec<(usize, usize)>>,
+    tracer: Tracer,
 }
 
 impl MonolithicEngine {
@@ -94,6 +96,7 @@ impl MonolithicEngine {
             scratch: SchedScratch::default(),
             spare_ids: Vec::new(),
             spare_parts: Vec::new(),
+            tracer: Tracer::default(),
         }
     }
 
@@ -156,6 +159,10 @@ impl MonolithicEngine {
                         st.restart_for_recompute(now);
                         self.waiting.insert(v);
                         self.metrics.recomputes += 1;
+                        self.tracer.emit(
+                            now,
+                            EventKind::Preempt { req: v, kind: PreemptKind::Recompute },
+                        );
                     }
                     None => break, // lone request can't grow: stall this tick
                 }
@@ -194,6 +201,12 @@ impl MonolithicEngine {
             let id = self.queue_buf[qidx].id;
             if self.kv.try_reserve(id, take) {
                 prefill_parts.push((id, take));
+                if self.tracer.enabled() {
+                    self.tracer.emit(
+                        now,
+                        EventKind::KvAlloc { req: id, tokens: take, usage: self.kv.usage() },
+                    );
+                }
             }
             // On reserve failure the chunk is dropped this iteration; decode
             // completions free blocks and the request retries next tick.
@@ -231,6 +244,18 @@ impl MonolithicEngine {
 
         self.tag += 1;
         self.sim.submit(0, &self.ops_buf, self.tag);
+        if self.tracer.enabled() {
+            let tokens: usize =
+                decode_ids.len() + prefill_parts.iter().map(|&(_, t)| t).sum::<usize>();
+            self.tracer.emit(
+                now,
+                EventKind::BatchStart {
+                    phase: TracePhase::of(decode_ids.len(), prefill_parts.len()),
+                    seqs: decode_ids.len() + prefill_parts.len(),
+                    tokens,
+                },
+            );
+        }
 
         // Attribute real scheduler wall time across participants (Fig. 12).
         let sched = wall.elapsed().as_secs_f64();
@@ -279,6 +304,7 @@ impl Engine for MonolithicEngine {
         self.states[req.id] = Some(st);
         self.waiting.insert(req.id);
         self.injected += 1;
+        self.tracer.emit(req.arrival, EventKind::Admit { req: req.id });
     }
 
     fn step(&mut self, t: f64) -> StepOutcome {
@@ -290,6 +316,19 @@ impl Engine for MonolithicEngine {
             debug_assert_eq!(c.tag, self.tag);
             let now = c.time;
             let dur = now - it.start;
+            if self.tracer.enabled() {
+                let tokens: usize =
+                    it.decode_ids.len() + it.prefill_parts.iter().map(|&(_, t)| t).sum::<usize>();
+                self.tracer.emit(
+                    now,
+                    EventKind::BatchEnd {
+                        phase: TracePhase::of(it.decode_ids.len(), it.prefill_parts.len()),
+                        seqs: it.decode_ids.len() + it.prefill_parts.len(),
+                        tokens,
+                        dur,
+                    },
+                );
+            }
             // Decode tokens.
             for &id in &it.decode_ids {
                 let st = self.states[id].as_mut().unwrap();
@@ -302,6 +341,7 @@ impl Engine for MonolithicEngine {
                     self.metrics.push(st.into_record(now));
                     self.done += 1;
                     finished += 1;
+                    self.tracer.emit(now, EventKind::Complete { req: id });
                 }
             }
             // Prefill chunks.
@@ -311,19 +351,26 @@ impl Engine for MonolithicEngine {
                 st.queue_time += (it.start - st.queue_since).max(0.0);
                 st.queue_since = now;
                 st.prefilled += take;
-                if st.prefill_done() {
+                let prefill_done = st.prefill_done();
+                self.tracer.emit(
+                    now,
+                    EventKind::PrefillChunk { req: id, take, done: prefill_done, dur },
+                );
+                if prefill_done {
                     self.waiting.remove(id);
                     if st.generated > 0 {
                         // Recompute path: tokens already emitted; resume decode.
                         self.running.insert(id);
                     } else {
                         st.note_first_token(now);
+                        self.tracer.emit(now, EventKind::FirstToken { req: id });
                         if st.decode_done() {
                             let st = self.states[id].take().unwrap();
                             self.kv.release(id);
                             self.metrics.push(st.into_record(now));
                             self.done += 1;
                             finished += 1;
+                            self.tracer.emit(now, EventKind::Complete { req: id });
                         } else {
                             self.running.insert(id);
                         }
@@ -351,6 +398,20 @@ impl Engine for MonolithicEngine {
 
     fn kv_usage(&self) -> f64 {
         self.kv.usage()
+    }
+
+    fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
+    }
+
+    fn snapshot(&self) -> EngineSnapshot {
+        EngineSnapshot {
+            waiting: self.waiting.len(),
+            running: self.running.len(),
+            kv_usage: self.kv.usage(),
+            sm_prefill: 1.0,
+            inflight: usize::from(self.inflight.is_some()),
+        }
     }
 
     fn take_metrics(&mut self) -> RunMetrics {

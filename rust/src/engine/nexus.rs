@@ -27,6 +27,7 @@ use crate::metrics::RunMetrics;
 use crate::model::OpWork;
 use crate::partition::{BatchState, Mode, PartitionController};
 use crate::sched::{fcfs_batch_into, spf_batch_into, PrefillItem, SchedScratch};
+use crate::trace::{EngineSnapshot, EventKind, PreemptKind, TracePhase, Tracer};
 use crate::util::OrderedIdSet;
 use crate::workload::Request;
 use std::time::Instant;
@@ -90,6 +91,7 @@ pub struct NexusEngine {
     /// Recycled `Iter` vectors (returned on completion, reused on schedule).
     spare_ids: Vec<Vec<usize>>,
     spare_parts: Vec<Vec<(usize, usize)>>,
+    tracer: Tracer,
 }
 
 impl NexusEngine {
@@ -129,6 +131,7 @@ impl NexusEngine {
             scratch: SchedScratch::default(),
             spare_ids: Vec::new(),
             spare_parts: Vec::new(),
+            tracer: Tracer::default(),
         }
     }
 
@@ -189,6 +192,10 @@ impl NexusEngine {
                             self.states[v].as_mut().unwrap().restart_for_recompute(now);
                             self.waiting.insert(v);
                             self.metrics.recomputes += 1;
+                            self.tracer.emit(
+                                now,
+                                EventKind::Preempt { req: v, kind: PreemptKind::Recompute },
+                            );
                         }
                         None => break,
                     }
@@ -253,6 +260,16 @@ impl NexusEngine {
                 if self.kv.try_reserve(item.id, take) {
                     prefill_parts.push((item.id, take));
                     left -= take;
+                    if self.tracer.enabled() {
+                        self.tracer.emit(
+                            now,
+                            EventKind::KvAlloc {
+                                req: item.id,
+                                tokens: take,
+                                usage: self.kv.usage(),
+                            },
+                        );
+                    }
                 }
             }
             self.picked_buf = picked;
@@ -298,11 +315,35 @@ impl NexusEngine {
             if decision.applied {
                 self.sim.set_partition(PREFILL_STREAM, decision.r_p);
                 self.sim.set_partition(DECODE_STREAM, decision.r_d);
+                self.tracer.emit(
+                    now,
+                    EventKind::Repartition {
+                        r_p: decision.r_p,
+                        r_d: decision.r_d,
+                        decode_mode: decision.mode == Mode::DecodePrioritized,
+                    },
+                );
             }
         }
 
         self.tag += 1;
         self.sim.submit(stream, &self.ops_buf, self.tag);
+        if self.tracer.enabled() {
+            let tokens: usize =
+                decode_ids.len() + prefill_parts.iter().map(|&(_, t)| t).sum::<usize>();
+            self.tracer.emit(
+                now,
+                EventKind::BatchStart {
+                    phase: if stream == DECODE_STREAM {
+                        TracePhase::Decode
+                    } else {
+                        TracePhase::Prefill
+                    },
+                    seqs: decode_ids.len() + prefill_parts.len(),
+                    tokens,
+                },
+            );
+        }
 
         let sched = wall.elapsed().as_secs_f64();
         let parts = decode_ids.len() + prefill_parts.len();
@@ -384,6 +425,7 @@ impl Engine for NexusEngine {
         self.states[req.id] = Some(ReqState::new(req));
         self.waiting.insert(req.id);
         self.injected += 1;
+        self.tracer.emit(req.arrival, EventKind::Admit { req: req.id });
     }
 
     fn step(&mut self, t: f64) -> StepOutcome {
@@ -410,6 +452,23 @@ impl Engine for NexusEngine {
             let it = self.inflight[c.stream].take().expect("completion without inflight");
             let now = c.time;
             let dur = now - it.start;
+            if self.tracer.enabled() {
+                let tokens: usize =
+                    it.decode_ids.len() + it.prefill_parts.iter().map(|&(_, t)| t).sum::<usize>();
+                self.tracer.emit(
+                    now,
+                    EventKind::BatchEnd {
+                        phase: if c.stream == DECODE_STREAM {
+                            TracePhase::Decode
+                        } else {
+                            TracePhase::Prefill
+                        },
+                        seqs: it.decode_ids.len() + it.prefill_parts.len(),
+                        tokens,
+                        dur,
+                    },
+                );
+            }
             for &id in &it.decode_ids {
                 let st = self.states[id].as_mut().unwrap();
                 st.exec_time += dur;
@@ -421,6 +480,7 @@ impl Engine for NexusEngine {
                     self.metrics.push(st.into_record(now));
                     self.done += 1;
                     finished += 1;
+                    self.tracer.emit(now, EventKind::Complete { req: id });
                 }
             }
             for &(id, take) in &it.prefill_parts {
@@ -429,18 +489,25 @@ impl Engine for NexusEngine {
                 st.queue_time += (it.start - st.queue_since).max(0.0);
                 st.queue_since = now;
                 st.prefilled += take;
-                if st.prefill_done() {
+                let prefill_done = st.prefill_done();
+                self.tracer.emit(
+                    now,
+                    EventKind::PrefillChunk { req: id, take, done: prefill_done, dur },
+                );
+                if prefill_done {
                     self.waiting.remove(id);
                     if st.generated > 0 {
                         self.running.insert(id); // resumed after recompute
                     } else {
                         st.note_first_token(now);
+                        self.tracer.emit(now, EventKind::FirstToken { req: id });
                         if st.decode_done() {
                             let st = self.states[id].take().unwrap();
                             self.kv.release(id);
                             self.metrics.push(st.into_record(now));
                             self.done += 1;
                             finished += 1;
+                            self.tracer.emit(now, EventKind::Complete { req: id });
                         } else {
                             self.running.insert(id);
                         }
@@ -477,6 +544,20 @@ impl Engine for NexusEngine {
 
     fn kv_usage(&self) -> f64 {
         self.kv.usage()
+    }
+
+    fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
+    }
+
+    fn snapshot(&self) -> EngineSnapshot {
+        EngineSnapshot {
+            waiting: self.waiting.len(),
+            running: self.running.len(),
+            kv_usage: self.kv.usage(),
+            sm_prefill: self.controller.r_p,
+            inflight: self.inflight.iter().filter(|i| i.is_some()).count(),
+        }
     }
 
     fn take_metrics(&mut self) -> RunMetrics {

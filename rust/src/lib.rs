@@ -34,6 +34,7 @@
 //! | [`sched`] | SPF (Alg. 2), FCFS, chunked-prefill, MLFQ, radix-cache schedulers |
 //! | [`engine`] | Nexus + vLLM-like, SGLang-like, FastServe, disaggregated P/D engines; stepping API |
 //! | [`cluster`] | multi-replica fleet: pluggable routing, cost-model autoscaling, metric merge |
+//! | [`trace`] | zero-cost tracing: lifecycle events, fleet time-series, Perfetto/JSONL export |
 //! | [`workload`] | Table-1 dataset generators, Poisson + bursty/diurnal arrivals, trace I/O |
 //! | [`coordinator`] | virtual-time serving loop, throughput search, experiment drivers |
 //! | [`runtime`] | PJRT artifact loading + execution (real compute path, `pjrt` feature) |
@@ -55,5 +56,6 @@ pub mod sched;
 #[cfg(feature = "pjrt")]
 pub mod server;
 pub mod testing;
+pub mod trace;
 pub mod util;
 pub mod workload;

@@ -9,9 +9,13 @@
 //! nexus throughput --engine vllm --dataset arxiv --model qwen3b --n 150
 //! nexus offline    --dataset ldc --model qwen3b --n 100
 //! nexus calibrate  [--model qwen3b]
-//! nexus trace      --dataset sharegpt --n 500 --rate 2.0 --out trace.json
+//! nexus trace      --engine nexus --replicas 16 --bursty --out trace.json
 //! nexus live       [--artifacts DIR] [--requests 16] [--rate 4.0]   (pjrt feature)
 //! ```
+//!
+//! `serve` and `cluster` also accept `--trace-out FILE` (Chrome/Perfetto
+//! trace) and `--trace-events FILE` (JSONL event log); `trace` is the
+//! dedicated export subcommand (fleet run, Chrome trace to `--out`).
 //!
 //! `live` is the real-compute path: it loads the AOT artifacts (tiny model)
 //! through PJRT and serves actual token traffic; everything else runs on
@@ -22,10 +26,11 @@ use nexus::coordinator::{
     offline_makespan, sustainable_throughput, ClusterExperiment, Experiment, SloSpec,
 };
 use nexus::costmodel::calibrate;
-use nexus::engine::EngineKind;
+use nexus::engine::{run_engine_traced, EngineKind};
 use nexus::gpusim::GpuSpec;
-use nexus::metrics::Summary;
+use nexus::metrics::{RunMetrics, Summary};
 use nexus::model::{ModelConfig, OpClass};
+use nexus::trace::{attribute, chrome_trace, to_jsonl, Tracer};
 use nexus::util::cli::Args;
 use nexus::util::fmt::{dur, Table};
 use nexus::workload::{self, BurstyCfg, Dataset};
@@ -84,6 +89,38 @@ fn summary_row(name: &str, s: &Summary) -> Vec<String> {
 const HDR: [&str; 9] =
     ["engine", "done", "TTFT", "TTFT95", "TBT", "TBT95", "norm", "norm95", "req/s"];
 
+/// Recording tracer when `--trace-out` / `--trace-events` is given
+/// (sampling every `--sample-interval` virtual seconds, default 1.0);
+/// otherwise the zero-cost disabled tracer.
+fn tracer_from(args: &Args) -> Tracer {
+    if args.get("trace-out").is_some() || args.get("trace-events").is_some() {
+        Tracer::recording().with_sampling(args.get_f64("sample-interval", 1.0))
+    } else {
+        Tracer::default()
+    }
+}
+
+/// Drain a recording tracer: print the per-phase latency attribution and
+/// write the Chrome/Perfetto trace and/or JSONL event log.
+fn export_trace(args: &Args, tracer: &Tracer, metrics: &RunMetrics) {
+    if !tracer.enabled() {
+        return;
+    }
+    let events = tracer.take();
+    println!("{}", attribute(&events, metrics));
+    if let Some(path) = args.get("trace-out") {
+        std::fs::write(path, chrome_trace(&events).to_string()).expect("writing trace");
+        eprintln!(
+            "wrote {} events to {path} — open it at https://ui.perfetto.dev or chrome://tracing",
+            events.len()
+        );
+    }
+    if let Some(path) = args.get("trace-events") {
+        std::fs::write(path, to_jsonl(&events)).expect("writing event log");
+        eprintln!("wrote {} events to {path} (JSONL)", events.len());
+    }
+}
+
 fn cmd_serve(args: &Args) {
     let exp = experiment(args);
     let kind = EngineKind::by_name(&args.get_or("engine", "nexus"))
@@ -96,7 +133,8 @@ fn cmd_serve(args: &Args) {
         exp.n_requests,
         exp.rate
     );
-    let m = exp.run(kind);
+    let tracer = tracer_from(args);
+    let m = run_engine_traced(kind, &exp.cfg(), &exp.trace(), &tracer);
     let s = m.summary();
     let mut t = Table::new("serving summary", &HDR);
     t.row(&summary_row(kind.name(), &s));
@@ -112,6 +150,7 @@ fn cmd_serve(args: &Args) {
         dur(b.queue),
         dur(b.exec)
     );
+    export_trace(args, &tracer, &m);
 }
 
 fn cmd_compare(args: &Args) {
@@ -134,7 +173,9 @@ fn cmd_compare(args: &Args) {
     t.print();
 }
 
-fn cmd_cluster(args: &Args) {
+/// Shared `cluster` / `trace` argument parsing: fleet shape, engine kind,
+/// routing policy, optional bursty arrivals and autoscaling.
+fn cluster_experiment(args: &Args) -> (ClusterExperiment, EngineKind) {
     let base = experiment(args);
     let kind = EngineKind::by_name(&args.get_or("engine", "nexus"))
         .unwrap_or_else(|| panic!("unknown --engine"));
@@ -158,6 +199,13 @@ fn cmd_cluster(args: &Args) {
             ..AutoscalerCfg::default()
         });
     }
+    (exp, kind)
+}
+
+fn cmd_cluster(args: &Args) {
+    let (exp, kind) = cluster_experiment(args);
+    let replicas = exp.replicas;
+    let policy = exp.policy;
     eprintln!(
         "running {} x{} [{}] on {} / {} ({} reqs @ {} req/s{}{})...",
         kind.name(),
@@ -170,7 +218,8 @@ fn cmd_cluster(args: &Args) {
         if exp.bursty.is_some() { ", bursty" } else { "" },
         if exp.autoscale.is_some() { ", autoscaled" } else { "" },
     );
-    let m = exp.run(kind);
+    let tracer = tracer_from(args);
+    let m = exp.run_traced(kind, &tracer);
     let mut t = Table::new("fleet summary", &HDR);
     t.row(&summary_row(&format!("{} x{}", kind.name(), replicas), &m.summary()));
     t.print();
@@ -203,6 +252,7 @@ fn cmd_cluster(args: &Args) {
         dur(m.ttft_hist.quantile(0.99)),
         dur(m.tbt_hist.quantile(0.95)),
     );
+    export_trace(args, &tracer, &m.fleet);
 }
 
 fn cmd_throughput(args: &Args) {
@@ -266,20 +316,59 @@ fn cmd_calibrate(_args: &Args) {
 }
 
 fn cmd_trace(args: &Args) {
-    let dataset = Dataset::by_name(&args.get_or("dataset", "sharegpt")).expect("dataset");
-    let trace = workload::generate(
-        dataset,
-        args.get_usize("n", 500),
-        args.get_f64("rate", 2.0),
-        args.get_u64("seed", 42),
-    );
-    let json = workload::trace_to_json(&trace).to_string();
-    match args.get("out") {
-        Some(path) => {
-            std::fs::write(path, &json).expect("writing trace");
-            eprintln!("wrote {} requests to {path}", trace.len());
+    if args.is_set("workload") {
+        // Dump the generated workload itself as JSON (the subcommand's
+        // pre-telemetry behavior).
+        let dataset = Dataset::by_name(&args.get_or("dataset", "sharegpt")).expect("dataset");
+        let trace = workload::generate(
+            dataset,
+            args.get_usize("n", 500),
+            args.get_f64("rate", 2.0),
+            args.get_u64("seed", 42),
+        );
+        let json = workload::trace_to_json(&trace).to_string();
+        match args.get("out") {
+            Some(path) => {
+                std::fs::write(path, &json).expect("writing trace");
+                eprintln!("wrote {} requests to {path}", trace.len());
+            }
+            None => println!("{json}"),
         }
-        None => println!("{json}"),
+        return;
+    }
+
+    // Default: run a fleet with recording + sampling on and export a
+    // Chrome/Perfetto trace (one track per replica, async spans per
+    // request, counter tracks from the periodic samples).
+    let (exp, kind) = cluster_experiment(args);
+    eprintln!(
+        "tracing {} x{} [{}] on {} / {} ({} reqs @ {} req/s{}{})...",
+        kind.name(),
+        exp.replicas,
+        exp.policy.name(),
+        exp.base.model.name,
+        exp.base.dataset.name(),
+        exp.base.n_requests,
+        exp.base.rate,
+        if exp.bursty.is_some() { ", bursty" } else { "" },
+        if exp.autoscale.is_some() { ", autoscaled" } else { "" },
+    );
+    let tracer = Tracer::recording().with_sampling(args.get_f64("sample-interval", 1.0));
+    let m = exp.run_traced(kind, &tracer);
+    let events = tracer.take();
+    let mut t = Table::new("fleet summary", &HDR);
+    t.row(&summary_row(&format!("{} x{}", kind.name(), exp.replicas), &m.summary()));
+    t.print();
+    println!("{}", attribute(&events, &m.fleet));
+    let out = args.get_or("out", "trace.json");
+    std::fs::write(&out, chrome_trace(&events).to_string()).expect("writing trace");
+    eprintln!(
+        "wrote {} events to {out} — open it at https://ui.perfetto.dev or chrome://tracing",
+        events.len()
+    );
+    if let Some(path) = args.get("trace-events") {
+        std::fs::write(path, to_jsonl(&events)).expect("writing event log");
+        eprintln!("wrote {} events to {path} (JSONL)", events.len());
     }
 }
 

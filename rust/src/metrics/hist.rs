@@ -145,6 +145,50 @@ mod tests {
     }
 
     #[test]
+    fn single_sample_merge_pins_quantiles_to_the_sample() {
+        // min/max clamping makes every quantile of a 1-sample histogram
+        // exact, including after merging into an empty one.
+        let mut empty = Histogram::new();
+        let mut one = Histogram::new();
+        one.record(0.123);
+        empty.merge(&one);
+        assert_eq!(empty.count(), 1);
+        for q in [0.0, 0.01, 0.5, 0.99, 1.0] {
+            assert_eq!(empty.quantile(q), 0.123, "q={q}");
+        }
+        assert!((empty.mean() - 0.123).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_of_disjoint_ranges_keeps_both_modes() {
+        // One "replica" in the 10–100 µs regime, one in the 100–1000 s
+        // regime; the merged quantiles must land in the correct mode.
+        let mut low = Histogram::new();
+        let mut high = Histogram::new();
+        for i in 0..100 {
+            low.record(1e-5 + i as f64 * 9e-7); // 10µs..~100µs
+            high.record(100.0 + i as f64 * 9.0); // 100s..~1000s
+        }
+        low.merge(&high);
+        assert_eq!(low.count(), 200);
+        let q25 = low.quantile(0.25);
+        assert!(q25 < 1e-3, "q25={q25} must come from the low mode");
+        let q75 = low.quantile(0.75);
+        assert!(q75 > 50.0, "q75={q75} must come from the high mode");
+    }
+
+    #[test]
+    fn underflow_samples_report_the_true_minimum() {
+        // Samples below the 1µs bucket floor land in the underflow bucket;
+        // quantiles there return the exact recorded minimum, not the edge.
+        let mut h = Histogram::new();
+        h.record(1e-9);
+        h.record(2e-9);
+        assert_eq!(h.quantile(0.5), 1e-9);
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
     fn merged_percentiles_equal_concatenated_samples() {
         // Fleet-aggregation correctness: merging per-replica histograms
         // must yield the same percentiles as one histogram over the

@@ -404,6 +404,31 @@ mod tests {
     }
 
     #[test]
+    fn merge_sums_every_event_counter() {
+        let mut a = RunMetrics::default();
+        a.repartitions = 2;
+        a.suppressed_repartitions = 1;
+        a.swaps = 5;
+        a.recomputes = 3;
+        a.timeouts = 1;
+        a.peak_kv_usage = 0.7;
+        let mut b = RunMetrics::default();
+        b.repartitions = 4;
+        b.suppressed_repartitions = 6;
+        b.swaps = 7;
+        b.recomputes = 9;
+        b.timeouts = 2;
+        b.peak_kv_usage = 0.5;
+        a.merge(b);
+        assert_eq!(a.repartitions, 6);
+        assert_eq!(a.suppressed_repartitions, 7);
+        assert_eq!(a.swaps, 12);
+        assert_eq!(a.recomputes, 12);
+        assert_eq!(a.timeouts, 3);
+        assert!((a.peak_kv_usage - 0.7).abs() < 1e-12, "peak is maxed, not summed");
+    }
+
+    #[test]
     fn digest_pins_behavior_and_ignores_record_order() {
         let mut a = RunMetrics::default();
         a.push(rec(0.0, 0.5, 2.0, 5));

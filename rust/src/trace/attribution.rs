@@ -1,0 +1,166 @@
+//! Per-phase latency attribution derived from a trace.
+//!
+//! Splits each completed request's end-to-end latency into four phases and
+//! reports per-request means alongside `RunMetrics`:
+//!
+//! * **queueing** — arrival → first prefill execution (admission queues,
+//!   KV-pressure stalls, router-to-engine hand-off);
+//! * **prefill** — GPU time spent executing the request's prefill chunks
+//!   (summed batch durations of iterations carrying its chunks);
+//! * **decode** — GPU execution time attributed to decode
+//!   (`exec_time − prefill`, the engine's own accounting);
+//! * **interference** — the remainder of the decode span
+//!   (`first_token → finish`) not covered by decode execution: time the
+//!   request sat scheduled-out, preempted, or waiting on a shared stream —
+//!   the contention Nexus's repartitioning targets.
+//!
+//! Each component is clamped at 0, so the four means sum to ≈ mean e2e
+//! latency (exactly, when no clamp fires).
+
+use std::collections::HashMap;
+
+use super::{EventKind, TraceEvent};
+use crate::metrics::RunMetrics;
+
+/// Mean seconds per request spent in each phase.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseAttribution {
+    /// Completed requests the means are taken over.
+    pub requests: usize,
+    pub queueing: f64,
+    pub prefill: f64,
+    pub interference: f64,
+    pub decode: f64,
+}
+
+impl PhaseAttribution {
+    /// Sum of the four phase means (≈ mean end-to-end latency).
+    pub fn total(&self) -> f64 {
+        self.queueing + self.prefill + self.interference + self.decode
+    }
+}
+
+impl std::fmt::Display for PhaseAttribution {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "phase attribution over {} requests (mean s/req): queueing {:.4}  prefill {:.4}  interference {:.4}  decode {:.4}  (sum {:.4})",
+            self.requests,
+            self.queueing,
+            self.prefill,
+            self.interference,
+            self.decode,
+            self.total()
+        )
+    }
+}
+
+/// Attribute per-phase latency from a recorded trace plus the run's
+/// per-request records. Only requests present in `metrics.records`
+/// (i.e. completed) are attributed.
+pub fn attribute(events: &[TraceEvent], metrics: &RunMetrics) -> PhaseAttribution {
+    // Per-request prefill execution: sum of the batch durations of every
+    // iteration that carried one of its prefill chunks.
+    let mut prefill_exec: HashMap<usize, f64> = HashMap::new();
+    for ev in events {
+        if let EventKind::PrefillChunk { req, dur, .. } = &ev.kind {
+            *prefill_exec.entry(*req).or_insert(0.0) += *dur;
+        }
+    }
+    let mut out = PhaseAttribution::default();
+    for r in &metrics.records {
+        let ttft = (r.first_token - r.arrival).max(0.0);
+        // Clamp to TTFT: a chunk's batch duration can slightly exceed the
+        // request's own share when the batch carried other work too.
+        let prefill = prefill_exec.get(&r.id).copied().unwrap_or(0.0).min(ttft);
+        let queueing = (ttft - prefill).max(0.0);
+        let decode = (r.exec_time - prefill).max(0.0);
+        let decode_span = (r.finish - r.first_token).max(0.0);
+        let interference = (decode_span - decode).max(0.0);
+        out.requests += 1;
+        out.queueing += queueing;
+        out.prefill += prefill;
+        out.decode += decode;
+        out.interference += interference;
+    }
+    if out.requests > 0 {
+        let n = out.requests as f64;
+        out.queueing /= n;
+        out.prefill /= n;
+        out.decode /= n;
+        out.interference /= n;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Tracer;
+    use super::*;
+    use crate::metrics::RequestRecord;
+
+    fn record(id: usize, arrival: f64, first: f64, finish: f64, exec: f64) -> RequestRecord {
+        RequestRecord {
+            id,
+            arrival,
+            first_token: first,
+            finish,
+            prompt_len: 128,
+            output_len: 8,
+            token_gaps: vec![],
+            sched_time: 0.0,
+            queue_time: 0.0,
+            exec_time: exec,
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_safe() {
+        let a = attribute(&[], &RunMetrics::default());
+        assert_eq!(a.requests, 0);
+        assert_eq!(a.total(), 0.0);
+    }
+
+    #[test]
+    fn phases_sum_to_e2e_without_clamping() {
+        // Request 5: arrives 0.0, prefill chunk runs 0.3 inside TTFT 0.5,
+        // exec 1.1 (0.3 prefill + 0.8 decode), finishes at 2.5.
+        let t = Tracer::recording().for_replica(0);
+        t.emit(0.5, EventKind::PrefillChunk { req: 5, take: 128, done: true, dur: 0.3 });
+        let evs = t.take();
+        let mut m = RunMetrics::default();
+        m.push(record(5, 0.0, 0.5, 2.5, 1.1));
+        let a = attribute(&evs, &m);
+        assert_eq!(a.requests, 1);
+        assert!((a.prefill - 0.3).abs() < 1e-12);
+        assert!((a.queueing - 0.2).abs() < 1e-12);
+        assert!((a.decode - 0.8).abs() < 1e-12);
+        assert!((a.interference - 1.2).abs() < 1e-12);
+        assert!((a.total() - 2.5).abs() < 1e-12, "phases must sum to e2e");
+    }
+
+    #[test]
+    fn untraced_request_is_all_queueing_before_first_token() {
+        let mut m = RunMetrics::default();
+        m.push(record(1, 0.0, 0.4, 1.0, 0.6));
+        let a = attribute(&[], &m);
+        assert!((a.queueing - 0.4).abs() < 1e-12);
+        assert_eq!(a.prefill, 0.0);
+        assert!((a.decode - 0.6).abs() < 1e-12);
+        assert!((a.interference - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn means_are_per_request() {
+        let t = Tracer::recording().for_replica(0);
+        t.emit(0.2, EventKind::PrefillChunk { req: 0, take: 64, done: true, dur: 0.2 });
+        t.emit(0.4, EventKind::PrefillChunk { req: 1, take: 64, done: true, dur: 0.4 });
+        let evs = t.take();
+        let mut m = RunMetrics::default();
+        m.push(record(0, 0.0, 0.2, 1.0, 0.2));
+        m.push(record(1, 0.0, 0.4, 2.0, 0.4));
+        let a = attribute(&evs, &m);
+        assert_eq!(a.requests, 2);
+        assert!((a.prefill - 0.3).abs() < 1e-12, "mean of 0.2 and 0.4");
+    }
+}

@@ -1,0 +1,368 @@
+//! Trace exporters: Chrome/Perfetto `trace_event` JSON and compact JSONL.
+//!
+//! The Chrome format (loadable at `ui.perfetto.dev` or `chrome://tracing`)
+//! maps the fleet onto processes: pid 0 is the fleet (routing, autoscale),
+//! pid `replica + 1` is one replica. Batch executions become `ph:"X"`
+//! complete events on per-phase threads, requests become async spans
+//! (`b`/`n`/`e`) so queueing + prefill + decode of one request reads as a
+//! single track, and the periodic samples become `ph:"C"` counter tracks
+//! (KV occupancy, queue depths, SM split). High-frequency events that would
+//! drown the UI (per-chunk prefill progress, KV allocations, batch starts)
+//! are JSONL-only.
+
+use std::collections::BTreeSet;
+
+use super::{EventKind, TraceEvent, FLEET};
+use crate::util::json::Json;
+
+/// Pid for a replica id in the Chrome export (fleet sentinel → 0).
+fn pid_of(replica: u32) -> usize {
+    if replica == FLEET {
+        0
+    } else {
+        replica as usize + 1
+    }
+}
+
+/// Microseconds, the Chrome trace time unit.
+fn us(t: f64) -> f64 {
+    t * 1e6
+}
+
+fn row(pid: usize, tid: usize, ph: &str, name: &str, ts: f64, args: Vec<(&str, Json)>) -> Json {
+    let mut fields = vec![
+        ("pid", Json::from(pid)),
+        ("tid", Json::from(tid)),
+        ("ph", Json::from(ph)),
+        ("name", Json::from(name)),
+        ("ts", Json::from(us(ts))),
+    ];
+    if !args.is_empty() {
+        fields.push(("args", Json::obj(args)));
+    }
+    Json::obj(fields)
+}
+
+fn instant(pid: usize, name: &str, ts: f64, args: Vec<(&str, Json)>) -> Json {
+    let mut v = row(pid, 0, "i", name, ts, args);
+    if let Json::Obj(o) = &mut v {
+        o.insert("s".to_string(), Json::from("p")); // process-scoped instant
+    }
+    v
+}
+
+fn counter(pid: usize, name: &str, ts: f64, args: Vec<(&str, Json)>) -> Json {
+    row(pid, 0, "C", name, ts, args)
+}
+
+/// Async-span row (`ph` = "b" begin / "n" instant / "e" end), one span id
+/// per request so its lifecycle renders as a single track.
+fn async_row(pid: usize, ph: &str, req: usize, ts: f64) -> Json {
+    let mut v = row(pid, 0, ph, &format!("req {req}"), ts, Vec::new());
+    if let Json::Obj(o) = &mut v {
+        o.insert("cat".to_string(), Json::from("request"));
+        o.insert("id".to_string(), Json::from(req));
+    }
+    v
+}
+
+fn metadata(pid: usize, tid: Option<usize>, what: &str, value: &str) -> Json {
+    let mut fields = vec![
+        ("pid", Json::from(pid)),
+        ("ph", Json::from("M")),
+        ("name", Json::from(what)),
+        ("args", Json::obj(vec![("name", Json::from(value))])),
+    ];
+    if let Some(t) = tid {
+        fields.push(("tid", Json::from(t)));
+    }
+    Json::obj(fields)
+}
+
+/// Convert a trace to a Chrome/Perfetto `trace_event` JSON document.
+pub fn chrome_trace(events: &[TraceEvent]) -> Json {
+    let mut rows: Vec<Json> = Vec::new();
+    let mut pids: BTreeSet<u32> = BTreeSet::new();
+    for ev in events {
+        pids.insert(ev.replica);
+    }
+    for &r in &pids {
+        let pid = pid_of(r);
+        if r == FLEET {
+            rows.push(metadata(pid, None, "process_name", "fleet"));
+        } else {
+            rows.push(metadata(pid, None, "process_name", &format!("replica {r}")));
+            rows.push(metadata(pid, Some(0), "thread_name", "events"));
+            rows.push(metadata(pid, Some(1), "thread_name", "prefill batches"));
+            rows.push(metadata(pid, Some(2), "thread_name", "decode batches"));
+            rows.push(metadata(pid, Some(3), "thread_name", "mixed batches"));
+        }
+    }
+    for ev in events {
+        let pid = pid_of(ev.replica);
+        match &ev.kind {
+            // JSONL-only (too chatty for the timeline UI):
+            EventKind::Arrival { .. }
+            | EventKind::BatchStart { .. }
+            | EventKind::PrefillChunk { .. }
+            | EventKind::KvAlloc { .. } => {}
+            EventKind::Route { req, target, policy, pending, kv_usage } => {
+                rows.push(instant(
+                    pid,
+                    &format!("route req {req} -> r{target}"),
+                    ev.time,
+                    vec![
+                        ("policy", Json::from(*policy)),
+                        ("target_pending", Json::from(*pending)),
+                        ("target_kv_usage", Json::from(*kv_usage)),
+                    ],
+                ));
+            }
+            EventKind::Admit { req } => rows.push(async_row(pid, "b", *req, ev.time)),
+            EventKind::FirstToken { req } => rows.push(async_row(pid, "n", *req, ev.time)),
+            EventKind::Complete { req } => rows.push(async_row(pid, "e", *req, ev.time)),
+            EventKind::BatchEnd { phase, seqs, tokens, dur } => {
+                let tid = match phase {
+                    super::TracePhase::Prefill => 1,
+                    super::TracePhase::Decode => 2,
+                    super::TracePhase::Mixed => 3,
+                };
+                let mut v = row(
+                    pid,
+                    tid,
+                    "X",
+                    &format!("{} batch", phase.name()),
+                    ev.time - dur,
+                    vec![("seqs", Json::from(*seqs)), ("tokens", Json::from(*tokens))],
+                );
+                if let Json::Obj(o) = &mut v {
+                    o.insert("dur".to_string(), Json::from(us(*dur)));
+                }
+                rows.push(v);
+            }
+            EventKind::Preempt { req, kind } => {
+                rows.push(instant(
+                    pid,
+                    &format!("preempt req {req}"),
+                    ev.time,
+                    vec![("kind", Json::from(kind.name()))],
+                ));
+            }
+            EventKind::Repartition { r_p, r_d, decode_mode } => {
+                rows.push(instant(
+                    pid,
+                    "repartition",
+                    ev.time,
+                    vec![
+                        ("r_p", Json::from(*r_p)),
+                        ("r_d", Json::from(*r_d)),
+                        ("decode_mode", Json::from(*decode_mode)),
+                    ],
+                ));
+                rows.push(counter(
+                    pid,
+                    "sm_split",
+                    ev.time,
+                    vec![("prefill", Json::from(*r_p)), ("decode", Json::from(*r_d))],
+                ));
+            }
+            EventKind::Transfer { req, bytes, dur } => {
+                rows.push(instant(
+                    pid,
+                    &format!("kv transfer req {req}"),
+                    ev.time,
+                    vec![("bytes", Json::from(*bytes)), ("dur_s", Json::from(*dur))],
+                ));
+            }
+            EventKind::Scale { from, to } => {
+                rows.push(instant(
+                    pid,
+                    &format!("scale {from} -> {to}"),
+                    ev.time,
+                    vec![("from", Json::from(*from)), ("to", Json::from(*to))],
+                ));
+                rows.push(counter(pid, "replicas", ev.time, vec![("count", Json::from(*to))]));
+            }
+            EventKind::ReplicaStart => rows.push(instant(pid, "replica start", ev.time, vec![])),
+            EventKind::ReplicaDrain => rows.push(instant(pid, "replica drain", ev.time, vec![])),
+            EventKind::ReplicaRetire => rows.push(instant(pid, "replica retire", ev.time, vec![])),
+            EventKind::Sample { kv_usage, waiting, running, pending, sm_prefill, inflight } => {
+                rows.push(counter(pid, "kv_usage", ev.time, vec![("kv", Json::from(*kv_usage))]));
+                rows.push(counter(
+                    pid,
+                    "queues",
+                    ev.time,
+                    vec![
+                        ("waiting", Json::from(*waiting)),
+                        ("running", Json::from(*running)),
+                        ("pending", Json::from(*pending)),
+                        ("inflight", Json::from(*inflight)),
+                    ],
+                ));
+                rows.push(counter(
+                    pid,
+                    "sm_split",
+                    ev.time,
+                    vec![
+                        ("prefill", Json::from(*sm_prefill)),
+                        ("decode", Json::from(1.0 - *sm_prefill)),
+                    ],
+                ));
+            }
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(rows)),
+        ("displayTimeUnit", Json::from("ms")),
+    ])
+}
+
+/// One event as a flat JSON object (the JSONL record).
+pub fn event_json(ev: &TraceEvent) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![("t", Json::from(ev.time)), ("ev", Json::from(ev.kind.name()))];
+    if ev.replica == FLEET {
+        fields.push(("replica", Json::from("fleet")));
+    } else {
+        fields.push(("replica", Json::from(ev.replica as usize)));
+    }
+    match &ev.kind {
+        EventKind::Arrival { req }
+        | EventKind::Admit { req }
+        | EventKind::FirstToken { req }
+        | EventKind::Complete { req } => fields.push(("req", Json::from(*req))),
+        EventKind::Route { req, target, policy, pending, kv_usage } => {
+            fields.push(("req", Json::from(*req)));
+            fields.push(("target", Json::from(*target)));
+            fields.push(("policy", Json::from(*policy)));
+            fields.push(("pending", Json::from(*pending)));
+            fields.push(("kv_usage", Json::from(*kv_usage)));
+        }
+        EventKind::BatchStart { phase, seqs, tokens } => {
+            fields.push(("phase", Json::from(phase.name())));
+            fields.push(("seqs", Json::from(*seqs)));
+            fields.push(("tokens", Json::from(*tokens)));
+        }
+        EventKind::BatchEnd { phase, seqs, tokens, dur } => {
+            fields.push(("phase", Json::from(phase.name())));
+            fields.push(("seqs", Json::from(*seqs)));
+            fields.push(("tokens", Json::from(*tokens)));
+            fields.push(("dur", Json::from(*dur)));
+        }
+        EventKind::PrefillChunk { req, take, done, dur } => {
+            fields.push(("req", Json::from(*req)));
+            fields.push(("take", Json::from(*take)));
+            fields.push(("done", Json::from(*done)));
+            fields.push(("dur", Json::from(*dur)));
+        }
+        EventKind::Preempt { req, kind } => {
+            fields.push(("req", Json::from(*req)));
+            fields.push(("kind", Json::from(kind.name())));
+        }
+        EventKind::KvAlloc { req, tokens, usage } => {
+            fields.push(("req", Json::from(*req)));
+            fields.push(("tokens", Json::from(*tokens)));
+            fields.push(("usage", Json::from(*usage)));
+        }
+        EventKind::Repartition { r_p, r_d, decode_mode } => {
+            fields.push(("r_p", Json::from(*r_p)));
+            fields.push(("r_d", Json::from(*r_d)));
+            fields.push(("decode_mode", Json::from(*decode_mode)));
+        }
+        EventKind::Transfer { req, bytes, dur } => {
+            fields.push(("req", Json::from(*req)));
+            fields.push(("bytes", Json::from(*bytes)));
+            fields.push(("dur", Json::from(*dur)));
+        }
+        EventKind::Scale { from, to } => {
+            fields.push(("from", Json::from(*from)));
+            fields.push(("to", Json::from(*to)));
+        }
+        EventKind::Sample { kv_usage, waiting, running, pending, sm_prefill, inflight } => {
+            fields.push(("kv_usage", Json::from(*kv_usage)));
+            fields.push(("waiting", Json::from(*waiting)));
+            fields.push(("running", Json::from(*running)));
+            fields.push(("pending", Json::from(*pending)));
+            fields.push(("sm_prefill", Json::from(*sm_prefill)));
+            fields.push(("inflight", Json::from(*inflight)));
+        }
+        EventKind::ReplicaStart | EventKind::ReplicaDrain | EventKind::ReplicaRetire => {}
+    }
+    Json::obj(fields)
+}
+
+/// Compact JSONL event log: one JSON object per line, every event included.
+pub fn to_jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        out.push_str(&event_json(ev).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{PreemptKind, TracePhase, Tracer};
+    use super::*;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        let t = Tracer::recording();
+        let r0 = t.for_replica(0);
+        t.emit(0.0, EventKind::Arrival { req: 1 });
+        t.emit(0.0, EventKind::Route { req: 1, target: 0, policy: "jsq", pending: 0, kv_usage: 0.0 });
+        r0.emit(0.0, EventKind::Admit { req: 1 });
+        r0.emit(0.1, EventKind::BatchStart { phase: TracePhase::Prefill, seqs: 1, tokens: 256 });
+        r0.emit(0.4, EventKind::BatchEnd { phase: TracePhase::Prefill, seqs: 1, tokens: 256, dur: 0.3 });
+        r0.emit(0.4, EventKind::PrefillChunk { req: 1, take: 256, done: true, dur: 0.3 });
+        r0.emit(0.4, EventKind::FirstToken { req: 1 });
+        r0.emit(0.5, EventKind::Preempt { req: 1, kind: PreemptKind::Recompute });
+        r0.emit(0.6, EventKind::Repartition { r_p: 0.4, r_d: 0.6, decode_mode: true });
+        t.emit(1.0, EventKind::Scale { from: 1, to: 2 });
+        r0.emit(
+            1.0,
+            EventKind::Sample { kv_usage: 0.25, waiting: 2, running: 1, pending: 3, sm_prefill: 0.4, inflight: 1 },
+        );
+        r0.emit(1.5, EventKind::Complete { req: 1 });
+        t.take()
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_expected_rows() {
+        let evs = sample_events();
+        let doc = chrome_trace(&evs);
+        let parsed = Json::parse(&doc.to_string()).expect("chrome trace must be valid JSON");
+        let rows = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!rows.is_empty());
+        let phases: Vec<&str> =
+            rows.iter().filter_map(|r| r.get("ph").and_then(|p| p.as_str())).collect();
+        for want in ["M", "i", "b", "n", "e", "X", "C"] {
+            assert!(phases.contains(&want), "missing ph {want:?}");
+        }
+        // The complete event's ts must be start-of-batch (end - dur), in µs.
+        let x = rows
+            .iter()
+            .find(|r| r.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .expect("one X row");
+        assert!((x.get("ts").unwrap().as_f64().unwrap() - 0.1e6).abs() < 1e-6);
+        assert!((x.get("dur").unwrap().as_f64().unwrap() - 0.3e6).abs() < 1e-6);
+        // Replica 0 renders as pid 1; the fleet as pid 0.
+        assert!(rows.iter().any(|r| r.get("pid").and_then(|p| p.as_f64()) == Some(0.0)));
+        assert!(rows.iter().any(|r| r.get("pid").and_then(|p| p.as_f64()) == Some(1.0)));
+    }
+
+    #[test]
+    fn jsonl_round_trips_every_event() {
+        let evs = sample_events();
+        let text = to_jsonl(&evs);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), evs.len());
+        for (line, ev) in lines.iter().zip(&evs) {
+            let v = Json::parse(line).expect("each JSONL line parses");
+            assert_eq!(v.get("ev").unwrap().as_str(), Some(ev.kind.name()));
+            assert!((v.get("t").unwrap().as_f64().unwrap() - ev.time).abs() < 1e-12);
+        }
+        // Chatty kinds are present in JSONL even though Chrome skips them.
+        assert!(text.contains("\"ev\":\"prefill-chunk\""));
+        assert!(text.contains("\"ev\":\"batch-start\""));
+    }
+}

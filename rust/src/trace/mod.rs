@@ -1,0 +1,554 @@
+//! Zero-cost tracing + telemetry: typed request-lifecycle events, periodic
+//! fleet time-series samples, and exporters (Chrome/Perfetto, JSONL).
+//!
+//! The design goal is that the *disabled* path costs nothing on the serving
+//! hot loops: every instrumentation site goes through a [`Tracer`] handle
+//! whose sink is an `Option` — emitting with no sink attached is a single
+//! branch on an `Option` discriminant, no allocation, no virtual call, and
+//! the event payload is never constructed (arguments to `emit` are built
+//! inside `if let` only when a sink is present is *not* required because
+//! construction of an [`EventKind`] is a few scalar moves; the branch
+//! predictor eats the check). `tests/golden_trace.rs` pins that a disabled
+//! tracer leaves `RunMetrics::digest` byte-identical, and that a *recording*
+//! tracer is purely observational: the optimized and reference fleet loops
+//! emit identical event sequences, and enabling the sampler does not perturb
+//! the run digest.
+//!
+//! Time is virtual-time seconds throughout, quantized to 1 ns by
+//! [`TraceEvent::canonical`] for sequence comparison — the same tolerance
+//! contract as `RunMetrics::digest` / `deviation` (see `tests/golden_digest.rs`).
+
+mod attribution;
+mod export;
+
+pub use attribution::{attribute, PhaseAttribution};
+pub use export::{chrome_trace, event_json, to_jsonl};
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Replica id used for fleet-level events (routing, autoscale) that are not
+/// attributable to a single replica.
+pub const FLEET: u32 = u32::MAX;
+
+/// Which streams a batch occupied.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TracePhase {
+    Prefill,
+    Decode,
+    Mixed,
+}
+
+impl TracePhase {
+    /// Classify a batch by its decode-sequence and prefill-chunk counts.
+    pub fn of(decode_seqs: usize, prefill_chunks: usize) -> TracePhase {
+        match (decode_seqs > 0, prefill_chunks > 0) {
+            (true, true) => TracePhase::Mixed,
+            (false, true) => TracePhase::Prefill,
+            _ => TracePhase::Decode,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TracePhase::Prefill => "prefill",
+            TracePhase::Decode => "decode",
+            TracePhase::Mixed => "mixed",
+        }
+    }
+}
+
+/// Why a request was preempted / had KV state moved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptKind {
+    /// KV freed; prefill will be recomputed on re-admission.
+    Recompute,
+    /// KV swapped out to host memory (FastServe).
+    SwapOut,
+    /// KV swapped back in from host memory (FastServe).
+    SwapIn,
+    /// Staging-buffer overrun forced a recompute (vLLM-P/D).
+    BufferEvict,
+}
+
+impl PreemptKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PreemptKind::Recompute => "recompute",
+            PreemptKind::SwapOut => "swap-out",
+            PreemptKind::SwapIn => "swap-in",
+            PreemptKind::BufferEvict => "buffer-evict",
+        }
+    }
+}
+
+/// A typed lifecycle / telemetry event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// Request entered the system (fleet-level, at its arrival time).
+    Arrival { req: usize },
+    /// Router decision: where the request went and what the policy saw.
+    Route { req: usize, target: usize, policy: &'static str, pending: usize, kv_usage: f64 },
+    /// Engine accepted the request into its waiting queue.
+    Admit { req: usize },
+    /// A batch was submitted to the GPU simulator.
+    BatchStart { phase: TracePhase, seqs: usize, tokens: usize },
+    /// A batch iteration completed; `dur` is its execution time.
+    BatchEnd { phase: TracePhase, seqs: usize, tokens: usize, dur: f64 },
+    /// `take` prompt tokens of `req` were prefilled in an iteration that ran
+    /// for `dur` seconds; `done` marks the final chunk.
+    PrefillChunk { req: usize, take: usize, done: bool, dur: f64 },
+    /// First output token produced (end of prefill).
+    FirstToken { req: usize },
+    /// Request preempted / KV moved; see [`PreemptKind`].
+    Preempt { req: usize, kind: PreemptKind },
+    /// KV cache reserved for `req`; `usage` is post-allocation occupancy.
+    KvAlloc { req: usize, tokens: usize, usage: f64 },
+    /// SM repartition applied (Nexus): new prefill/decode split.
+    Repartition { r_p: f64, r_d: f64, decode_mode: bool },
+    /// Prefill→decode KV handoff through the staging buffer (vLLM-P/D).
+    Transfer { req: usize, bytes: f64, dur: f64 },
+    /// Autoscaler decision: fleet resizing from → to replicas.
+    Scale { from: usize, to: usize },
+    /// Replica entered service.
+    ReplicaStart,
+    /// Replica began draining (no new admissions).
+    ReplicaDrain,
+    /// Replica left service.
+    ReplicaRetire,
+    /// Request finished its last token.
+    Complete { req: usize },
+    /// Periodic time-series sample of one replica's state.
+    Sample {
+        kv_usage: f64,
+        waiting: usize,
+        running: usize,
+        pending: usize,
+        sm_prefill: f64,
+        inflight: usize,
+    },
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Arrival { .. } => "arrival",
+            EventKind::Route { .. } => "route",
+            EventKind::Admit { .. } => "admit",
+            EventKind::BatchStart { .. } => "batch-start",
+            EventKind::BatchEnd { .. } => "batch-end",
+            EventKind::PrefillChunk { .. } => "prefill-chunk",
+            EventKind::FirstToken { .. } => "first-token",
+            EventKind::Preempt { .. } => "preempt",
+            EventKind::KvAlloc { .. } => "kv-alloc",
+            EventKind::Repartition { .. } => "repartition",
+            EventKind::Transfer { .. } => "transfer",
+            EventKind::Scale { .. } => "scale",
+            EventKind::ReplicaStart => "replica-start",
+            EventKind::ReplicaDrain => "replica-drain",
+            EventKind::ReplicaRetire => "replica-retire",
+            EventKind::Complete { .. } => "complete",
+            EventKind::Sample { .. } => "sample",
+        }
+    }
+}
+
+/// One trace event: virtual time, owning replica ([`FLEET`] for fleet-level
+/// events), and the typed payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub time: f64,
+    pub replica: u32,
+    pub kind: EventKind,
+}
+
+/// Quantize a virtual time / ratio to integer nanoseconds — the same
+/// contract as `RunMetrics::digest`.
+fn q(x: f64) -> i64 {
+    (x * 1e9).round() as i64
+}
+
+impl TraceEvent {
+    /// Canonical 1 ns-quantized string form, used by the golden trace tests
+    /// to compare event *sequences* across loop implementations whose float
+    /// noise is ≪ 1 ns.
+    pub fn canonical(&self) -> String {
+        let mut s = String::with_capacity(64);
+        if self.replica == FLEET {
+            s.push_str("fleet");
+        } else {
+            s.push('r');
+            s.push_str(&self.replica.to_string());
+        }
+        s.push_str(&format!(" @{} {}", q(self.time), self.kind.name()));
+        let detail = match &self.kind {
+            EventKind::Arrival { req } | EventKind::Admit { req } => format!(" req={req}"),
+            EventKind::Route { req, target, policy, pending, kv_usage } => {
+                format!(" req={req} target={target} policy={policy} pending={pending} kv={}", q(*kv_usage))
+            }
+            EventKind::BatchStart { phase, seqs, tokens } => {
+                format!(" phase={} seqs={seqs} tokens={tokens}", phase.name())
+            }
+            EventKind::BatchEnd { phase, seqs, tokens, dur } => {
+                format!(" phase={} seqs={seqs} tokens={tokens} dur={}", phase.name(), q(*dur))
+            }
+            EventKind::PrefillChunk { req, take, done, dur } => {
+                format!(" req={req} take={take} done={done} dur={}", q(*dur))
+            }
+            EventKind::FirstToken { req } | EventKind::Complete { req } => format!(" req={req}"),
+            EventKind::Preempt { req, kind } => format!(" req={req} kind={}", kind.name()),
+            EventKind::KvAlloc { req, tokens, usage } => {
+                format!(" req={req} tokens={tokens} usage={}", q(*usage))
+            }
+            EventKind::Repartition { r_p, r_d, decode_mode } => {
+                format!(" r_p={} r_d={} decode_mode={decode_mode}", q(*r_p), q(*r_d))
+            }
+            EventKind::Transfer { req, bytes, dur } => {
+                format!(" req={req} bytes={} dur={}", q(*bytes), q(*dur))
+            }
+            EventKind::Scale { from, to } => format!(" from={from} to={to}"),
+            EventKind::Sample { kv_usage, waiting, running, pending, sm_prefill, inflight } => {
+                format!(
+                    " kv={} waiting={waiting} running={running} pending={pending} sm_prefill={} inflight={inflight}",
+                    q(*kv_usage),
+                    q(*sm_prefill)
+                )
+            }
+            EventKind::ReplicaStart | EventKind::ReplicaDrain | EventKind::ReplicaRetire => {
+                String::new()
+            }
+        };
+        s.push_str(&detail);
+        s
+    }
+
+    /// Structural equality with a tolerance on float fields — the sequence
+    /// analogue of `RunMetrics::deviation`. Replica, variant, and all integer
+    /// fields must match exactly; `time` and float payloads may differ by up
+    /// to `tol`. Use this (not [`TraceEvent::canonical`]) when comparing
+    /// traces from *different* loop implementations, where float noise can
+    /// straddle a quantization-bucket boundary.
+    pub fn approx_eq(&self, other: &TraceEvent, tol: f64) -> bool {
+        let close = |a: f64, b: f64| (a - b).abs() <= tol;
+        if self.replica != other.replica || !close(self.time, other.time) {
+            return false;
+        }
+        use EventKind as K;
+        match (&self.kind, &other.kind) {
+            (K::Arrival { req: a }, K::Arrival { req: b })
+            | (K::Admit { req: a }, K::Admit { req: b })
+            | (K::FirstToken { req: a }, K::FirstToken { req: b })
+            | (K::Complete { req: a }, K::Complete { req: b }) => a == b,
+            (
+                K::Route { req: ra, target: ta, policy: pa, pending: na, kv_usage: ka },
+                K::Route { req: rb, target: tb, policy: pb, pending: nb, kv_usage: kb },
+            ) => ra == rb && ta == tb && pa == pb && na == nb && close(*ka, *kb),
+            (
+                K::BatchStart { phase: pa, seqs: sa, tokens: ta },
+                K::BatchStart { phase: pb, seqs: sb, tokens: tb },
+            ) => pa == pb && sa == sb && ta == tb,
+            (
+                K::BatchEnd { phase: pa, seqs: sa, tokens: ta, dur: da },
+                K::BatchEnd { phase: pb, seqs: sb, tokens: tb, dur: db },
+            ) => pa == pb && sa == sb && ta == tb && close(*da, *db),
+            (
+                K::PrefillChunk { req: ra, take: ta, done: fa, dur: da },
+                K::PrefillChunk { req: rb, take: tb, done: fb, dur: db },
+            ) => ra == rb && ta == tb && fa == fb && close(*da, *db),
+            (K::Preempt { req: ra, kind: ka }, K::Preempt { req: rb, kind: kb }) => {
+                ra == rb && ka == kb
+            }
+            (
+                K::KvAlloc { req: ra, tokens: ta, usage: ua },
+                K::KvAlloc { req: rb, tokens: tb, usage: ub },
+            ) => ra == rb && ta == tb && close(*ua, *ub),
+            (
+                K::Repartition { r_p: pa, r_d: da, decode_mode: ma },
+                K::Repartition { r_p: pb, r_d: db, decode_mode: mb },
+            ) => ma == mb && close(*pa, *pb) && close(*da, *db),
+            (
+                K::Transfer { req: ra, bytes: ba, dur: da },
+                K::Transfer { req: rb, bytes: bb, dur: db },
+            ) => ra == rb && close(*ba, *bb) && close(*da, *db),
+            (K::Scale { from: fa, to: ta }, K::Scale { from: fb, to: tb }) => {
+                fa == fb && ta == tb
+            }
+            (K::ReplicaStart, K::ReplicaStart)
+            | (K::ReplicaDrain, K::ReplicaDrain)
+            | (K::ReplicaRetire, K::ReplicaRetire) => true,
+            (
+                K::Sample {
+                    kv_usage: ka,
+                    waiting: wa,
+                    running: ra,
+                    pending: na,
+                    sm_prefill: sa,
+                    inflight: ia,
+                },
+                K::Sample {
+                    kv_usage: kb,
+                    waiting: wb,
+                    running: rb,
+                    pending: nb,
+                    sm_prefill: sb,
+                    inflight: ib,
+                },
+            ) => wa == wb && ra == rb && na == nb && ia == ib && close(*ka, *kb) && close(*sa, *sb),
+            _ => false,
+        }
+    }
+}
+
+/// Consumer of trace events. The default implementation drops everything,
+/// so a sink that only cares about a subset overrides selectively.
+pub trait TraceSink {
+    fn record(&mut self, _ev: TraceEvent) {}
+}
+
+/// The zero-cost default: ignores every event.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {}
+
+/// In-memory sink capturing every event in emission order.
+#[derive(Debug, Clone, Default)]
+pub struct RecordingSink {
+    pub events: Vec<TraceEvent>,
+}
+
+impl TraceSink for RecordingSink {
+    fn record(&mut self, ev: TraceEvent) {
+        self.events.push(ev);
+    }
+}
+
+/// Point-in-time state snapshot used by the periodic sampler. Engines fill
+/// what they track; the defaults are safe for engines without queues.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineSnapshot {
+    /// Requests admitted but not yet prefill-complete / not yet scheduled.
+    pub waiting: usize,
+    /// Requests actively decoding.
+    pub running: usize,
+    /// KV-cache occupancy in `[0, 1]` (max across pools for split-KV engines).
+    pub kv_usage: f64,
+    /// Prefill SM share `r_p` (1.0 for engines without SM partitioning).
+    pub sm_prefill: f64,
+    /// Batches currently in flight on the GPU simulator(s).
+    pub inflight: usize,
+}
+
+/// Cheap cloneable handle threaded through engines and the cluster loop.
+///
+/// Two-state dispatch: `sink == None` is the disabled path (one branch per
+/// hook, nothing else); `Some` shares a [`RecordingSink`] across all clones,
+/// so the fleet loop, router, autoscaler, and every engine append to one
+/// ordered stream. Each clone carries the replica id it stamps on events.
+#[derive(Debug, Clone)]
+pub struct Tracer {
+    sink: Option<Rc<RefCell<RecordingSink>>>,
+    sample_interval: f64,
+    replica: u32,
+}
+
+impl Default for Tracer {
+    /// A disabled tracer: every `emit` is a no-op.
+    fn default() -> Tracer {
+        Tracer { sink: None, sample_interval: 0.0, replica: FLEET }
+    }
+}
+
+impl Tracer {
+    /// Disabled tracer (alias for `Tracer::default()`).
+    pub fn disabled() -> Tracer {
+        Tracer::default()
+    }
+
+    /// Recording tracer with a fresh shared sink (no periodic sampling).
+    pub fn recording() -> Tracer {
+        Tracer {
+            sink: Some(Rc::new(RefCell::new(RecordingSink::default()))),
+            sample_interval: 0.0,
+            replica: FLEET,
+        }
+    }
+
+    /// Enable the periodic time-series sampler at `dt` virtual seconds.
+    pub fn with_sampling(mut self, dt: f64) -> Tracer {
+        self.sample_interval = dt;
+        self
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// Sampling interval, `None` when disabled or when no sink is attached.
+    pub fn sample_interval(&self) -> Option<f64> {
+        if self.sink.is_some() && self.sample_interval > 0.0 {
+            Some(self.sample_interval)
+        } else {
+            None
+        }
+    }
+
+    /// A clone stamping events with replica `id` (sharing the same sink).
+    pub fn for_replica(&self, id: u32) -> Tracer {
+        Tracer { sink: self.sink.clone(), sample_interval: self.sample_interval, replica: id }
+    }
+
+    /// Emit an event at virtual time `time`, stamped with this handle's
+    /// replica. Disabled path: a single `Option` branch.
+    #[inline]
+    pub fn emit(&self, time: f64, kind: EventKind) {
+        if let Some(sink) = &self.sink {
+            sink.borrow_mut().record(TraceEvent { time, replica: self.replica, kind });
+        }
+    }
+
+    /// Emit stamped with an explicit replica id (fleet loop emitting
+    /// per-replica samples through its own handle).
+    #[inline]
+    pub fn emit_for(&self, replica: u32, time: f64, kind: EventKind) {
+        if let Some(sink) = &self.sink {
+            sink.borrow_mut().record(TraceEvent { time, replica, kind });
+        }
+    }
+
+    /// Drain all recorded events (empty for a disabled tracer).
+    pub fn take(&self) -> Vec<TraceEvent> {
+        match &self.sink {
+            Some(sink) => std::mem::take(&mut sink.borrow_mut().events),
+            None => Vec::new(),
+        }
+    }
+}
+
+/// Periodic virtual-time sampler: tracks the next due sample point on a
+/// fixed `dt` grid (first sample at `dt`, not 0). Purely observational —
+/// the serving loops call [`Sampler::due`] with each iteration's event time
+/// and emit samples for every grid point crossed since the last call, so no
+/// artificial events are injected into the loops and run behavior (digests,
+/// event counts) is untouched.
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    dt: f64,
+    next: f64,
+}
+
+impl Sampler {
+    /// `None` when the tracer has no sink or sampling is off.
+    pub fn new(tracer: &Tracer) -> Option<Sampler> {
+        tracer.sample_interval().map(|dt| Sampler { dt, next: dt })
+    }
+
+    /// Invoke `f` for every due grid point `ts ≤ t`, in order.
+    pub fn due(&mut self, t: f64, mut f: impl FnMut(f64)) {
+        while self.next <= t {
+            f(self.next);
+            self.next += self.dt;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_is_inert() {
+        let t = Tracer::default();
+        assert!(!t.enabled());
+        assert_eq!(t.sample_interval(), None);
+        t.emit(1.0, EventKind::Arrival { req: 0 });
+        assert!(t.take().is_empty());
+        assert!(Sampler::new(&t).is_none());
+    }
+
+    #[test]
+    fn recording_tracer_shares_one_sink_across_clones() {
+        let t = Tracer::recording();
+        let r0 = t.for_replica(0);
+        let r1 = t.for_replica(1);
+        t.emit(0.5, EventKind::Arrival { req: 7 });
+        r0.emit(1.0, EventKind::Admit { req: 7 });
+        r1.emit(1.5, EventKind::Complete { req: 7 });
+        let evs = t.take();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].replica, FLEET);
+        assert_eq!(evs[1].replica, 0);
+        assert_eq!(evs[2].replica, 1);
+        // Drained: subsequent take is empty.
+        assert!(t.take().is_empty());
+    }
+
+    #[test]
+    fn canonical_quantizes_to_ns() {
+        let a = TraceEvent {
+            time: 1.0,
+            replica: 3,
+            kind: EventKind::BatchEnd { phase: TracePhase::Mixed, seqs: 4, tokens: 260, dur: 0.25 },
+        };
+        let mut b = a.clone();
+        b.time += 3e-13; // sub-ns drift must not change the canonical form
+        assert_eq!(a.canonical(), b.canonical());
+        let mut c = a.clone();
+        c.time += 1e-3;
+        assert_ne!(a.canonical(), c.canonical());
+        assert!(a.canonical().starts_with("r3 @1000000000 batch-end"));
+    }
+
+    #[test]
+    fn sampler_emits_every_grid_point_once() {
+        let t = Tracer::recording().with_sampling(0.5);
+        let mut s = Sampler::new(&t).expect("sampling enabled");
+        let mut points = Vec::new();
+        s.due(0.4, |ts| points.push(ts)); // nothing due before first grid point
+        assert!(points.is_empty());
+        s.due(1.6, |ts| points.push(ts));
+        s.due(1.6, |ts| points.push(ts)); // same t again: nothing new
+        s.due(2.0, |ts| points.push(ts));
+        let want = [0.5, 1.0, 1.5, 2.0];
+        assert_eq!(points.len(), want.len());
+        for (p, w) in points.iter().zip(want.iter()) {
+            assert!((p - w).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn approx_eq_tolerates_float_noise_only() {
+        let a = TraceEvent {
+            time: 1.0,
+            replica: 2,
+            kind: EventKind::BatchEnd { phase: TracePhase::Decode, seqs: 8, tokens: 8, dur: 0.1 },
+        };
+        let mut b = a.clone();
+        b.time += 5e-10; // within tol
+        if let EventKind::BatchEnd { dur, .. } = &mut b.kind {
+            *dur -= 5e-10;
+        }
+        assert!(a.approx_eq(&b, 1e-9));
+        // Integer fields are exact.
+        let mut c = a.clone();
+        if let EventKind::BatchEnd { seqs, .. } = &mut c.kind {
+            *seqs = 9;
+        }
+        assert!(!a.approx_eq(&c, 1e-9));
+        // Different variants never match.
+        let d = TraceEvent { time: 1.0, replica: 2, kind: EventKind::Complete { req: 1 } };
+        assert!(!a.approx_eq(&d, 1e-9));
+        // Replica must match exactly.
+        let mut e = a.clone();
+        e.replica = 3;
+        assert!(!a.approx_eq(&e, 1e-9));
+    }
+
+    #[test]
+    fn phase_classification() {
+        assert_eq!(TracePhase::of(0, 3), TracePhase::Prefill);
+        assert_eq!(TracePhase::of(5, 0), TracePhase::Decode);
+        assert_eq!(TracePhase::of(5, 3), TracePhase::Mixed);
+    }
+}

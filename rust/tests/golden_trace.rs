@@ -1,0 +1,210 @@
+//! Golden trace tests: the tracing layer must be zero-cost when disabled
+//! and purely observational when enabled.
+//!
+//! * A disabled (`Tracer::default()`) sink leaves `RunMetrics::digest`
+//!   byte-identical to the untraced loop, for every engine kind.
+//! * The optimized event-queue fleet loop and the O(R)-scan reference loop
+//!   emit the *same event sequence* — compared with
+//!   `TraceEvent::approx_eq` at 1 ns tolerance (the sequence analogue of
+//!   `RunMetrics::deviation`; a quantized string compare would be flaky on
+//!   rounding-bucket boundaries, exactly like cross-loop digests).
+//! * Recording + periodic sampling perturbs neither digests nor the loop's
+//!   event counter (samples are observational grid reads, not loop events).
+
+use nexus::cluster::{AutoscalerCfg, Cluster, ClusterCfg, ClusterMetrics, RoutingPolicy};
+use nexus::engine::{build_engine, drive, drive_traced, run_engine_traced, EngineCfg, EngineKind};
+use nexus::model::ModelConfig;
+use nexus::trace::{attribute, chrome_trace, to_jsonl, EventKind, TraceEvent, Tracer, FLEET};
+use nexus::util::json::Json;
+use nexus::workload::{generate, generate_bursty, BurstyCfg, Dataset, Request};
+
+fn ecfg(seed: u64) -> EngineCfg {
+    EngineCfg::new(ModelConfig::qwen3b(), seed)
+}
+
+fn assert_trace_eq(a: &[TraceEvent], b: &[TraceEvent], what: &str) {
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert!(
+            x.approx_eq(y, 1e-9),
+            "{what}: event {i} diverges:\n  optimized: {}\n  reference: {}",
+            x.canonical(),
+            y.canonical()
+        );
+    }
+    assert_eq!(a.len(), b.len(), "{what}: event counts differ");
+}
+
+fn run_fleet(cc: &ClusterCfg, trace: &[Request], reference: bool, dt: f64) -> (ClusterMetrics, Vec<TraceEvent>) {
+    let tracer = Tracer::recording().with_sampling(dt);
+    let mut cluster = Cluster::new(cc.clone());
+    cluster.tracer = tracer.clone();
+    let m = if reference { cluster.run_reference(trace) } else { cluster.run(trace) };
+    (m, tracer.take())
+}
+
+#[test]
+fn noop_sink_leaves_engine_digests_byte_identical() {
+    let cfg = ecfg(7);
+    let trace = generate(Dataset::Mixed, 40, 4.0, 11);
+    for &kind in EngineKind::all() {
+        let mut plain = build_engine(kind, &cfg);
+        let d_plain = drive(plain.as_mut(), &trace, cfg.max_virtual_time).digest();
+        let mut noop = build_engine(kind, &cfg);
+        let d_noop =
+            drive_traced(noop.as_mut(), &trace, cfg.max_virtual_time, &Tracer::default()).digest();
+        assert_eq!(d_plain, d_noop, "{}: no-op sink changed the digest", kind.name());
+    }
+}
+
+#[test]
+fn recording_sink_is_observational_on_engines() {
+    // A *recording* tracer (with sampling on) must not perturb the run
+    // either: hooks only read state.
+    let cfg = ecfg(7);
+    let trace = generate(Dataset::Mixed, 40, 4.0, 11);
+    for &kind in EngineKind::all() {
+        let mut plain = build_engine(kind, &cfg);
+        let d_plain = drive(plain.as_mut(), &trace, cfg.max_virtual_time).digest();
+        let tracer = Tracer::recording().with_sampling(0.5);
+        let mut traced = build_engine(kind, &cfg);
+        let m_traced = drive_traced(traced.as_mut(), &trace, cfg.max_virtual_time, &tracer);
+        assert_eq!(d_plain, m_traced.digest(), "{}: recording sink changed the digest", kind.name());
+        let events = tracer.take();
+        assert!(!events.is_empty(), "{}: no events recorded", kind.name());
+        let completes = events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::Complete { .. }))
+            .count();
+        assert_eq!(
+            completes,
+            m_traced.records.len(),
+            "{}: one Complete per finished request",
+            kind.name()
+        );
+        assert!(
+            events.iter().any(|e| matches!(e.kind, EventKind::Sample { .. })),
+            "{}: sampler produced nothing",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn fleet_loops_emit_identical_event_sequences() {
+    let trace = generate(Dataset::Mixed, 60, 8.0, 23);
+    for kind in [EngineKind::Nexus, EngineKind::FastServe, EngineKind::VllmPD] {
+        let cc = ClusterCfg::new(kind, ecfg(13), 3, RoutingPolicy::JoinShortestQueue);
+        let (_, ev_opt) = run_fleet(&cc, &trace, false, 1.0);
+        let (_, ev_ref) = run_fleet(&cc, &trace, true, 1.0);
+        assert!(!ev_opt.is_empty(), "{}: empty trace", kind.name());
+        assert_trace_eq(&ev_opt, &ev_ref, kind.name());
+    }
+}
+
+#[test]
+fn autoscaled_bursty_fleet_traces_match_and_cover_fleet_events() {
+    let bursty = BurstyCfg { base_rate: 10.0, ..BurstyCfg::default() };
+    let trace = generate_bursty(Dataset::ShareGpt, 80, &bursty, 41);
+    let mut cc =
+        ClusterCfg::new(EngineKind::Nexus, ecfg(13), 1, RoutingPolicy::JoinShortestQueue);
+    cc.autoscale = Some(AutoscalerCfg {
+        min_replicas: 1,
+        max_replicas: 4,
+        interval: 2.0,
+        cooldown: 5.0,
+        ..AutoscalerCfg::default()
+    });
+    let (m_opt, ev_opt) = run_fleet(&cc, &trace, false, 1.0);
+    let (m_ref, ev_ref) = run_fleet(&cc, &trace, true, 1.0);
+    assert_trace_eq(&ev_opt, &ev_ref, "autoscaled bursty");
+    assert_eq!(
+        m_opt.fleet.deviation(&m_ref.fleet).map(|d| d <= 1e-9),
+        Some(true),
+        "loops must stay metric-equivalent with tracing on"
+    );
+
+    // The trace must tie out against the run's own accounting.
+    let count = |pred: fn(&EventKind) -> bool| ev_opt.iter().filter(|e| pred(&e.kind)).count();
+    assert_eq!(count(|k| matches!(k, EventKind::Arrival { .. })), trace.len());
+    assert_eq!(count(|k| matches!(k, EventKind::Route { .. })), trace.len());
+    assert_eq!(
+        count(|k| matches!(k, EventKind::Complete { .. })),
+        m_opt.fleet.records.len()
+    );
+    assert_eq!(
+        count(|k| matches!(k, EventKind::Scale { .. })),
+        m_opt.scale_events.len()
+    );
+    assert_eq!(
+        count(|k| matches!(k, EventKind::Repartition { .. })),
+        m_opt.fleet.repartitions
+    );
+    assert!(count(|k| matches!(k, EventKind::Sample { .. })) > 0);
+    assert!(count(|k| matches!(k, EventKind::ReplicaStart)) >= 1);
+    // Route decisions are fleet-level; engine events carry replica ids.
+    assert!(ev_opt
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::Route { .. }))
+        .all(|e| e.replica == FLEET));
+    assert!(ev_opt
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::BatchEnd { .. }))
+        .all(|e| e.replica != FLEET));
+}
+
+#[test]
+fn recording_and_sampling_leave_fleet_run_untouched() {
+    let trace = generate(Dataset::ShareGpt, 60, 8.0, 13);
+    let cc = ClusterCfg::new(EngineKind::Nexus, ecfg(42), 3, RoutingPolicy::JoinShortestQueue);
+    let plain = Cluster::new(cc.clone()).run(&trace);
+    let (traced, events) = run_fleet(&cc, &trace, false, 0.5);
+    assert_eq!(
+        plain.fleet.digest(),
+        traced.fleet.digest(),
+        "recording+sampling changed the fleet digest"
+    );
+    assert_eq!(plain.events, traced.events, "sampling must not add loop events");
+    assert!(events.iter().any(|e| matches!(e.kind, EventKind::Sample { .. })));
+}
+
+#[test]
+fn attribution_phases_bound_mean_e2e() {
+    let cfg = ecfg(3);
+    let trace = generate(Dataset::ShareGpt, 40, 6.0, 9);
+    let tracer = Tracer::recording();
+    let m = run_engine_traced(EngineKind::Nexus, &cfg, &trace, &tracer);
+    let events = tracer.take();
+    let att = attribute(&events, &m);
+    assert_eq!(att.requests, m.records.len());
+    assert!(att.total() > 0.0);
+    assert!(att.prefill > 0.0, "prefill chunks must attribute execution time");
+    let mean_e2e = m.records.iter().map(|r| r.finish - r.arrival).sum::<f64>()
+        / m.records.len().max(1) as f64;
+    // Clamps only ever shrink components, so the sum is bounded by e2e.
+    assert!(
+        att.total() <= mean_e2e + 1e-9,
+        "attribution total {} exceeds mean e2e {}",
+        att.total(),
+        mean_e2e
+    );
+}
+
+#[test]
+fn exports_round_trip_through_the_json_parser() {
+    let trace = generate(Dataset::ShareGpt, 30, 6.0, 5);
+    let cc = ClusterCfg::new(EngineKind::Nexus, ecfg(1), 2, RoutingPolicy::RoundRobin);
+    let (_, events) = run_fleet(&cc, &trace, false, 1.0);
+    let chrome = chrome_trace(&events).to_string();
+    let parsed = Json::parse(&chrome).expect("chrome trace must be valid JSON");
+    let rows = parsed
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array missing");
+    assert!(!rows.is_empty(), "no trace rows");
+    let jsonl = to_jsonl(&events);
+    let lines: Vec<&str> = jsonl.lines().collect();
+    assert_eq!(lines.len(), events.len());
+    for line in lines {
+        Json::parse(line).expect("every JSONL line must parse");
+    }
+}
