@@ -12,9 +12,28 @@ run() {
 
 run cargo build --release
 run cargo test -q
+# The sharded fleet loop's determinism guarantee (run_parallel digest ==
+# run digest for any thread count / window) is the one invariant worth
+# paying optimized-build time for: debug-only asserts can mask ordering
+# races that only bite under release scheduling.
+run cargo test --release --test golden_digest parallel -q
+run cargo test --release --test prop_cluster prop_parallel -q
 # Benches are the perf harness of record (BENCH_hotpath.json); keep them
 # compiling without paying their runtime in CI.
 run cargo bench --no-run
+# CLI smoke: the same seed through the sharded loop twice must print the
+# identical fleet summary (stdout carries the metrics tables; stderr the
+# progress chatter).
+run_cluster_cli() {
+    ./target/release/nexus cluster --engine nexus --replicas 6 --policy jsq \
+        --n 120 --rate 12 --seed 7 --threads 2 --window 0.5 2>/dev/null
+}
+echo
+echo "==> cluster --threads 2 determinism smoke"
+run_cluster_cli >/tmp/nexus_par_a.txt
+run_cluster_cli >/tmp/nexus_par_b.txt
+diff /tmp/nexus_par_a.txt /tmp/nexus_par_b.txt
+echo "    identical output across runs"
 # fmt/clippy are advisory gates: present in some toolchain images, absent in
 # minimal ones. Fail on findings, skip cleanly when the component is missing.
 if cargo fmt --version >/dev/null 2>&1; then

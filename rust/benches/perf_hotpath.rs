@@ -4,15 +4,24 @@
 //! experiment turnaround, and the schedulers must stay negligible (Fig. 12's
 //! "scheduling overhead" row).
 //!
-//! Besides the microbenchmarks, this harness runs the fleet-scale
-//! macro-benchmark behind the PR-2 event-queue overhaul: the cluster
-//! co-simulation at 16 and 64 replicas on a bursty ShareGPT trace, timed
-//! under both the optimized O(log R) heap loop ([`Cluster::run`]) and the
-//! retained pre-refactor O(R)-scan loop ([`Cluster::run_reference`]), with
-//! a ≤ 1 ns structural-deviation check proving both loops served
-//! identically. Results
-//! are emitted machine-readably to `BENCH_hotpath.json` at the repo root
-//! (schema documented in ROADMAP §Perf; regenerate with `make bench-json`).
+//! Besides the microbenchmarks, this harness runs two fleet-scale
+//! macro-benchmarks:
+//!
+//! * the PR-2 event-queue comparison — the cluster co-simulation at 16 and
+//!   64 replicas on a bursty ShareGPT trace, timed under both the optimized
+//!   O(log R) heap loop ([`Cluster::run`]) and the retained pre-refactor
+//!   O(R)-scan loop ([`Cluster::run_reference`]), with a ≤ 1 ns
+//!   structural-deviation check proving both loops served identically; and
+//! * the sharded-loop scaling sweep (schema v2) — 64/256/1024 replicas ×
+//!   {1, 4, 8} worker threads through [`Cluster::run_parallel`], digest-
+//!   checked against the one-thread run (and against the sequential loop
+//!   for the materialized rows). The 1024-replica row feeds arrivals
+//!   through the streaming generator (`generate_bursty_iter` →
+//!   `run_parallel_stream`) so the trace is never materialized.
+//!
+//! Results are emitted machine-readably to `BENCH_hotpath.json` at the repo
+//! root (schema documented in ROADMAP §Perf; regenerate with
+//! `make bench-json`).
 //!
 //! `cargo bench --bench perf_hotpath`
 
@@ -184,6 +193,7 @@ fn main() {
         ]);
         fleet_rows.push(Json::obj(vec![
             ("replicas", replicas.into()),
+            ("threads", 1usize.into()),
             ("engine", "nexus".into()),
             ("policy", "jsq".into()),
             ("dataset", "sharegpt-bursty".into()),
@@ -200,12 +210,121 @@ fn main() {
     }
     ft.print();
 
+    // 7. Sharded-loop scaling sweep (§Perf, schema v2): replicas × worker
+    //    threads. Every thread count is digest-checked against one thread,
+    //    and the materialized rows additionally against the sequential
+    //    loop, so every timing below is for *identical* served output.
+    //    The 1024-replica row streams arrivals (no materialized trace).
+    let mut pt = Table::new(
+        "parallel fleet scaling (bursty ShareGPT, Nexus engine, JSQ)",
+        &["replicas", "threads", "wall", "ev/s", "speedup"],
+    );
+    let mut scaling_rows: Vec<Json> = Vec::new();
+    for &(replicas, n_req, rate, streamed) in &[
+        (64usize, 2400usize, 110.0f64, false),
+        (256, 4800, 440.0, false),
+        (1024, 9600, 1760.0, true),
+    ] {
+        let bursty = nexus::workload::BurstyCfg {
+            base_rate: rate,
+            ..nexus::workload::BurstyCfg::default()
+        };
+        let trace = if streamed {
+            Vec::new()
+        } else {
+            nexus::workload::generate_bursty(
+                nexus::workload::Dataset::ShareGpt,
+                n_req,
+                &bursty,
+                97,
+            )
+        };
+        let cc = ClusterCfg::new(
+            EngineKind::Nexus,
+            EngineCfg::new(model, 5),
+            replicas,
+            RoutingPolicy::JoinShortestQueue,
+        );
+        // Sequential anchor for the materialized rows: the digest every
+        // thread count must reproduce, and the speedup denominator.
+        let mut anchor_digest = None;
+        let mut anchor_wall = 0.0f64;
+        let mut anchor_events = 0usize;
+        if !streamed {
+            eprintln!("  scale x{replicas}: sequential loop ({n_req} requests)...");
+            let t0 = Instant::now();
+            let m = Cluster::new(cc.clone()).run(&trace);
+            anchor_wall = t0.elapsed().as_secs_f64();
+            anchor_events = m.events;
+            anchor_digest = Some(m.digest());
+        }
+        for &threads in &[1usize, 4, 8] {
+            eprintln!("  scale x{replicas}: {threads} thread(s)...");
+            let t0 = Instant::now();
+            let m = if streamed {
+                let reqs = nexus::workload::generate_bursty_iter(
+                    nexus::workload::Dataset::ShareGpt,
+                    n_req,
+                    &bursty,
+                    97,
+                );
+                Cluster::new(cc.clone()).run_parallel_stream(reqs, None, threads, 0.0)
+            } else {
+                Cluster::new(cc.clone()).run_parallel(&trace, threads, 0.0)
+            };
+            let wall = t0.elapsed().as_secs_f64();
+            match anchor_digest {
+                // Materialized rows anchor on the sequential loop; the
+                // streamed row anchors on its own 1-thread run.
+                Some(d) => assert_eq!(
+                    d,
+                    m.digest(),
+                    "x{replicas} @ {threads} threads: parallel loop diverged"
+                ),
+                None => {
+                    anchor_wall = wall;
+                    anchor_events = m.events;
+                    anchor_digest = Some(m.digest());
+                }
+            }
+            // Throughput is normalized to the anchor's event count: every
+            // run served identical output, so "events/sec" compares like
+            // with like even though the sharded loop's own counter counts
+            // rounds + steps rather than loop events.
+            let eps = anchor_events as f64 / wall.max(1e-12);
+            let speedup = anchor_wall / wall.max(1e-12);
+            pt.row(&[
+                format!("{replicas}{}", if streamed { " (streamed)" } else { "" }),
+                format!("{threads}"),
+                format!("{:.2}s", wall),
+                format!("{:.0}", eps),
+                format!("{:.2}x", speedup),
+            ]);
+            scaling_rows.push(Json::obj(vec![
+                ("replicas", replicas.into()),
+                ("threads", threads.into()),
+                ("engine", "nexus".into()),
+                ("policy", "jsq".into()),
+                ("dataset", "sharegpt-bursty".into()),
+                ("requests", n_req.into()),
+                ("completed", m.fleet.records.len().into()),
+                ("streamed", streamed.into()),
+                ("events", m.events.into()),
+                ("wall_s", wall.into()),
+                ("events_per_sec", eps.into()),
+                ("speedup_vs_sequential", speedup.into()),
+            ]));
+        }
+    }
+    pt.print();
+
     // Machine-readable dump for the perf trajectory (ROADMAP §Perf).
     let out = Json::obj(vec![
         ("bench", "perf_hotpath".into()),
-        ("schema_version", 1usize.into()),
+        ("schema_version", 2usize.into()),
         ("status", "measured".into()),
         ("fleet", Json::Arr(fleet_rows)),
+        ("scaling", Json::Arr(scaling_rows)),
         ("micro", Json::Arr(micro)),
     ]);
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_hotpath.json");

@@ -19,8 +19,8 @@ fn main() {
     for ds in [Dataset::LongData, Dataset::Arxiv, Dataset::ShareGpt] {
         let trace = generate(ds, n, 1.0, 123);
         let want = reference[ds.name()];
-        let ins: Vec<usize> = trace.iter().map(|r| r.prompt_len).collect();
-        let outs: Vec<usize> = trace.iter().map(|r| r.output_len).collect();
+        let ins: Vec<usize> = trace.iter().map(|r| r.plen()).collect();
+        let outs: Vec<usize> = trace.iter().map(|r| r.olen()).collect();
         for (dir, lens, w) in [("In", &ins, &want[0..4]), ("Out", &outs, &want[4..8])] {
             let (m, p50, p95, p99) = length_stats(lens);
             t.row(&[

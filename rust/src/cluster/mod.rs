@@ -53,12 +53,27 @@
 //! Alongside the event queue, the loop maintains the fleet pending count
 //! and in-service/active counts incrementally (the reference loop re-sums
 //! them every event) and reuses one `ReplicaView` buffer for routing.
+//!
+//! ## Sharded parallel execution (§Perf)
+//!
+//! [`Cluster::run_parallel`] (in [`parallel`]) shards the fleet across
+//! worker threads and advances each shard independently between
+//! interaction boundaries (arrivals and autoscaler ticks), synchronizing
+//! only there. The *equivalence* invariant above is what makes this exact
+//! rather than approximate: between boundaries no replica can observe
+//! another, so per-shard execution reproduces the sequential trajectory
+//! bit for bit and [`ClusterMetrics::digest`] is identical for any thread
+//! count and any synchronization window. Streaming workloads (requests
+//! from an iterator instead of a materialized trace) enter through the
+//! [`Arrivals`] abstraction and [`Cluster::run_parallel_stream`].
 
 pub mod autoscaler;
+pub mod parallel;
 pub mod replica;
 pub mod router;
 
 pub use autoscaler::{Autoscaler, AutoscalerCfg, FleetObs};
+pub use parallel::{Arrivals, SliceArrivals, StreamArrivals};
 pub use replica::{Replica, ReplicaState};
 pub use router::{ReplicaView, Router, RoutingPolicy};
 
@@ -142,6 +157,56 @@ impl ClusterMetrics {
         self.fleet.summary()
     }
 
+    /// Behavioral digest of a fleet run: FNV-1a over the per-request
+    /// [`RunMetrics::digest`] plus the fleet-level surface — peak size,
+    /// scale trail (1 ns-quantized times), suppressed proposals, and the
+    /// per-replica lifecycle/accounting tuples. This is the equality the
+    /// parallel loop is held to: `tests/golden_digest.rs` and
+    /// `tests/prop_cluster.rs` assert [`Cluster::run_parallel`] matches
+    /// [`Cluster::run`] digest-for-digest across thread counts and window
+    /// sizes.
+    ///
+    /// Two fields are deliberately excluded: `events` (the loops count
+    /// different things — iterations vs. rounds plus per-shard steps) and
+    /// `replica_seconds` (the parallel loop computes it analytically, so
+    /// it differs from the sequential running sum by float-summation
+    /// noise; the golden tests bound that difference at 1e-6 instead).
+    pub fn digest(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        fn mix(h: &mut u64, x: u64) {
+            for b in x.to_le_bytes() {
+                *h ^= b as u64;
+                *h = h.wrapping_mul(FNV_PRIME);
+            }
+        }
+        /// Quantize a virtual time to integer nanoseconds.
+        fn q(x: f64) -> u64 {
+            (x * 1e9).round() as i64 as u64
+        }
+        let mut h = FNV_OFFSET;
+        mix(&mut h, self.fleet.digest());
+        mix(&mut h, self.peak_replicas as u64);
+        mix(&mut h, self.suppressed_scales as u64);
+        mix(&mut h, self.scale_events.len() as u64);
+        for e in &self.scale_events {
+            mix(&mut h, q(e.time));
+            mix(&mut h, e.from as u64);
+            mix(&mut h, e.to as u64);
+        }
+        mix(&mut h, self.replicas.len() as u64);
+        for r in &self.replicas {
+            mix(&mut h, r.id as u64);
+            mix(&mut h, r.routed as u64);
+            mix(&mut h, r.completed as u64);
+            mix(&mut h, q(r.started_at));
+            mix(&mut h, r.retired_at.map_or(u64::MAX, q));
+        }
+        mix(&mut h, self.ttft_hist.count());
+        mix(&mut h, self.tbt_hist.count());
+        h
+    }
+
     /// Fraction of *offered* requests (completed + timed out) that finished
     /// within both per-request SLOs.
     pub fn slo_attainment(&self, ttft_slo: f64, norm_slo: f64) -> f64 {
@@ -189,8 +254,8 @@ fn mean_lengths(trace: &[Request]) -> (f64, f64) {
         return (1.0, 1.0);
     }
     let n = trace.len() as f64;
-    let p: usize = trace.iter().map(|r| r.prompt_len).sum();
-    let o: usize = trace.iter().map(|r| r.output_len).sum();
+    let p: usize = trace.iter().map(|r| r.plen()).sum();
+    let o: usize = trace.iter().map(|r| r.olen()).sum();
     (p as f64 / n, o as f64 / n)
 }
 
@@ -261,7 +326,7 @@ impl Cluster {
             return;
         }
         self.tracer.emit_for(FLEET, r.arrival, EventKind::Arrival { req: r.id });
-        let v = views.iter().find(|v| v.index == target);
+        let v = views.iter().find(|v| v.index as usize == target);
         self.tracer.emit_for(
             FLEET,
             t,
@@ -269,7 +334,7 @@ impl Cluster {
                 req: r.id,
                 target,
                 policy: self.router.policy.name(),
-                pending: v.map_or(0, |v| v.pending),
+                pending: v.map_or(0, |v| v.pending as usize),
                 kv_usage: v.map_or(0.0, |v| v.kv_usage),
             },
         );
@@ -561,7 +626,7 @@ impl Cluster {
             .iter()
             .map(|r| ReplicaStats {
                 id: r.id,
-                routed: r.routed,
+                routed: r.routed as usize,
                 completed: r.eng.completed(),
                 started_at: r.started_at,
                 retired_at: r.retired_at,
@@ -734,7 +799,7 @@ impl Cluster {
             .iter()
             .map(|r| ReplicaStats {
                 id: r.id,
-                routed: r.routed,
+                routed: r.routed as usize,
                 completed: r.eng.completed(),
                 started_at: r.started_at,
                 retired_at: r.retired_at,

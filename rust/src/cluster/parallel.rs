@@ -1,0 +1,959 @@
+//! Sharded virtual-time execution of the fleet loop (§Perf).
+//!
+//! [`Cluster::run_parallel`] partitions the replicas of a fleet across
+//! worker threads (`id % threads`) and advances each shard independently
+//! between *interaction boundaries*, synchronizing only where replicas can
+//! actually affect each other. The result is digest-identical to the
+//! sequential [`Cluster::run`] for **any** thread count and any window
+//! size (pinned by `tests/golden_digest.rs` and `tests/prop_cluster.rs`).
+//!
+//! ## Why sharding is exact, not approximate
+//!
+//! The fleet couples replicas in exactly three places: routing (an arrival
+//! reads every active replica's load), autoscaler ticks (a decision reads
+//! fleet-wide state and may spawn/drain replicas), and the fleet counters
+//! derived from both. Between consecutive boundaries drawn from those
+//! interactions, every replica evolves independently — the module-level
+//! *equivalence* invariant (a replica not stepped at a foreign event
+//! cannot change observable state) means stepping it only at its own
+//! internal event times reproduces the sequential trajectory bit for bit.
+//!
+//! ## Protocol
+//!
+//! The caller's thread acts as the coordinator; `threads` persistent
+//! workers (spawned under [`std::thread::scope`], talking over
+//! [`std::sync::mpsc`] channels) own the replica shards. Each round the
+//! coordinator broadcasts one [`RoundCmd`] and collects one [`Report`] per
+//! worker:
+//!
+//! 1. **drain** directives from a scale-down decided at the previous
+//!    boundary (empty victims retire immediately, at the decision time);
+//! 2. **spawn** directives (initial fleet and autoscaler growth);
+//! 3. a **boundary step** at time `B`: injections in arrival order plus
+//!    every owned replica whose next event is due at `B`, stepped in id
+//!    order — exactly the step set of the sequential loop at `B`;
+//! 4. a **prime** step giving freshly spawned replicas their first step at
+//!    the fleet's true next event time (which the coordinator computes
+//!    from the reported per-shard key minima — see `prime` below);
+//! 5. an **advance** phase: each owned in-service replica processes its
+//!    own internal events strictly below the round's `horizon`, at their
+//!    exact times.
+//!
+//! Routing and autoscaling stay on the coordinator, which mirrors the
+//! sequential loop's view rebuilds from the per-shard load reports (merged
+//! in replica-id order, so float reductions like the tick's `mean_kv` sum
+//! in the identical order). Autoscaler ticks take two rendezvous — a
+//! step-only round at `B`, then the decision — because the decision needs
+//! post-step state; plain arrival boundaries fuse the boundary step and
+//! the next advance into a single round.
+//!
+//! ## The synchronization window (`--window`)
+//!
+//! `window > 0` caps how far (in virtual seconds) a shard may run ahead of
+//! the last boundary before re-synchronizing; `0` means "free-run to the
+//! next interaction". Because boundaries are derived from interactions
+//! only, a window-capped round performs no routing, no tick, and no step —
+//! it merely splits the advance phase — so results are invariant to the
+//! window size *by construction* (property-tested). The cap exists to
+//! bound shard run-ahead (and worst-case report staleness) when embedding
+//! the loop in a live system; simulation output does not depend on it.
+//!
+//! ## Deliberate differences from [`Cluster::run`]
+//!
+//! * `ClusterMetrics::events` counts boundary rounds plus per-shard
+//!   internal steps (the sequential loop counts iterations); it is
+//!   excluded from [`ClusterMetrics::digest`].
+//! * `replica_seconds` is computed analytically (Σ over replicas of
+//!   `end − started_at`), which is thread- and window-invariant but can
+//!   differ from the sequential running accumulation by float-summation
+//!   noise (≪ 1e-6; also excluded from the digest).
+//! * `record_event_times` is not supported (`event_times` stays empty) —
+//!   there is no single global event sequence to record.
+//! * Periodic trace *sampling* is not supported (no `Sample` events are
+//!   emitted): a mid-window sample would need fleet-global state that
+//!   shards only materialize at boundaries. All other trace events are
+//!   emitted at their exact virtual times into per-shard sinks and merged
+//!   into the canonical `(time, replica)` order at the end of the run —
+//!   compare traces with [`crate::trace::canonical_order`], not emission
+//!   order.
+//!
+//! The tick-at-an-internal-event edge is the one measure-zero caveat: the
+//! sequential loop evaluates `t + 1e-12 >= tick` at internal replica
+//! events too, so an internal event landing within 1e-12 *before* a tick
+//! fires that tick infinitesimally early, whereas here ticks fire at
+//! their boundary time. Arrival and tick times are sums of continuous
+//! random variates, so an exact collision has probability zero; every
+//! differential test seed is pinned.
+
+use super::autoscaler::{Autoscaler, FleetObs};
+use super::replica::{Replica, ReplicaState};
+use super::router::{ReplicaView, Router};
+use super::{Cluster, ClusterCfg, ClusterMetrics, ReplicaStats, ScaleEvent};
+use crate::costmodel::calibrate;
+use crate::engine::common::ArrivalFeed;
+use crate::engine::Engine;
+use crate::metrics::{Histogram, RunMetrics};
+use crate::trace::{merge_streams, EventKind, TraceEvent, Tracer};
+use crate::util::f64_total_key;
+use crate::workload::Request;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// Arrival source for the fleet loops: a time-sorted sequence of requests
+/// consumed boundary by boundary. Implemented by [`SliceArrivals`] (a
+/// materialized trace) and [`StreamArrivals`] (any request iterator, e.g.
+/// [`crate::workload::generate_iter`], so a 10⁶-request open-loop workload
+/// never exists in memory at once).
+pub trait Arrivals {
+    /// Arrival time of the next request, if any. `&mut` so streaming
+    /// sources can pull their look-ahead slot.
+    fn peek_time(&mut self) -> Option<f64>;
+    /// Replace `out` with every request arriving at or before `t`, in
+    /// arrival order.
+    fn pop_until(&mut self, t: f64, out: &mut Vec<Request>);
+    /// True once no further requests will arrive.
+    fn exhausted(&mut self) -> bool;
+    /// Requests offered so far — the timeout baseline. For a slice this is
+    /// its full length; for a stream it counts requests actually pulled
+    /// (a stream cut off by `max_virtual_time` never materializes its
+    /// tail, so unpulled requests are not counted as timeouts).
+    fn offered(&self) -> usize;
+}
+
+/// [`Arrivals`] over a materialized, time-sorted trace.
+pub struct SliceArrivals<'a> {
+    feed: ArrivalFeed<'a>,
+    total: usize,
+}
+
+impl<'a> SliceArrivals<'a> {
+    pub fn new(trace: &'a [Request]) -> Self {
+        SliceArrivals { feed: ArrivalFeed::new(trace), total: trace.len() }
+    }
+}
+
+impl Arrivals for SliceArrivals<'_> {
+    fn peek_time(&mut self) -> Option<f64> {
+        self.feed.peek_time()
+    }
+
+    fn pop_until(&mut self, t: f64, out: &mut Vec<Request>) {
+        out.clear();
+        out.extend_from_slice(self.feed.pop_until(t));
+    }
+
+    fn exhausted(&mut self) -> bool {
+        self.feed.exhausted()
+    }
+
+    fn offered(&self) -> usize {
+        self.total
+    }
+}
+
+/// [`Arrivals`] over any time-sorted request iterator (one-request
+/// look-ahead buffer; O(1) memory regardless of workload length).
+pub struct StreamArrivals<I: Iterator<Item = Request>> {
+    it: I,
+    peeked: Option<Request>,
+    pulled: usize,
+}
+
+impl<I: Iterator<Item = Request>> StreamArrivals<I> {
+    pub fn new(it: I) -> Self {
+        StreamArrivals { it, peeked: None, pulled: 0 }
+    }
+
+    fn fill(&mut self) {
+        if self.peeked.is_none() {
+            self.peeked = self.it.next();
+            if self.peeked.is_some() {
+                self.pulled += 1;
+            }
+        }
+    }
+}
+
+impl<I: Iterator<Item = Request>> Arrivals for StreamArrivals<I> {
+    fn peek_time(&mut self) -> Option<f64> {
+        self.fill();
+        self.peeked.map(|r| r.arrival)
+    }
+
+    fn pop_until(&mut self, t: f64, out: &mut Vec<Request>) {
+        out.clear();
+        loop {
+            self.fill();
+            match self.peeked {
+                Some(r) if r.arrival <= t => {
+                    debug_assert!(out.last().map_or(true, |p| p.arrival <= r.arrival));
+                    out.push(r);
+                    self.peeked = None;
+                }
+                _ => break,
+            }
+        }
+    }
+
+    fn exhausted(&mut self) -> bool {
+        self.fill();
+        self.peeked.is_none()
+    }
+
+    fn offered(&self) -> usize {
+        self.pulled
+    }
+}
+
+/// One coordinator→worker round (phases run in the listed order).
+struct RoundCmd {
+    /// Replica ids to drain (scale-down victims), at `drain_t`. Empties
+    /// retire immediately at `drain_t`, as in the sequential retire scan.
+    drains: Vec<usize>,
+    drain_t: f64,
+    /// Replicas to create: `(id, started_at)`.
+    spawns: Vec<(usize, f64)>,
+    /// Boundary step time (`NaN` = no boundary step this round).
+    step_t: f64,
+    /// `(target id, request)` in arrival order; targets step at `step_t`.
+    injections: Vec<(usize, Request)>,
+    /// Primed replicas whose first step coincides with `step_t`.
+    step_primed: Vec<usize>,
+    /// Primed replicas taking their first step strictly inside this
+    /// round's advance range: `(first step time, ids)`.
+    prime: Option<(f64, Vec<usize>)>,
+    /// Advance owned replicas through internal events `< horizon`
+    /// (and `≤ max_virtual_time`); `∞` = drain everything schedulable.
+    horizon: f64,
+}
+
+enum Cmd {
+    Round(RoundCmd),
+    /// End of run: sync survivors to `last_t`, hand everything back.
+    Finish { last_t: f64 },
+}
+
+/// One worker→coordinator round report.
+struct Report {
+    /// Load views of owned *active* replicas, in id order.
+    views: Vec<ReplicaView>,
+    /// Minimum next-event time over owned in-service replicas (`NaN` =
+    /// none) — unfiltered, mirroring the sequential loop's live keys.
+    key_min: f64,
+    /// Requests completed by this round's steps.
+    completed: usize,
+    /// Engine `step()` calls performed this round.
+    steps: usize,
+    /// Latest event time processed in the advance phase (`-∞` = none).
+    max_t: f64,
+}
+
+/// Everything a worker hands back at [`Cmd::Finish`].
+struct WorkerOut {
+    /// The shard's replicas (all retired by now), id order.
+    replicas: Vec<Replica>,
+    /// Mid-run retirements: `(retire time, id, metrics)`.
+    done: Vec<(f64, usize, RunMetrics)>,
+    /// End-of-run survivors: `(id, metrics)`, id order.
+    survivors: Vec<(usize, RunMetrics)>,
+    /// The shard tracer's event stream.
+    events: Vec<TraceEvent>,
+}
+
+/// Find a shard-owned replica by id (shards stay sorted: spawn ids are
+/// handed out in increasing order).
+fn find(bin: &[Replica], id: usize) -> usize {
+    bin.binary_search_by_key(&id, |r| r.id).expect("replica owned by this shard")
+}
+
+/// Worker thread body: owns one shard of replicas and executes rounds
+/// until [`Cmd::Finish`].
+fn worker_loop(
+    rx: Receiver<Cmd>,
+    tx: Sender<Report>,
+    tracer: Tracer,
+    cfg: ClusterCfg,
+) -> WorkerOut {
+    let max_vt = cfg.engine.max_virtual_time;
+    let mut bin: Vec<Replica> = Vec::new();
+    let mut done: Vec<(f64, usize, RunMetrics)> = Vec::new();
+    let mut set: Vec<usize> = Vec::new();
+
+    loop {
+        match rx.recv() {
+            Ok(Cmd::Round(rc)) => {
+                let mut completed = 0usize;
+                let mut steps = 0usize;
+                let mut max_t = f64::NEG_INFINITY;
+
+                // 1. Drains: mark victims; empties retire at drain_t
+                //    (syncing their clocks first, like the sequential
+                //    retire scan — a drained-empty step completes nothing).
+                for &id in &rc.drains {
+                    let i = find(&bin, id);
+                    bin[i].drain();
+                    if bin[i].drained() {
+                        if bin[i].eng.now() < rc.drain_t {
+                            let out = bin[i].eng.step(rc.drain_t);
+                            debug_assert_eq!(out.completed, 0);
+                        }
+                        tracer.emit_for(id as u32, rc.drain_t, EventKind::ReplicaRetire);
+                        let m = bin[i].retire(rc.drain_t);
+                        done.push((rc.drain_t, id, m));
+                    }
+                }
+
+                // 2. Spawns (initial fleet and autoscaler growth).
+                for &(id, at) in &rc.spawns {
+                    debug_assert!(bin.last().map_or(true, |r| r.id < id));
+                    let mut rep = Replica::new(id, cfg.kind, &cfg.engine, at);
+                    rep.eng.set_tracer(tracer.for_replica(id as u32));
+                    tracer.emit_for(id as u32, at, EventKind::ReplicaStart);
+                    bin.push(rep);
+                }
+
+                // 3. Boundary step at step_t: injected ∪ due ∪ primed-at-B,
+                //    stepped in id order (bin order == id order).
+                if !rc.step_t.is_nan() {
+                    let t = rc.step_t;
+                    set.clear();
+                    for &(id, req) in &rc.injections {
+                        let i = find(&bin, id);
+                        bin[i].eng.inject(req);
+                        bin[i].routed += 1;
+                        set.push(i);
+                    }
+                    for (i, rep) in bin.iter_mut().enumerate() {
+                        if rep.in_service() {
+                            if let Some(e) = rep.eng.next_event() {
+                                debug_assert!(e + 1e-12 >= t, "event missed by advance");
+                                if e <= t {
+                                    set.push(i);
+                                }
+                            }
+                        }
+                    }
+                    for &id in &rc.step_primed {
+                        set.push(find(&bin, id));
+                    }
+                    set.sort_unstable();
+                    set.dedup();
+                    for i in set.drain(..) {
+                        let rep = &mut bin[i];
+                        if !rep.in_service() {
+                            continue;
+                        }
+                        let out = rep.eng.step(t);
+                        completed += out.completed;
+                        steps += 1;
+                        if rep.drained() {
+                            tracer.emit_for(rep.id as u32, t, EventKind::ReplicaRetire);
+                            done.push((t, rep.id, rep.retire(t)));
+                        }
+                    }
+                }
+
+                // 4. Prime: first step of freshly spawned replicas at the
+                //    fleet's true next event (inside this round's range).
+                if let Some((tp, ids)) = &rc.prime {
+                    for &id in ids {
+                        let i = find(&bin, id);
+                        if bin[i].in_service() {
+                            let out = bin[i].eng.step(*tp);
+                            completed += out.completed;
+                            steps += 1;
+                            if *tp > max_t {
+                                max_t = *tp;
+                            }
+                        }
+                    }
+                }
+
+                // 5. Advance: each owned replica processes its own events
+                //    below the horizon, at their exact times.
+                for rep in bin.iter_mut() {
+                    if !rep.in_service() {
+                        continue;
+                    }
+                    while let Some(e) = rep.eng.next_event() {
+                        if e >= rc.horizon || e > max_vt {
+                            break;
+                        }
+                        let out = rep.eng.step(e);
+                        completed += out.completed;
+                        steps += 1;
+                        if e > max_t {
+                            max_t = e;
+                        }
+                        if rep.drained() {
+                            tracer.emit_for(rep.id as u32, e, EventKind::ReplicaRetire);
+                            done.push((e, rep.id, rep.retire(e)));
+                            break;
+                        }
+                    }
+                }
+
+                // 6. Report shard state as of the horizon.
+                let views: Vec<ReplicaView> =
+                    bin.iter().filter(|r| r.is_active()).map(|r| r.view()).collect();
+                let mut key_min = f64::NAN;
+                for rep in bin.iter_mut() {
+                    if rep.in_service() {
+                        if let Some(e) = rep.eng.next_event() {
+                            if key_min.is_nan() || e < key_min {
+                                key_min = e;
+                            }
+                        }
+                    }
+                }
+                tx.send(Report { views, key_min, completed, steps, max_t })
+                    .expect("coordinator alive");
+            }
+            Ok(Cmd::Finish { last_t }) => {
+                let mut survivors: Vec<(usize, RunMetrics)> = Vec::new();
+                for rep in bin.iter_mut() {
+                    if rep.in_service() {
+                        if rep.eng.now() < last_t {
+                            rep.eng.step(last_t);
+                        }
+                        rep.state = ReplicaState::Draining; // permit retire()
+                        let m = rep.retire(last_t);
+                        rep.retired_at = None; // still in service at end
+                        survivors.push((rep.id, m));
+                    }
+                }
+                return WorkerOut { replicas: bin, done, survivors, events: tracer.take() };
+            }
+            Err(_) => {
+                // Coordinator dropped (panic unwind): exit quietly.
+                return WorkerOut {
+                    replicas: bin,
+                    done,
+                    survivors: Vec::new(),
+                    events: tracer.take(),
+                };
+            }
+        }
+    }
+}
+
+impl Cluster {
+    /// Sharded co-simulation over a materialized trace: digest-identical
+    /// to [`Cluster::run`] for any `threads ≥ 1` and any `window ≥ 0`
+    /// (see the module docs for the argument and the deliberate
+    /// differences: `events`, `replica_seconds`, sampling,
+    /// `record_event_times`).
+    pub fn run_parallel(&mut self, trace: &[Request], threads: usize, window: f64) -> ClusterMetrics {
+        let scaler = self.build_scaler(trace);
+        self.run_parallel_core(SliceArrivals::new(trace), scaler, threads, window)
+    }
+
+    /// Sharded co-simulation over a streaming workload (the arrivals never
+    /// need to exist in memory at once — pair with
+    /// [`crate::workload::generate_iter`] /
+    /// [`crate::workload::generate_bursty_iter`] for 10⁶-request runs).
+    ///
+    /// Autoscaling calibrates replica capacity from mean request lengths,
+    /// which a stream cannot be scanned for — pass `mean_hint =
+    /// Some((mean_prompt, mean_output))` when `cfg.autoscale` is set
+    /// (e.g. from [`crate::workload::Dataset`] statistics); without a
+    /// hint the capacity model falls back to unit lengths.
+    pub fn run_parallel_stream<I: Iterator<Item = Request>>(
+        &mut self,
+        requests: I,
+        mean_hint: Option<(f64, f64)>,
+        threads: usize,
+        window: f64,
+    ) -> ClusterMetrics {
+        let scaler = self.cfg.autoscale.map(|acfg| {
+            let cost = calibrate(&self.cfg.engine.gpu);
+            let (mp, mo) = mean_hint.unwrap_or((1.0, 1.0));
+            Autoscaler::new(
+                acfg,
+                super::autoscaler::predict_replica_rate(&cost, &self.cfg.engine, mp, mo),
+            )
+        });
+        self.run_parallel_core(StreamArrivals::new(requests), scaler, threads, window)
+    }
+
+    fn run_parallel_core<A: Arrivals>(
+        &mut self,
+        mut arrivals: A,
+        mut scaler: Option<Autoscaler>,
+        threads: usize,
+        window: f64,
+    ) -> ClusterMetrics {
+        assert!(threads >= 1, "run_parallel needs at least one worker");
+        assert!(window >= 0.0, "window must be nonnegative");
+        let cfg = self.cfg.clone();
+        let n0 = match &cfg.autoscale {
+            Some(a) => cfg.replicas.clamp(a.min_replicas, a.max_replicas),
+            None => cfg.replicas,
+        };
+        self.replicas = Vec::new();
+        self.router = Router::new(cfg.policy);
+        self.event_times.clear();
+        let max_vt = cfg.engine.max_virtual_time;
+        let mut next_tick = scaler.as_ref().map(|s| s.cfg.interval);
+
+        // Coordinator bookkeeping (mirrors the sequential loop's counters).
+        let mut scale_events: Vec<ScaleEvent> = Vec::new();
+        let mut peak_replicas = n0;
+        let mut active_cnt = n0;
+        let mut pending_total = 0usize;
+        let mut arrivals_since_tick = 0usize;
+        let mut next_id = n0;
+        let mut last_t = 0.0f64;
+        let mut rounds = 0usize;
+        let mut steps_total = 0usize;
+        // Merged active-replica views as of the current horizon, id order.
+        let mut views: Vec<ReplicaView> = Vec::new();
+        let mut keys_min = f64::NAN;
+        // Replicas awaiting their first step, and when it lands: the
+        // fleet's next event as of their spawn (min of next arrival, next
+        // tick, and every shard's key minimum) — fixed at spawn time, since
+        // nothing can schedule an earlier event afterwards.
+        let mut primed: Vec<usize> = (0..n0).collect();
+        let mut prime_t = f64::NAN; // resolved at the first boundary probe
+        // Directives decided at a tick, applied in the next round.
+        let mut pending_spawns: Vec<(usize, f64)> = Vec::new();
+        let mut pending_drains: Vec<usize> = Vec::new();
+        let mut drain_t = 0.0f64;
+        let mut arr_buf: Vec<Request> = Vec::new();
+        let mut kv_buf: Vec<f64> = Vec::new();
+        let mut outs: Vec<WorkerOut> = Vec::new();
+
+        // Initial fleet spawns through the same directive path as
+        // autoscaler growth, so workers own replica construction uniformly.
+        // Synthesize their (empty) views up front: a trace whose first
+        // arrival lands exactly at t = 0 routes before any worker report
+        // exists (fresh engines report pending 0 / kv 0.0 anyway).
+        pending_spawns.extend((0..n0).map(|i| (i, 0.0)));
+        views.extend((0..n0).map(|i| ReplicaView {
+            index: i as u32,
+            pending: 0,
+            kv_usage: 0.0,
+        }));
+
+        std::thread::scope(|s| {
+            let mut txs: Vec<Sender<Cmd>> = Vec::with_capacity(threads);
+            let mut rxs: Vec<Receiver<Report>> = Vec::with_capacity(threads);
+            let mut handles = Vec::with_capacity(threads);
+            for _ in 0..threads {
+                let (ctx, crx) = channel::<Cmd>();
+                let (rtx, rrx) = channel::<Report>();
+                let shard_tracer = self.tracer.fork_sink();
+                let wcfg = cfg.clone();
+                handles.push(s.spawn(move || worker_loop(crx, rtx, shard_tracer, wcfg)));
+                txs.push(ctx);
+                rxs.push(rrx);
+            }
+
+            // Broadcast one round (partitioning directives by shard) and
+            // merge the reports back into the coordinator's state.
+            macro_rules! round {
+                ($step_t:expr, $injections:expr, $step_primed:expr, $horizon:expr) => {{
+                    let step_primed: Vec<usize> = $step_primed;
+                    let injections: Vec<(usize, Request)> = $injections;
+                    let horizon: f64 = $horizon;
+                    // Flush a pending prime that lands strictly inside
+                    // this round's advance range (never beyond the
+                    // simulation horizon — the sequential loop breaks
+                    // before stepping anything past max_virtual_time).
+                    let prime_now = if !primed.is_empty() && prime_t < horizon && prime_t <= max_vt
+                    {
+                        Some((prime_t, std::mem::take(&mut primed)))
+                    } else {
+                        None
+                    };
+                    for (w, tx) in txs.iter().enumerate() {
+                        let rc = RoundCmd {
+                            drains: pending_drains
+                                .iter()
+                                .copied()
+                                .filter(|id| id % threads == w)
+                                .collect(),
+                            drain_t,
+                            spawns: pending_spawns
+                                .iter()
+                                .copied()
+                                .filter(|(id, _)| id % threads == w)
+                                .collect(),
+                            step_t: $step_t,
+                            injections: injections
+                                .iter()
+                                .copied()
+                                .filter(|(id, _)| id % threads == w)
+                                .collect(),
+                            step_primed: step_primed
+                                .iter()
+                                .copied()
+                                .filter(|id| id % threads == w)
+                                .collect(),
+                            prime: prime_now.as_ref().map(|(tp, ids)| {
+                                (*tp, ids.iter().copied().filter(|id| id % threads == w).collect())
+                            }),
+                            horizon,
+                        };
+                        tx.send(Cmd::Round(rc)).expect("worker alive");
+                    }
+                    pending_drains.clear();
+                    pending_spawns.clear();
+                    rounds += 1;
+                    views.clear();
+                    keys_min = f64::NAN;
+                    for rx in &rxs {
+                        let rep = rx.recv().expect("worker alive");
+                        views.extend(rep.views);
+                        if !rep.key_min.is_nan()
+                            && (keys_min.is_nan() || rep.key_min < keys_min)
+                        {
+                            keys_min = rep.key_min;
+                        }
+                        pending_total -= rep.completed;
+                        steps_total += rep.steps;
+                        if rep.max_t > last_t {
+                            last_t = rep.max_t;
+                        }
+                    }
+                    views.sort_unstable_by_key(|v| v.index);
+                }};
+            }
+
+            // Workers have processed every event strictly below cur_h.
+            let mut cur_h = 0.0f64;
+            loop {
+                if arrivals.exhausted() && pending_total == 0 {
+                    // Apply directives left by a just-decided scale action
+                    // (empty victims must still retire at the decision
+                    // time, as in the sequential retire scan).
+                    if !pending_drains.is_empty() || !pending_spawns.is_empty() {
+                        round!(f64::NAN, Vec::new(), Vec::new(), cur_h);
+                    }
+                    break;
+                }
+
+                // Next interaction boundary: earliest arrival or tick.
+                let mut b = f64::INFINITY;
+                if let Some(a) = arrivals.peek_time() {
+                    b = b.min(a);
+                }
+                if let Some(tk) = next_tick {
+                    b = b.min(tk);
+                }
+
+                if !b.is_finite() || b > max_vt {
+                    // No further interactions inside the horizon: drain
+                    // everything schedulable (workers stop at
+                    // max_virtual_time), then stop.
+                    if cur_h.is_infinite() {
+                        break;
+                    }
+                    round!(f64::NAN, Vec::new(), Vec::new(), f64::INFINITY);
+                    cur_h = f64::INFINITY;
+                    continue;
+                }
+
+                // Initial replicas resolve their first-step time at the
+                // first probe (no shard keys exist before any step).
+                if prime_t.is_nan() && !primed.is_empty() {
+                    prime_t = b;
+                }
+
+                if cur_h < b {
+                    // Window-capped advance toward the boundary: no
+                    // routing, no tick, no step — output-invariant.
+                    let h = if window > 0.0 { (cur_h + window).min(b) } else { b };
+                    round!(f64::NAN, Vec::new(), Vec::new(), h);
+                    cur_h = h;
+                    if keys_min.is_nan() && arrivals.exhausted() && pending_total > 0 {
+                        break; // stall: nothing schedulable, nothing arriving
+                    }
+                    continue;
+                }
+
+                // Boundary round at B == cur_h: route arrivals against the
+                // merged post-advance views, rebuilding the load picture
+                // per arrival exactly like the sequential loop (injections
+                // bump only the target's pending; KV moves only on steps).
+                let is_tick = next_tick.is_some_and(|tk| b + 1e-12 >= tk);
+                arrivals.pop_until(b, &mut arr_buf);
+                let mut injections: Vec<(usize, Request)> = Vec::with_capacity(arr_buf.len());
+                for r in &arr_buf {
+                    let target = self.router.route(&views, r);
+                    self.trace_route(r, target, &views, b);
+                    if let Ok(pos) = views.binary_search_by_key(&(target as u32), |v| v.index)
+                    {
+                        views[pos].pending += 1;
+                    }
+                    injections.push((target, *r));
+                    pending_total += 1;
+                    arrivals_since_tick += 1;
+                }
+                let step_primed = if !primed.is_empty() && prime_t == b {
+                    std::mem::take(&mut primed)
+                } else {
+                    Vec::new()
+                };
+                last_t = last_t.max(b);
+
+                if is_tick {
+                    // Rendezvous 1: boundary step only (horizon B ⇒ no
+                    // advance), so the decision sees post-step state.
+                    round!(b, injections, step_primed, b);
+                    let sc = scaler.as_mut().expect("tick implies scaler");
+                    let tk = next_tick.expect("tick implies schedule");
+                    kv_buf.clear();
+                    kv_buf.extend(views.iter().map(|v| v.kv_usage));
+                    let obs = FleetObs {
+                        now: b,
+                        arrival_rate: arrivals_since_tick as f64 / sc.cfg.interval,
+                        active_replicas: views.len(),
+                        total_pending: pending_total,
+                        mean_kv: crate::util::mean(&kv_buf),
+                        max_kv: kv_buf.iter().fold(0.0f64, |a, &v| a.max(v)),
+                    };
+                    if let Some(target) = sc.decide(&obs) {
+                        let from = views.len();
+                        self.tracer.emit_for(
+                            crate::trace::FLEET,
+                            b,
+                            EventKind::Scale { from, to: target },
+                        );
+                        scale_events.push(ScaleEvent { time: b, from, to: target });
+                        if target > from {
+                            for _ in from..target {
+                                pending_spawns.push((next_id, b));
+                                primed.push(next_id);
+                                // Fresh replicas are routable immediately:
+                                // synthesize their (empty) views until the
+                                // next report includes them.
+                                views.push(ReplicaView {
+                                    index: next_id as u32,
+                                    pending: 0,
+                                    kv_usage: 0.0,
+                                });
+                                next_id += 1;
+                            }
+                            // First step at the fleet's next event, fixed
+                            // now: nothing can schedule an earlier one.
+                            prime_t = f64::INFINITY;
+                            if let Some(a) = arrivals.peek_time() {
+                                prime_t = prime_t.min(a);
+                            }
+                            prime_t = prime_t.min(tk + sc.cfg.interval);
+                            if !keys_min.is_nan() {
+                                prime_t = prime_t.min(keys_min);
+                            }
+                        } else {
+                            // Drain the least-loaded actives (same
+                            // (pending, id) order as the sequential
+                            // rescale); they leave the routable set now
+                            // and retire once empty.
+                            let mut by_load: Vec<(u32, u32)> =
+                                views.iter().map(|v| (v.pending, v.index)).collect();
+                            by_load.sort_unstable();
+                            for &(_, idx) in by_load.iter().take(from - target) {
+                                pending_drains.push(idx as usize);
+                                self.tracer.emit_for(idx, b, EventKind::ReplicaDrain);
+                                if let Ok(pos) =
+                                    views.binary_search_by_key(&idx, |v| v.index)
+                                {
+                                    views.remove(pos);
+                                }
+                            }
+                            drain_t = b;
+                        }
+                        active_cnt = target;
+                    }
+                    next_tick = Some(tk + sc.cfg.interval);
+                    arrivals_since_tick = 0;
+                } else {
+                    // Plain arrival boundary: fuse the boundary step with
+                    // the advance toward the next interaction.
+                    let mut nb = f64::INFINITY;
+                    if let Some(a) = arrivals.peek_time() {
+                        nb = nb.min(a);
+                    }
+                    if let Some(tk) = next_tick {
+                        nb = nb.min(tk);
+                    }
+                    let h = if window > 0.0 { (b + window).min(nb) } else { nb };
+                    round!(b, injections, step_primed, h);
+                    cur_h = h;
+                }
+
+                peak_replicas = peak_replicas.max(active_cnt);
+                if keys_min.is_nan() && arrivals.exhausted() && pending_total > 0 {
+                    // Stall: nothing schedulable, nothing arriving. Apply
+                    // any directives from this boundary's tick first.
+                    if !pending_drains.is_empty() || !pending_spawns.is_empty() {
+                        round!(f64::NAN, Vec::new(), Vec::new(), cur_h);
+                    }
+                    break;
+                }
+            }
+
+            for tx in &txs {
+                tx.send(Cmd::Finish { last_t }).expect("worker alive");
+            }
+            for h in handles {
+                outs.push(h.join().expect("worker panicked"));
+            }
+        });
+
+        // Merge per-shard results in the sequential loop's order:
+        // mid-run retirements chronologically (ties in id order — the
+        // sequential retire scan walks ids), then survivors in id order.
+        let mut fleet = RunMetrics::default();
+        let mut ttft_hist = Histogram::new();
+        let mut tbt_hist = Histogram::new();
+        let mut done: Vec<(f64, usize, RunMetrics)> = Vec::new();
+        let mut survivors: Vec<(usize, RunMetrics)> = Vec::new();
+        let mut streams: Vec<Vec<TraceEvent>> = Vec::new();
+        for out in outs {
+            done.extend(out.done);
+            survivors.extend(out.survivors);
+            self.replicas.extend(out.replicas);
+            streams.push(out.events);
+        }
+        done.sort_by_key(|&(t, id, _)| (f64_total_key(t), id));
+        survivors.sort_by_key(|&(id, _)| id);
+        for (_, _, m) in done {
+            ttft_hist.merge(&m.ttft_histogram());
+            tbt_hist.merge(&m.tbt_histogram());
+            fleet.merge(m);
+        }
+        for (_, m) in survivors {
+            ttft_hist.merge(&m.ttft_histogram());
+            tbt_hist.merge(&m.tbt_histogram());
+            fleet.merge(m);
+        }
+        fleet.timeouts = arrivals.offered() - fleet.records.len();
+        self.replicas.sort_by_key(|r| r.id);
+
+        // Fold the per-shard trace streams back into the cluster tracer in
+        // canonical (time, replica) order.
+        if self.tracer.enabled() {
+            streams.insert(0, self.tracer.take());
+            self.tracer.absorb(merge_streams(streams));
+        }
+
+        // Replica-seconds analytically (window/thread-invariant; within
+        // float noise of the sequential accumulation — digest-excluded).
+        let replica_seconds: f64 = self
+            .replicas
+            .iter()
+            .map(|r| r.retired_at.unwrap_or(last_t) - r.started_at)
+            .sum();
+
+        let replicas = self
+            .replicas
+            .iter()
+            .map(|r| ReplicaStats {
+                id: r.id,
+                routed: r.routed as usize,
+                completed: r.eng.completed(),
+                started_at: r.started_at,
+                retired_at: r.retired_at,
+            })
+            .collect();
+
+        ClusterMetrics {
+            fleet,
+            replicas,
+            scale_events,
+            suppressed_scales: scaler.as_ref().map_or(0, |s| s.suppressed),
+            replica_seconds,
+            peak_replicas,
+            events: rounds + steps_total,
+            ttft_hist,
+            tbt_hist,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{EngineCfg, EngineKind};
+    use crate::model::ModelConfig;
+    use crate::workload::{generate, generate_iter, Dataset};
+
+    fn ecfg() -> EngineCfg {
+        EngineCfg::new(ModelConfig::qwen3b(), 42)
+    }
+
+    #[test]
+    fn parallel_matches_sequential_digest() {
+        let trace = generate(Dataset::Mixed, 40, 6.0, 11);
+        let cc = ClusterCfg::new(
+            EngineKind::Nexus,
+            ecfg(),
+            3,
+            super::super::RoutingPolicy::JoinShortestQueue,
+        );
+        let seq = Cluster::new(cc.clone()).run(&trace);
+        for threads in [1usize, 2, 4] {
+            let par = Cluster::new(cc.clone()).run_parallel(&trace, threads, 0.0);
+            assert_eq!(seq.digest(), par.digest(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn window_size_does_not_change_results() {
+        let trace = generate(Dataset::ShareGpt, 40, 8.0, 23);
+        let cc = ClusterCfg::new(
+            EngineKind::Vllm,
+            ecfg(),
+            4,
+            super::super::RoutingPolicy::LeastKvPressure,
+        );
+        let base = Cluster::new(cc.clone()).run_parallel(&trace, 2, 0.0);
+        for window in [0.05f64, 0.5, 10.0] {
+            let w = Cluster::new(cc.clone()).run_parallel(&trace, 2, window);
+            assert_eq!(base.digest(), w.digest(), "window={window}");
+        }
+    }
+
+    #[test]
+    fn stream_arrivals_match_slice_arrivals() {
+        // The streaming front-end must be behaviorally identical to the
+        // materialized trace (autoscale off: capacity calibration needs
+        // trace statistics a stream cannot provide).
+        let cc = ClusterCfg::new(
+            EngineKind::Nexus,
+            ecfg(),
+            2,
+            super::super::RoutingPolicy::RoundRobin,
+        );
+        let trace = generate(Dataset::ShareGpt, 50, 10.0, 9);
+        let by_slice = Cluster::new(cc.clone()).run_parallel(&trace, 2, 0.0);
+        let by_stream = Cluster::new(cc).run_parallel_stream(
+            generate_iter(Dataset::ShareGpt, 50, 10.0, 9),
+            None,
+            2,
+            0.0,
+        );
+        assert_eq!(by_slice.digest(), by_stream.digest());
+        assert_eq!(by_slice.fleet.records.len(), by_stream.fleet.records.len());
+    }
+
+    #[test]
+    fn stream_arrivals_pop_in_order() {
+        let trace = generate(Dataset::Mixed, 20, 5.0, 3);
+        let mut s = StreamArrivals::new(trace.iter().copied());
+        let mut a = SliceArrivals::new(&trace);
+        let mut sb = Vec::new();
+        let mut ab = Vec::new();
+        for t in [0.5f64, 1.5, 3.0, 100.0] {
+            assert_eq!(s.peek_time(), a.peek_time());
+            s.pop_until(t, &mut sb);
+            a.pop_until(t, &mut ab);
+            assert_eq!(sb.len(), ab.len(), "t={t}");
+            assert!(sb.iter().zip(&ab).all(|(x, y)| x.id == y.id));
+        }
+        assert!(s.exhausted() && a.exhausted());
+        assert_eq!(s.offered(), 20);
+        assert_eq!(a.offered(), 20);
+    }
+}

@@ -19,8 +19,8 @@ pub struct Replica {
     pub id: usize,
     pub eng: Box<dyn Engine>,
     pub state: ReplicaState,
-    /// Requests the router dispatched here.
-    pub routed: usize,
+    /// Requests the router dispatched here (`u32`: ≪ 2³² per replica).
+    pub routed: u32,
     /// Virtual time the replica joined the fleet.
     pub started_at: f64,
     /// Virtual time it fully drained (retired), if it has.
@@ -58,8 +58,8 @@ impl Replica {
     #[inline]
     pub fn view(&self) -> ReplicaView {
         ReplicaView {
-            index: self.id,
-            pending: self.eng.pending(),
+            index: self.id as u32,
+            pending: self.eng.pending() as u32,
             kv_usage: self.eng.kv_usage(),
         }
     }

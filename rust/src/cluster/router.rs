@@ -70,12 +70,16 @@ impl RoutingPolicy {
 }
 
 /// Load snapshot of one routable (active) replica.
+///
+/// Compact (§Perf): `u32` index/pending keep the view at 16 bytes, so the
+/// per-arrival view rebuild over a 1024-replica fleet stays cache-friendly
+/// (fleet sizes and queue depths are ≪ 2³²).
 #[derive(Debug, Clone, Copy)]
 pub struct ReplicaView {
     /// Absolute replica index in the fleet.
-    pub index: usize,
+    pub index: u32,
     /// Admitted-but-unfinished requests.
-    pub pending: usize,
+    pub pending: u32,
     /// Live KV usage `KV_u` ∈ [0, 1].
     pub kv_usage: f64,
 }
@@ -101,7 +105,7 @@ impl Router {
             .iter()
             .min_by_key(|v| (v.pending, v.index))
             .expect("router needs at least one active replica")
-            .index
+            .index as usize
     }
 
     /// Pick the target replica for one arrival. `views` must describe the
@@ -118,7 +122,7 @@ impl Router {
             RoutingPolicy::RoundRobin => {
                 let v = &views[self.rr_next % views.len()];
                 self.rr_next = self.rr_next.wrapping_add(1);
-                v.index
+                v.index as usize
             }
             RoutingPolicy::JoinShortestQueue => Self::jsq(views),
             RoutingPolicy::LeastKvPressure => {
@@ -130,12 +134,12 @@ impl Router {
                             .unwrap()
                     })
                     .unwrap()
-                    .index
+                    .index as usize
             }
             RoutingPolicy::SessionAffinity => {
                 let key = (req.id % AFFINITY_SESSIONS) as u64;
                 if let Some(&idx) = self.sessions.get(&key) {
-                    if views.iter().any(|v| v.index == idx) {
+                    if views.iter().any(|v| v.index as usize == idx) {
                         return idx;
                     }
                 }
@@ -156,7 +160,7 @@ mod tests {
         Request { id, arrival: 0.0, prompt_len: 100, output_len: 10 }
     }
 
-    fn views(loads: &[(usize, usize, f64)]) -> Vec<ReplicaView> {
+    fn views(loads: &[(u32, u32, f64)]) -> Vec<ReplicaView> {
         loads
             .iter()
             .map(|&(index, pending, kv_usage)| ReplicaView { index, pending, kv_usage })

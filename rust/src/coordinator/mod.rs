@@ -66,11 +66,27 @@ pub struct ClusterExperiment {
     /// When set, arrivals come from the bursty/diurnal process (the
     /// `base.rate` field is ignored in favor of `bursty.base_rate`).
     pub bursty: Option<BurstyCfg>,
+    /// Worker threads for the sharded fleet loop: `1` runs the sequential
+    /// [`Cluster::run`], `> 1` the digest-identical
+    /// [`Cluster::run_parallel`] (see `--threads`).
+    pub threads: usize,
+    /// Virtual-time synchronization window for the sharded loop, seconds;
+    /// `0` = free-run to the next interaction. Output-invariant by
+    /// construction (see `--window`).
+    pub window: f64,
 }
 
 impl ClusterExperiment {
     pub fn new(base: Experiment, replicas: usize, policy: RoutingPolicy) -> Self {
-        ClusterExperiment { base, replicas, policy, autoscale: None, bursty: None }
+        ClusterExperiment {
+            base,
+            replicas,
+            policy,
+            autoscale: None,
+            bursty: None,
+            threads: 1,
+            window: 0.0,
+        }
     }
 
     pub fn trace(&self) -> Vec<workload::Request> {
@@ -99,7 +115,11 @@ impl ClusterExperiment {
         cfg.autoscale = self.autoscale;
         let mut cluster = Cluster::new(cfg);
         cluster.tracer = tracer.clone();
-        cluster.run(&self.trace())
+        if self.threads > 1 {
+            cluster.run_parallel(&self.trace(), self.threads, self.window)
+        } else {
+            cluster.run(&self.trace())
+        }
     }
 }
 
@@ -227,6 +247,17 @@ mod tests {
                 policy.name()
             );
         }
+    }
+
+    #[test]
+    fn cluster_experiment_parallel_dispatch_matches_sequential() {
+        let base = Experiment::new(ModelConfig::qwen3b(), Dataset::ShareGpt, 30, 6.0);
+        let mut exp = ClusterExperiment::new(base, 3, RoutingPolicy::JoinShortestQueue);
+        let seq = exp.run(EngineKind::Nexus);
+        exp.threads = 4;
+        exp.window = 2.0;
+        let par = exp.run(EngineKind::Nexus);
+        assert_eq!(seq.digest(), par.digest(), "--threads must not change results");
     }
 
     #[test]

@@ -27,7 +27,7 @@ impl ReqState {
     pub fn new(req: Request) -> Self {
         ReqState {
             req,
-            effective_prompt: req.prompt_len,
+            effective_prompt: req.plen(),
             prefilled: 0,
             generated: 0,
             first_token: f64::NAN,
@@ -45,7 +45,7 @@ impl ReqState {
     }
 
     pub fn decode_done(&self) -> bool {
-        self.generated >= self.req.output_len
+        self.generated >= self.req.olen()
     }
 
     /// Record the first output token (end of prefill).
@@ -69,7 +69,7 @@ impl ReqState {
     /// Requeue for (re-)prefill after eviction: everything already emitted
     /// must be recomputed into KV before decoding can continue.
     pub fn restart_for_recompute(&mut self, now: f64) {
-        self.effective_prompt = self.req.prompt_len + self.generated;
+        self.effective_prompt = self.req.plen() + self.generated;
         self.prefilled = 0;
         self.queue_since = now;
     }
@@ -80,8 +80,8 @@ impl ReqState {
             arrival: self.req.arrival,
             first_token: if self.first_token.is_nan() { finish } else { self.first_token },
             finish,
-            prompt_len: self.req.prompt_len,
-            output_len: self.req.output_len,
+            prompt_len: self.req.plen(),
+            output_len: self.req.olen(),
             token_gaps: self.gaps,
             sched_time: self.sched_time,
             queue_time: self.queue_time,
@@ -135,7 +135,7 @@ pub fn chunk_attn_pairs(prior: usize, take: usize) -> f64 {
 mod tests {
     use super::*;
 
-    fn req(id: usize, arrival: f64, p: usize, o: usize) -> Request {
+    fn req(id: usize, arrival: f64, p: u32, o: u32) -> Request {
         Request { id, arrival, prompt_len: p, output_len: o }
     }
 

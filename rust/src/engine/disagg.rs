@@ -429,7 +429,7 @@ impl Engine for DisaggEngine {
             let mut tr = self.transfers[i];
             if tr.ready_at <= now {
                 let st = self.states[tr.id].as_ref().unwrap();
-                let ctx = st.req.prompt_len + st.generated;
+                let ctx = st.req.plen() + st.generated;
                 if self.dkv.try_reserve(tr.id, ctx) {
                     self.buffer.pop(tr.id);
                     self.running.insert(tr.id);

@@ -296,7 +296,7 @@ impl Engine for FastServeEngine {
     fn inject(&mut self, req: Request) {
         self.slot(req.id);
         self.states[req.id] = Some(ReqState::new(req));
-        self.mlfq.admit(req.id, req.prompt_len);
+        self.mlfq.admit(req.id, req.plen());
         self.injected += 1;
         self.tracer.emit(req.arrival, EventKind::Admit { req: req.id });
     }

@@ -185,7 +185,11 @@ pub struct StepOutcome {
 ///
 /// `t` must never overshoot any engine's pending event — the cluster layer
 /// guarantees this by stepping every replica to the fleet-wide minimum.
-pub trait Engine {
+///
+/// `Send` is a supertrait so replicas (each owning a `Box<dyn Engine>`) can
+/// be moved into per-shard worker threads by the parallel fleet loop
+/// (`Cluster::run_parallel`); every built-in engine is plain owned data.
+pub trait Engine: Send {
     /// Which engine this is (for tables and diagnostics).
     fn kind(&self) -> EngineKind;
 

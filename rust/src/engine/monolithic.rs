@@ -298,7 +298,7 @@ impl Engine for MonolithicEngine {
     fn inject(&mut self, req: Request) {
         let mut st = ReqState::new(req);
         if let Some(radix) = &mut self.radix {
-            st.effective_prompt = radix.effective_prefill(req.prompt_len);
+            st.effective_prompt = radix.effective_prefill(req.plen());
         }
         self.slot(req.id);
         self.states[req.id] = Some(st);

@@ -6,6 +6,7 @@
 //! nexus compare    --dataset mixed --model llama8b --n 200 --rate 3.0
 //! nexus serve      --engine nexus --dataset ldc --model qwen3b --n 100 --rate 2.5
 //! nexus cluster    --engine nexus --replicas 4 --policy jsq [--bursty] [--autoscale]
+//!                  [--threads N] [--window S]   (sharded loop; same results for any N/S)
 //! nexus throughput --engine vllm --dataset arxiv --model qwen3b --n 150
 //! nexus offline    --dataset ldc --model qwen3b --n 100
 //! nexus calibrate  [--model qwen3b]
@@ -199,6 +200,10 @@ fn cluster_experiment(args: &Args) -> (ClusterExperiment, EngineKind) {
             ..AutoscalerCfg::default()
         });
     }
+    exp.threads = args.get_usize("threads", 1);
+    assert!(exp.threads >= 1, "--threads must be >= 1");
+    exp.window = args.get_f64("window", 0.0);
+    assert!(exp.window >= 0.0, "--window must be >= 0");
     (exp, kind)
 }
 
@@ -207,7 +212,7 @@ fn cmd_cluster(args: &Args) {
     let replicas = exp.replicas;
     let policy = exp.policy;
     eprintln!(
-        "running {} x{} [{}] on {} / {} ({} reqs @ {} req/s{}{})...",
+        "running {} x{} [{}] on {} / {} ({} reqs @ {} req/s{}{}{})...",
         kind.name(),
         replicas,
         policy.name(),
@@ -217,6 +222,7 @@ fn cmd_cluster(args: &Args) {
         exp.base.rate,
         if exp.bursty.is_some() { ", bursty" } else { "" },
         if exp.autoscale.is_some() { ", autoscaled" } else { "" },
+        if exp.threads > 1 { format!(", {} threads", exp.threads) } else { String::new() },
     );
     let tracer = tracer_from(args);
     let m = exp.run_traced(kind, &tracer);

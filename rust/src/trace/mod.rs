@@ -24,8 +24,8 @@ mod export;
 pub use attribution::{attribute, PhaseAttribution};
 pub use export::{chrome_trace, event_json, to_jsonl};
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use crate::util::f64_total_key;
+use std::sync::{Arc, Mutex};
 
 /// Replica id used for fleet-level events (routing, autoscale) that are not
 /// attributable to a single replica.
@@ -347,7 +347,7 @@ pub struct EngineSnapshot {
 /// ordered stream. Each clone carries the replica id it stamps on events.
 #[derive(Debug, Clone)]
 pub struct Tracer {
-    sink: Option<Rc<RefCell<RecordingSink>>>,
+    sink: Option<Arc<Mutex<RecordingSink>>>,
     sample_interval: f64,
     replica: u32,
 }
@@ -368,9 +368,22 @@ impl Tracer {
     /// Recording tracer with a fresh shared sink (no periodic sampling).
     pub fn recording() -> Tracer {
         Tracer {
-            sink: Some(Rc::new(RefCell::new(RecordingSink::default()))),
+            sink: Some(Arc::new(Mutex::new(RecordingSink::default()))),
             sample_interval: 0.0,
             replica: FLEET,
+        }
+    }
+
+    /// A tracer with a *fresh* sink but this tracer's sampling interval and
+    /// enablement: disabled stays disabled; recording forks an independent
+    /// stream. Used by the parallel fleet loop to give each worker shard its
+    /// own sink (no cross-thread contention on the hot path); the per-shard
+    /// streams are recombined with [`merge_streams`] at the end of the run.
+    pub fn fork_sink(&self) -> Tracer {
+        Tracer {
+            sink: self.sink.as_ref().map(|_| Arc::new(Mutex::new(RecordingSink::default()))),
+            sample_interval: self.sample_interval,
+            replica: self.replica,
         }
     }
 
@@ -404,7 +417,7 @@ impl Tracer {
     #[inline]
     pub fn emit(&self, time: f64, kind: EventKind) {
         if let Some(sink) = &self.sink {
-            sink.borrow_mut().record(TraceEvent { time, replica: self.replica, kind });
+            sink.lock().unwrap().record(TraceEvent { time, replica: self.replica, kind });
         }
     }
 
@@ -413,17 +426,46 @@ impl Tracer {
     #[inline]
     pub fn emit_for(&self, replica: u32, time: f64, kind: EventKind) {
         if let Some(sink) = &self.sink {
-            sink.borrow_mut().record(TraceEvent { time, replica, kind });
+            sink.lock().unwrap().record(TraceEvent { time, replica, kind });
         }
     }
 
     /// Drain all recorded events (empty for a disabled tracer).
     pub fn take(&self) -> Vec<TraceEvent> {
         match &self.sink {
-            Some(sink) => std::mem::take(&mut sink.borrow_mut().events),
+            Some(sink) => std::mem::take(&mut sink.lock().unwrap().events),
             None => Vec::new(),
         }
     }
+
+    /// Re-emit a batch of already-stamped events into this tracer's sink
+    /// (no-op when disabled). Used to fold merged per-shard streams back
+    /// into the cluster's canonical tracer.
+    pub fn absorb(&self, events: Vec<TraceEvent>) {
+        if let Some(sink) = &self.sink {
+            sink.lock().unwrap().events.extend(events);
+        }
+    }
+}
+
+/// Merge several per-shard trace streams into one canonical sequence,
+/// stably sorted by `(time, replica)` with ties broken by within-stream
+/// emission order. Each shard's stream is internally time-ordered, and
+/// fleet-level events ([`FLEET`] = `u32::MAX`) sort after replica events at
+/// the same instant; the stable sort therefore yields one deterministic
+/// sequence independent of how replicas were sharded across threads.
+pub fn merge_streams(streams: Vec<Vec<TraceEvent>>) -> Vec<TraceEvent> {
+    let mut all: Vec<TraceEvent> = streams.into_iter().flatten().collect();
+    all.sort_by_key(|e| (f64_total_key(e.time), e.replica));
+    all
+}
+
+/// Canonically order one trace stream by `(time, replica)`, preserving
+/// within-key emission order — the comparison form used by the parallel
+/// determinism tests (the sequential loop interleaves shards differently
+/// than the merged parallel stream, but both sort to the same sequence).
+pub fn canonical_order(events: &mut [TraceEvent]) {
+    events.sort_by_key(|e| (f64_total_key(e.time), e.replica));
 }
 
 /// Periodic virtual-time sampler: tracks the next due sample point on a
@@ -543,6 +585,28 @@ mod tests {
         let mut e = a.clone();
         e.replica = 3;
         assert!(!a.approx_eq(&e, 1e-9));
+    }
+
+    #[test]
+    fn fork_sink_is_independent_and_merge_is_canonical() {
+        let t = Tracer::recording().with_sampling(0.5);
+        let shard = t.fork_sink();
+        assert!(shard.enabled());
+        assert_eq!(shard.sample_interval(), Some(0.5));
+        // Shard events do not land in the parent sink.
+        shard.emit_for(1, 2.0, EventKind::Complete { req: 9 });
+        shard.emit_for(0, 1.0, EventKind::Admit { req: 9 });
+        t.emit_for(FLEET, 1.0, EventKind::Arrival { req: 9 });
+        assert_eq!(t.take().len(), 1);
+        // Disabled parents fork disabled children.
+        assert!(!Tracer::default().fork_sink().enabled());
+        // Merge orders by (time, replica): r0@1.0, fleet@1.0, r1@2.0.
+        let merged = merge_streams(vec![
+            shard.take(),
+            vec![TraceEvent { time: 1.0, replica: FLEET, kind: EventKind::Arrival { req: 9 } }],
+        ]);
+        let key: Vec<(i64, u32)> = merged.iter().map(|e| (q(e.time), e.replica)).collect();
+        assert_eq!(key, vec![(1_000_000_000, 0), (1_000_000_000, FLEET), (2_000_000_000, 1)]);
     }
 
     #[test]

@@ -20,6 +20,11 @@
 //!
 //! Either way, any scheduling, preemption, ordering, or accounting change
 //! shows up as a failure.
+//!
+//! The sharded parallel fleet loop (`Cluster::run_parallel`, §Perf) is held
+//! to the *stronger* standard: it advances each replica in exactly the same
+//! time slices as the sequential loop, so its `ClusterMetrics::digest` must
+//! equal the sequential loop's for every thread count and window size.
 
 use nexus::cluster::{run_cluster, AutoscalerCfg, Cluster, ClusterCfg, RoutingPolicy};
 use nexus::engine::{build_engine, drive, run_engine, EngineCfg, EngineKind};
@@ -158,4 +163,96 @@ fn autoscaled_fleet_matches_reference() {
     assert_eq!(a.suppressed_scales, b.suppressed_scales);
     assert_eq!(a.peak_replicas, b.peak_replicas);
     assert!((a.replica_seconds - b.replica_seconds).abs() < 1e-6);
+}
+
+#[test]
+fn parallel_fleet_matches_sequential_digest_per_kind() {
+    // The sharded loop steps every replica at the same virtual times as the
+    // sequential loop, so the full cluster digest (records at ns
+    // quantization, per-replica accounting, scale history, histogram
+    // counts) must be *equal* — not merely within tolerance — for every
+    // engine kind and thread count, including thread counts exceeding the
+    // replica count.
+    let trace = generate(Dataset::Mixed, 50, 7.0, 61);
+    for &kind in EngineKind::all() {
+        let cc = ClusterCfg::new(kind, ecfg(5), 4, RoutingPolicy::JoinShortestQueue);
+        let seq = Cluster::new(cc.clone()).run(&trace).digest();
+        for threads in [1usize, 2, 4, 8] {
+            let par = Cluster::new(cc.clone()).run_parallel(&trace, threads, 0.0).digest();
+            assert_eq!(
+                seq,
+                par,
+                "{} x4 @ {threads} threads: parallel loop diverged from sequential",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_fleet_matches_sequential_digest_per_policy() {
+    // Routing state (round-robin cursor, session table, dispatch counter)
+    // lives on the coordinator and sees the same merged view snapshots, so
+    // every policy must make identical decisions under sharding.
+    let trace = generate(Dataset::ShareGpt, 60, 9.0, 71);
+    for &policy in RoutingPolicy::all() {
+        let cc = ClusterCfg::new(EngineKind::Nexus, ecfg(9), 3, policy);
+        let seq = Cluster::new(cc.clone()).run(&trace).digest();
+        for threads in [2usize, 5] {
+            let par = Cluster::new(cc.clone()).run_parallel(&trace, threads, 0.0).digest();
+            assert_eq!(
+                seq,
+                par,
+                "{} @ {threads} threads: routing diverged under sharding",
+                policy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_autoscaled_fleet_matches_sequential_digest() {
+    // Autoscaler ticks are coordinator rendezvous points in the sharded
+    // loop: fleet observations, scale decisions, spawn priming, and
+    // drain/retire timing must all land on identical virtual times.
+    let bursty = BurstyCfg { base_rate: 12.0, ..BurstyCfg::default() };
+    let trace = generate_bursty(Dataset::ShareGpt, 80, &bursty, 43);
+    let mut cc =
+        ClusterCfg::new(EngineKind::Nexus, ecfg(21), 1, RoutingPolicy::JoinShortestQueue);
+    cc.autoscale = Some(AutoscalerCfg {
+        min_replicas: 1,
+        max_replicas: 4,
+        interval: 2.0,
+        cooldown: 5.0,
+        ..AutoscalerCfg::default()
+    });
+    let seq = Cluster::new(cc.clone()).run(&trace).digest();
+    for threads in [2usize, 4, 8] {
+        let par = Cluster::new(cc.clone()).run_parallel(&trace, threads, 0.0).digest();
+        assert_eq!(seq, par, "autoscaled fleet diverged @ {threads} threads");
+    }
+}
+
+#[test]
+fn parallel_fleet_window_size_is_output_invariant() {
+    // The synchronization window only caps how far workers free-run between
+    // rendezvous; window-capped rounds do no routing, stepping, or ticking,
+    // so any window must produce the identical digest.
+    let trace = generate(Dataset::Mixed, 60, 8.0, 83);
+    let mut cc =
+        ClusterCfg::new(EngineKind::VllmPD, ecfg(31), 3, RoutingPolicy::LeastKvPressure);
+    cc.autoscale = Some(AutoscalerCfg {
+        min_replicas: 1,
+        max_replicas: 5,
+        interval: 3.0,
+        cooldown: 6.0,
+        ..AutoscalerCfg::default()
+    });
+    let base = Cluster::new(cc.clone()).run_parallel(&trace, 4, 0.0).digest();
+    for window in [0.01f64, 0.25, 2.0, 1e6] {
+        let d = Cluster::new(cc.clone()).run_parallel(&trace, 4, window).digest();
+        assert_eq!(base, d, "window {window} changed the parallel digest");
+    }
+    let seq = Cluster::new(cc).run(&trace).digest();
+    assert_eq!(base, seq, "windowed parallel loop diverged from sequential");
 }

@@ -14,7 +14,9 @@
 use nexus::cluster::{AutoscalerCfg, Cluster, ClusterCfg, ClusterMetrics, RoutingPolicy};
 use nexus::engine::{build_engine, drive, drive_traced, run_engine_traced, EngineCfg, EngineKind};
 use nexus::model::ModelConfig;
-use nexus::trace::{attribute, chrome_trace, to_jsonl, EventKind, TraceEvent, Tracer, FLEET};
+use nexus::trace::{
+    attribute, canonical_order, chrome_trace, to_jsonl, EventKind, TraceEvent, Tracer, FLEET,
+};
 use nexus::util::json::Json;
 use nexus::workload::{generate, generate_bursty, BurstyCfg, Dataset, Request};
 
@@ -150,6 +152,49 @@ fn autoscaled_bursty_fleet_traces_match_and_cover_fleet_events() {
         .iter()
         .filter(|e| matches!(e.kind, EventKind::BatchEnd { .. }))
         .all(|e| e.replica != FLEET));
+}
+
+#[test]
+fn parallel_fleet_emits_the_sequential_event_set() {
+    // `Cluster::run_parallel` records through per-shard forked sinks merged
+    // at the end of the run; the event *content* must match the sequential
+    // loop exactly. The sequential loop interleaves replicas differently
+    // than the merged shard streams, so both sides are put in canonical
+    // `(time, replica)` order before comparing. Sampling stays off — the
+    // sharded loop does not support grid sampling (see `cluster::parallel`).
+    let trace = generate(Dataset::Mixed, 50, 7.0, 29);
+    let mut cc =
+        ClusterCfg::new(EngineKind::Nexus, ecfg(17), 3, RoutingPolicy::JoinShortestQueue);
+    cc.autoscale = Some(AutoscalerCfg {
+        min_replicas: 1,
+        max_replicas: 4,
+        interval: 2.0,
+        cooldown: 5.0,
+        ..AutoscalerCfg::default()
+    });
+    let run = |threads: usize| {
+        let tracer = Tracer::recording();
+        let mut cluster = Cluster::new(cc.clone());
+        cluster.tracer = tracer.clone();
+        let m = if threads > 1 {
+            cluster.run_parallel(&trace, threads, 0.0)
+        } else {
+            cluster.run(&trace)
+        };
+        let mut events = tracer.take();
+        canonical_order(&mut events);
+        (m, events)
+    };
+    let (m_seq, ev_seq) = run(1);
+    for threads in [2usize, 4] {
+        let (m_par, ev_par) = run(threads);
+        assert_eq!(
+            m_seq.digest(),
+            m_par.digest(),
+            "tracing on: parallel digest diverged @ {threads} threads"
+        );
+        assert_trace_eq(&ev_par, &ev_seq, &format!("parallel x{threads} vs sequential"));
+    }
 }
 
 #[test]

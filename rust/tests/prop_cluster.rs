@@ -252,6 +252,46 @@ fn prop_event_loop_matches_reference_loop() {
 }
 
 #[test]
+fn prop_parallel_loop_invariant_to_threads_and_window() {
+    // The sharded fleet loop (§Perf) advances every replica in exactly the
+    // sequential loop's time slices, so for ANY random workload, engine,
+    // policy, fleet size, autoscaler shape, thread count, and sync window,
+    // the full cluster digest must be bit-equal to the sequential run.
+    prop("parallel thread/window invariance", 10, |rng| {
+        let n = rng.range_usize(10, 40);
+        let trace = random_trace(rng, n);
+        let kind = random_kind(rng);
+        let policy = random_policy(rng);
+        let replicas = rng.range_usize(1, 5);
+        let ecfg = EngineCfg::new(ModelConfig::qwen3b(), rng.next_u64());
+        let mut cc = ClusterCfg::new(kind, ecfg, replicas, policy);
+        if rng.chance(0.4) {
+            cc.autoscale = Some(AutoscalerCfg {
+                min_replicas: 1,
+                max_replicas: 4,
+                interval: rng.range_f64(1.0, 4.0),
+                cooldown: rng.range_f64(2.0, 8.0),
+                ..AutoscalerCfg::default()
+            });
+        }
+        let seq = Cluster::new(cc.clone()).run(&trace).digest();
+        let threads = rng.range_usize(2, 8);
+        let window = if rng.chance(0.5) { rng.range_f64(0.01, 5.0) } else { 0.0 };
+        let par = Cluster::new(cc).run_parallel(&trace, threads, window).digest();
+        if seq != par {
+            return Err(format!(
+                "{} x{} [{}] @ {threads} threads, window {window:.3}: \
+                 parallel digest diverged from sequential",
+                kind.name(),
+                replicas,
+                policy.name()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_single_replica_cluster_equals_engine_loop() {
     // The stepping refactor is behavior-preserving: for any engine, seed,
     // and workload, a 1-replica cluster reproduces the plain engine run.
