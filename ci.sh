@@ -18,6 +18,12 @@ run cargo test -q
 # races that only bite under release scheduling.
 run cargo test --release --test golden_digest parallel -q
 run cargo test --release --test prop_cluster prop_parallel -q
+# Work stealing adds a second scheduling degree of freedom (migrations at
+# rendezvous boundaries); pin its golden-equality suite — stealing on, off,
+# and sequential across thread counts — under release scheduling too.
+run cargo test --release --test golden_digest stealing -q
+run cargo test --release --test golden_digest stream_arrivals -q
+run cargo test --release --test golden_trace stealing -q
 # Benches are the perf harness of record (BENCH_hotpath.json); keep them
 # compiling without paying their runtime in CI.
 run cargo bench --no-run
@@ -34,6 +40,21 @@ run_cluster_cli >/tmp/nexus_par_a.txt
 run_cluster_cli >/tmp/nexus_par_b.txt
 diff /tmp/nexus_par_a.txt /tmp/nexus_par_b.txt
 echo "    identical output across runs"
+# Same smoke with work stealing enabled: two runs must agree with each
+# other AND with the static-sharding run above (stealing is scheduling
+# metadata — the fleet summary on stdout must not move).
+run_cluster_cli_steal() {
+    ./target/release/nexus cluster --engine nexus --replicas 6 --policy jsq \
+        --n 120 --rate 12 --seed 7 --threads 2 --window 0.5 \
+        --steal-threshold 1.5 --balance-interval 1.0 2>/dev/null
+}
+echo
+echo "==> cluster --steal-threshold determinism smoke"
+run_cluster_cli_steal >/tmp/nexus_steal_a.txt
+run_cluster_cli_steal >/tmp/nexus_steal_b.txt
+diff /tmp/nexus_steal_a.txt /tmp/nexus_steal_b.txt
+diff /tmp/nexus_steal_a.txt /tmp/nexus_par_a.txt
+echo "    identical output across runs and vs static sharding"
 # fmt/clippy are advisory gates: present in some toolchain images, absent in
 # minimal ones. Fail on findings, skip cleanly when the component is missing.
 if cargo fmt --version >/dev/null 2>&1; then

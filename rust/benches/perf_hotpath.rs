@@ -25,7 +25,7 @@
 //!
 //! `cargo bench --bench perf_hotpath`
 
-use nexus::cluster::{Cluster, ClusterCfg, RoutingPolicy};
+use nexus::cluster::{plan_rebalance, Cluster, ClusterCfg, ParallelCfg, RoutingPolicy, StealCfg};
 use nexus::coordinator::Experiment;
 use nexus::costmodel::calibrate;
 use nexus::engine::{EngineCfg, EngineKind};
@@ -143,9 +143,34 @@ fn main() {
     ]);
     micro.push(micro_row("nexus_engine_end_to_end_wall_s", wall));
 
+    // 6. Shard-rebalance decision: the coordinator runs this every balance
+    //    interval on the rendezvous path, so it must stay far below the
+    //    cost of a round. 256 replicas on 8 shards, load piled on shard 0.
+    let owner: Vec<usize> = (0..256).map(|i| i % 8).collect();
+    let cands: Vec<(usize, u64)> = (0..256)
+        .map(|i| (i, if i % 8 == 0 { 5_000 } else { 50 + i as u64 }))
+        .collect();
+    let mut base_loads = vec![0u64; 8];
+    for &(id, l) in &cands {
+        base_loads[owner[id]] += l;
+    }
+    let mut loads = vec![0u64; 8];
+    let mut moves = Vec::new();
+    let per = time_it(50_000, || {
+        loads.copy_from_slice(&base_loads);
+        plan_rebalance(&mut loads, &cands, &owner, 1.5, &[], &mut moves);
+        std::hint::black_box(&moves);
+    });
+    t.row(&[
+        "shard rebalance (256 reps / 8 shards)".into(),
+        fmt_ns(per),
+        format!("{} moves", moves.len()),
+    ]);
+    micro.push(micro_row("shard_rebalance_decision", per));
+
     t.print();
 
-    // 6. Fleet-scale macro-benchmark: event-queue loop vs. reference loop.
+    // 7. Fleet-scale macro-benchmark: event-queue loop vs. reference loop.
     let mut ft = Table::new(
         "fleet macro-benchmark (bursty ShareGPT, Nexus engine, JSQ)",
         &["replicas", "events", "ref ev/s", "opt ev/s", "speedup"],
@@ -210,7 +235,7 @@ fn main() {
     }
     ft.print();
 
-    // 7. Sharded-loop scaling sweep (§Perf, schema v2): replicas × worker
+    // 8. Sharded-loop scaling sweep (§Perf, schema v2): replicas × worker
     //    threads. Every thread count is digest-checked against one thread,
     //    and the materialized rows additionally against the sequential
     //    loop, so every timing below is for *identical* served output.
@@ -317,6 +342,133 @@ fn main() {
         }
     }
     pt.print();
+
+    // 9. Skewed-fleet stealing sweep: session-affinity traffic with 90 % of
+    //    requests on 8 hot sessions, plus autoscale churn. A warmup wave of
+    //    64 simultaneous t=0 arrivals (sessions 0..63) pins session k to
+    //    replica k via the JSQ-fallback cascade, so the hot sessions
+    //    {0, 8, .., 56} land on replicas ≡ 0 (mod 8) — i.e. all on shard 0
+    //    under the static `id % threads` partition at 4 and 8 threads. This
+    //    is the adversarial case stealing exists for; every run is digest-
+    //    checked against the sequential loop, so the stealing-vs-static
+    //    delta is timing for *identical* served output.
+    let mut st_tab = Table::new(
+        "skewed-fleet stealing sweep (90% hot affinity traffic, autoscaled)",
+        &["replicas", "threads", "steal", "wall", "ev/s", "vs static", "moves"],
+    );
+    let hot = |i: usize| 8 * (i % 8); // sessions 0, 8, .., 56
+    let steal_cfg = StealCfg { threshold: 1.5, interval: 1.0 };
+    for &(replicas, n_req, rate) in &[
+        (64usize, 2000usize, 90.0f64),
+        (256, 4000, 360.0),
+        (1024, 8000, 1440.0),
+    ] {
+        let bursty = nexus::workload::BurstyCfg {
+            base_rate: rate,
+            ..nexus::workload::BurstyCfg::default()
+        };
+        let base = nexus::workload::generate_bursty(
+            nexus::workload::Dataset::ShareGpt,
+            n_req,
+            &bursty,
+            97,
+        );
+        let mut trace = Vec::with_capacity(n_req + 64);
+        for k in 0..64usize {
+            trace.push(nexus::workload::Request {
+                id: k,
+                arrival: 0.0,
+                prompt_len: 64,
+                output_len: 4,
+            });
+        }
+        for (i, r) in base.iter().enumerate() {
+            // 90 % hot; cold sessions get offsets 1..7 (never ≡ 0 mod 8).
+            let session = if i % 10 < 9 { hot(i) } else { 8 * (i % 8) + 1 + i % 7 };
+            trace.push(nexus::workload::Request {
+                id: (i + 1) * 64 + session,
+                ..*r
+            });
+        }
+        let mut cc = ClusterCfg::new(
+            EngineKind::Nexus,
+            EngineCfg::new(model, 5),
+            replicas,
+            RoutingPolicy::SessionAffinity,
+        );
+        cc.autoscale = Some(nexus::cluster::AutoscalerCfg {
+            min_replicas: replicas / 2,
+            max_replicas: replicas + replicas / 4,
+            interval: 2.0,
+            cooldown: 4.0,
+            ..nexus::cluster::AutoscalerCfg::default()
+        });
+        eprintln!("  skew x{replicas}: sequential loop ({} requests)...", trace.len());
+        let t0 = Instant::now();
+        let m = Cluster::new(cc.clone()).run(&trace);
+        let anchor_wall = t0.elapsed().as_secs_f64();
+        let anchor_events = m.events;
+        let anchor_digest = m.digest();
+        for &threads in &[1usize, 4, 8] {
+            let mut static_wall = 0.0f64;
+            for steal in [None, Some(steal_cfg)] {
+                let label = if steal.is_some() { "on" } else { "off" };
+                eprintln!("  skew x{replicas}: {threads} thread(s), stealing {label}...");
+                let t0 = Instant::now();
+                let m = Cluster::new(cc.clone()).run_parallel_cfg(
+                    &trace,
+                    ParallelCfg { threads, window: 0.0, steal },
+                );
+                let wall = t0.elapsed().as_secs_f64();
+                assert_eq!(
+                    anchor_digest,
+                    m.digest(),
+                    "skewed x{replicas} @ {threads} threads (stealing {label}): \
+                     parallel loop diverged"
+                );
+                if steal.is_none() {
+                    static_wall = wall;
+                }
+                let eps = anchor_events as f64 / wall.max(1e-12);
+                let vs_static = static_wall / wall.max(1e-12);
+                let (sh_min, sh_max) = match (m.shard_steps.iter().min(), m.shard_steps.iter().max())
+                {
+                    (Some(&lo), Some(&hi)) => (lo, hi),
+                    _ => (0, 0),
+                };
+                st_tab.row(&[
+                    format!("{replicas}"),
+                    format!("{threads}"),
+                    label.into(),
+                    format!("{:.2}s", wall),
+                    format!("{:.0}", eps),
+                    format!("{:.2}x", vs_static),
+                    format!("{}", m.rebalances),
+                ]);
+                scaling_rows.push(Json::obj(vec![
+                    ("replicas", replicas.into()),
+                    ("threads", threads.into()),
+                    ("engine", "nexus".into()),
+                    ("policy", "affinity".into()),
+                    ("dataset", "sharegpt-bursty-skewed".into()),
+                    ("requests", trace.len().into()),
+                    ("completed", m.fleet.records.len().into()),
+                    ("streamed", false.into()),
+                    ("skewed", true.into()),
+                    ("stealing", steal.is_some().into()),
+                    ("rebalances", m.rebalances.into()),
+                    ("shard_steps_min", (sh_min as usize).into()),
+                    ("shard_steps_max", (sh_max as usize).into()),
+                    ("events", m.events.into()),
+                    ("wall_s", wall.into()),
+                    ("events_per_sec", eps.into()),
+                    ("speedup_vs_sequential", (anchor_wall / wall.max(1e-12)).into()),
+                    ("speedup_vs_static", vs_static.into()),
+                ]));
+            }
+        }
+    }
+    st_tab.print();
 
     // Machine-readable dump for the perf trajectory (ROADMAP §Perf).
     let out = Json::obj(vec![

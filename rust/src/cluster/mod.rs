@@ -73,7 +73,9 @@ pub mod replica;
 pub mod router;
 
 pub use autoscaler::{Autoscaler, AutoscalerCfg, FleetObs};
-pub use parallel::{Arrivals, SliceArrivals, StreamArrivals};
+pub use parallel::{
+    plan_rebalance, Arrivals, ParallelCfg, SliceArrivals, StealCfg, StreamArrivals,
+};
 pub use replica::{Replica, ReplicaState};
 pub use router::{ReplicaView, Router, RoutingPolicy};
 
@@ -150,6 +152,13 @@ pub struct ClusterMetrics {
     /// TTFT / TBT distributions, merged from per-replica histograms.
     pub ttft_hist: Histogram,
     pub tbt_hist: Histogram,
+    /// Replica migrations applied by the parallel loop's shard scheduler
+    /// (always 0 for the sequential loops and with stealing disabled).
+    pub rebalances: usize,
+    /// Engine steps executed per worker shard over the whole run — the
+    /// balance evidence behind the `BENCH_hotpath.json` skew sweep. Empty
+    /// for the sequential loops.
+    pub shard_steps: Vec<u64>,
 }
 
 impl ClusterMetrics {
@@ -166,11 +175,15 @@ impl ClusterMetrics {
     /// [`Cluster::run`] digest-for-digest across thread counts and window
     /// sizes.
     ///
-    /// Two fields are deliberately excluded: `events` (the loops count
-    /// different things — iterations vs. rounds plus per-shard steps) and
+    /// Four fields are deliberately excluded: `events` (the loops count
+    /// different things — iterations vs. rounds plus per-shard steps),
     /// `replica_seconds` (the parallel loop computes it analytically, so
     /// it differs from the sequential running sum by float-summation
-    /// noise; the golden tests bound that difference at 1e-6 instead).
+    /// noise; the golden tests bound that difference at 1e-6 instead),
+    /// and `rebalances` / `shard_steps` (where work *ran* is scheduling
+    /// metadata, not behavior — excluding them is precisely what lets the
+    /// golden tests assert that work stealing changes the digest not at
+    /// all).
     pub fn digest(&self) -> u64 {
         const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
         const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
@@ -272,6 +285,11 @@ pub struct Cluster {
     /// hooks, and (via [`crate::engine::Engine::set_tracer`]) every replica
     /// engine. Disabled by default — see [`crate::trace`].
     pub tracer: Tracer,
+    /// Largest event-heap length observed during the last [`Cluster::run`]
+    /// (stale hints included) — the quantity the compaction bound caps.
+    pub heap_peak: usize,
+    /// Stale-entry compactions performed during the last [`Cluster::run`].
+    pub heap_compactions: usize,
 }
 
 impl Cluster {
@@ -284,6 +302,8 @@ impl Cluster {
             record_event_times: false,
             event_times: Vec::new(),
             tracer: Tracer::default(),
+            heap_peak: 0,
+            heap_compactions: 0,
         }
     }
 
@@ -371,6 +391,8 @@ impl Cluster {
         self.replicas = (0..n0).map(|i| Replica::new(i, cfg.kind, &cfg.engine, 0.0)).collect();
         self.router = Router::new(cfg.policy);
         self.event_times.clear();
+        self.heap_peak = 0;
+        self.heap_compactions = 0;
         for i in 0..n0 {
             self.trace_replica_start(i, 0.0);
         }
@@ -598,6 +620,26 @@ impl Cluster {
 
             peak_replicas = peak_replicas.max(active_cnt);
 
+            // Bound stale-hint growth. Key refreshes push a new entry
+            // without removing the old one, so under autoscaler churn the
+            // heap can hold many dead hints per live key; once stale
+            // entries outnumber live ones 2:1 (+ a small constant so tiny
+            // fleets still exercise the path), rebuild from the
+            // authoritative keys. O(live) rebuild amortized against the
+            // ≥ 2·live stale pops it saves, so the loop stays
+            // O(events·log R) with the heap capped at ~3·live entries.
+            self.heap_peak = self.heap_peak.max(heap.len());
+            if heap.len() > 2 * live_events + 16 {
+                heap.clear();
+                for (i, &k) in key_of.iter().enumerate() {
+                    if !k.is_nan() && self.replicas[i].in_service() {
+                        heap.push(Reverse((f64_total_key(k), i)));
+                    }
+                }
+                debug_assert_eq!(heap.len(), live_events);
+                self.heap_compactions += 1;
+            }
+
             if live_events == 0 && feed.exhausted() && pending_total > 0 {
                 // Nothing schedulable fleet-wide and nothing will arrive.
                 break;
@@ -643,6 +685,8 @@ impl Cluster {
             events,
             ttft_hist,
             tbt_hist,
+            rebalances: 0,
+            shard_steps: Vec::new(),
         }
     }
 
@@ -816,6 +860,8 @@ impl Cluster {
             events,
             ttft_hist,
             tbt_hist,
+            rebalances: 0,
+            shard_steps: Vec::new(),
         }
     }
 
@@ -978,6 +1024,41 @@ mod tests {
         }
         let m = run_cluster(&cc, &trace);
         assert_eq!(m.fleet.records.len() + m.fleet.timeouts, 60, "responses lost in drain");
+    }
+
+    #[test]
+    fn heap_stays_bounded_under_autoscale_churn() {
+        // Regression: key refreshes leave stale hints behind, and before
+        // compaction the heap could grow far past the live-replica count
+        // under autoscaler churn. The bound is the compaction trigger
+        // (2·live + 16) plus one round of growth before the next check.
+        let acfg = AutoscalerCfg {
+            min_replicas: 1,
+            max_replicas: 6,
+            interval: 1.0,
+            cooldown: 2.0,
+            target_util: 0.9,
+            ..AutoscalerCfg::default()
+        };
+        let mut cc =
+            ClusterCfg::new(EngineKind::Nexus, ecfg(), 2, RoutingPolicy::JoinShortestQueue);
+        cc.autoscale = Some(acfg);
+        let trace = generate(Dataset::ShareGpt, 200, 25.0, 11);
+        let mut c = Cluster::new(cc.clone());
+        let m = c.run(&trace);
+        assert_eq!(m.fleet.records.len() + m.fleet.timeouts, 200);
+        let total_replicas = m.replicas.len(); // every replica ever spawned
+        assert!(
+            c.heap_peak <= 3 * total_replicas + 32,
+            "event heap grew unbounded: peak {} with {} replicas ever live",
+            c.heap_peak,
+            total_replicas
+        );
+        // Compaction must not change behavior: digest-match the reference.
+        let r = Cluster::new(cc).run_reference(&trace);
+        assert_eq!(m.fleet.records.len(), r.fleet.records.len());
+        let dev = m.fleet.deviation(&r.fleet).expect("structural mismatch vs reference");
+        assert!(dev <= 1e-9, "compaction changed the trajectory: deviation {dev}");
     }
 
     #[test]

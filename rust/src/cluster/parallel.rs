@@ -1,11 +1,12 @@
 //! Sharded virtual-time execution of the fleet loop (§Perf).
 //!
 //! [`Cluster::run_parallel`] partitions the replicas of a fleet across
-//! worker threads (`id % threads`) and advances each shard independently
-//! between *interaction boundaries*, synchronizing only where replicas can
+//! worker threads and advances each shard independently between
+//! *interaction boundaries*, synchronizing only where replicas can
 //! actually affect each other. The result is digest-identical to the
-//! sequential [`Cluster::run`] for **any** thread count and any window
-//! size (pinned by `tests/golden_digest.rs` and `tests/prop_cluster.rs`).
+//! sequential [`Cluster::run`] for **any** thread count, any window
+//! size, and any work-stealing configuration (pinned by
+//! `tests/golden_digest.rs` and `tests/prop_cluster.rs`).
 //!
 //! ## Why sharding is exact, not approximate
 //!
@@ -76,6 +77,45 @@
 //!   into the canonical `(time, replica)` order at the end of the run —
 //!   compare traces with [`crate::trace::canonical_order`], not emission
 //!   order.
+//!
+//! ## Work stealing (`--steal-threshold`, `--balance-interval`)
+//!
+//! Static sharding leaves threads idle under skew: a session-affinity hot
+//! spot or autoscaler churn concentrates stepping work on one shard while
+//! the others wait at every rendezvous. With a [`StealCfg`], the
+//! coordinator keeps deterministic per-shard load accounts — engine steps
+//! executed per replica per round, reported alongside the load views and
+//! derived *only* from simulation state, never wall clock — and every
+//! `balance_interval` virtual seconds runs [`plan_rebalance`]: while the
+//! busiest shard exceeds `threshold ×` the laziest, move the largest
+//! replica that fits inside half the gap. Migrations apply at rendezvous
+//! boundaries over two rounds (the old owner evicts after fully advancing
+//! the replica to the horizon; the new owner adopts it before any stepping
+//! in the next round), so the replica never misses or repeats an event.
+//! Autoscaler-spawned replicas are routed to the lightest shard instead of
+//! `id % threads`. Each migration emits
+//! [`EventKind::ShardRebalance`](crate::trace::EventKind::ShardRebalance).
+//!
+//! Rebalancing cannot change results: *which thread* steps a replica is
+//! invisible to the simulation (replicas interact only through the
+//! coordinator's boundary-time routing and tick observations, which are
+//! shard-agnostic), so the digest is identical with stealing on, off, or
+//! any threshold/interval — the scheduling metadata (`rebalances`,
+//! `shard_steps`) is excluded from [`ClusterMetrics::digest`] and the
+//! `ShardRebalance` events are the only trace difference.
+//!
+//! ## Rendezvous batching
+//!
+//! With stealing enabled (and tracing off), arrival boundaries whose
+//! routing is *blind* — provably independent of post-boundary load, i.e.
+//! round-robin cursor arithmetic and session-affinity sticky hits (see
+//! [`Router::blind_probe`]) — are batched into a single worker
+//! round-trip: one command carries several step times plus their
+//! injections, and each worker interleaves advance/inject/step locally at
+//! the exact virtual times. Load-aware decisions (JSQ, least-KV, affinity
+//! misses) still synchronize per arrival instant, as do autoscaler ticks
+//! and balance checks. This cuts coordination overhead precisely where
+//! skewed workloads concentrate it: dense same-session arrival trains.
 //!
 //! The tick-at-an-internal-event edge is the one measure-zero caveat: the
 //! sequential loop evaluates `t + 1e-12 >= tick` at internal replica
@@ -204,26 +244,179 @@ impl<I: Iterator<Item = Request>> Arrivals for StreamArrivals<I> {
     }
 }
 
-/// One coordinator→worker round (phases run in the listed order).
+/// Work-stealing configuration for the sharded loop.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StealCfg {
+    /// Rebalance when the busiest shard's windowed step count exceeds
+    /// `threshold ×` the laziest shard's (must be > 1).
+    pub threshold: f64,
+    /// Virtual seconds between balance checks.
+    pub interval: f64,
+}
+
+impl Default for StealCfg {
+    fn default() -> Self {
+        StealCfg { threshold: 1.5, interval: 1.0 }
+    }
+}
+
+/// Full configuration for [`Cluster::run_parallel_cfg`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ParallelCfg {
+    /// Worker threads (≥ 1).
+    pub threads: usize,
+    /// Synchronization window in virtual seconds (0 = free-run to the next
+    /// interaction) — bounds shard run-ahead, never changes results.
+    pub window: f64,
+    /// Work stealing; `None` = static sharding (`id % threads`).
+    pub steal: Option<StealCfg>,
+}
+
+impl Default for ParallelCfg {
+    fn default() -> Self {
+        ParallelCfg { threads: 1, window: 0.0, steal: None }
+    }
+}
+
+impl ParallelCfg {
+    pub fn new(threads: usize) -> Self {
+        ParallelCfg { threads, ..Self::default() }
+    }
+}
+
+/// Plan shard-to-shard replica migrations for one balance check.
+/// Deterministic and side-effect-free with respect to the simulation: it
+/// reads only the windowed load accounts.
+///
+/// * `shard_load` — windowed engine steps per shard; **mutated in place**
+///   to reflect the hypothetical post-move loads (callers reset the window
+///   right after a check, so the mutation costs nothing).
+/// * `candidates` — `(replica id, windowed steps)` for every currently
+///   routable replica.
+/// * `owner[id]` — the shard currently owning each replica.
+/// * `excluded` — ids that must not move (pending drains, in-transit).
+/// * `moves` — cleared, then appended with `(id, from, to)`.
+///
+/// Greedy loop: take the busiest and laziest shards (ties toward the lower
+/// index); stop when `busiest < threshold × max(laziest, 1)`; otherwise
+/// move the largest-load candidate on the busiest shard whose load `l`
+/// satisfies `0 < 2·l ≤ gap` (so a move never overshoots the balance
+/// point; ties toward the smaller id), apply it hypothetically, repeat.
+/// Bounded by one move per candidate, and in practice by the gap
+/// shrinking monotonically.
+pub fn plan_rebalance(
+    shard_load: &mut [u64],
+    candidates: &[(usize, u64)],
+    owner: &[usize],
+    threshold: f64,
+    excluded: &[usize],
+    moves: &mut Vec<(usize, usize, usize)>,
+) {
+    moves.clear();
+    if shard_load.len() < 2 {
+        return;
+    }
+    loop {
+        let mut hi = 0usize;
+        let mut lo = 0usize;
+        for (w, &l) in shard_load.iter().enumerate() {
+            if l > shard_load[hi] {
+                hi = w;
+            }
+            if l < shard_load[lo] {
+                lo = w;
+            }
+        }
+        if (shard_load[hi] as f64) < threshold * (shard_load[lo].max(1) as f64) {
+            return;
+        }
+        let gap = shard_load[hi] - shard_load[lo];
+        let mut pick: Option<(usize, u64)> = None;
+        for &(id, l) in candidates {
+            if id >= owner.len()
+                || owner[id] != hi
+                || l == 0
+                || 2 * l > gap
+                || excluded.contains(&id)
+                || moves.iter().any(|&(m, _, _)| m == id)
+            {
+                continue;
+            }
+            // Largest load first; ties toward the smaller id.
+            if pick.map_or(true, |(pid, pl)| l > pl || (l == pl && id < pid)) {
+                pick = Some((id, l));
+            }
+        }
+        let Some((id, l)) = pick else { return };
+        shard_load[hi] -= l;
+        shard_load[lo] += l;
+        moves.push((id, hi, lo));
+        if moves.len() >= candidates.len() {
+            return;
+        }
+    }
+}
+
+/// One coordinator→worker round (phases run in the listed order). The
+/// struct round-trips: workers hand it back inside the [`Report`]
+/// (`spent`), so every `Vec` here is a recycled buffer and steady-state
+/// rounds allocate nothing on either side (§Perf).
+#[derive(Default)]
 struct RoundCmd {
+    /// Migrated replicas this shard now owns (adopted before anything
+    /// else, so every later phase sees them as local).
+    adopts: Vec<Replica>,
+    /// Replica ids to hand back to the coordinator at the end of the
+    /// round, after they have been fully advanced to the horizon.
+    evicts: Vec<usize>,
     /// Replica ids to drain (scale-down victims), at `drain_t`. Empties
     /// retire immediately at `drain_t`, as in the sequential retire scan.
     drains: Vec<usize>,
     drain_t: f64,
     /// Replicas to create: `(id, started_at)`.
     spawns: Vec<(usize, f64)>,
-    /// Boundary step time (`NaN` = no boundary step this round).
-    step_t: f64,
-    /// `(target id, request)` in arrival order; targets step at `step_t`.
-    injections: Vec<(usize, Request)>,
-    /// Primed replicas whose first step coincides with `step_t`.
+    /// Boundary step times, strictly increasing (empty = no boundary step
+    /// this round; > 1 entry = a rendezvous batch of blind-routed arrival
+    /// instants). Workers advance each replica through its own events
+    /// strictly below each time before injecting/stepping at it.
+    step_times: Vec<f64>,
+    /// `(step index, target id, request)` in arrival order; the target
+    /// steps at `step_times[index]`.
+    injections: Vec<(u32, usize, Request)>,
+    /// Primed replicas whose first step coincides with `step_times[0]`.
     step_primed: Vec<usize>,
-    /// Primed replicas taking their first step strictly inside this
-    /// round's advance range: `(first step time, ids)`.
-    prime: Option<(f64, Vec<usize>)>,
+    /// First-step time for `prime_ids` (`NaN` = no prime this round),
+    /// strictly inside this round's advance range.
+    prime_t: f64,
+    prime_ids: Vec<usize>,
     /// Advance owned replicas through internal events `< horizon`
     /// (and `≤ max_virtual_time`); `∞` = drain everything schedulable.
     horizon: f64,
+    /// Report buffers the worker fills (double-buffered through `spent`):
+    /// load views of owned *active* replicas and `(id, engine steps this
+    /// round)` of owned in-service replicas, both in id order.
+    views_buf: Vec<ReplicaView>,
+    loads_buf: Vec<(u32, u32)>,
+}
+
+impl RoundCmd {
+    /// Clear every buffer (capacity retained) so the struct can be
+    /// refilled for the next round.
+    fn reset(&mut self) {
+        self.adopts.clear();
+        self.evicts.clear();
+        self.drains.clear();
+        self.spawns.clear();
+        self.step_times.clear();
+        self.injections.clear();
+        self.step_primed.clear();
+        self.prime_ids.clear();
+        self.views_buf.clear();
+        self.loads_buf.clear();
+        self.drain_t = 0.0;
+        self.prime_t = f64::NAN;
+        self.horizon = 0.0;
+    }
 }
 
 enum Cmd {
@@ -234,8 +427,9 @@ enum Cmd {
 
 /// One worker→coordinator round report.
 struct Report {
-    /// Load views of owned *active* replicas, in id order.
-    views: Vec<ReplicaView>,
+    /// Replicas evicted this round (fully advanced to the horizon; their
+    /// parting views/loads are still in `spent`), in `evicts` order.
+    evicted: Vec<Replica>,
     /// Minimum next-event time over owned in-service replicas (`NaN` =
     /// none) — unfiltered, mirroring the sequential loop's live keys.
     key_min: f64,
@@ -245,6 +439,9 @@ struct Report {
     steps: usize,
     /// Latest event time processed in the advance phase (`-∞` = none).
     max_t: f64,
+    /// The consumed command, carrying the filled `views_buf`/`loads_buf`
+    /// back for recycling.
+    spent: RoundCmd,
 }
 
 /// Everything a worker hands back at [`Cmd::Finish`].
@@ -280,10 +477,28 @@ fn worker_loop(
 
     loop {
         match rx.recv() {
-            Ok(Cmd::Round(rc)) => {
+            Ok(Cmd::Round(mut rc)) => {
                 let mut completed = 0usize;
                 let mut steps = 0usize;
                 let mut max_t = f64::NEG_INFINITY;
+                let mut evicted: Vec<Replica> = Vec::new();
+
+                // 0. Adopt migrated replicas before anything else, so this
+                //    round's drains/injections/steps see them as local.
+                //    Their engine tracer re-attaches to this shard's sink
+                //    (streams are merged canonically at the end of the run,
+                //    so the split is invisible).
+                for mut rep in rc.adopts.drain(..) {
+                    rep.eng.set_tracer(tracer.for_replica(rep.id as u32));
+                    let at = bin.partition_point(|r| r.id < rep.id);
+                    bin.insert(at, rep);
+                }
+
+                // Reset the per-round load accounts (the shard scheduler's
+                // signal; reported in phase 6).
+                for rep in bin.iter_mut() {
+                    rep.round_steps = 0;
+                }
 
                 // 1. Drains: mark victims; empties retire at drain_t
                 //    (syncing their clocks first, like the sequential
@@ -302,7 +517,9 @@ fn worker_loop(
                     }
                 }
 
-                // 2. Spawns (initial fleet and autoscaler growth).
+                // 2. Spawns (initial fleet and autoscaler growth). Spawn
+                //    ids are handed out globally increasing, so they always
+                //    sort after everything owned (adopted ids included).
                 for &(id, at) in &rc.spawns {
                     debug_assert!(bin.last().map_or(true, |r| r.id < id));
                     let mut rep = Replica::new(id, cfg.kind, &cfg.engine, at);
@@ -311,16 +528,48 @@ fn worker_loop(
                     bin.push(rep);
                 }
 
-                // 3. Boundary step at step_t: injected ∪ due ∪ primed-at-B,
-                //    stepped in id order (bin order == id order).
-                if !rc.step_t.is_nan() {
-                    let t = rc.step_t;
+                // 3. Boundary steps, one per batched time, in time order.
+                //    At each time t: first advance every owned replica
+                //    through its own events strictly below t at their exact
+                //    times (skipped at index 0 — the previous round's
+                //    horizon already did it), *then* inject (injecting
+                //    before the advance would let an engine admit the
+                //    request into an earlier internal batch than the
+                //    sequential loop), then step injected ∪ due ∪
+                //    primed-at-t₀ in id order (bin order == id order).
+                for (k, &t) in rc.step_times.iter().enumerate() {
+                    if k > 0 {
+                        for rep in bin.iter_mut() {
+                            if !rep.in_service() {
+                                continue;
+                            }
+                            while let Some(e) = rep.eng.next_event() {
+                                if e >= t || e > max_vt {
+                                    break;
+                                }
+                                let out = rep.eng.step(e);
+                                completed += out.completed;
+                                steps += 1;
+                                rep.round_steps += 1;
+                                if e > max_t {
+                                    max_t = e;
+                                }
+                                if rep.drained() {
+                                    tracer.emit_for(rep.id as u32, e, EventKind::ReplicaRetire);
+                                    done.push((e, rep.id, rep.retire(e)));
+                                    break;
+                                }
+                            }
+                        }
+                    }
                     set.clear();
-                    for &(id, req) in &rc.injections {
-                        let i = find(&bin, id);
-                        bin[i].eng.inject(req);
-                        bin[i].routed += 1;
-                        set.push(i);
+                    for &(ki, id, req) in &rc.injections {
+                        if ki as usize == k {
+                            let i = find(&bin, id);
+                            bin[i].eng.inject(req);
+                            bin[i].routed += 1;
+                            set.push(i);
+                        }
                     }
                     for (i, rep) in bin.iter_mut().enumerate() {
                         if rep.in_service() {
@@ -332,8 +581,10 @@ fn worker_loop(
                             }
                         }
                     }
-                    for &id in &rc.step_primed {
-                        set.push(find(&bin, id));
+                    if k == 0 {
+                        for &id in &rc.step_primed {
+                            set.push(find(&bin, id));
+                        }
                     }
                     set.sort_unstable();
                     set.dedup();
@@ -345,6 +596,7 @@ fn worker_loop(
                         let out = rep.eng.step(t);
                         completed += out.completed;
                         steps += 1;
+                        rep.round_steps += 1;
                         if rep.drained() {
                             tracer.emit_for(rep.id as u32, t, EventKind::ReplicaRetire);
                             done.push((t, rep.id, rep.retire(t)));
@@ -354,15 +606,17 @@ fn worker_loop(
 
                 // 4. Prime: first step of freshly spawned replicas at the
                 //    fleet's true next event (inside this round's range).
-                if let Some((tp, ids)) = &rc.prime {
-                    for &id in ids {
+                if !rc.prime_t.is_nan() {
+                    let tp = rc.prime_t;
+                    for &id in &rc.prime_ids {
                         let i = find(&bin, id);
                         if bin[i].in_service() {
-                            let out = bin[i].eng.step(*tp);
+                            let out = bin[i].eng.step(tp);
                             completed += out.completed;
                             steps += 1;
-                            if *tp > max_t {
-                                max_t = *tp;
+                            bin[i].round_steps += 1;
+                            if tp > max_t {
+                                max_t = tp;
                             }
                         }
                     }
@@ -381,6 +635,7 @@ fn worker_loop(
                         let out = rep.eng.step(e);
                         completed += out.completed;
                         steps += 1;
+                        rep.round_steps += 1;
                         if e > max_t {
                             max_t = e;
                         }
@@ -392,9 +647,17 @@ fn worker_loop(
                     }
                 }
 
-                // 6. Report shard state as of the horizon.
-                let views: Vec<ReplicaView> =
-                    bin.iter().filter(|r| r.is_active()).map(|r| r.view()).collect();
+                // 6. Report shard state as of the horizon into the
+                //    command's recycled buffers. Evictees are still owned
+                //    here, so their parting views/keys/loads are included.
+                rc.views_buf.clear();
+                rc.views_buf.extend(bin.iter().filter(|r| r.is_active()).map(|r| r.view()));
+                rc.loads_buf.clear();
+                rc.loads_buf.extend(
+                    bin.iter()
+                        .filter(|r| r.in_service())
+                        .map(|r| (r.id as u32, r.round_steps)),
+                );
                 let mut key_min = f64::NAN;
                 for rep in bin.iter_mut() {
                     if rep.in_service() {
@@ -405,7 +668,14 @@ fn worker_loop(
                         }
                     }
                 }
-                tx.send(Report { views, key_min, completed, steps, max_t })
+
+                // 7. Evict: hand migrating replicas back, fully advanced.
+                for &id in &rc.evicts {
+                    let i = find(&bin, id);
+                    evicted.push(bin.remove(i));
+                }
+
+                tx.send(Report { evicted, key_min, completed, steps, max_t, spent: rc })
                     .expect("coordinator alive");
             }
             Ok(Cmd::Finish { last_t }) => {
@@ -441,10 +711,18 @@ impl Cluster {
     /// to [`Cluster::run`] for any `threads ≥ 1` and any `window ≥ 0`
     /// (see the module docs for the argument and the deliberate
     /// differences: `events`, `replica_seconds`, sampling,
-    /// `record_event_times`).
+    /// `record_event_times`). Static sharding; see
+    /// [`Cluster::run_parallel_cfg`] for work stealing.
     pub fn run_parallel(&mut self, trace: &[Request], threads: usize, window: f64) -> ClusterMetrics {
+        self.run_parallel_cfg(trace, ParallelCfg { threads, window, steal: None })
+    }
+
+    /// Sharded co-simulation with the full [`ParallelCfg`] surface —
+    /// thread count, synchronization window, and optional work stealing.
+    /// Digest-identical to [`Cluster::run`] for every configuration.
+    pub fn run_parallel_cfg(&mut self, trace: &[Request], pcfg: ParallelCfg) -> ClusterMetrics {
         let scaler = self.build_scaler(trace);
-        self.run_parallel_core(SliceArrivals::new(trace), scaler, threads, window)
+        self.run_parallel_core(SliceArrivals::new(trace), scaler, pcfg)
     }
 
     /// Sharded co-simulation over a streaming workload (the arrivals never
@@ -464,6 +742,16 @@ impl Cluster {
         threads: usize,
         window: f64,
     ) -> ClusterMetrics {
+        self.run_parallel_stream_cfg(requests, mean_hint, ParallelCfg { threads, window, steal: None })
+    }
+
+    /// Streaming front-end with the full [`ParallelCfg`] surface.
+    pub fn run_parallel_stream_cfg<I: Iterator<Item = Request>>(
+        &mut self,
+        requests: I,
+        mean_hint: Option<(f64, f64)>,
+        pcfg: ParallelCfg,
+    ) -> ClusterMetrics {
         let scaler = self.cfg.autoscale.map(|acfg| {
             let cost = calibrate(&self.cfg.engine.gpu);
             let (mp, mo) = mean_hint.unwrap_or((1.0, 1.0));
@@ -472,18 +760,22 @@ impl Cluster {
                 super::autoscaler::predict_replica_rate(&cost, &self.cfg.engine, mp, mo),
             )
         });
-        self.run_parallel_core(StreamArrivals::new(requests), scaler, threads, window)
+        self.run_parallel_core(StreamArrivals::new(requests), scaler, pcfg)
     }
 
     fn run_parallel_core<A: Arrivals>(
         &mut self,
         mut arrivals: A,
         mut scaler: Option<Autoscaler>,
-        threads: usize,
-        window: f64,
+        pcfg: ParallelCfg,
     ) -> ClusterMetrics {
+        let ParallelCfg { threads, window, steal } = pcfg;
         assert!(threads >= 1, "run_parallel needs at least one worker");
         assert!(window >= 0.0, "window must be nonnegative");
+        if let Some(sc) = &steal {
+            assert!(sc.threshold > 1.0, "steal threshold must exceed 1");
+            assert!(sc.interval > 0.0, "balance interval must be positive");
+        }
         let cfg = self.cfg.clone();
         let n0 = match &cfg.autoscale {
             Some(a) => cfg.replicas.clamp(a.min_replicas, a.max_replicas),
@@ -522,6 +814,50 @@ impl Cluster {
         let mut kv_buf: Vec<f64> = Vec::new();
         let mut outs: Vec<WorkerOut> = Vec::new();
 
+        // Shard-scheduler state. `owner[id]` replaces the static
+        // `id % threads` partition and is the single routing authority for
+        // every per-replica directive. Loads are engine steps: windowed
+        // (reset each balance check) for decisions, total for reporting.
+        let mut owner: Vec<usize> = (0..n0).map(|i| i % threads).collect();
+        let mut rep_load: Vec<u64> = vec![0; n0];
+        let mut shard_window: Vec<u64> = vec![0; threads];
+        let mut shard_total: Vec<u64> = vec![0; threads];
+        // Replicas ever assigned per shard — the spawn-placement tiebreak,
+        // so simultaneous spawns spread instead of piling on one argmin.
+        let mut shard_assigned: Vec<u32> = vec![0; threads];
+        for &w in &owner {
+            shard_assigned[w] += 1;
+        }
+        let mut next_balance = steal.map_or(f64::INFINITY, |s| s.interval);
+        let mut rebalances = 0usize;
+        // Migration machinery: moves decided at a boundary are evicted in
+        // the next round (ids in `pending_evicts`, destinations in
+        // `migrating`), travel back in that round's reports (the old owner
+        // still reports their parting views/keys, so routing never loses
+        // sight of them), sit in `in_transit` for exactly one boundary,
+        // and are adopted by their new shard at the start of the next round.
+        let mut pending_evicts: Vec<usize> = Vec::new();
+        let mut migrating: Vec<(usize, usize)> = Vec::new();
+        let mut in_transit: Vec<Replica> = Vec::new();
+        // Balance-check scratch (reused across checks).
+        let mut plan_loads: Vec<u64> = Vec::new();
+        let mut plan_reps: Vec<(usize, u64)> = Vec::new();
+        let mut excl: Vec<usize> = Vec::new();
+        let mut moves_buf: Vec<(usize, usize, usize)> = Vec::new();
+        // Rendezvous-batching scratch. Batching needs blind routing and
+        // untraced runs (per-arrival Route events pin rendezvous order).
+        let batching = steal.is_some() && !self.tracer.enabled();
+        let mut batch_times: Vec<f64> = Vec::new();
+        let mut batch_inj: Vec<(u32, usize, Request)> = Vec::new();
+        let mut hold_buf: Vec<Request> = Vec::new();
+        let mut targets_buf: Vec<usize> = Vec::new();
+        // A same-instant arrival group that failed the blind probe waits
+        // here for its own boundary round (checked before the stream).
+        let mut held: Vec<Request> = Vec::new();
+        // Cap on batched step times per round: bounds command size and
+        // worker latency without measurably hurting amortization.
+        const BATCH_CAP: usize = 64;
+
         // Initial fleet spawns through the same directive path as
         // autoscaler growth, so workers own replica construction uniformly.
         // Synthesize their (empty) views up front: a trace whose first
@@ -548,62 +884,84 @@ impl Cluster {
                 rxs.push(rrx);
             }
 
-            // Broadcast one round (partitioning directives by shard) and
+            // Per-worker recycled command buffers: each round's command is
+            // taken from here, and the worker's spent command (with its
+            // report buffers) lands back after the report is merged — the
+            // double-buffering that keeps steady-state rounds
+            // allocation-free on both sides.
+            let mut spare: Vec<RoundCmd> =
+                (0..threads).map(|_| RoundCmd::default()).collect();
+            const NO_T: &[f64] = &[];
+            const NO_I: &[(u32, usize, Request)] = &[];
+            const NO_P: &[usize] = &[];
+
+            // Broadcast one round (partitioning directives by `owner`) and
             // merge the reports back into the coordinator's state.
             macro_rules! round {
-                ($step_t:expr, $injections:expr, $step_primed:expr, $horizon:expr) => {{
-                    let step_primed: Vec<usize> = $step_primed;
-                    let injections: Vec<(usize, Request)> = $injections;
+                ($times:expr, $inj:expr, $sp:expr, $horizon:expr) => {{
+                    let times: &[f64] = $times;
+                    let inj: &[(u32, usize, Request)] = $inj;
+                    let sp: &[usize] = $sp;
                     let horizon: f64 = $horizon;
+                    for c in spare.iter_mut() {
+                        c.drain_t = drain_t;
+                        c.horizon = horizon;
+                        c.prime_t = f64::NAN;
+                        c.step_times.extend_from_slice(times);
+                    }
+                    for r in in_transit.drain(..) {
+                        spare[owner[r.id]].adopts.push(r);
+                    }
+                    for &id in &pending_evicts {
+                        spare[owner[id]].evicts.push(id);
+                    }
+                    for &id in &pending_drains {
+                        spare[owner[id]].drains.push(id);
+                    }
+                    for &(id, at) in &pending_spawns {
+                        spare[owner[id]].spawns.push((id, at));
+                    }
+                    for &(k, id, req) in inj {
+                        spare[owner[id]].injections.push((k, id, req));
+                    }
+                    for &id in sp {
+                        spare[owner[id]].step_primed.push(id);
+                    }
                     // Flush a pending prime that lands strictly inside
                     // this round's advance range (never beyond the
                     // simulation horizon — the sequential loop breaks
                     // before stepping anything past max_virtual_time).
-                    let prime_now = if !primed.is_empty() && prime_t < horizon && prime_t <= max_vt
-                    {
-                        Some((prime_t, std::mem::take(&mut primed)))
-                    } else {
-                        None
-                    };
-                    for (w, tx) in txs.iter().enumerate() {
-                        let rc = RoundCmd {
-                            drains: pending_drains
-                                .iter()
-                                .copied()
-                                .filter(|id| id % threads == w)
-                                .collect(),
-                            drain_t,
-                            spawns: pending_spawns
-                                .iter()
-                                .copied()
-                                .filter(|(id, _)| id % threads == w)
-                                .collect(),
-                            step_t: $step_t,
-                            injections: injections
-                                .iter()
-                                .copied()
-                                .filter(|(id, _)| id % threads == w)
-                                .collect(),
-                            step_primed: step_primed
-                                .iter()
-                                .copied()
-                                .filter(|id| id % threads == w)
-                                .collect(),
-                            prime: prime_now.as_ref().map(|(tp, ids)| {
-                                (*tp, ids.iter().copied().filter(|id| id % threads == w).collect())
-                            }),
-                            horizon,
-                        };
-                        tx.send(Cmd::Round(rc)).expect("worker alive");
+                    if !primed.is_empty() && prime_t < horizon && prime_t <= max_vt {
+                        for &id in &primed {
+                            spare[owner[id]].prime_ids.push(id);
+                        }
+                        for c in spare.iter_mut() {
+                            c.prime_t = prime_t;
+                        }
+                        primed.clear();
                     }
+                    for (w, tx) in txs.iter().enumerate() {
+                        tx.send(Cmd::Round(std::mem::take(&mut spare[w])))
+                            .expect("worker alive");
+                    }
+                    pending_evicts.clear();
                     pending_drains.clear();
                     pending_spawns.clear();
                     rounds += 1;
                     views.clear();
                     keys_min = f64::NAN;
-                    for rx in &rxs {
-                        let rep = rx.recv().expect("worker alive");
-                        views.extend(rep.views);
+                    for (w, rx) in rxs.iter().enumerate() {
+                        let mut rep = rx.recv().expect("worker alive");
+                        views.append(&mut rep.spent.views_buf);
+                        let mut wsteps = 0u64;
+                        for &(id, st) in &rep.spent.loads_buf {
+                            wsteps += st as u64;
+                            if steal.is_some() {
+                                rep_load[id as usize] += st as u64;
+                            }
+                        }
+                        shard_window[w] += wsteps;
+                        shard_total[w] += wsteps;
                         if !rep.key_min.is_nan()
                             && (keys_min.is_nan() || rep.key_min < keys_min)
                         {
@@ -614,7 +972,26 @@ impl Cluster {
                         if rep.max_t > last_t {
                             last_t = rep.max_t;
                         }
+                        // Evicted replicas: reassign ownership and park
+                        // them for adoption next round.
+                        for r in rep.evicted.drain(..) {
+                            let pos = migrating
+                                .iter()
+                                .position(|&(id, _)| id == r.id)
+                                .expect("eviction was planned");
+                            let (_, dest) = migrating.swap_remove(pos);
+                            owner[r.id] = dest;
+                            shard_assigned[dest] += 1;
+                            in_transit.push(r);
+                        }
+                        rep.spent.reset();
+                        spare[w] = rep.spent;
                     }
+                    // In-transit replicas need no splice: the old owner
+                    // reported their parting views/keys/loads this round
+                    // (phase 6 precedes the phase-7 evict), and the new
+                    // owner adopts them before anything else next round —
+                    // the router never loses sight of them.
                     views.sort_unstable_by_key(|v| v.index);
                 }};
             }
@@ -622,19 +999,22 @@ impl Cluster {
             // Workers have processed every event strictly below cur_h.
             let mut cur_h = 0.0f64;
             loop {
-                if arrivals.exhausted() && pending_total == 0 {
+                if held.is_empty() && arrivals.exhausted() && pending_total == 0 {
                     // Apply directives left by a just-decided scale action
                     // (empty victims must still retire at the decision
                     // time, as in the sequential retire scan).
                     if !pending_drains.is_empty() || !pending_spawns.is_empty() {
-                        round!(f64::NAN, Vec::new(), Vec::new(), cur_h);
+                        round!(NO_T, NO_I, NO_P, cur_h);
                     }
                     break;
                 }
 
-                // Next interaction boundary: earliest arrival or tick.
+                // Next interaction boundary: earliest arrival (a held
+                // group, by construction, precedes the stream) or tick.
                 let mut b = f64::INFINITY;
-                if let Some(a) = arrivals.peek_time() {
+                if let Some(r) = held.first() {
+                    b = b.min(r.arrival);
+                } else if let Some(a) = arrivals.peek_time() {
                     b = b.min(a);
                 }
                 if let Some(tk) = next_tick {
@@ -648,7 +1028,7 @@ impl Cluster {
                     if cur_h.is_infinite() {
                         break;
                     }
-                    round!(f64::NAN, Vec::new(), Vec::new(), f64::INFINITY);
+                    round!(NO_T, NO_I, NO_P, f64::INFINITY);
                     cur_h = f64::INFINITY;
                     continue;
                 }
@@ -663,9 +1043,13 @@ impl Cluster {
                     // Window-capped advance toward the boundary: no
                     // routing, no tick, no step — output-invariant.
                     let h = if window > 0.0 { (cur_h + window).min(b) } else { b };
-                    round!(f64::NAN, Vec::new(), Vec::new(), h);
+                    round!(NO_T, NO_I, NO_P, h);
                     cur_h = h;
-                    if keys_min.is_nan() && arrivals.exhausted() && pending_total > 0 {
+                    if keys_min.is_nan()
+                        && held.is_empty()
+                        && arrivals.exhausted()
+                        && pending_total > 0
+                    {
                         break; // stall: nothing schedulable, nothing arriving
                     }
                     continue;
@@ -676,8 +1060,15 @@ impl Cluster {
                 // per arrival exactly like the sequential loop (injections
                 // bump only the target's pending; KV moves only on steps).
                 let is_tick = next_tick.is_some_and(|tk| b + 1e-12 >= tk);
-                arrivals.pop_until(b, &mut arr_buf);
-                let mut injections: Vec<(usize, Request)> = Vec::with_capacity(arr_buf.len());
+                if held.first().is_some_and(|r| r.arrival <= b) {
+                    arr_buf.clear();
+                    arr_buf.append(&mut held);
+                } else {
+                    arrivals.pop_until(b, &mut arr_buf);
+                }
+                batch_times.clear();
+                batch_inj.clear();
+                batch_times.push(b);
                 for r in &arr_buf {
                     let target = self.router.route(&views, r);
                     self.trace_route(r, target, &views, b);
@@ -685,7 +1076,7 @@ impl Cluster {
                     {
                         views[pos].pending += 1;
                     }
-                    injections.push((target, *r));
+                    batch_inj.push((0, target, *r));
                     pending_total += 1;
                     arrivals_since_tick += 1;
                 }
@@ -694,12 +1085,55 @@ impl Cluster {
                 } else {
                     Vec::new()
                 };
-                last_t = last_t.max(b);
+
+                // Rendezvous batching: pull further arrival instants into
+                // this round while every request in each same-instant
+                // group routes *blindly* (see `Router::blind_probe`) — no
+                // load feedback, so the decisions are identical to
+                // per-instant rendezvous. Ticks, the window cap, and the
+                // simulation horizon all end a batch; a group with any
+                // non-blind member is held intact for its own boundary
+                // (all-or-nothing, preserving same-instant route order).
+                if batching && !is_tick {
+                    let mut blind_n = 0usize;
+                    while batch_times.len() < BATCH_CAP {
+                        let Some(a) = arrivals.peek_time() else { break };
+                        if next_tick.is_some_and(|tk| a + 1e-12 >= tk)
+                            || a > max_vt
+                            || (window > 0.0 && a >= b + window)
+                        {
+                            break;
+                        }
+                        arrivals.pop_until(a, &mut hold_buf);
+                        targets_buf.clear();
+                        for (j, r) in hold_buf.iter().enumerate() {
+                            match self.router.blind_probe(&views, blind_n + j, r) {
+                                Some(t) => targets_buf.push(t),
+                                None => break,
+                            }
+                        }
+                        if targets_buf.len() < hold_buf.len() {
+                            held.append(&mut hold_buf);
+                            break;
+                        }
+                        let k = batch_times.len() as u32;
+                        batch_times.push(a);
+                        for (r, &t) in hold_buf.iter().zip(&targets_buf) {
+                            batch_inj.push((k, t, *r));
+                            pending_total += 1;
+                            arrivals_since_tick += 1;
+                        }
+                        blind_n += hold_buf.len();
+                        hold_buf.clear();
+                    }
+                    self.router.commit_blind(blind_n);
+                }
+                last_t = last_t.max(*batch_times.last().expect("batch has its boundary"));
 
                 if is_tick {
                     // Rendezvous 1: boundary step only (horizon B ⇒ no
                     // advance), so the decision sees post-step state.
-                    round!(b, injections, step_primed, b);
+                    round!(&batch_times, &batch_inj, &step_primed, b);
                     let sc = scaler.as_mut().expect("tick implies scaler");
                     let tk = next_tick.expect("tick implies schedule");
                     kv_buf.clear();
@@ -722,6 +1156,23 @@ impl Cluster {
                         scale_events.push(ScaleEvent { time: b, from, to: target });
                         if target > from {
                             for _ in from..target {
+                                // Shard placement: lightest shard first
+                                // (windowed steps, then fewest ever
+                                // assigned, then index) when stealing;
+                                // the static partition otherwise.
+                                let w = if steal.is_some() {
+                                    (0..threads)
+                                        .min_by_key(|&w| {
+                                            (shard_window[w], shard_assigned[w], w)
+                                        })
+                                        .expect("threads >= 1")
+                                } else {
+                                    next_id % threads
+                                };
+                                debug_assert_eq!(owner.len(), next_id);
+                                owner.push(w);
+                                rep_load.push(0);
+                                shard_assigned[w] += 1;
                                 pending_spawns.push((next_id, b));
                                 primed.push(next_id);
                                 // Fresh replicas are routable immediately:
@@ -768,29 +1219,89 @@ impl Cluster {
                     next_tick = Some(tk + sc.cfg.interval);
                     arrivals_since_tick = 0;
                 } else {
-                    // Plain arrival boundary: fuse the boundary step with
-                    // the advance toward the next interaction.
+                    // Plain arrival boundary: fuse the boundary step(s)
+                    // with the advance toward the next interaction.
                     let mut nb = f64::INFINITY;
-                    if let Some(a) = arrivals.peek_time() {
+                    if let Some(r) = held.first() {
+                        nb = nb.min(r.arrival);
+                    } else if let Some(a) = arrivals.peek_time() {
                         nb = nb.min(a);
                     }
                     if let Some(tk) = next_tick {
                         nb = nb.min(tk);
                     }
                     let h = if window > 0.0 { (b + window).min(nb) } else { nb };
-                    round!(b, injections, step_primed, h);
+                    round!(&batch_times, &batch_inj, &step_primed, h);
                     cur_h = h;
                 }
 
+                // Balance check: deterministic, virtual-time-scheduled,
+                // fed only by the windowed step accounts the reports just
+                // updated. Decisions become evict directives for the next
+                // round; the windows reset so each check sees one
+                // interval's worth of load.
+                if let Some(sc) = &steal {
+                    if b + 1e-12 >= next_balance {
+                        plan_reps.clear();
+                        plan_reps.extend(
+                            views.iter().map(|v| (v.index as usize, rep_load[v.index as usize])),
+                        );
+                        excl.clear();
+                        excl.extend_from_slice(&pending_drains);
+                        excl.extend(in_transit.iter().map(|r| r.id));
+                        excl.extend(migrating.iter().map(|&(id, _)| id));
+                        plan_loads.clear();
+                        plan_loads.extend_from_slice(&shard_window);
+                        plan_rebalance(
+                            &mut plan_loads,
+                            &plan_reps,
+                            &owner,
+                            sc.threshold,
+                            &excl,
+                            &mut moves_buf,
+                        );
+                        for &(id, from, to) in &moves_buf {
+                            self.tracer.emit_for(
+                                id as u32,
+                                b,
+                                EventKind::ShardRebalance { from_shard: from, to_shard: to },
+                            );
+                            pending_evicts.push(id);
+                            migrating.push((id, to));
+                        }
+                        rebalances += moves_buf.len();
+                        for x in shard_window.iter_mut() {
+                            *x = 0;
+                        }
+                        for x in rep_load.iter_mut() {
+                            *x = 0;
+                        }
+                        next_balance = b + sc.interval;
+                    }
+                }
+
                 peak_replicas = peak_replicas.max(active_cnt);
-                if keys_min.is_nan() && arrivals.exhausted() && pending_total > 0 {
+                if keys_min.is_nan()
+                    && held.is_empty()
+                    && arrivals.exhausted()
+                    && pending_total > 0
+                {
                     // Stall: nothing schedulable, nothing arriving. Apply
                     // any directives from this boundary's tick first.
                     if !pending_drains.is_empty() || !pending_spawns.is_empty() {
-                        round!(f64::NAN, Vec::new(), Vec::new(), cur_h);
+                        round!(NO_T, NO_I, NO_P, cur_h);
                     }
                     break;
                 }
+            }
+
+            // A migration caught mid-flight by loop exit: abandon planned
+            // evictions (purely observational) and adopt anything already
+            // in transit so no replica is lost at Finish.
+            pending_evicts.clear();
+            migrating.clear();
+            if !in_transit.is_empty() {
+                round!(NO_T, NO_I, NO_P, cur_h);
             }
 
             for tx in &txs {
@@ -868,6 +1379,8 @@ impl Cluster {
             events: rounds + steps_total,
             ttft_hist,
             tbt_hist,
+            rebalances,
+            shard_steps: shard_total,
         }
     }
 }
@@ -936,6 +1449,97 @@ mod tests {
         );
         assert_eq!(by_slice.digest(), by_stream.digest());
         assert_eq!(by_slice.fleet.records.len(), by_stream.fleet.records.len());
+    }
+
+    #[test]
+    fn plan_rebalance_moves_toward_balance() {
+        // Shard 0 carries 100 steps across two replicas; shard 1 has 10.
+        let mut loads = vec![100u64, 10];
+        let cands = vec![(0usize, 60u64), (2, 40), (1, 10)];
+        let owner = vec![0usize, 1, 0];
+        let mut moves = Vec::new();
+        plan_rebalance(&mut loads, &cands, &owner, 1.5, &[], &mut moves);
+        // gap = 90: replica 2 (40 ≤ 45) fits, replica 0 (60) overshoots.
+        assert_eq!(moves, vec![(2, 0, 1)]);
+        assert_eq!(loads, vec![60, 50]);
+
+        // Balanced input: no moves.
+        let mut loads = vec![50u64, 60];
+        plan_rebalance(&mut loads, &cands, &owner, 1.5, &[], &mut moves);
+        assert!(moves.is_empty());
+
+        // Excluded candidates never move.
+        let mut loads = vec![100u64, 10];
+        plan_rebalance(&mut loads, &cands, &owner, 1.5, &[2], &mut moves);
+        assert!(moves.is_empty(), "only eligible mover was excluded");
+
+        // Single shard: trivially a no-op.
+        let mut one = vec![100u64];
+        plan_rebalance(&mut one, &cands, &owner, 1.5, &[], &mut moves);
+        assert!(moves.is_empty());
+    }
+
+    #[test]
+    fn stealing_matches_sequential_digest() {
+        // Session-affinity hot spot plus autoscale churn — the workload
+        // stealing exists for. The digest must not move at all.
+        let mut cc = ClusterCfg::new(
+            EngineKind::Nexus,
+            ecfg(),
+            4,
+            super::super::RoutingPolicy::SessionAffinity,
+        );
+        cc.autoscale = Some(crate::cluster::AutoscalerCfg {
+            min_replicas: 2,
+            max_replicas: 6,
+            interval: 2.0,
+            cooldown: 4.0,
+            ..Default::default()
+        });
+        let trace = generate(Dataset::ShareGpt, 120, 15.0, 17);
+        let seq = Cluster::new(cc.clone()).run(&trace);
+        for threads in [1usize, 2, 4] {
+            for steal in [
+                None,
+                Some(StealCfg { threshold: 1.2, interval: 0.5 }),
+                Some(StealCfg { threshold: 2.0, interval: 2.0 }),
+            ] {
+                let mut c = Cluster::new(cc.clone());
+                let par = c.run_parallel_cfg(&trace, ParallelCfg { threads, window: 0.0, steal });
+                assert_eq!(
+                    seq.digest(),
+                    par.digest(),
+                    "threads={threads} steal={steal:?}"
+                );
+                assert_eq!(par.shard_steps.len(), threads);
+                if steal.is_none() {
+                    assert_eq!(par.rebalances, 0, "static sharding never migrates");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stealing_with_window_matches_digest() {
+        let cc = ClusterCfg::new(
+            EngineKind::Vllm,
+            ecfg(),
+            4,
+            super::super::RoutingPolicy::RoundRobin,
+        );
+        let trace = generate(Dataset::ShareGpt, 60, 12.0, 29);
+        let seq = Cluster::new(cc.clone()).run(&trace);
+        for window in [0.0f64, 0.25, 5.0] {
+            let par = Cluster::new(cc.clone()).run_parallel_cfg(
+                &trace,
+                ParallelCfg {
+                    threads: 3,
+                    window,
+                    steal: Some(StealCfg { threshold: 1.1, interval: 0.25 }),
+                },
+            );
+            assert_eq!(seq.digest(), par.digest(), "window={window}");
+        }
     }
 
     #[test]

@@ -25,6 +25,11 @@ pub struct Replica {
     pub started_at: f64,
     /// Virtual time it fully drained (retired), if it has.
     pub retired_at: Option<f64>,
+    /// Engine steps taken in the current parallel-loop round; the shard
+    /// scheduler's load signal (see [`crate::cluster::parallel`]). Lives on
+    /// the replica so the counter migrates with it — purely observational,
+    /// never read by the engine. Unused (zero) in the sequential loop.
+    pub round_steps: u32,
 }
 
 impl Replica {
@@ -36,6 +41,7 @@ impl Replica {
             routed: 0,
             started_at: now,
             retired_at: None,
+            round_steps: 0,
         }
     }
 

@@ -150,6 +150,48 @@ impl Router {
             }
         }
     }
+
+    /// Probe the target for the `nth` arrival of a same-instant group
+    /// *without* mutating router state — the rendezvous-batching fast path
+    /// in [`crate::cluster::parallel`] uses this to check whether a whole
+    /// group of arrivals can be dispatched in one worker round-trip.
+    ///
+    /// Returns `Some(replica index)` only when the decision is *blind*:
+    /// provably identical to what [`Router::route`] would pick given the
+    /// same pre-group `views`, independent of the queue-depth effects of
+    /// the group's earlier members. Round-robin qualifies always (the
+    /// cursor advances by one per arrival, so member `nth` lands at offset
+    /// `rr_next + nth`); session affinity qualifies only on a sticky hit
+    /// (the pin ignores load). JSQ / least-KV and affinity misses read
+    /// live load, so they return `None` and the group falls back to
+    /// per-arrival rendezvous routing.
+    ///
+    /// On success for *every* member, commit the group with
+    /// [`Router::commit_blind`]; on any `None`, commit nothing.
+    pub fn blind_probe(&self, views: &[ReplicaView], nth: usize, req: &Request) -> Option<usize> {
+        assert!(!views.is_empty(), "probe with no active replicas");
+        match self.policy {
+            RoutingPolicy::RoundRobin => {
+                Some(views[self.rr_next.wrapping_add(nth) % views.len()].index as usize)
+            }
+            RoutingPolicy::SessionAffinity => {
+                let key = (req.id % AFFINITY_SESSIONS) as u64;
+                let idx = *self.sessions.get(&key)?;
+                views.iter().any(|v| v.index as usize == idx).then_some(idx)
+            }
+            RoutingPolicy::JoinShortestQueue | RoutingPolicy::LeastKvPressure => None,
+        }
+    }
+
+    /// Commit `n` arrivals dispatched via successful [`Router::blind_probe`]
+    /// calls: advances the round-robin cursor and the dispatch counter
+    /// exactly as `n` individual [`Router::route`] calls would have.
+    pub fn commit_blind(&mut self, n: usize) {
+        self.dispatched += n;
+        if self.policy == RoutingPolicy::RoundRobin {
+            self.rr_next = self.rr_next.wrapping_add(n);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -198,6 +240,40 @@ mod tests {
         let mut r = Router::new(RoutingPolicy::LeastKvPressure);
         let v = views(&[(0, 1, 0.8), (1, 9, 0.2), (2, 1, 0.5)]);
         assert_eq!(r.route(&v, &req(0)), 1, "kv usage dominates queue depth");
+    }
+
+    #[test]
+    fn blind_probe_matches_route() {
+        // Round-robin: probing members 0..n of a same-instant group with
+        // offsets then committing once reproduces n sequential route() calls.
+        let v = views(&[(0, 0, 0.0), (2, 0, 0.0), (5, 0, 0.0)]);
+        let mut blind = Router::new(RoutingPolicy::RoundRobin);
+        let mut seq = Router::new(RoutingPolicy::RoundRobin);
+        for round in 0..3 {
+            let group: Vec<usize> = (0..4)
+                .map(|n| blind.blind_probe(&v, n, &req(round * 4 + n)).unwrap())
+                .collect();
+            blind.commit_blind(group.len());
+            let expect: Vec<usize> =
+                (0..4).map(|n| seq.route(&v, &req(round * 4 + n))).collect();
+            assert_eq!(group, expect, "round {round}");
+        }
+        assert_eq!(blind.dispatched, seq.dispatched);
+
+        // Affinity: unpinned session is not blind; pinned session is, and
+        // the probe matches the sticky route without mutating state.
+        let mut r = Router::new(RoutingPolicy::SessionAffinity);
+        assert_eq!(r.blind_probe(&v, 0, &req(3)), None, "unpinned session reads load");
+        let pinned = r.route(&v, &req(3));
+        assert_eq!(r.blind_probe(&v, 7, &req(3 + 64)), Some(pinned), "nth-independent");
+        let gone = views(&[(2, 0, 0.0), (5, 0, 0.0)]);
+        assert_eq!(r.blind_probe(&gone, 0, &req(3 + 64)), None, "pinned replica drained");
+
+        // Load-aware policies never qualify.
+        let r = Router::new(RoutingPolicy::JoinShortestQueue);
+        assert_eq!(r.blind_probe(&v, 0, &req(0)), None);
+        let r = Router::new(RoutingPolicy::LeastKvPressure);
+        assert_eq!(r.blind_probe(&v, 0, &req(0)), None);
     }
 
     #[test]

@@ -2,7 +2,9 @@
 //! sustainable-throughput search used for Fig. 9/10 column 1–2, and the
 //! fleet-level [`ClusterExperiment`] driver.
 
-use crate::cluster::{AutoscalerCfg, Cluster, ClusterCfg, ClusterMetrics, RoutingPolicy};
+use crate::cluster::{
+    AutoscalerCfg, Cluster, ClusterCfg, ClusterMetrics, ParallelCfg, RoutingPolicy, StealCfg,
+};
 use crate::engine::{run_engine, EngineCfg, EngineKind};
 use crate::metrics::{RunMetrics, Summary};
 use crate::model::ModelConfig;
@@ -74,6 +76,11 @@ pub struct ClusterExperiment {
     /// `0` = free-run to the next interaction. Output-invariant by
     /// construction (see `--window`).
     pub window: f64,
+    /// Deterministic work stealing for the sharded loop: `Some` migrates
+    /// replicas between shards when virtual-time load skews past the
+    /// threshold (see `--steal-threshold` / `--balance-interval`).
+    /// Output-invariant by construction.
+    pub steal: Option<StealCfg>,
 }
 
 impl ClusterExperiment {
@@ -86,6 +93,7 @@ impl ClusterExperiment {
             bursty: None,
             threads: 1,
             window: 0.0,
+            steal: None,
         }
     }
 
@@ -116,7 +124,10 @@ impl ClusterExperiment {
         let mut cluster = Cluster::new(cfg);
         cluster.tracer = tracer.clone();
         if self.threads > 1 {
-            cluster.run_parallel(&self.trace(), self.threads, self.window)
+            cluster.run_parallel_cfg(
+                &self.trace(),
+                ParallelCfg { threads: self.threads, window: self.window, steal: self.steal },
+            )
         } else {
             cluster.run(&self.trace())
         }
@@ -258,6 +269,13 @@ mod tests {
         exp.window = 2.0;
         let par = exp.run(EngineKind::Nexus);
         assert_eq!(seq.digest(), par.digest(), "--threads must not change results");
+        exp.steal = Some(StealCfg { threshold: 1.2, interval: 0.5 });
+        let stolen = exp.run(EngineKind::Nexus);
+        assert_eq!(
+            seq.digest(),
+            stolen.digest(),
+            "--steal-threshold must not change results"
+        );
     }
 
     #[test]

@@ -6,7 +6,8 @@
 //! nexus compare    --dataset mixed --model llama8b --n 200 --rate 3.0
 //! nexus serve      --engine nexus --dataset ldc --model qwen3b --n 100 --rate 2.5
 //! nexus cluster    --engine nexus --replicas 4 --policy jsq [--bursty] [--autoscale]
-//!                  [--threads N] [--window S]   (sharded loop; same results for any N/S)
+//!                  [--threads N] [--window S] [--steal-threshold R] [--balance-interval S]
+//!                  (sharded loop; same results for any N/S/R)
 //! nexus throughput --engine vllm --dataset arxiv --model qwen3b --n 150
 //! nexus offline    --dataset ldc --model qwen3b --n 100
 //! nexus calibrate  [--model qwen3b]
@@ -22,7 +23,7 @@
 //! through PJRT and serves actual token traffic; everything else runs on
 //! the calibrated L20 substrate.
 
-use nexus::cluster::{AutoscalerCfg, RoutingPolicy};
+use nexus::cluster::{AutoscalerCfg, RoutingPolicy, StealCfg};
 use nexus::coordinator::{
     offline_makespan, sustainable_throughput, ClusterExperiment, Experiment, SloSpec,
 };
@@ -204,6 +205,13 @@ fn cluster_experiment(args: &Args) -> (ClusterExperiment, EngineKind) {
     assert!(exp.threads >= 1, "--threads must be >= 1");
     exp.window = args.get_f64("window", 0.0);
     assert!(exp.window >= 0.0, "--window must be >= 0");
+    let st = args.get_f64("steal-threshold", 0.0);
+    if st > 0.0 {
+        assert!(st > 1.0, "--steal-threshold must be > 1 (it is a load ratio)");
+        let interval = args.get_f64("balance-interval", 1.0);
+        assert!(interval > 0.0, "--balance-interval must be > 0");
+        exp.steal = Some(StealCfg { threshold: st, interval });
+    }
     (exp, kind)
 }
 
@@ -212,7 +220,7 @@ fn cmd_cluster(args: &Args) {
     let replicas = exp.replicas;
     let policy = exp.policy;
     eprintln!(
-        "running {} x{} [{}] on {} / {} ({} reqs @ {} req/s{}{}{})...",
+        "running {} x{} [{}] on {} / {} ({} reqs @ {} req/s{}{}{}{})...",
         kind.name(),
         replicas,
         policy.name(),
@@ -223,6 +231,7 @@ fn cmd_cluster(args: &Args) {
         if exp.bursty.is_some() { ", bursty" } else { "" },
         if exp.autoscale.is_some() { ", autoscaled" } else { "" },
         if exp.threads > 1 { format!(", {} threads", exp.threads) } else { String::new() },
+        if exp.steal.is_some() { ", stealing" } else { "" },
     );
     let tracer = tracer_from(args);
     let m = exp.run_traced(kind, &tracer);
@@ -237,6 +246,12 @@ fn cmd_cluster(args: &Args) {
         m.suppressed_scales,
         m.fleet.timeouts
     );
+    if exp.steal.is_some() {
+        eprintln!(
+            "shards: {} rebalance moves | per-shard steps {:?}",
+            m.rebalances, m.shard_steps
+        );
+    }
     let mut rt = Table::new("per-replica", &["replica", "routed", "completed", "lifetime"]);
     for r in &m.replicas {
         let end = r.retired_at.map_or("end".to_string(), |at| format!("{at:.1}s"));

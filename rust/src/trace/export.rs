@@ -183,6 +183,17 @@ pub fn chrome_trace(events: &[TraceEvent]) -> Json {
                 ));
                 rows.push(counter(pid, "replicas", ev.time, vec![("count", Json::from(*to))]));
             }
+            EventKind::ShardRebalance { from_shard, to_shard } => {
+                rows.push(instant(
+                    pid,
+                    &format!("shard rebalance {from_shard} -> {to_shard}"),
+                    ev.time,
+                    vec![
+                        ("from_shard", Json::from(*from_shard)),
+                        ("to_shard", Json::from(*to_shard)),
+                    ],
+                ));
+            }
             EventKind::ReplicaStart => rows.push(instant(pid, "replica start", ev.time, vec![])),
             EventKind::ReplicaDrain => rows.push(instant(pid, "replica drain", ev.time, vec![])),
             EventKind::ReplicaRetire => rows.push(instant(pid, "replica retire", ev.time, vec![])),
@@ -276,6 +287,10 @@ pub fn event_json(ev: &TraceEvent) -> Json {
         EventKind::Scale { from, to } => {
             fields.push(("from", Json::from(*from)));
             fields.push(("to", Json::from(*to)));
+        }
+        EventKind::ShardRebalance { from_shard, to_shard } => {
+            fields.push(("from_shard", Json::from(*from_shard)));
+            fields.push(("to_shard", Json::from(*to_shard)));
         }
         EventKind::Sample { kv_usage, waiting, running, pending, sm_prefill, inflight } => {
             fields.push(("kv_usage", Json::from(*kv_usage)));

@@ -116,6 +116,12 @@ pub enum EventKind {
     ReplicaDrain,
     /// Replica left service.
     ReplicaRetire,
+    /// The parallel fleet loop migrated this replica between worker shards
+    /// (work stealing). Purely observational: migration never changes what
+    /// the replica computes, only which thread steps it, so traces with and
+    /// without rebalancing differ exactly by these events
+    /// (`tests/golden_trace.rs` pins this).
+    ShardRebalance { from_shard: usize, to_shard: usize },
     /// Request finished its last token.
     Complete { req: usize },
     /// Periodic time-series sample of one replica's state.
@@ -147,6 +153,7 @@ impl EventKind {
             EventKind::ReplicaStart => "replica-start",
             EventKind::ReplicaDrain => "replica-drain",
             EventKind::ReplicaRetire => "replica-retire",
+            EventKind::ShardRebalance { .. } => "shard-rebalance",
             EventKind::Complete { .. } => "complete",
             EventKind::Sample { .. } => "sample",
         }
@@ -207,6 +214,9 @@ impl TraceEvent {
                 format!(" req={req} bytes={} dur={}", q(*bytes), q(*dur))
             }
             EventKind::Scale { from, to } => format!(" from={from} to={to}"),
+            EventKind::ShardRebalance { from_shard, to_shard } => {
+                format!(" from_shard={from_shard} to_shard={to_shard}")
+            }
             EventKind::Sample { kv_usage, waiting, running, pending, sm_prefill, inflight } => {
                 format!(
                     " kv={} waiting={waiting} running={running} pending={pending} sm_prefill={} inflight={inflight}",
@@ -273,6 +283,10 @@ impl TraceEvent {
             (K::Scale { from: fa, to: ta }, K::Scale { from: fb, to: tb }) => {
                 fa == fb && ta == tb
             }
+            (
+                K::ShardRebalance { from_shard: fa, to_shard: ta },
+                K::ShardRebalance { from_shard: fb, to_shard: tb },
+            ) => fa == fb && ta == tb,
             (K::ReplicaStart, K::ReplicaStart)
             | (K::ReplicaDrain, K::ReplicaDrain)
             | (K::ReplicaRetire, K::ReplicaRetire) => true,

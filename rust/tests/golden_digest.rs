@@ -26,10 +26,12 @@
 //! time slices as the sequential loop, so its `ClusterMetrics::digest` must
 //! equal the sequential loop's for every thread count and window size.
 
-use nexus::cluster::{run_cluster, AutoscalerCfg, Cluster, ClusterCfg, RoutingPolicy};
+use nexus::cluster::{
+    run_cluster, AutoscalerCfg, Cluster, ClusterCfg, ParallelCfg, RoutingPolicy, StealCfg,
+};
 use nexus::engine::{build_engine, drive, run_engine, EngineCfg, EngineKind};
 use nexus::model::ModelConfig;
-use nexus::workload::{generate, generate_bursty, BurstyCfg, Dataset};
+use nexus::workload::{generate, generate_bursty, BurstyCfg, Dataset, Request};
 
 fn ecfg(seed: u64) -> EngineCfg {
     EngineCfg::new(ModelConfig::qwen3b(), seed)
@@ -255,4 +257,170 @@ fn parallel_fleet_window_size_is_output_invariant() {
     }
     let seq = Cluster::new(cc).run(&trace).digest();
     assert_eq!(base, seq, "windowed parallel loop diverged from sequential");
+}
+
+/// A session-affinity hot spot: 64 simultaneous t=0 arrivals pin sessions
+/// 0..63 to replicas 0..(r-1) via the JSQ-fallback cascade, then the body
+/// floods a handful of hot sessions so the static `id % threads` partition
+/// piles their replicas onto few shards — the workload work stealing
+/// exists for.
+fn skewed_affinity_trace(n: usize, rate: f64, seed: u64) -> Vec<Request> {
+    let base = generate(Dataset::ShareGpt, n, rate, seed);
+    let mut trace = Vec::with_capacity(n + 64);
+    for k in 0..64usize {
+        trace.push(Request { id: k, arrival: 0.0, prompt_len: 64, output_len: 4 });
+    }
+    for (i, r) in base.iter().enumerate() {
+        // 90 % of traffic on sessions {0, 8, .., 56}; the rest never ≡ 0
+        // (mod 8), so the hot set is exact.
+        let session = if i % 10 < 9 { 8 * (i % 8) } else { 8 * (i % 8) + 1 + i % 7 };
+        trace.push(Request { id: (i + 1) * 64 + session, ..*r });
+    }
+    trace
+}
+
+#[test]
+fn parallel_stealing_fleet_matches_sequential_digest() {
+    // Work stealing migrates replicas between shards, but *where* a replica
+    // is stepped is scheduling metadata: the served output must be digest-
+    // equal to the sequential loop for every thread count and stealing
+    // config, on the adversarially skewed workload.
+    let trace = skewed_affinity_trace(120, 20.0, 131);
+    let cc = ClusterCfg::new(EngineKind::Nexus, ecfg(7), 8, RoutingPolicy::SessionAffinity);
+    let seq = Cluster::new(cc.clone()).run(&trace).digest();
+    for threads in [1usize, 2, 4, 8] {
+        for steal in [
+            None,
+            Some(StealCfg { threshold: 1.2, interval: 0.5 }),
+            Some(StealCfg { threshold: 3.0, interval: 2.0 }),
+        ] {
+            let par = Cluster::new(cc.clone())
+                .run_parallel_cfg(&trace, ParallelCfg { threads, window: 0.0, steal })
+                .digest();
+            assert_eq!(
+                seq, par,
+                "stealing fleet diverged @ {threads} threads, steal {steal:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_stealing_autoscaled_fleet_matches_sequential_digest() {
+    // Stealing + autoscale churn: spawns are routed to the lightest shard
+    // and drained replicas may migrate mid-drain; none of it may show in
+    // the digest.
+    let trace = skewed_affinity_trace(100, 16.0, 211);
+    let mut cc =
+        ClusterCfg::new(EngineKind::Nexus, ecfg(13), 4, RoutingPolicy::SessionAffinity);
+    cc.autoscale = Some(AutoscalerCfg {
+        min_replicas: 2,
+        max_replicas: 8,
+        interval: 2.0,
+        cooldown: 4.0,
+        ..AutoscalerCfg::default()
+    });
+    let seq = Cluster::new(cc.clone()).run(&trace).digest();
+    for threads in [2usize, 4, 8] {
+        for steal in [None, Some(StealCfg { threshold: 1.2, interval: 0.5 })] {
+            let par = Cluster::new(cc.clone())
+                .run_parallel_cfg(&trace, ParallelCfg { threads, window: 0.0, steal })
+                .digest();
+            assert_eq!(
+                seq, par,
+                "autoscaled stealing fleet diverged @ {threads} threads, steal {steal:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_stealing_window_is_output_invariant() {
+    // Windowed rounds interleave with balance checks; the combination must
+    // still be output-invariant.
+    let trace = skewed_affinity_trace(80, 14.0, 307);
+    let cc = ClusterCfg::new(EngineKind::Vllm, ecfg(17), 6, RoutingPolicy::SessionAffinity);
+    let seq = Cluster::new(cc.clone()).run(&trace).digest();
+    for window in [0.0f64, 0.1, 1.0, 1e6] {
+        let par = Cluster::new(cc.clone())
+            .run_parallel_cfg(
+                &trace,
+                ParallelCfg {
+                    threads: 4,
+                    window,
+                    steal: Some(StealCfg { threshold: 1.1, interval: 0.25 }),
+                },
+            )
+            .digest();
+        assert_eq!(seq, par, "stealing + window {window} changed the digest");
+    }
+}
+
+/// Run one trace through all three fronts — sequential, sharded slice,
+/// sharded stream — under a given config and assert digest equality.
+fn assert_three_way_digest(cc: &ClusterCfg, trace: &[Request], label: &str) {
+    let seq = Cluster::new(cc.clone()).run(trace).digest();
+    let steal = Some(StealCfg { threshold: 1.2, interval: 0.5 });
+    for threads in [1usize, 3] {
+        let slice = Cluster::new(cc.clone()).run_parallel(trace, threads, 0.0).digest();
+        assert_eq!(seq, slice, "{label}: slice diverged @ {threads} threads");
+        let stream = Cluster::new(cc.clone())
+            .run_parallel_stream(trace.iter().copied(), None, threads, 0.0)
+            .digest();
+        assert_eq!(seq, stream, "{label}: stream diverged @ {threads} threads");
+        // With stealing on, simultaneous groups take the rendezvous-batching
+        // fast path (blind-routable policies) — same digest required.
+        let stolen = Cluster::new(cc.clone())
+            .run_parallel_cfg(trace, ParallelCfg { threads, window: 0.0, steal })
+            .digest();
+        assert_eq!(seq, stolen, "{label}: stealing slice diverged @ {threads} threads");
+        let stolen_stream = Cluster::new(cc.clone())
+            .run_parallel_stream_cfg(
+                trace.iter().copied(),
+                None,
+                ParallelCfg { threads, window: 0.0, steal },
+            )
+            .digest();
+        assert_eq!(
+            seq, stolen_stream,
+            "{label}: stealing stream diverged @ {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn stream_arrivals_edge_cases_match_all_fronts() {
+    let cc = ClusterCfg::new(EngineKind::Nexus, ecfg(23), 2, RoutingPolicy::RoundRobin);
+
+    // Empty workload: the loops must terminate immediately with an empty
+    // digest, not deadlock waiting for a first arrival.
+    assert_three_way_digest(&cc, &[], "empty trace");
+
+    // Single request.
+    let one = [Request { id: 0, arrival: 0.5, prompt_len: 128, output_len: 8 }];
+    assert_three_way_digest(&cc, &one, "single request");
+
+    // Simultaneous ties: several arrivals at *exactly* the same instant
+    // must be routed in id order by every front (the stream pops ties in
+    // push order, the sharded loop batches the whole group into one round).
+    let mut ties = Vec::new();
+    for id in 0..12usize {
+        ties.push(Request {
+            id,
+            arrival: if id < 6 { 0.0 } else { 1.25 },
+            prompt_len: 64 + 32 * (id as u32 % 3),
+            output_len: 6,
+        });
+    }
+    assert_three_way_digest(&cc, &ties, "simultaneous ties");
+
+    // Ties under a policy whose decisions depend on earlier ties' pending
+    // bumps (JSQ) — the blind-batch fast path must not engage and the
+    // cascade must match the sequential order.
+    let cc_jsq = ClusterCfg::new(EngineKind::Vllm, ecfg(29), 3, RoutingPolicy::JoinShortestQueue);
+    let mut ties = Vec::new();
+    for id in 0..9usize {
+        ties.push(Request { id, arrival: 2.0, prompt_len: 96, output_len: 5 });
+    }
+    assert_three_way_digest(&cc_jsq, &ties, "jsq simultaneous ties");
 }

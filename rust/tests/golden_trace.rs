@@ -198,6 +198,74 @@ fn parallel_fleet_emits_the_sequential_event_set() {
 }
 
 #[test]
+fn stealing_fleet_emits_the_sequential_event_set_plus_rebalances() {
+    // Work stealing under tracing: every migration emits a typed
+    // `ShardRebalance` event, and *everything else* must be exactly the
+    // sequential loop's event set — migrations are scheduling metadata,
+    // not behavior. The workload is built to force migrations: a t=0
+    // pinning wave maps session k to replica k (JSQ-fallback cascade),
+    // then the flood hits only sessions 0 and 2, whose replicas both live
+    // on shard 0 under the static `id % 2` partition at 2 threads.
+    let mut trace = Vec::new();
+    for k in 0..4usize {
+        trace.push(Request { id: k, arrival: 0.0, prompt_len: 64, output_len: 4 });
+    }
+    for i in 0..120usize {
+        trace.push(Request {
+            id: 64 * (i + 1) + if i % 2 == 0 { 0 } else { 2 },
+            arrival: 0.2 + 0.05 * i as f64,
+            prompt_len: 512,
+            output_len: 24,
+        });
+    }
+    let cc = ClusterCfg::new(EngineKind::Nexus, ecfg(19), 4, RoutingPolicy::SessionAffinity);
+    let seq_tracer = Tracer::recording();
+    let mut seq_cluster = Cluster::new(cc.clone());
+    seq_cluster.tracer = seq_tracer.clone();
+    let m_seq = seq_cluster.run(&trace);
+    let mut ev_seq = seq_tracer.take();
+    canonical_order(&mut ev_seq);
+
+    let steal = nexus::cluster::StealCfg { threshold: 1.2, interval: 0.5 };
+    let par_tracer = Tracer::recording();
+    let mut par_cluster = Cluster::new(cc);
+    par_cluster.tracer = par_tracer.clone();
+    let m_par = par_cluster.run_parallel_cfg(
+        &trace,
+        nexus::cluster::ParallelCfg { threads: 2, window: 0.0, steal: Some(steal) },
+    );
+    assert_eq!(
+        m_seq.digest(),
+        m_par.digest(),
+        "tracing + stealing: digest diverged from sequential"
+    );
+    let mut ev_par = par_tracer.take();
+    let rebalances: Vec<TraceEvent> = ev_par
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::ShardRebalance { .. }))
+        .cloned()
+        .collect();
+    assert!(
+        !rebalances.is_empty(),
+        "the skewed flood must force at least one migration"
+    );
+    assert_eq!(
+        rebalances.len(),
+        m_par.rebalances,
+        "one ShardRebalance event per recorded migration"
+    );
+    for e in &rebalances {
+        let EventKind::ShardRebalance { from_shard, to_shard } = &e.kind else {
+            unreachable!()
+        };
+        assert!(*from_shard < 2 && *to_shard < 2 && from_shard != to_shard);
+    }
+    ev_par.retain(|e| !matches!(e.kind, EventKind::ShardRebalance { .. }));
+    canonical_order(&mut ev_par);
+    assert_trace_eq(&ev_par, &ev_seq, "stealing x2 vs sequential");
+}
+
+#[test]
 fn recording_and_sampling_leave_fleet_run_untouched() {
     let trace = generate(Dataset::ShareGpt, 60, 8.0, 13);
     let cc = ClusterCfg::new(EngineKind::Nexus, ecfg(42), 3, RoutingPolicy::JoinShortestQueue);

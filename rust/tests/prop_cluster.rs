@@ -3,7 +3,9 @@
 //! single-replica equivalence with the plain engine loop — driven by the
 //! in-repo mini property harness (`nexus::testing`).
 
-use nexus::cluster::{run_cluster, AutoscalerCfg, Cluster, ClusterCfg, RoutingPolicy};
+use nexus::cluster::{
+    run_cluster, AutoscalerCfg, Cluster, ClusterCfg, ParallelCfg, RoutingPolicy, StealCfg,
+};
 use nexus::engine::{run_engine, EngineCfg, EngineKind};
 use nexus::model::ModelConfig;
 use nexus::testing::prop;
@@ -285,6 +287,59 @@ fn prop_parallel_loop_invariant_to_threads_and_window() {
                 kind.name(),
                 replicas,
                 policy.name()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_stealing_invariance() {
+    // Work stealing migrates replicas between shards at rendezvous
+    // boundaries using a virtual-time load signal, so for ANY random
+    // workload, engine, policy, fleet size, autoscaler shape, thread
+    // count, window, and stealing config, the digest must be bit-equal
+    // to the sequential run — and to the static (steal-off) sharded run.
+    prop("stealing threshold/interval invariance", 10, |rng| {
+        let n = rng.range_usize(10, 40);
+        let trace = random_trace(rng, n);
+        let kind = random_kind(rng);
+        let policy = random_policy(rng);
+        let replicas = rng.range_usize(1, 6);
+        let ecfg = EngineCfg::new(ModelConfig::qwen3b(), rng.next_u64());
+        let mut cc = ClusterCfg::new(kind, ecfg, replicas, policy);
+        if rng.chance(0.5) {
+            cc.autoscale = Some(AutoscalerCfg {
+                min_replicas: 1,
+                max_replicas: 5,
+                interval: rng.range_f64(1.0, 4.0),
+                cooldown: rng.range_f64(2.0, 8.0),
+                ..AutoscalerCfg::default()
+            });
+        }
+        let seq = Cluster::new(cc.clone()).run(&trace).digest();
+        let threads = rng.range_usize(2, 8);
+        let window = if rng.chance(0.5) { rng.range_f64(0.01, 5.0) } else { 0.0 };
+        let steal = StealCfg {
+            threshold: rng.range_f64(1.05, 4.0),
+            interval: rng.range_f64(0.1, 3.0),
+        };
+        let stat = Cluster::new(cc.clone())
+            .run_parallel_cfg(&trace, ParallelCfg { threads, window, steal: None })
+            .digest();
+        let stolen = Cluster::new(cc)
+            .run_parallel_cfg(&trace, ParallelCfg { threads, window, steal: Some(steal) })
+            .digest();
+        if seq != stat || seq != stolen {
+            return Err(format!(
+                "{} x{} [{}] @ {threads} threads, window {window:.3}, \
+                 steal {steal:?}: digest diverged (static match: {}, stealing \
+                 match: {})",
+                kind.name(),
+                replicas,
+                policy.name(),
+                seq == stat,
+                seq == stolen
             ));
         }
         Ok(())
