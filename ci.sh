@@ -24,6 +24,14 @@ run cargo test --release --test prop_cluster prop_parallel -q
 run cargo test --release --test golden_digest stealing -q
 run cargo test --release --test golden_digest stream_arrivals -q
 run cargo test --release --test golden_trace stealing -q
+# Multi-tenant serving: the WFQ fairness/quota property battery plus the
+# tenant golden suites (three-way digests under churn, tenant trace
+# events) — the gate adds a scheduling stage, so pin it under release
+# scheduling like the other fleet invariants.
+run cargo test --release --test prop_tenant -q
+run cargo test --release --test golden_digest wfq -q
+run cargo test --release --test golden_trace tenant -q
+run cargo test --release --test golden_trace wfq -q
 # Benches are the perf harness of record (BENCH_hotpath.json); keep them
 # compiling without paying their runtime in CI.
 run cargo bench --no-run
@@ -55,6 +63,29 @@ run_cluster_cli_steal >/tmp/nexus_steal_b.txt
 diff /tmp/nexus_steal_a.txt /tmp/nexus_steal_b.txt
 diff /tmp/nexus_steal_a.txt /tmp/nexus_par_a.txt
 echo "    identical output across runs and vs static sharding"
+# Multi-tenant smoke on the same seed: tenant labels alone must not move a
+# byte of the fleet summary; a trivial WFQ gate (uniform weights, no
+# quotas) must be deterministic and only *append* the per-tenant report.
+run_cluster_cli_tenants() {
+    ./target/release/nexus cluster --engine nexus --replicas 6 --policy jsq \
+        --n 120 --rate 12 --seed 7 --threads 2 --window 0.5 --tenants 3 2>/dev/null
+}
+run_cluster_cli_wfq() {
+    ./target/release/nexus cluster --engine nexus --replicas 6 --policy jsq \
+        --n 120 --rate 12 --seed 7 --threads 2 --window 0.5 --tenants 3 \
+        --wfq 2>/dev/null
+}
+echo
+echo "==> cluster --wfq on/off smoke"
+run_cluster_cli_tenants >/tmp/nexus_tn_off.txt
+diff /tmp/nexus_tn_off.txt /tmp/nexus_par_a.txt
+run_cluster_cli_wfq >/tmp/nexus_wfq_a.txt
+run_cluster_cli_wfq >/tmp/nexus_wfq_b.txt
+diff /tmp/nexus_wfq_a.txt /tmp/nexus_wfq_b.txt
+grep -q "per-tenant SLO" /tmp/nexus_wfq_a.txt
+diff /tmp/nexus_tn_off.txt \
+    <(head -n "$(wc -l < /tmp/nexus_tn_off.txt)" /tmp/nexus_wfq_a.txt)
+echo "    tenant tags free; wfq deterministic; report appended only"
 # fmt/clippy are advisory gates: present in some toolchain images, absent in
 # minimal ones. Fail on findings, skip cleanly when the component is missing.
 if cargo fmt --version >/dev/null 2>&1; then

@@ -380,6 +380,7 @@ fn main() {
                 arrival: 0.0,
                 prompt_len: 64,
                 output_len: 4,
+                tenant: 0,
             });
         }
         for (i, r) in base.iter().enumerate() {

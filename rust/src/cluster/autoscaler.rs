@@ -19,6 +19,26 @@ use crate::costmodel::CostModel;
 use crate::engine::common::chunk_attn_pairs;
 use crate::engine::EngineCfg;
 
+/// What the autoscaler optimizes for when sizing the fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ScaleObjective {
+    /// Track demand at `target_util` of predicted per-replica capacity
+    /// (the original behavior).
+    #[default]
+    Utilization,
+    /// DistServe-style goodput per cost: pay for a marginal replica only
+    /// once demand actually claims a `goodput_margin` fraction of it.
+    /// With demand d (in replica-rate units) and margin m, the target is
+    /// the smallest n with `d < n + m` — i.e. replica n+1 is added only
+    /// when the fleet would otherwise run its last replica past m of its
+    /// full (not utilization-derated) predicted rate. Maximizes
+    /// goodput-per-replica-second instead of tracking a utilization
+    /// set-point; compare via [`ClusterMetrics::goodput_per_cost`].
+    ///
+    /// [`ClusterMetrics::goodput_per_cost`]: crate::cluster::ClusterMetrics::goodput_per_cost
+    GoodputPerCost,
+}
+
 /// Autoscaler parameters.
 #[derive(Debug, Clone, Copy)]
 pub struct AutoscalerCfg {
@@ -42,6 +62,12 @@ pub struct AutoscalerCfg {
     pub backlog_per_replica: usize,
     /// EWMA weight on the newest arrival-rate sample.
     pub ewma: f64,
+    /// What the sizing formula optimizes (see [`ScaleObjective`]).
+    pub objective: ScaleObjective,
+    /// [`ScaleObjective::GoodputPerCost`] only: fraction of the marginal
+    /// replica's full predicted rate that demand must claim before the
+    /// replica is worth paying for. Ignored under `Utilization`.
+    pub goodput_margin: f64,
 }
 
 impl Default for AutoscalerCfg {
@@ -56,6 +82,8 @@ impl Default for AutoscalerCfg {
             kv_low: 0.45,
             backlog_per_replica: 8,
             ewma: 0.5,
+            objective: ScaleObjective::Utilization,
+            goodput_margin: 0.5,
         }
     }
 }
@@ -149,8 +177,18 @@ impl Autoscaler {
         };
         self.ticks += 1;
 
-        let capacity = (self.cfg.target_util * self.replica_rate).max(1e-9);
-        let demand = (self.rate_ewma / capacity).ceil() as usize;
+        let demand = match self.cfg.objective {
+            ScaleObjective::Utilization => {
+                let capacity = (self.cfg.target_util * self.replica_rate).max(1e-9);
+                (self.rate_ewma / capacity).ceil() as usize
+            }
+            ScaleObjective::GoodputPerCost => {
+                // Smallest n with d < n + m (see `ScaleObjective`): the
+                // marginal replica must earn its cost in claimed capacity.
+                let d = self.rate_ewma / self.replica_rate.max(1e-9);
+                ((d - self.cfg.goodput_margin).floor() as i64 + 1).max(1) as usize
+            }
+        };
         let mut target = demand.clamp(self.cfg.min_replicas, self.cfg.max_replicas);
 
         // KV-pressure relief: grow even when the demand estimate disagrees.
@@ -257,6 +295,69 @@ mod tests {
             max_kv: 0.95,
         };
         assert_eq!(a.decide(&o), Some(3), "watermark breach must add a replica");
+    }
+
+    #[test]
+    fn goodput_objective_sizes_leaner_than_utilization() {
+        let gcfg = AutoscalerCfg {
+            objective: ScaleObjective::GoodputPerCost,
+            goodput_margin: 0.5,
+            ..AutoscalerCfg::default()
+        };
+        // 10 req/s at 4 req/s per replica → d = 2.5. Utilization mode asks
+        // for ceil(2.5 / 0.75) = 4; goodput-per-cost pays for the third
+        // replica only because d = 2.5 ≥ 2 + 0.5 — exactly at the margin.
+        let mut u = scaler(AutoscalerCfg::default());
+        assert_eq!(u.decide(&obs(100.0, 10.0, 1)), Some(4));
+        let mut g = scaler(gcfg);
+        assert_eq!(g.decide(&obs(100.0, 10.0, 1)), Some(3), "margin-priced sizing");
+        // Just below the margin (d = 2.25 < 2.5): the marginal replica is
+        // not worth its cost, so the fleet stays at two.
+        let mut h = scaler(gcfg);
+        assert_eq!(h.decide(&obs(100.0, 9.0, 1)), Some(2));
+    }
+
+    #[test]
+    fn goodput_objective_keeps_min_fleet_when_idle() {
+        let gcfg = AutoscalerCfg {
+            objective: ScaleObjective::GoodputPerCost,
+            min_replicas: 1,
+            ..AutoscalerCfg::default()
+        };
+        let mut g = scaler(gcfg);
+        // Zero demand: d − m is negative, target still clamps to one.
+        assert_eq!(g.decide(&obs(0.0, 0.0, 2)), Some(1));
+    }
+
+    #[test]
+    fn goodput_objective_respects_kv_relief_and_veto() {
+        let gcfg = AutoscalerCfg {
+            objective: ScaleObjective::GoodputPerCost,
+            ..AutoscalerCfg::default()
+        };
+        // KV pressure overrides the lean sizing, exactly as in
+        // utilization mode.
+        let mut g = scaler(gcfg);
+        let hot = FleetObs {
+            now: 50.0,
+            arrival_rate: 0.5,
+            active_replicas: 2,
+            total_pending: 0,
+            mean_kv: 0.9,
+            max_kv: 0.95,
+        };
+        assert_eq!(g.decide(&hot), Some(3));
+        // Backlog vetoes shrink under either objective.
+        let mut h = scaler(gcfg);
+        let loaded = FleetObs {
+            now: 50.0,
+            arrival_rate: 0.0,
+            active_replicas: 4,
+            total_pending: 100,
+            mean_kv: 0.1,
+            max_kv: 0.2,
+        };
+        assert_eq!(h.decide(&loaded), None);
     }
 
     #[test]

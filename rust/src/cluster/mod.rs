@@ -72,20 +72,20 @@ pub mod parallel;
 pub mod replica;
 pub mod router;
 
-pub use autoscaler::{Autoscaler, AutoscalerCfg, FleetObs};
+pub use autoscaler::{Autoscaler, AutoscalerCfg, FleetObs, ScaleObjective};
 pub use parallel::{
     plan_rebalance, Arrivals, ParallelCfg, SliceArrivals, StealCfg, StreamArrivals,
 };
 pub use replica::{Replica, ReplicaState};
-pub use router::{ReplicaView, Router, RoutingPolicy};
+pub use router::{ReplicaView, Router, RoutingPolicy, TenantGate, WfqCfg};
 
 use crate::costmodel::calibrate;
 use crate::engine::common::ArrivalFeed;
 use crate::engine::{Engine, EngineCfg, EngineKind};
-use crate::metrics::{Histogram, RunMetrics, Summary};
+use crate::metrics::{Histogram, RunMetrics, Summary, TenantSummary};
 use crate::trace::{EventKind, Sampler, Tracer, FLEET};
 use crate::util::f64_total_key;
-use crate::workload::Request;
+use crate::workload::{Request, TenantSpec};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
@@ -99,6 +99,12 @@ pub struct ClusterCfg {
     pub replicas: usize,
     pub policy: RoutingPolicy,
     pub autoscale: Option<AutoscalerCfg>,
+    /// Multi-tenant admission: a weighted-fair-queueing gate with
+    /// per-tenant quotas in front of the router (see
+    /// [`router::TenantGate`]). `None` keeps the single-queue fast path
+    /// untouched — every loop, sequential and parallel, is byte-for-byte
+    /// the pre-tenant code when this is off.
+    pub wfq: Option<WfqCfg>,
 }
 
 impl ClusterCfg {
@@ -109,7 +115,7 @@ impl ClusterCfg {
         policy: RoutingPolicy,
     ) -> Self {
         assert!(replicas >= 1, "a cluster needs at least one replica");
-        ClusterCfg { kind, engine, replicas, policy, autoscale: None }
+        ClusterCfg { kind, engine, replicas, policy, autoscale: None, wfq: None }
     }
 }
 
@@ -235,6 +241,30 @@ impl ClusterMetrics {
             .count();
         ok as f64 / total as f64
     }
+
+    /// Per-tenant completion / SLO-attainment / goodput rows (see
+    /// [`RunMetrics::tenant_report`]). `specs` is the same table handed to
+    /// [`WfqCfg`]; pass `&[]` for single-tenant runs.
+    pub fn tenant_report(&self, specs: &[TenantSpec]) -> Vec<TenantSummary> {
+        self.fleet.tenant_report(specs)
+    }
+
+    /// DistServe-style fleet goodput: completed requests that met their
+    /// tenant's SLOs per unit virtual time ([`RunMetrics::goodput`]).
+    pub fn goodput(&self, specs: &[TenantSpec]) -> f64 {
+        self.fleet.goodput(specs)
+    }
+
+    /// Goodput per replica-second — the objective the goodput-per-cost
+    /// autoscaler mode optimizes for, reported for observability.
+    pub fn goodput_per_cost(&self, specs: &[TenantSpec]) -> f64 {
+        if self.replica_seconds <= 0.0 {
+            return 0.0;
+        }
+        // goodput is slo-ok/span, so multiplying the span back recovers the
+        // raw slo-ok count; dividing by replica-seconds prices it in cost.
+        self.goodput(specs) * self.fleet.span() / self.replica_seconds
+    }
 }
 
 /// Staleness predicate shared by every heap inspection: a popped/peeked
@@ -346,6 +376,12 @@ impl Cluster {
             return;
         }
         self.tracer.emit_for(FLEET, r.arrival, EventKind::Arrival { req: r.id });
+        self.trace_route_only(r, target, views, t);
+    }
+
+    /// The `Route` half of [`Cluster::trace_route`]; the WFQ path emits
+    /// `Arrival` at enqueue time and `TenantAdmit` + `Route` at dispatch.
+    fn trace_route_only(&self, r: &Request, target: usize, views: &[ReplicaView], t: f64) {
         let v = views.iter().find(|v| v.index as usize == target);
         self.tracer.emit_for(
             FLEET,
@@ -358,6 +394,37 @@ impl Cluster {
                 kv_usage: v.map_or(0.0, |v| v.kv_usage),
             },
         );
+    }
+
+    /// Fleet-level `Arrival` for a request entering the WFQ gate.
+    fn trace_arrival(&self, r: &Request) {
+        if self.tracer.enabled() {
+            self.tracer.emit_for(FLEET, r.arrival, EventKind::Arrival { req: r.id });
+        }
+    }
+
+    /// `TenantAdmit` + `Route` for a gate dispatch at time `t`.
+    fn trace_admit(&self, r: &Request, target: usize, views: &[ReplicaView], t: f64) {
+        if !self.tracer.enabled() {
+            return;
+        }
+        self.tracer.emit_for(
+            FLEET,
+            t,
+            EventKind::TenantAdmit { req: r.id, tenant: r.tid() },
+        );
+        self.trace_route_only(r, target, views, t);
+    }
+
+    /// `TenantThrottle` for a request the gate held back at time `t`.
+    fn trace_throttle(&self, req: usize, tenant: u16, queued: usize, t: f64) {
+        if self.tracer.enabled() {
+            self.tracer.emit_for(
+                FLEET,
+                t,
+                EventKind::TenantThrottle { req, tenant: tenant as usize, queued },
+            );
+        }
     }
 
     fn active_views(&self) -> Vec<ReplicaView> {
@@ -429,10 +496,23 @@ impl Cluster {
         let mut views_buf: Vec<ReplicaView> = Vec::new();
         let mut kv_buf: Vec<f64> = Vec::new();
 
+        // Multi-tenant WFQ admission gate (`None` → untagged fast path,
+        // byte-for-byte the pre-tenant loop). `wfq_ready_at` is the gate's
+        // pseudo-event: completions at `t` freed quota/capacity slots while
+        // arrivals were still queued, so the next iteration re-enters the
+        // dispatch loop at the same virtual instant — pure virtual-time
+        // state, never wall clock, so all three loops replay it exactly.
+        let mut gate = cfg.wfq.clone().map(TenantGate::new);
+        let mut wfq_ready_at: Option<f64> = None;
+        let mut held: Vec<(usize, u16)> = Vec::new();
+
         prime_new_replicas(&mut key_of, &mut primed, self.replicas.len());
 
         loop {
-            if feed.exhausted() && pending_total == 0 {
+            if feed.exhausted()
+                && pending_total == 0
+                && gate.as_ref().map_or(true, |g| g.queued() == 0)
+            {
                 break;
             }
 
@@ -461,11 +541,17 @@ impl Cluster {
             if let Some(tick) = next_tick {
                 t = t.min(tick);
             }
+            if let Some(w) = wfq_ready_at {
+                t = t.min(w);
+            }
             if !t.is_finite() {
                 t = self.replicas.iter().map(|r| r.eng.now()).fold(last_t, f64::max);
             }
             if t > cfg.engine.max_virtual_time {
                 break;
+            }
+            if wfq_ready_at.is_some_and(|w| w <= t) {
+                wfq_ready_at = None;
             }
             self.trace_samples(&mut sampler, t);
 
@@ -479,25 +565,61 @@ impl Cluster {
 
             stepped.clear();
 
-            // Route arrivals due at t. Views are rebuilt per arrival (into
-            // the reused buffer) so load-aware policies see same-instant
-            // dispatches.
-            for r in feed.pop_until(t) {
-                views_buf.clear();
-                views_buf.extend(
-                    self.replicas.iter().filter(|x| x.is_active()).map(|x| x.view()),
-                );
-                let target = self.router.route(&views_buf, r);
-                self.trace_route(r, target, &views_buf, t);
-                // Replicas are never removed from the vec (only retired in
-                // place), so fleet position == replica id.
-                let rep = &mut self.replicas[target];
-                debug_assert_eq!(rep.id, target);
-                rep.eng.inject(*r);
-                rep.routed += 1;
-                pending_total += 1;
-                arrivals_since_tick += 1;
-                stepped.push(target);
+            match gate.as_mut() {
+                // Route arrivals due at t. Views are rebuilt per arrival
+                // (into the reused buffer) so load-aware policies see
+                // same-instant dispatches.
+                None => {
+                    for r in feed.pop_until(t) {
+                        views_buf.clear();
+                        views_buf.extend(
+                            self.replicas.iter().filter(|x| x.is_active()).map(|x| x.view()),
+                        );
+                        let target = self.router.route(&views_buf, r);
+                        self.trace_route(r, target, &views_buf, t);
+                        // Replicas are never removed from the vec (only
+                        // retired in place), so fleet position == replica id.
+                        let rep = &mut self.replicas[target];
+                        debug_assert_eq!(rep.id, target);
+                        rep.eng.inject(*r);
+                        rep.routed += 1;
+                        pending_total += 1;
+                        arrivals_since_tick += 1;
+                        stepped.push(target);
+                    }
+                }
+                // Multi-tenant path: arrivals enter the WFQ gate, which
+                // decides dispatch order (virtual-time fair queueing) and
+                // admission (per-tenant quota + global capacity). The
+                // dispatch loop also runs when a completion re-armed the
+                // gate at this instant with no new arrivals.
+                Some(g) => {
+                    held.clear();
+                    for r in feed.pop_until(t) {
+                        self.trace_arrival(r);
+                        g.push(*r);
+                        arrivals_since_tick += 1;
+                        held.push((r.id, r.tenant));
+                    }
+                    while let Some(r) = g.pop_next() {
+                        views_buf.clear();
+                        views_buf.extend(
+                            self.replicas.iter().filter(|x| x.is_active()).map(|x| x.view()),
+                        );
+                        let target = self.router.route(&views_buf, &r);
+                        self.trace_admit(&r, target, &views_buf, t);
+                        let rep = &mut self.replicas[target];
+                        debug_assert_eq!(rep.id, target);
+                        rep.eng.inject(r);
+                        rep.routed += 1;
+                        pending_total += 1;
+                        stepped.push(target);
+                        held.retain(|&(id, _)| id != r.id);
+                    }
+                    for &(id, tenant) in &held {
+                        self.trace_throttle(id, tenant, g.queued_for(tenant), t);
+                    }
+                }
             }
 
             // Pop every replica whose event is due at t.
@@ -526,6 +648,7 @@ impl Cluster {
             stepped.sort_unstable();
             stepped.dedup();
             let mut drained_any = false;
+            let mut gate_freed = false;
             for &i in &stepped {
                 let rep = &mut self.replicas[i];
                 if !rep.in_service() {
@@ -533,6 +656,19 @@ impl Cluster {
                 }
                 let out = rep.eng.step(t);
                 pending_total -= out.completed;
+                if let Some(g) = gate.as_mut() {
+                    // Diff the engine's record log to learn which tenants
+                    // just released in-flight slots (O(new completions);
+                    // the cursor is never advanced when the gate is off).
+                    let n = rep.eng.records().len();
+                    if n > rep.records_seen {
+                        for rec in &rep.eng.records()[rep.records_seen..] {
+                            g.on_complete(rec.tenant);
+                        }
+                        rep.records_seen = n;
+                        gate_freed = true;
+                    }
+                }
                 match rep.eng.next_event() {
                     Some(e) => {
                         if key_of[i].is_nan() {
@@ -554,6 +690,12 @@ impl Cluster {
                 if rep.drained() {
                     drained_any = true;
                 }
+            }
+
+            // Completions freed gate slots while arrivals are still held:
+            // re-enter the dispatch loop at this same virtual instant.
+            if gate_freed && gate.as_ref().is_some_and(|g| g.backlogged()) {
+                wfq_ready_at = Some(t);
             }
 
             // Autoscaler tick: observe the post-step fleet, maybe act.
@@ -644,6 +786,18 @@ impl Cluster {
                 // Nothing schedulable fleet-wide and nothing will arrive.
                 break;
             }
+            if live_events == 0
+                && feed.exhausted()
+                && pending_total == 0
+                && wfq_ready_at.is_none()
+                && gate.as_ref().is_some_and(|g| g.queued() > 0)
+            {
+                // Gate wedged: a zero-quota / zero-capacity config can hold
+                // requests forever with nothing in flight to free a slot.
+                // Held requests count as timeouts like any other
+                // never-completed request.
+                break;
+            }
         }
 
         // Collect the survivors, syncing each engine to the loop's final
@@ -724,9 +878,18 @@ impl Cluster {
         let mut next_id = n0;
         let mut events = 0usize;
 
+        // WFQ gate state, mirroring Cluster::run — the reference loop must
+        // make identical admission decisions at identical virtual times.
+        let mut gate = cfg.wfq.clone().map(TenantGate::new);
+        let mut wfq_ready_at: Option<f64> = None;
+        let mut held: Vec<(usize, u16)> = Vec::new();
+
         loop {
             let pending: usize = self.replicas.iter().map(|r| r.eng.pending()).sum();
-            if feed.exhausted() && pending == 0 {
+            if feed.exhausted()
+                && pending == 0
+                && gate.as_ref().map_or(true, |g| g.queued() == 0)
+            {
                 break;
             }
 
@@ -744,11 +907,17 @@ impl Cluster {
             if let Some(tick) = next_tick {
                 t = t.min(tick);
             }
+            if let Some(w) = wfq_ready_at {
+                t = t.min(w);
+            }
             if !t.is_finite() {
                 t = self.replicas.iter().map(|r| r.eng.now()).fold(last_t, f64::max);
             }
             if t > cfg.engine.max_virtual_time {
                 break;
+            }
+            if wfq_ready_at.is_some_and(|w| w <= t) {
+                wfq_ready_at = None;
             }
             self.trace_samples(&mut sampler, t);
 
@@ -758,27 +927,72 @@ impl Cluster {
             last_t = t;
             events += 1;
 
-            // Route arrivals due at t. Views are rebuilt per arrival so
-            // load-aware policies see same-instant dispatches.
-            for r in feed.pop_until(t) {
-                let views = self.active_views();
-                let target = self.router.route(&views, r);
-                self.trace_route(r, target, &views, t);
-                // Replicas are never removed from the vec (only retired in
-                // place), so fleet position == replica id.
-                let rep = &mut self.replicas[target];
-                debug_assert_eq!(rep.id, target);
-                rep.eng.inject(*r);
-                rep.routed += 1;
-                arrivals_since_tick += 1;
+            match gate.as_mut() {
+                // Route arrivals due at t. Views are rebuilt per arrival so
+                // load-aware policies see same-instant dispatches.
+                None => {
+                    for r in feed.pop_until(t) {
+                        let views = self.active_views();
+                        let target = self.router.route(&views, r);
+                        self.trace_route(r, target, &views, t);
+                        // Replicas are never removed from the vec (only
+                        // retired in place), so fleet position == replica id.
+                        let rep = &mut self.replicas[target];
+                        debug_assert_eq!(rep.id, target);
+                        rep.eng.inject(*r);
+                        rep.routed += 1;
+                        arrivals_since_tick += 1;
+                    }
+                }
+                // Multi-tenant path: identical gate protocol to
+                // Cluster::run — enqueue, WFQ dispatch, throttle trail.
+                Some(g) => {
+                    held.clear();
+                    for r in feed.pop_until(t) {
+                        self.trace_arrival(r);
+                        g.push(*r);
+                        arrivals_since_tick += 1;
+                        held.push((r.id, r.tenant));
+                    }
+                    while let Some(r) = g.pop_next() {
+                        let views = self.active_views();
+                        let target = self.router.route(&views, &r);
+                        self.trace_admit(&r, target, &views, t);
+                        let rep = &mut self.replicas[target];
+                        debug_assert_eq!(rep.id, target);
+                        rep.eng.inject(r);
+                        rep.routed += 1;
+                        held.retain(|&(id, _)| id != r.id);
+                    }
+                    for &(id, tenant) in &held {
+                        self.trace_throttle(id, tenant, g.queued_for(tenant), t);
+                    }
+                }
             }
 
             // Step every in-service replica to the global event time (never
             // past any replica's own next event, by construction of t).
             let mut any_busy = false;
+            let mut gate_freed = false;
             for rep in self.replicas.iter_mut().filter(|r| r.in_service()) {
                 let out = rep.eng.step(t);
                 any_busy |= out.busy;
+                if let Some(g) = gate.as_mut() {
+                    let n = rep.eng.records().len();
+                    if n > rep.records_seen {
+                        for rec in &rep.eng.records()[rep.records_seen..] {
+                            g.on_complete(rec.tenant);
+                        }
+                        rep.records_seen = n;
+                        gate_freed = true;
+                    }
+                }
+            }
+
+            // Completions freed gate slots while arrivals are still held:
+            // re-enter the dispatch loop at this same virtual instant.
+            if gate_freed && gate.as_ref().is_some_and(|g| g.backlogged()) {
+                wfq_ready_at = Some(t);
             }
 
             // Autoscaler tick: observe the post-step fleet, maybe act.
@@ -821,6 +1035,16 @@ impl Cluster {
             let pending_after: usize = self.replicas.iter().map(|r| r.eng.pending()).sum();
             if !any_busy && feed.exhausted() && pending_after > 0 {
                 // Nothing schedulable fleet-wide and nothing will arrive.
+                break;
+            }
+            if !any_busy
+                && feed.exhausted()
+                && pending_after == 0
+                && wfq_ready_at.is_none()
+                && gate.as_ref().is_some_and(|g| g.queued() > 0)
+            {
+                // Gate wedged (zero-quota/zero-capacity config) — mirror
+                // the event-queue loop's bail-out; held requests time out.
                 break;
             }
         }

@@ -127,7 +127,7 @@
 
 use super::autoscaler::{Autoscaler, FleetObs};
 use super::replica::{Replica, ReplicaState};
-use super::router::{ReplicaView, Router};
+use super::router::{ReplicaView, Router, TenantGate};
 use super::{Cluster, ClusterCfg, ClusterMetrics, ReplicaStats, ScaleEvent};
 use crate::costmodel::calibrate;
 use crate::engine::common::ArrivalFeed;
@@ -397,6 +397,11 @@ struct RoundCmd {
     /// round)` of owned in-service replicas, both in id order.
     views_buf: Vec<ReplicaView>,
     loads_buf: Vec<(u32, u32)>,
+    /// Tenant label of every request completed this round (WFQ feedback;
+    /// filled only when `ClusterCfg::wfq` is set). The coordinator drains
+    /// it into the gate's in-flight accounts — a commutative count, so the
+    /// shard merge order cannot affect admission decisions.
+    dones_buf: Vec<u16>,
 }
 
 impl RoundCmd {
@@ -413,6 +418,7 @@ impl RoundCmd {
         self.prime_ids.clear();
         self.views_buf.clear();
         self.loads_buf.clear();
+        self.dones_buf.clear();
         self.drain_t = 0.0;
         self.prime_t = f64::NAN;
         self.horizon = 0.0;
@@ -462,6 +468,21 @@ fn find(bin: &[Replica], id: usize) -> usize {
     bin.binary_search_by_key(&id, |r| r.id).expect("replica owned by this shard")
 }
 
+/// Record the tenant labels of any completions `rep` produced since the
+/// last harvest (WFQ completion feedback). Must run before a retire, which
+/// drains the record log and resets the cursor. Only called when
+/// `ClusterCfg::wfq` is set — the cursor never advances otherwise.
+#[inline]
+fn harvest_tenant_dones(rep: &mut Replica, dones: &mut Vec<u16>) {
+    let n = rep.eng.records().len();
+    if n > rep.records_seen {
+        for rec in &rep.eng.records()[rep.records_seen..] {
+            dones.push(rec.tenant);
+        }
+        rep.records_seen = n;
+    }
+}
+
 /// Worker thread body: owns one shard of replicas and executes rounds
 /// until [`Cmd::Finish`].
 fn worker_loop(
@@ -471,9 +492,13 @@ fn worker_loop(
     cfg: ClusterCfg,
 ) -> WorkerOut {
     let max_vt = cfg.engine.max_virtual_time;
+    let wfq = cfg.wfq.is_some();
     let mut bin: Vec<Replica> = Vec::new();
     let mut done: Vec<(f64, usize, RunMetrics)> = Vec::new();
     let mut set: Vec<usize> = Vec::new();
+    // Tenant labels of this round's completions (swapped into the report's
+    // `dones_buf` in phase 6; stays empty when multi-tenancy is off).
+    let mut dones: Vec<u16> = Vec::new();
 
     loop {
         match rx.recv() {
@@ -551,6 +576,9 @@ fn worker_loop(
                                 completed += out.completed;
                                 steps += 1;
                                 rep.round_steps += 1;
+                                if wfq && out.completed > 0 {
+                                    harvest_tenant_dones(rep, &mut dones);
+                                }
                                 if e > max_t {
                                     max_t = e;
                                 }
@@ -597,6 +625,9 @@ fn worker_loop(
                         completed += out.completed;
                         steps += 1;
                         rep.round_steps += 1;
+                        if wfq && out.completed > 0 {
+                            harvest_tenant_dones(rep, &mut dones);
+                        }
                         if rep.drained() {
                             tracer.emit_for(rep.id as u32, t, EventKind::ReplicaRetire);
                             done.push((t, rep.id, rep.retire(t)));
@@ -615,6 +646,9 @@ fn worker_loop(
                             completed += out.completed;
                             steps += 1;
                             bin[i].round_steps += 1;
+                            if wfq && out.completed > 0 {
+                                harvest_tenant_dones(&mut bin[i], &mut dones);
+                            }
                             if tp > max_t {
                                 max_t = tp;
                             }
@@ -636,6 +670,9 @@ fn worker_loop(
                         completed += out.completed;
                         steps += 1;
                         rep.round_steps += 1;
+                        if wfq && out.completed > 0 {
+                            harvest_tenant_dones(rep, &mut dones);
+                        }
                         if e > max_t {
                             max_t = e;
                         }
@@ -658,6 +695,9 @@ fn worker_loop(
                         .filter(|r| r.in_service())
                         .map(|r| (r.id as u32, r.round_steps)),
                 );
+                // Hand this round's completion tenants back (recycled
+                // buffer: `rc.dones_buf` arrives cleared by reset()).
+                std::mem::swap(&mut rc.dones_buf, &mut dones);
                 let mut key_min = f64::NAN;
                 for rep in bin.iter_mut() {
                     if rep.in_service() {
@@ -814,6 +854,21 @@ impl Cluster {
         let mut kv_buf: Vec<f64> = Vec::new();
         let mut outs: Vec<WorkerOut> = Vec::new();
 
+        // Multi-tenant WFQ gate, mirroring the sequential loops. While the
+        // gate holds a backlog the loop runs in *lockstep*: boundaries
+        // include the earliest shard event (`keys_min`) and rounds stop at
+        // the boundary (horizon = B), because any completion may free a
+        // quota slot and trigger a dispatch at that exact virtual time.
+        // With no backlog, completions need no immediate dispatch and the
+        // loop free-runs exactly as the untagged fast path. `wfq_ready_at`
+        // re-enters the dispatch loop at the same instant a completion
+        // freed slots — pure virtual-time state, identical to the
+        // sequential loops' pseudo-event.
+        let mut gate = cfg.wfq.clone().map(TenantGate::new);
+        let mut wfq_ready_at: Option<f64> = None;
+        let mut throttled_buf: Vec<(usize, u16)> = Vec::new();
+        let mut round_dones = false;
+
         // Shard-scheduler state. `owner[id]` replaces the static
         // `id % threads` partition and is the single routing authority for
         // every per-replica directive. Loads are engine steps: windowed
@@ -845,8 +900,10 @@ impl Cluster {
         let mut excl: Vec<usize> = Vec::new();
         let mut moves_buf: Vec<(usize, usize, usize)> = Vec::new();
         // Rendezvous-batching scratch. Batching needs blind routing and
-        // untraced runs (per-arrival Route events pin rendezvous order).
-        let batching = steal.is_some() && !self.tracer.enabled();
+        // untraced runs (per-arrival Route events pin rendezvous order);
+        // WFQ admission is load- and completion-coupled, so gated runs
+        // always rendezvous per arrival instant.
+        let batching = steal.is_some() && !self.tracer.enabled() && cfg.wfq.is_none();
         let mut batch_times: Vec<f64> = Vec::new();
         let mut batch_inj: Vec<(u32, usize, Request)> = Vec::new();
         let mut hold_buf: Vec<Request> = Vec::new();
@@ -950,9 +1007,19 @@ impl Cluster {
                     rounds += 1;
                     views.clear();
                     keys_min = f64::NAN;
+                    round_dones = false;
                     for (w, rx) in rxs.iter().enumerate() {
                         let mut rep = rx.recv().expect("worker alive");
                         views.append(&mut rep.spent.views_buf);
+                        if let Some(g) = gate.as_mut() {
+                            // Release gate slots for this round's
+                            // completions (commutative counts — shard
+                            // order cannot affect admission decisions).
+                            for &tn in &rep.spent.dones_buf {
+                                g.on_complete(tn);
+                            }
+                            round_dones |= !rep.spent.dones_buf.is_empty();
+                        }
                         let mut wsteps = 0u64;
                         for &(id, st) in &rep.spent.loads_buf {
                             wsteps += st as u64;
@@ -993,13 +1060,34 @@ impl Cluster {
                     // owner adopts them before anything else next round —
                     // the router never loses sight of them.
                     views.sort_unstable_by_key(|v| v.index);
+                    // Completions freed gate slots with arrivals still
+                    // held: re-dispatch at the round's step time, like the
+                    // sequential loops' same-instant extra iteration.
+                    // Backlogged rounds run in lockstep (horizon = the one
+                    // step time), so these completions are exactly there.
+                    if round_dones && gate.as_ref().is_some_and(|g| g.backlogged()) {
+                        if let Some(&bt) = times.last() {
+                            wfq_ready_at = Some(bt);
+                        }
+                    }
                 }};
             }
 
             // Workers have processed every event strictly below cur_h.
             let mut cur_h = 0.0f64;
             loop {
-                if held.is_empty() && arrivals.exhausted() && pending_total == 0 {
+                // A gated run must not stop while requests sit in the gate
+                // with a re-dispatch armed; a gate holding requests with
+                // nothing armed and nothing in flight is wedged
+                // (zero-quota/zero-capacity config) and bails out exactly
+                // like the sequential loops — held requests time out.
+                if held.is_empty()
+                    && arrivals.exhausted()
+                    && pending_total == 0
+                    && gate
+                        .as_ref()
+                        .map_or(true, |g| g.queued() == 0 || wfq_ready_at.is_none())
+                {
                     // Apply directives left by a just-decided scale action
                     // (empty victims must still retire at the decision
                     // time, as in the sequential retire scan).
@@ -1011,6 +1099,9 @@ impl Cluster {
 
                 // Next interaction boundary: earliest arrival (a held
                 // group, by construction, precedes the stream) or tick.
+                // A backlogged gate adds the earliest shard event — any
+                // completion may free a slot and force a dispatch there —
+                // and an armed re-dispatch instant.
                 let mut b = f64::INFINITY;
                 if let Some(r) = held.first() {
                     b = b.min(r.arrival);
@@ -1019,6 +1110,12 @@ impl Cluster {
                 }
                 if let Some(tk) = next_tick {
                     b = b.min(tk);
+                }
+                if gate.as_ref().is_some_and(|g| g.backlogged()) && !keys_min.is_nan() {
+                    b = b.min(keys_min);
+                }
+                if let Some(w) = wfq_ready_at {
+                    b = b.min(w);
                 }
 
                 if !b.is_finite() || b > max_vt {
@@ -1060,6 +1157,13 @@ impl Cluster {
                 // per arrival exactly like the sequential loop (injections
                 // bump only the target's pending; KV moves only on steps).
                 let is_tick = next_tick.is_some_and(|tk| b + 1e-12 >= tk);
+                // An armed re-dispatch is consumed by this boundary round:
+                // the dispatch loop below drains whatever the freed slots
+                // now admit. (The round may re-arm it at this same instant
+                // if its completions free further slots.)
+                if wfq_ready_at.is_some_and(|w| w <= b) {
+                    wfq_ready_at = None;
+                }
                 if held.first().is_some_and(|r| r.arrival <= b) {
                     arr_buf.clear();
                     arr_buf.append(&mut held);
@@ -1069,16 +1173,48 @@ impl Cluster {
                 batch_times.clear();
                 batch_inj.clear();
                 batch_times.push(b);
-                for r in &arr_buf {
-                    let target = self.router.route(&views, r);
-                    self.trace_route(r, target, &views, b);
-                    if let Ok(pos) = views.binary_search_by_key(&(target as u32), |v| v.index)
-                    {
-                        views[pos].pending += 1;
+                match gate.as_mut() {
+                    None => {
+                        for r in &arr_buf {
+                            let target = self.router.route(&views, r);
+                            self.trace_route(r, target, &views, b);
+                            if let Ok(pos) =
+                                views.binary_search_by_key(&(target as u32), |v| v.index)
+                            {
+                                views[pos].pending += 1;
+                            }
+                            batch_inj.push((0, target, *r));
+                            pending_total += 1;
+                            arrivals_since_tick += 1;
+                        }
                     }
-                    batch_inj.push((0, target, *r));
-                    pending_total += 1;
-                    arrivals_since_tick += 1;
+                    Some(g) => {
+                        // Tenant gate: enqueue every arrival, then dispatch
+                        // in virtual-finish order as quota/capacity allow —
+                        // identical to the sequential loops' protocol.
+                        throttled_buf.clear();
+                        for r in &arr_buf {
+                            self.trace_arrival(r);
+                            g.push(*r);
+                            arrivals_since_tick += 1;
+                            throttled_buf.push((r.id, r.tenant));
+                        }
+                        while let Some(r) = g.pop_next() {
+                            let target = self.router.route(&views, &r);
+                            self.trace_admit(&r, target, &views, b);
+                            if let Ok(pos) =
+                                views.binary_search_by_key(&(target as u32), |v| v.index)
+                            {
+                                views[pos].pending += 1;
+                            }
+                            batch_inj.push((0, target, r));
+                            pending_total += 1;
+                            throttled_buf.retain(|&(id, _)| id != r.id);
+                        }
+                        for &(id, tenant) in throttled_buf.iter() {
+                            self.trace_throttle(id, tenant, g.queued_for(tenant), b);
+                        }
+                    }
                 }
                 let step_primed = if !primed.is_empty() && prime_t == b {
                     std::mem::take(&mut primed)
@@ -1195,6 +1331,12 @@ impl Cluster {
                             if !keys_min.is_nan() {
                                 prime_t = prime_t.min(keys_min);
                             }
+                            // The sequential loop primes spawned replicas
+                            // at the next processed event, which can be the
+                            // gate's same-instant re-dispatch iteration.
+                            if let Some(w) = wfq_ready_at {
+                                prime_t = prime_t.min(w);
+                            }
                         } else {
                             // Drain the least-loaded actives (same
                             // (pending, id) order as the sequential
@@ -1230,7 +1372,19 @@ impl Cluster {
                     if let Some(tk) = next_tick {
                         nb = nb.min(tk);
                     }
-                    let h = if window > 0.0 { (b + window).min(nb) } else { nb };
+                    // Backlogged gate ⇒ lockstep: the horizon stays at the
+                    // boundary so no completion beyond it is processed
+                    // before the coordinator can turn it into a dispatch.
+                    // Slower (one no-op advance round per internal event)
+                    // but required for digest parity with the sequential
+                    // loops; free-running resumes once the gate drains.
+                    let h = if gate.as_ref().is_some_and(|g| g.backlogged()) {
+                        b
+                    } else if window > 0.0 {
+                        (b + window).min(nb)
+                    } else {
+                        nb
+                    };
                     round!(&batch_times, &batch_inj, &step_primed, h);
                     cur_h = h;
                 }

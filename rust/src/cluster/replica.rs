@@ -30,6 +30,12 @@ pub struct Replica {
     /// the replica so the counter migrates with it — purely observational,
     /// never read by the engine. Unused (zero) in the sequential loop.
     pub round_steps: u32,
+    /// How many completion records the cluster loop has already observed
+    /// via [`Engine::records`]. The WFQ gate diffs `records()[records_seen..]`
+    /// after each step to learn which tenants released in-flight slots.
+    /// Zero cost when multi-tenancy is off (the cursor is simply never
+    /// advanced). Reset on retire: `take_metrics` drains the record vec.
+    pub records_seen: usize,
 }
 
 impl Replica {
@@ -42,6 +48,7 @@ impl Replica {
             started_at: now,
             retired_at: None,
             round_steps: 0,
+            records_seen: 0,
         }
     }
 
@@ -88,6 +95,7 @@ impl Replica {
         debug_assert!(self.state != ReplicaState::Retired, "double retire");
         self.state = ReplicaState::Retired;
         self.retired_at = Some(now);
+        self.records_seen = 0;
         self.eng.take_metrics()
     }
 }
@@ -105,7 +113,7 @@ mod tests {
         assert!(rep.is_active() && rep.in_service());
         assert_eq!(rep.view().index, 3);
         assert_eq!(rep.view().pending, 0);
-        rep.eng.inject(Request { id: 0, arrival: 0.0, prompt_len: 64, output_len: 2 });
+        rep.eng.inject(Request { id: 0, arrival: 0.0, prompt_len: 64, output_len: 2, tenant: 0 });
         assert_eq!(rep.view().pending, 1);
         rep.drain();
         assert!(!rep.is_active() && rep.in_service());

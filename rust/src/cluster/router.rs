@@ -7,8 +7,8 @@
 //! mode switching) to locality-aware (session affinity, which keeps a
 //! simulated user's traffic on one replica so prefix caches stay warm).
 
-use crate::workload::Request;
-use std::collections::HashMap;
+use crate::workload::{Request, TenantSpec};
+use std::collections::{HashMap, VecDeque};
 
 /// Simulated concurrent sessions for [`RoutingPolicy::SessionAffinity`]:
 /// request ids are interleaved round-robin across this many users.
@@ -194,12 +194,185 @@ impl Router {
     }
 }
 
+/// Multi-tenant admission config: a weighted-fair-queueing front stage in
+/// front of the router (see [`TenantGate`]). `None` in
+/// [`crate::cluster::ClusterCfg`] keeps the untagged single-queue fast path
+/// byte-for-byte identical — the gate is pay-for-what-you-use.
+#[derive(Debug, Clone)]
+pub struct WfqCfg {
+    /// Per-tenant weights / SLOs / quotas; requests carry an index into
+    /// this table ([`Request::tenant`]). Labels past the end are clamped
+    /// to the last entry (deterministic, never drops traffic).
+    pub tenants: Vec<TenantSpec>,
+    /// Fleet-wide cap on admitted-but-unfinished requests across all
+    /// tenants. `usize::MAX` disables the global cap (quotas still apply).
+    pub capacity: usize,
+}
+
+impl WfqCfg {
+    pub fn new(tenants: Vec<TenantSpec>) -> Self {
+        WfqCfg { tenants, capacity: usize::MAX }
+    }
+
+    pub fn with_capacity(mut self, capacity: usize) -> Self {
+        self.capacity = capacity;
+        self
+    }
+
+    /// `n` tenants with default (uniform) specs.
+    pub fn uniform(n: usize) -> Self {
+        WfqCfg::new(vec![TenantSpec::default(); n.max(1)])
+    }
+}
+
+/// One tenant's FIFO inside the gate.
+#[derive(Debug)]
+struct TenantQueue {
+    /// Held arrivals, each stamped with its WFQ virtual finish tag.
+    q: VecDeque<(Request, f64)>,
+    /// Admitted-but-unfinished requests charged to this tenant.
+    inflight: usize,
+    /// Virtual finish tag of the tenant's most recently stamped request;
+    /// chains back-to-back arrivals so a tenant's backlog is served at
+    /// exactly its weight share.
+    last_vfinish: f64,
+}
+
+/// Weighted-fair-queueing admission gate: the cluster's multi-tenant front
+/// stage, sitting *before* the [`Router`] (which still picks the replica).
+///
+/// Classic virtual-time WFQ with unit request cost: an arrival from tenant
+/// `k` is stamped `vfinish = max(vtime, k.last_vfinish) + 1/weight_k`, and
+/// the gate always dispatches the eligible head with the smallest
+/// `(vfinish, tenant index)` — the index tie-break keeps every decision
+/// deterministic. A head is *eligible* when its tenant is under its
+/// admission quota and the fleet is under the global capacity cap.
+///
+/// Determinism contract (shared with both fleet loops): the gate is a pure
+/// function of the arrival sequence and completion callbacks — virtual
+/// time only, never wall clock — so sequential, reference, and parallel
+/// loops drive identical gates to identical decisions.
+#[derive(Debug)]
+pub struct TenantGate {
+    cfg: WfqCfg,
+    queues: Vec<TenantQueue>,
+    /// Admitted-but-unfinished across all tenants (vs `cfg.capacity`).
+    inflight_total: usize,
+    /// WFQ virtual time: advances to the dispatched tag on each pop.
+    vtime: f64,
+    /// Total requests held back at least once (observability only).
+    pub throttled: usize,
+}
+
+impl TenantGate {
+    pub fn new(cfg: WfqCfg) -> Self {
+        let n = cfg.tenants.len().max(1);
+        let queues = (0..n)
+            .map(|_| TenantQueue { q: VecDeque::new(), inflight: 0, last_vfinish: 0.0 })
+            .collect();
+        TenantGate { cfg, queues, inflight_total: 0, vtime: 0.0, throttled: 0 }
+    }
+
+    /// Fold a request label into the gate's tenant table (clamp past-end).
+    #[inline]
+    fn slot(&self, tenant: u16) -> usize {
+        (tenant as usize).min(self.queues.len() - 1)
+    }
+
+    #[inline]
+    fn weight(&self, slot: usize) -> f64 {
+        self.cfg.tenants.get(slot).map_or(1.0, |s| s.weight).max(1e-9)
+    }
+
+    #[inline]
+    fn quota(&self, slot: usize) -> usize {
+        self.cfg.tenants.get(slot).map_or(usize::MAX, |s| s.admission_quota)
+    }
+
+    /// Enqueue one arrival, stamping its virtual finish tag.
+    pub fn push(&mut self, req: Request) {
+        let slot = self.slot(req.tenant);
+        let vstart = self.vtime.max(self.queues[slot].last_vfinish);
+        let vfinish = vstart + 1.0 / self.weight(slot);
+        self.queues[slot].last_vfinish = vfinish;
+        self.queues[slot].q.push_back((req, vfinish));
+    }
+
+    /// Dispatch the next eligible request, if any: smallest
+    /// `(head vfinish, tenant index)` among tenants under quota, subject to
+    /// the global capacity cap. Charges the in-flight slot immediately.
+    pub fn pop_next(&mut self) -> Option<Request> {
+        if self.inflight_total >= self.cfg.capacity {
+            return None;
+        }
+        let mut best: Option<(f64, usize)> = None;
+        for (idx, tq) in self.queues.iter().enumerate() {
+            if tq.inflight >= self.quota(idx) {
+                continue;
+            }
+            if let Some(&(_, vfinish)) = tq.q.front() {
+                let better = match best {
+                    None => true,
+                    Some((bv, bi)) => vfinish < bv || (vfinish == bv && idx < bi),
+                };
+                if better {
+                    best = Some((vfinish, idx));
+                }
+            }
+        }
+        let (vfinish, idx) = best?;
+        let (req, _) = self.queues[idx].q.pop_front().expect("head just observed");
+        self.queues[idx].inflight += 1;
+        self.inflight_total += 1;
+        self.vtime = self.vtime.max(vfinish);
+        Some(req)
+    }
+
+    /// A request from `tenant` finished: release its in-flight slot.
+    pub fn on_complete(&mut self, tenant: u16) {
+        let slot = self.slot(tenant);
+        debug_assert!(self.queues[slot].inflight > 0, "complete without admit");
+        self.queues[slot].inflight = self.queues[slot].inflight.saturating_sub(1);
+        self.inflight_total = self.inflight_total.saturating_sub(1);
+    }
+
+    /// Any arrival still held back?
+    #[inline]
+    pub fn backlogged(&self) -> bool {
+        self.queues.iter().any(|tq| !tq.q.is_empty())
+    }
+
+    /// Total held-back arrivals across tenants.
+    #[inline]
+    pub fn queued(&self) -> usize {
+        self.queues.iter().map(|tq| tq.q.len()).sum()
+    }
+
+    /// Held-back arrivals for one tenant label (post-clamp).
+    #[inline]
+    pub fn queued_for(&self, tenant: u16) -> usize {
+        self.queues[self.slot(tenant)].q.len()
+    }
+
+    /// Admitted-but-unfinished requests charged to one tenant label.
+    #[inline]
+    pub fn inflight_for(&self, tenant: u16) -> usize {
+        self.queues[self.slot(tenant)].inflight
+    }
+
+    /// Admitted-but-unfinished across all tenants.
+    #[inline]
+    pub fn inflight_total(&self) -> usize {
+        self.inflight_total
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn req(id: usize) -> Request {
-        Request { id, arrival: 0.0, prompt_len: 100, output_len: 10 }
+        Request { id, arrival: 0.0, prompt_len: 100, output_len: 10, tenant: 0 }
     }
 
     fn views(loads: &[(u32, u32, f64)]) -> Vec<ReplicaView> {
@@ -291,5 +464,82 @@ mod tests {
         // ...and stays remapped afterwards.
         let v_back = views(&[(0, 0, 0.0), (1, 9, 0.0)]);
         assert_eq!(r.route(&v_back, &req(3 + 192)), 1);
+    }
+
+    fn treq(id: usize, tenant: u16) -> Request {
+        Request { id, arrival: 0.0, prompt_len: 100, output_len: 10, tenant }
+    }
+
+    fn spec(weight: f64, quota: usize) -> TenantSpec {
+        TenantSpec { weight, admission_quota: quota, ..TenantSpec::default() }
+    }
+
+    #[test]
+    fn wfq_serves_backlogs_in_weight_proportion() {
+        // Tenant 0 weight 2, tenant 1 weight 1: over a saturated backlog the
+        // dispatch order must interleave 2:1.
+        let mut g = TenantGate::new(WfqCfg::new(vec![spec(2.0, usize::MAX), spec(1.0, usize::MAX)]));
+        for i in 0..6 {
+            g.push(treq(i, 0));
+        }
+        for i in 6..9 {
+            g.push(treq(i, 1));
+        }
+        let order: Vec<u16> = std::iter::from_fn(|| g.pop_next()).map(|r| r.tenant).collect();
+        assert_eq!(order, vec![0, 0, 1, 0, 0, 1, 0, 0, 1]);
+        assert!(!g.backlogged());
+        assert_eq!(g.inflight_total(), 9, "pops charge in-flight slots");
+    }
+
+    #[test]
+    fn wfq_tie_breaks_by_tenant_index() {
+        // Equal weights, same stamp sequence: lower tenant index wins ties.
+        let mut g = TenantGate::new(WfqCfg::uniform(2));
+        g.push(treq(0, 1));
+        g.push(treq(1, 0));
+        assert_eq!(g.pop_next().unwrap().tenant, 0);
+        assert_eq!(g.pop_next().unwrap().tenant, 1);
+    }
+
+    #[test]
+    fn quota_holds_tenant_back_until_completion() {
+        let mut g = TenantGate::new(WfqCfg::new(vec![spec(1.0, 1), spec(1.0, usize::MAX)]));
+        g.push(treq(0, 0));
+        g.push(treq(1, 0));
+        g.push(treq(2, 1));
+        assert_eq!(g.pop_next().unwrap().id, 0);
+        // Tenant 0 at quota: its second request is skipped, tenant 1 runs.
+        assert_eq!(g.pop_next().unwrap().id, 2);
+        assert!(g.pop_next().is_none(), "only tenant 0 queued, and it is at quota");
+        assert_eq!(g.queued_for(0), 1);
+        assert_eq!(g.inflight_for(0), 1);
+        g.on_complete(0);
+        assert_eq!(g.pop_next().unwrap().id, 1, "completion frees the quota slot");
+    }
+
+    #[test]
+    fn capacity_caps_total_inflight() {
+        let mut g = TenantGate::new(WfqCfg::uniform(2).with_capacity(2));
+        for i in 0..4 {
+            g.push(treq(i, (i % 2) as u16));
+        }
+        assert!(g.pop_next().is_some());
+        assert!(g.pop_next().is_some());
+        assert!(g.pop_next().is_none(), "global capacity reached");
+        assert_eq!(g.queued(), 2);
+        g.on_complete(0);
+        assert!(g.pop_next().is_some());
+        assert!(g.pop_next().is_none());
+    }
+
+    #[test]
+    fn out_of_range_labels_clamp_to_last_tenant() {
+        let mut g = TenantGate::new(WfqCfg::uniform(2));
+        g.push(treq(0, 9));
+        assert_eq!(g.queued_for(1), 1, "label 9 folds into the last tenant");
+        let r = g.pop_next().unwrap();
+        assert_eq!(r.tenant, 9, "the request itself keeps its label");
+        g.on_complete(9);
+        assert_eq!(g.inflight_for(1), 0);
     }
 }

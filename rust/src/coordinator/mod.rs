@@ -4,12 +4,13 @@
 
 use crate::cluster::{
     AutoscalerCfg, Cluster, ClusterCfg, ClusterMetrics, ParallelCfg, RoutingPolicy, StealCfg,
+    WfqCfg,
 };
 use crate::engine::{run_engine, EngineCfg, EngineKind};
 use crate::metrics::{RunMetrics, Summary};
 use crate::model::ModelConfig;
 use crate::trace::Tracer;
-use crate::workload::{self, BurstyCfg, Dataset};
+use crate::workload::{self, BurstyCfg, Dataset, TenantMix};
 
 /// One experiment's shape: which model/dataset, how many requests, at what
 /// Poisson rate (requests/second).
@@ -81,6 +82,15 @@ pub struct ClusterExperiment {
     /// threshold (see `--steal-threshold` / `--balance-interval`).
     /// Output-invariant by construction.
     pub steal: Option<StealCfg>,
+    /// Tenant labels on generated arrivals (`None` leaves every request on
+    /// the default tenant 0 — arrivals are byte-identical to untagged).
+    pub tenant_mix: Option<TenantMix>,
+    /// Weighted-fair-queueing admission front: `Some` interposes the
+    /// [`TenantGate`] between arrivals and the router in all three fleet
+    /// loops (see `--wfq`).
+    ///
+    /// [`TenantGate`]: crate::cluster::TenantGate
+    pub wfq: Option<WfqCfg>,
 }
 
 impl ClusterExperiment {
@@ -94,18 +104,34 @@ impl ClusterExperiment {
             threads: 1,
             window: 0.0,
             steal: None,
+            tenant_mix: None,
+            wfq: None,
         }
     }
 
     pub fn trace(&self) -> Vec<workload::Request> {
-        match &self.bursty {
-            Some(b) => workload::generate_bursty(
+        match (&self.bursty, &self.tenant_mix) {
+            (Some(b), None) => workload::generate_bursty(
                 self.base.dataset,
                 self.base.n_requests,
                 b,
                 self.base.seed,
             ),
-            None => self.base.trace(),
+            (Some(b), Some(mix)) => workload::generate_bursty_with_tenants(
+                self.base.dataset,
+                self.base.n_requests,
+                b,
+                self.base.seed,
+                mix,
+            ),
+            (None, None) => self.base.trace(),
+            (None, Some(mix)) => workload::generate_with_tenants(
+                self.base.dataset,
+                self.base.n_requests,
+                self.base.rate,
+                self.base.seed,
+                mix,
+            ),
         }
     }
 
@@ -121,6 +147,7 @@ impl ClusterExperiment {
     pub fn run_traced(&self, kind: EngineKind, tracer: &Tracer) -> ClusterMetrics {
         let mut cfg = ClusterCfg::new(kind, self.base.cfg(), self.replicas, self.policy);
         cfg.autoscale = self.autoscale;
+        cfg.wfq = self.wfq.clone();
         let mut cluster = Cluster::new(cfg);
         cluster.tracer = tracer.clone();
         if self.threads > 1 {
@@ -287,6 +314,35 @@ mod tests {
         let m = exp.run(EngineKind::Nexus);
         assert_eq!(m.fleet.records.len() + m.fleet.timeouts, 40);
         assert!(m.peak_replicas <= 3);
+    }
+
+    #[test]
+    fn cluster_experiment_tenant_mix_and_wfq() {
+        use crate::workload::TenantSpec;
+        let base = Experiment::new(ModelConfig::qwen3b(), Dataset::ShareGpt, 30, 6.0);
+        let mut exp = ClusterExperiment::new(base, 2, RoutingPolicy::JoinShortestQueue);
+        exp.tenant_mix = Some(TenantMix::uniform(2));
+        // Tagging alone must not perturb arrivals or results.
+        let tagged = exp.trace();
+        assert!(tagged.iter().any(|r| r.tenant == 1), "mix must label tenants");
+        let untagged = ClusterExperiment::new(
+            Experiment::new(ModelConfig::qwen3b(), Dataset::ShareGpt, 30, 6.0),
+            2,
+            RoutingPolicy::JoinShortestQueue,
+        )
+        .trace();
+        for (a, b) in tagged.iter().zip(&untagged) {
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.prompt_len, b.prompt_len);
+        }
+        // WFQ front engaged: nothing lost, per-tenant report populated.
+        let specs = vec![TenantSpec::default(), TenantSpec::default()];
+        exp.wfq = Some(WfqCfg::new(specs.clone()));
+        let m = exp.run(EngineKind::Nexus);
+        assert_eq!(m.fleet.records.len() + m.fleet.timeouts, 30);
+        let rep = m.tenant_report(&specs);
+        assert_eq!(rep.len(), 2);
+        assert_eq!(rep.iter().map(|t| t.completed).sum::<usize>(), 30);
     }
 
     #[test]

@@ -77,6 +77,7 @@ impl ReqState {
     pub fn into_record(self, finish: f64) -> RequestRecord {
         RequestRecord {
             id: self.req.id,
+            tenant: self.req.tenant,
             arrival: self.req.arrival,
             first_token: if self.first_token.is_nan() { finish } else { self.first_token },
             finish,
@@ -136,7 +137,7 @@ mod tests {
     use super::*;
 
     fn req(id: usize, arrival: f64, p: u32, o: u32) -> Request {
-        Request { id, arrival, prompt_len: p, output_len: o }
+        Request { id, arrival, prompt_len: p, output_len: o, tenant: 0 }
     }
 
     #[test]

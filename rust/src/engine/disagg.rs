@@ -530,6 +530,10 @@ impl Engine for DisaggEngine {
         }
     }
 
+    fn records(&self) -> &[crate::metrics::RequestRecord] {
+        &self.metrics.records
+    }
+
     fn take_metrics(&mut self) -> RunMetrics {
         self.metrics.makespan = self.metrics.makespan.max(self.psim.now()).max(self.dsim.now());
         std::mem::take(&mut self.metrics)

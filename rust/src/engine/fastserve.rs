@@ -387,6 +387,10 @@ impl Engine for FastServeEngine {
         self.kv.usage()
     }
 
+    fn records(&self) -> &[crate::metrics::RequestRecord] {
+        &self.metrics.records
+    }
+
     fn take_metrics(&mut self) -> RunMetrics {
         std::mem::take(&mut self.metrics)
     }

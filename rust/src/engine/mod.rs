@@ -27,7 +27,7 @@ pub use nexus::NexusFlags;
 use crate::engine::common::ArrivalFeed;
 use crate::gpusim::GpuSpec;
 use crate::kv::KvCache;
-use crate::metrics::RunMetrics;
+use crate::metrics::{RequestRecord, RunMetrics};
 use crate::model::ModelConfig;
 use crate::partition::PartitionConfig;
 use crate::trace::{EngineSnapshot, EventKind, Sampler, Tracer};
@@ -216,6 +216,12 @@ pub trait Engine: Send {
     /// Live KV-cache usage `KV_u` ∈ [0, 1] (max across devices for
     /// multi-GPU engines) — the router/autoscaler pressure signal.
     fn kv_usage(&self) -> f64;
+
+    /// Completed-request records accumulated so far (appended in completion
+    /// order). The cluster layer's WFQ front stage diffs this after each
+    /// step to learn *which tenants* finished — a cursor into this slice is
+    /// O(new completions) per step and free when multi-tenancy is off.
+    fn records(&self) -> &[RequestRecord];
 
     /// Finalize run-level aggregates (partition trajectory means, makespan
     /// fixups) and hand the metrics over, leaving the engine drained.

@@ -414,6 +414,10 @@ impl Engine for MonolithicEngine {
         }
     }
 
+    fn records(&self) -> &[crate::metrics::RequestRecord] {
+        &self.metrics.records
+    }
+
     fn take_metrics(&mut self) -> RunMetrics {
         std::mem::take(&mut self.metrics)
     }

@@ -560,6 +560,10 @@ impl Engine for NexusEngine {
         }
     }
 
+    fn records(&self) -> &[crate::metrics::RequestRecord] {
+        &self.metrics.records
+    }
+
     fn take_metrics(&mut self) -> RunMetrics {
         self.metrics.repartitions = self.controller.applied_count;
         self.metrics.suppressed_repartitions = self.controller.suppressed_count;

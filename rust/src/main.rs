@@ -8,6 +8,10 @@
 //! nexus cluster    --engine nexus --replicas 4 --policy jsq [--bursty] [--autoscale]
 //!                  [--threads N] [--window S] [--steal-threshold R] [--balance-interval S]
 //!                  (sharded loop; same results for any N/S/R)
+//!                  [--tenants N | --tenant-weights a,b,..] [--wfq] [--tenant-quota Q]
+//!                  [--wfq-capacity C] [--ttft-slo S] [--tbt-slo S]
+//!                  [--objective goodput|utilization] [--goodput-margin M]
+//!                  (multi-tenant WFQ front + per-tenant SLO/goodput report)
 //! nexus throughput --engine vllm --dataset arxiv --model qwen3b --n 150
 //! nexus offline    --dataset ldc --model qwen3b --n 100
 //! nexus calibrate  [--model qwen3b]
@@ -23,7 +27,7 @@
 //! through PJRT and serves actual token traffic; everything else runs on
 //! the calibrated L20 substrate.
 
-use nexus::cluster::{AutoscalerCfg, RoutingPolicy, StealCfg};
+use nexus::cluster::{AutoscalerCfg, RoutingPolicy, ScaleObjective, StealCfg, WfqCfg};
 use nexus::coordinator::{
     offline_makespan, sustainable_throughput, ClusterExperiment, Experiment, SloSpec,
 };
@@ -35,7 +39,7 @@ use nexus::model::{ModelConfig, OpClass};
 use nexus::trace::{attribute, chrome_trace, to_jsonl, Tracer};
 use nexus::util::cli::Args;
 use nexus::util::fmt::{dur, Table};
-use nexus::workload::{self, BurstyCfg, Dataset};
+use nexus::workload::{self, BurstyCfg, Dataset, TenantMix, TenantSpec};
 
 fn main() {
     let args = Args::from_env();
@@ -195,11 +199,59 @@ fn cluster_experiment(args: &Args) -> (ClusterExperiment, EngineKind) {
         });
     }
     if args.is_set("autoscale") {
+        let objective = match args.get_or("objective", "utilization").as_str() {
+            "utilization" => ScaleObjective::Utilization,
+            "goodput" => ScaleObjective::GoodputPerCost,
+            o => panic!("unknown --objective '{o}' (utilization|goodput)"),
+        };
         exp.autoscale = Some(AutoscalerCfg {
             min_replicas: args.get_usize("min", 1),
             max_replicas: args.get_usize("max", replicas.max(2) * 2),
+            objective,
+            goodput_margin: args.get_f64("goodput-margin", 0.5),
             ..AutoscalerCfg::default()
         });
+    }
+    // Multi-tenant serving: `--tenants`/`--tenant-weights` label the
+    // workload; `--wfq` adds the weighted-fair admission front on top.
+    let weights: Option<Vec<f64>> = args.get("tenant-weights").map(|s| {
+        s.split(',')
+            .map(|w| {
+                w.trim().parse::<f64>().unwrap_or_else(|_| {
+                    panic!("--tenant-weights expects comma-separated numbers, got '{w}'")
+                })
+            })
+            .collect()
+    });
+    let n_tenants = weights.as_ref().map_or_else(|| args.get_usize("tenants", 0), Vec::len);
+    if n_tenants > 0 {
+        assert!(n_tenants <= u16::MAX as usize + 1, "too many --tenants");
+        exp.tenant_mix = Some(TenantMix::uniform(n_tenants));
+        if args.is_set("wfq") {
+            let mut specs = vec![TenantSpec::default(); n_tenants];
+            if let Some(ws) = &weights {
+                for (s, &w) in specs.iter_mut().zip(ws) {
+                    assert!(w > 0.0, "--tenant-weights must be positive");
+                    s.weight = w;
+                }
+            }
+            let quota = args.get_usize("tenant-quota", usize::MAX);
+            let ttft = args.get_f64("ttft-slo", TenantSpec::default().ttft_slo);
+            let tbt = args.get_f64("tbt-slo", TenantSpec::default().tbt_slo);
+            for s in specs.iter_mut() {
+                s.admission_quota = quota;
+                s.ttft_slo = ttft;
+                s.tbt_slo = tbt;
+            }
+            exp.wfq = Some(
+                WfqCfg::new(specs).with_capacity(args.get_usize("wfq-capacity", usize::MAX)),
+            );
+        }
+    } else {
+        assert!(
+            !args.is_set("wfq"),
+            "--wfq needs a tenant table: pass --tenants N or --tenant-weights a,b,..."
+        );
     }
     exp.threads = args.get_usize("threads", 1);
     assert!(exp.threads >= 1, "--threads must be >= 1");
@@ -273,6 +325,32 @@ fn cmd_cluster(args: &Args) {
         dur(m.ttft_hist.quantile(0.99)),
         dur(m.tbt_hist.quantile(0.95)),
     );
+    if let Some(wfq) = &exp.wfq {
+        let mut tt = Table::new(
+            "per-tenant SLO",
+            &["tenant", "weight", "done", "SLO-ok", "attainment", "goodput"],
+        );
+        for s in m.tenant_report(&wfq.tenants) {
+            let weight = wfq
+                .tenants
+                .get(s.tenant)
+                .map_or("-".to_string(), |t| format!("{:.2}", t.weight));
+            tt.row(&[
+                format!("{}", s.tenant),
+                weight,
+                format!("{}", s.completed),
+                format!("{}", s.slo_ok),
+                format!("{:.1}%", 100.0 * s.attainment),
+                format!("{:.2} req/s", s.goodput),
+            ]);
+        }
+        tt.print();
+        println!(
+            "fleet goodput {:.2} req/s | goodput/cost {:.3} req/s per replica",
+            m.goodput(&wfq.tenants),
+            m.goodput_per_cost(&wfq.tenants),
+        );
+    }
     export_trace(args, &tracer, &m.fleet);
 }
 

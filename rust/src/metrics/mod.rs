@@ -10,11 +10,14 @@ mod hist;
 pub use hist::Histogram;
 
 use crate::util::{mean, percentile};
+use crate::workload::TenantSpec;
 
 /// Per-request record accumulated by an engine run.
 #[derive(Debug, Clone)]
 pub struct RequestRecord {
     pub id: usize,
+    /// Owning tenant (mirrors `Request::tenant`; 0 for untagged workloads).
+    pub tenant: u16,
     pub arrival: f64,
     /// Time the first output token was produced (end of prefill).
     pub first_token: f64,
@@ -43,6 +46,38 @@ impl RequestRecord {
     pub fn normalized_latency(&self) -> f64 {
         self.e2e() / self.output_len.max(1) as f64
     }
+
+    /// Mean inter-token gap during decode (0.0 for single-token outputs —
+    /// a request with no decode gaps cannot violate a TBT SLO).
+    pub fn mean_tbt(&self) -> f64 {
+        if self.token_gaps.is_empty() {
+            0.0
+        } else {
+            self.token_gaps.iter().sum::<f64>() / self.token_gaps.len() as f64
+        }
+    }
+
+    /// DistServe-style goodput predicate: the request counts iff it meets
+    /// *both* latency SLOs. Boundary semantics are inclusive — a latency
+    /// exactly at the SLO meets it (pinned by the metrics edge-case tests).
+    pub fn meets_slo(&self, spec: &TenantSpec) -> bool {
+        self.ttft() <= spec.ttft_slo && self.mean_tbt() <= spec.tbt_slo
+    }
+}
+
+/// Per-tenant SLO attainment and goodput over one run's records.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TenantSummary {
+    pub tenant: usize,
+    /// Completed requests belonging to this tenant.
+    pub completed: usize,
+    /// Completed requests meeting both SLOs ([`RequestRecord::meets_slo`]).
+    pub slo_ok: usize,
+    /// `slo_ok / completed`; a tenant with no completed requests has
+    /// vacuous attainment 1.0 (it violated nothing).
+    pub attainment: f64,
+    /// SLO-meeting requests per second of run span (0.0 on an empty run).
+    pub goodput: f64,
 }
 
 /// Aggregated metrics for one engine run.
@@ -171,6 +206,50 @@ impl RunMetrics {
         h
     }
 
+    /// Per-tenant SLO attainment and goodput. The report covers
+    /// `max(specs.len(), highest observed label + 1)` tenants; records
+    /// labeled beyond `specs` are judged against [`TenantSpec::default`]
+    /// (permissive SLOs), so an untagged run with no specs reports one
+    /// all-zero-tenant row.
+    pub fn tenant_report(&self, specs: &[TenantSpec]) -> Vec<TenantSummary> {
+        let observed = self.records.iter().map(|r| r.tenant as usize + 1).max().unwrap_or(0);
+        let n = specs.len().max(observed).max(1);
+        let span = self.span();
+        let default_spec = TenantSpec::default();
+        let mut out: Vec<TenantSummary> = (0..n)
+            .map(|tenant| TenantSummary {
+                tenant,
+                completed: 0,
+                slo_ok: 0,
+                attainment: 1.0,
+                goodput: 0.0,
+            })
+            .collect();
+        for r in &self.records {
+            let t = r.tenant as usize;
+            let spec = specs.get(t).unwrap_or(&default_spec);
+            out[t].completed += 1;
+            if r.meets_slo(spec) {
+                out[t].slo_ok += 1;
+            }
+        }
+        for s in &mut out {
+            if s.completed > 0 {
+                s.attainment = s.slo_ok as f64 / s.completed as f64;
+            }
+            if span > 0.0 {
+                s.goodput = s.slo_ok as f64 / span;
+            }
+        }
+        out
+    }
+
+    /// Fleet goodput (DistServe): SLO-meeting requests per second of run
+    /// span, summed over all tenants.
+    pub fn goodput(&self, specs: &[TenantSpec]) -> f64 {
+        self.tenant_report(specs).iter().map(|s| s.goodput).sum()
+    }
+
     /// Behavioral digest of a run: an FNV-1a hash over every per-request
     /// record (sorted by id, so fleet merge order is irrelevant) plus the
     /// run-level event counters, with all virtual times quantized to 1 ns.
@@ -204,6 +283,7 @@ impl RunMetrics {
         for &i in &order {
             let r = &self.records[i];
             mix(&mut h, r.id as u64);
+            mix(&mut h, r.tenant as u64);
             mix(&mut h, q(r.arrival));
             mix(&mut h, q(r.first_token));
             mix(&mut h, q(r.finish));
@@ -259,6 +339,7 @@ impl RunMetrics {
             .max((self.peak_kv_usage - other.peak_kv_usage).abs());
         for (x, y) in a.iter().zip(&b) {
             if x.id != y.id
+                || x.tenant != y.tenant
                 || x.prompt_len != y.prompt_len
                 || x.output_len != y.output_len
                 || x.token_gaps.len() != y.token_gaps.len()
@@ -317,6 +398,7 @@ mod tests {
     fn rec(arrival: f64, first: f64, finish: f64, out: usize) -> RequestRecord {
         RequestRecord {
             id: 0,
+            tenant: 0,
             arrival,
             first_token: first,
             finish,
@@ -326,6 +408,23 @@ mod tests {
             sched_time: 0.001,
             queue_time: 0.1,
             exec_time: 0.2,
+        }
+    }
+
+    /// A record for `tenant` with the given TTFT and constant token gap.
+    fn trec(id: usize, tenant: u16, ttft: f64, gap: f64) -> RequestRecord {
+        RequestRecord {
+            id,
+            tenant,
+            arrival: 0.0,
+            first_token: ttft,
+            finish: ttft + gap * 4.0,
+            prompt_len: 100,
+            output_len: 5,
+            token_gaps: vec![gap; 4],
+            sched_time: 0.0,
+            queue_time: 0.0,
+            exec_time: 0.1,
         }
     }
 
@@ -470,6 +569,90 @@ mod tests {
         let mut d = a.clone();
         d.records[0].token_gaps.pop();
         assert!(a.deviation(&d).is_none());
+    }
+
+    #[test]
+    fn tenant_digest_and_deviation_see_the_label() {
+        let mut a = RunMetrics::default();
+        a.push(rec(0.0, 0.5, 2.0, 5));
+        let mut b = a.clone();
+        b.records[0].tenant = 1;
+        assert_ne!(a.digest(), b.digest(), "tenant label must be digested");
+        assert!(a.deviation(&b).is_none(), "a relabeled record is structural");
+    }
+
+    #[test]
+    fn slo_boundary_is_inclusive() {
+        // Exactly-at-SLO latencies meet the SLO (`<=` semantics): the
+        // boundary request counts toward goodput, an epsilon above does not.
+        let spec = TenantSpec { weight: 1.0, ttft_slo: 0.5, tbt_slo: 0.01, admission_quota: 8 };
+        assert!(trec(0, 0, 0.5, 0.01).meets_slo(&spec), "at-SLO must pass");
+        assert!(!trec(0, 0, 0.5 + 1e-9, 0.01).meets_slo(&spec), "ttft above fails");
+        assert!(!trec(0, 0, 0.5, 0.01 + 1e-9).meets_slo(&spec), "tbt above fails");
+        // A single-token output has no gaps and cannot violate TBT.
+        let mut single = trec(0, 0, 0.4, 0.0);
+        single.token_gaps.clear();
+        single.output_len = 1;
+        assert!(single.meets_slo(&spec));
+    }
+
+    #[test]
+    fn tenant_report_edge_cases() {
+        let specs = vec![
+            TenantSpec { weight: 2.0, ttft_slo: 1.0, tbt_slo: 0.05, admission_quota: 8 },
+            TenantSpec { weight: 1.0, ttft_slo: 1.0, tbt_slo: 0.05, admission_quota: 8 },
+            TenantSpec { weight: 1.0, ttft_slo: 1.0, tbt_slo: 0.05, admission_quota: 8 },
+        ];
+        let mut m = RunMetrics::default();
+        // Tenant 0: one meeting, one violating TTFT. Tenant 1: all violate.
+        // Tenant 2: zero requests.
+        m.push(trec(0, 0, 0.5, 0.01));
+        m.push(trec(1, 0, 2.0, 0.01));
+        m.push(trec(2, 1, 3.0, 0.2));
+        let rep = m.tenant_report(&specs);
+        assert_eq!(rep.len(), 3);
+        assert_eq!((rep[0].completed, rep[0].slo_ok), (2, 1));
+        assert!((rep[0].attainment - 0.5).abs() < 1e-12);
+        assert_eq!((rep[1].completed, rep[1].slo_ok), (2 - 1, 0));
+        assert_eq!(rep[1].attainment, 0.0, "all-violating tenant attains 0");
+        assert_eq!(rep[2].completed, 0);
+        assert_eq!(rep[2].attainment, 1.0, "zero-request tenant attains vacuously");
+        assert_eq!(rep[2].goodput, 0.0);
+        // Fleet goodput = total slo_ok / span.
+        let span = m.span();
+        assert!((m.goodput(&specs) - 1.0 / span).abs() < 1e-12);
+        // Empty run: no rows with requests, zero goodput, no panic.
+        let empty = RunMetrics::default();
+        let rep = empty.tenant_report(&specs);
+        assert!(rep.iter().all(|s| s.completed == 0 && s.attainment == 1.0));
+        assert_eq!(empty.goodput(&specs), 0.0);
+        // A label beyond the spec table falls back to the permissive default.
+        let mut unlabeled = RunMetrics::default();
+        unlabeled.push(trec(0, 7, 0.5, 0.01));
+        let rep = unlabeled.tenant_report(&[]);
+        assert_eq!(rep.len(), 8);
+        assert_eq!((rep[7].completed, rep[7].slo_ok), (1, 1));
+    }
+
+    #[test]
+    fn tenant_report_survives_merge() {
+        let specs = vec![
+            TenantSpec { weight: 1.0, ttft_slo: 1.0, tbt_slo: 0.05, admission_quota: 8 },
+            TenantSpec { weight: 1.0, ttft_slo: 1.0, tbt_slo: 0.05, admission_quota: 8 },
+        ];
+        let mut a = RunMetrics::default();
+        a.push(trec(0, 0, 0.5, 0.01));
+        let mut b = RunMetrics::default();
+        b.push(trec(1, 1, 0.4, 0.01));
+        b.push(trec(2, 1, 5.0, 0.01));
+        a.merge(b);
+        let rep = a.tenant_report(&specs);
+        assert_eq!((rep[0].completed, rep[0].slo_ok), (1, 1));
+        assert_eq!((rep[1].completed, rep[1].slo_ok), (2, 1));
+        // Per-tenant counts sum across the merge; goodput uses the merged span.
+        let total: usize = rep.iter().map(|s| s.completed).sum();
+        assert_eq!(total, a.records.len());
+        assert!((a.goodput(&specs) - 2.0 / a.span()).abs() < 1e-12);
     }
 
     #[test]

@@ -28,6 +28,28 @@ pub enum Mode {
     DecodePrioritized,
 }
 
+/// What the intra-GPU split optimizes for.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum PartitionObjective {
+    /// Algorithm 1's dual-objective latency search (the original
+    /// behavior): minimize the prioritized phase subject to the other
+    /// phase's slack constraint.
+    #[default]
+    Latency,
+    /// SLO-goodput: pick the split maximizing the product of per-phase
+    /// SLO-attainment ratios `min(1, ttft_slo/T_p(r)) ·
+    /// min(1, tbt_slo/T_d(r))` over a coarse share grid. Latency beyond an
+    /// SLO is wasted work; latency below it buys nothing — so the sweep
+    /// lands on the cheapest split where both phases just meet their
+    /// targets (DistServe's goodput framing applied to SM shares).
+    Goodput {
+        /// Per-request prefill-latency budget (seconds).
+        ttft_slo: f64,
+        /// Per-iteration decode-latency budget (seconds).
+        tbt_slo: f64,
+    },
+}
+
 /// Controller configuration (defaults mirror the paper §5).
 #[derive(Debug, Clone, Copy)]
 pub struct PartitionConfig {
@@ -48,6 +70,9 @@ pub struct PartitionConfig {
     /// threshold — "allocate only the SMs needed" (§3.2), instead of
     /// grabbing post-saturation SMs the other phase could use.
     pub min_gain: f64,
+    /// Search objective; `Latency` keeps the original Algorithm 1 path
+    /// byte-for-byte, `Goodput { .. }` switches to the SLO-product sweep.
+    pub objective: PartitionObjective,
 }
 
 impl Default for PartitionConfig {
@@ -60,6 +85,7 @@ impl Default for PartitionConfig {
             step: 0.01,
             min_share: 0.05,
             min_gain: 0.003,
+            objective: PartitionObjective::Latency,
         }
     }
 }
@@ -162,7 +188,12 @@ impl PartitionController {
         } else if st.prefill_ops.is_empty() && st.decode_ops.is_empty() {
             self.r_p
         } else {
-            self.adjust(cost, st, mode, &mut queries)
+            match self.cfg.objective {
+                PartitionObjective::Latency => self.adjust(cost, st, mode, &mut queries),
+                PartitionObjective::Goodput { ttft_slo, tbt_slo } => {
+                    self.goodput_sweep(cost, st, ttft_slo, tbt_slo, &mut queries)
+                }
+            }
         };
 
         self.query_count_last = queries;
@@ -253,6 +284,49 @@ impl PartitionController {
         } else {
             1.0 - r
         }
+    }
+
+    /// [`PartitionObjective::Goodput`]: sweep the prefill share over a
+    /// coarse grid and keep the split maximizing the product of per-phase
+    /// SLO-attainment ratios (each capped at 1 — overshooting a budget
+    /// earns nothing). Ties break toward the *lowest* prefill share, so an
+    /// unconstrained region defaults to giving decode the surplus SMs. The
+    /// grid is 5× the greedy step: the objective is flat near its plateau
+    /// (both ratios capped), so fine steps only burn cost-model queries.
+    /// The δ-hysteresis in [`Self::decide`] still damps the output.
+    fn goodput_sweep(
+        &self,
+        cost: &CostModel,
+        st: &BatchState<'_>,
+        ttft_slo: f64,
+        tbt_slo: f64,
+        queries: &mut usize,
+    ) -> f64 {
+        // Same frozen-pressure convention as `adjust` (see `eval`).
+        let pressure =
+            Some(cost.prefill(st.prefill_ops, self.r_p.max(self.cfg.min_share)).pressure);
+        let pr = pressure.as_ref();
+        let lo = self.cfg.min_share;
+        let hi = 1.0 - self.cfg.min_share;
+        let grid = (self.cfg.step * 5.0).max(1e-3);
+        let mut best_r = lo;
+        let mut best_score = f64::NEG_INFINITY;
+        let mut r = lo;
+        loop {
+            let t_p = self.eval(cost, st, pr, true, r, queries).max(1e-12);
+            let t_d = self.eval(cost, st, pr, false, 1.0 - r, queries).max(1e-12);
+            let score = (ttft_slo / t_p).min(1.0) * (tbt_slo / t_d).min(1.0);
+            // Strict `>`: equal-score plateaus keep the earliest (lowest) r.
+            if score > best_score {
+                best_score = score;
+                best_r = r;
+            }
+            if r >= hi {
+                break;
+            }
+            r = (r + grid).min(hi);
+        }
+        best_r
     }
 
     pub fn last_queries(&self) -> usize {
@@ -361,6 +435,85 @@ mod tests {
         let dec = cfg.decode_ops(8, 8.0 * 512.0);
         let d = ctl.decide(&cm, &state(&[], &dec, 0.4));
         assert!(d.r_d >= 0.94, "r_d {}", d.r_d);
+    }
+
+    #[test]
+    fn goodput_objective_defaults_identically_to_latency() {
+        // `Latency` is the Default: an explicitly-latency config must be
+        // indistinguishable from the implicit default (guards the
+        // byte-for-byte claim for existing callers).
+        let (cm, cfg) = setup();
+        let pre = cfg.prefill_ops(512, 512.0 * 4000.0, 4000.0, 0);
+        let dec = cfg.decode_ops(32, 32.0 * 2000.0);
+        let mut a = PartitionController::new(PartitionConfig::default());
+        let mut b = PartitionController::new(PartitionConfig {
+            objective: PartitionObjective::Latency,
+            ..PartitionConfig::default()
+        });
+        let da = a.decide(&cm, &state(&pre, &dec, 0.3));
+        let db = b.decide(&cm, &state(&pre, &dec, 0.3));
+        assert_eq!(da.r_p, db.r_p);
+        assert_eq!(da.queries, db.queries);
+    }
+
+    #[test]
+    fn goodput_sweep_lands_inside_bounds_and_meets_loose_slos() {
+        let (cm, cfg) = setup();
+        let pre = cfg.prefill_ops(512, 512.0 * 4000.0, 4000.0, 0);
+        let dec = cfg.decode_ops(32, 32.0 * 2000.0);
+        // Budgets generous enough that some split satisfies both: the
+        // sweep must find a share where both ratios cap at 1.
+        let mut ctl = PartitionController::new(PartitionConfig {
+            objective: PartitionObjective::Goodput { ttft_slo: 60.0, tbt_slo: 60.0 },
+            delta: 0.0,
+            ..PartitionConfig::default()
+        });
+        let st = state(&pre, &dec, 0.3);
+        let d = ctl.decide(&cm, &st);
+        assert!((d.r_p + d.r_d - 1.0).abs() < 1e-9);
+        assert!(d.r_p >= 0.05 - 1e-9 && d.r_d >= 0.05 - 1e-9);
+        let pp = cm.prefill(&pre, d.r_p).pressure;
+        assert!(cm.prefill(&pre, d.r_p).total <= 60.0, "prefill within budget");
+        assert!(cm.decode(&dec, d.r_d, Some(&pp)) <= 60.0, "decode within budget");
+    }
+
+    #[test]
+    fn tight_ttft_budget_pulls_sms_toward_prefill() {
+        let (cm, cfg) = setup();
+        let pre = cfg.prefill_ops(512, 512.0 * 4000.0, 4000.0, 0);
+        let dec = cfg.decode_ops(32, 32.0 * 2000.0);
+        let mk = |ttft: f64| PartitionConfig {
+            objective: PartitionObjective::Goodput { ttft_slo: ttft, tbt_slo: 1e9 },
+            delta: 0.0,
+            ..PartitionConfig::default()
+        };
+        // With decode's budget unbounded, tightening TTFT can only move
+        // the chosen share toward prefill (monotone under the tie-break).
+        let mut loose = PartitionController::new(mk(1e9));
+        let mut tight = PartitionController::new(mk(1e-6));
+        let dl = loose.decide(&cm, &state(&pre, &dec, 0.3));
+        let dt = tight.decide(&cm, &state(&pre, &dec, 0.3));
+        assert!(
+            dt.r_p >= dl.r_p,
+            "tight TTFT must not shrink prefill: {} vs {}",
+            dt.r_p,
+            dl.r_p
+        );
+        // An unmeetable TTFT budget maximizes raw prefill speed: the sweep
+        // pushes prefill to the ceiling share.
+        assert!(dt.r_p >= 0.9, "r_p {}", dt.r_p);
+    }
+
+    #[test]
+    fn goodput_degenerate_batches_keep_latency_behavior() {
+        let (cm, cfg) = setup();
+        let mut ctl = PartitionController::new(PartitionConfig {
+            objective: PartitionObjective::Goodput { ttft_slo: 1.0, tbt_slo: 1.0 },
+            ..PartitionConfig::default()
+        });
+        let dec = cfg.decode_ops(8, 8.0 * 512.0);
+        let d = ctl.decide(&cm, &state(&[], &dec, 0.4));
+        assert!(d.r_d >= 0.94, "empty prefill still gives decode everything");
     }
 
     #[test]

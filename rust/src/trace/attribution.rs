@@ -102,6 +102,7 @@ mod tests {
     fn record(id: usize, arrival: f64, first: f64, finish: f64, exec: f64) -> RequestRecord {
         RequestRecord {
             id,
+            tenant: 0,
             arrival,
             first_token: first,
             finish,

@@ -194,6 +194,26 @@ pub fn chrome_trace(events: &[TraceEvent]) -> Json {
                     ],
                 ));
             }
+            EventKind::TenantAdmit { req, tenant } => {
+                rows.push(instant(
+                    pid,
+                    &format!("tenant {tenant} admit req {req}"),
+                    ev.time,
+                    vec![("req", Json::from(*req)), ("tenant", Json::from(*tenant))],
+                ));
+            }
+            EventKind::TenantThrottle { req, tenant, queued } => {
+                rows.push(instant(
+                    pid,
+                    &format!("tenant {tenant} throttle req {req}"),
+                    ev.time,
+                    vec![
+                        ("req", Json::from(*req)),
+                        ("tenant", Json::from(*tenant)),
+                        ("queued", Json::from(*queued)),
+                    ],
+                ));
+            }
             EventKind::ReplicaStart => rows.push(instant(pid, "replica start", ev.time, vec![])),
             EventKind::ReplicaDrain => rows.push(instant(pid, "replica drain", ev.time, vec![])),
             EventKind::ReplicaRetire => rows.push(instant(pid, "replica retire", ev.time, vec![])),
@@ -291,6 +311,15 @@ pub fn event_json(ev: &TraceEvent) -> Json {
         EventKind::ShardRebalance { from_shard, to_shard } => {
             fields.push(("from_shard", Json::from(*from_shard)));
             fields.push(("to_shard", Json::from(*to_shard)));
+        }
+        EventKind::TenantAdmit { req, tenant } => {
+            fields.push(("req", Json::from(*req)));
+            fields.push(("tenant", Json::from(*tenant)));
+        }
+        EventKind::TenantThrottle { req, tenant, queued } => {
+            fields.push(("req", Json::from(*req)));
+            fields.push(("tenant", Json::from(*tenant)));
+            fields.push(("queued", Json::from(*queued)));
         }
         EventKind::Sample { kv_usage, waiting, running, pending, sm_prefill, inflight } => {
             fields.push(("kv_usage", Json::from(*kv_usage)));

@@ -122,6 +122,12 @@ pub enum EventKind {
     /// without rebalancing differ exactly by these events
     /// (`tests/golden_trace.rs` pins this).
     ShardRebalance { from_shard: usize, to_shard: usize },
+    /// WFQ front stage dispatched a tenant's request to the routing stage
+    /// (quota and capacity permitted it). Fleet-level, at dispatch time.
+    TenantAdmit { req: usize, tenant: usize },
+    /// WFQ front stage held a tenant's request back (quota or capacity
+    /// exhausted); `queued` is the tenant's backlog depth after the hold.
+    TenantThrottle { req: usize, tenant: usize, queued: usize },
     /// Request finished its last token.
     Complete { req: usize },
     /// Periodic time-series sample of one replica's state.
@@ -154,6 +160,8 @@ impl EventKind {
             EventKind::ReplicaDrain => "replica-drain",
             EventKind::ReplicaRetire => "replica-retire",
             EventKind::ShardRebalance { .. } => "shard-rebalance",
+            EventKind::TenantAdmit { .. } => "tenant-admit",
+            EventKind::TenantThrottle { .. } => "tenant-throttle",
             EventKind::Complete { .. } => "complete",
             EventKind::Sample { .. } => "sample",
         }
@@ -216,6 +224,10 @@ impl TraceEvent {
             EventKind::Scale { from, to } => format!(" from={from} to={to}"),
             EventKind::ShardRebalance { from_shard, to_shard } => {
                 format!(" from_shard={from_shard} to_shard={to_shard}")
+            }
+            EventKind::TenantAdmit { req, tenant } => format!(" req={req} tenant={tenant}"),
+            EventKind::TenantThrottle { req, tenant, queued } => {
+                format!(" req={req} tenant={tenant} queued={queued}")
             }
             EventKind::Sample { kv_usage, waiting, running, pending, sm_prefill, inflight } => {
                 format!(
@@ -287,6 +299,14 @@ impl TraceEvent {
                 K::ShardRebalance { from_shard: fa, to_shard: ta },
                 K::ShardRebalance { from_shard: fb, to_shard: tb },
             ) => fa == fb && ta == tb,
+            (
+                K::TenantAdmit { req: ra, tenant: ta },
+                K::TenantAdmit { req: rb, tenant: tb },
+            ) => ra == rb && ta == tb,
+            (
+                K::TenantThrottle { req: ra, tenant: ta, queued: qa },
+                K::TenantThrottle { req: rb, tenant: tb, queued: qb },
+            ) => ra == rb && ta == tb && qa == qb,
             (K::ReplicaStart, K::ReplicaStart)
             | (K::ReplicaDrain, K::ReplicaDrain)
             | (K::ReplicaRetire, K::ReplicaRetire) => true,

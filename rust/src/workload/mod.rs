@@ -16,12 +16,13 @@ use std::collections::BTreeMap;
 
 /// A serving request as the engine layer sees it.
 ///
-/// Hot-state compaction (§Perf): token lengths are `u32` (24 bytes per
-/// request instead of 32 with `usize` lengths) — a million-request streaming
-/// trace holds only the in-flight window, but per-request copies also live
-/// in every engine's `ReqState`, so the narrower struct pays at fleet scale.
-/// Lengths are bounded by context windows (≪ 2³²); use [`Request::plen`] /
-/// [`Request::olen`] where `usize` arithmetic is needed.
+/// Hot-state compaction (§Perf): token lengths are `u32` and the tenant
+/// label a `u16` (32 bytes per request instead of 40+ with `usize` fields) —
+/// a million-request streaming trace holds only the in-flight window, but
+/// per-request copies also live in every engine's `ReqState`, so the narrow
+/// struct pays at fleet scale. Lengths are bounded by context windows
+/// (≪ 2³²); use [`Request::plen`] / [`Request::olen`] where `usize`
+/// arithmetic is needed.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Request {
     pub id: usize,
@@ -29,6 +30,9 @@ pub struct Request {
     pub arrival: f64,
     pub prompt_len: u32,
     pub output_len: u32,
+    /// Owning tenant (index into the run's `TenantSpec` table; single-tenant
+    /// workloads leave it 0).
+    pub tenant: u16,
 }
 
 impl Request {
@@ -42,6 +46,87 @@ impl Request {
     #[inline]
     pub fn olen(&self) -> usize {
         self.output_len as usize
+    }
+
+    /// Tenant label as `usize` (index arithmetic).
+    #[inline]
+    pub fn tid(&self) -> usize {
+        self.tenant as usize
+    }
+}
+
+/// Per-tenant service contract: a WFQ weight, the two latency SLOs that
+/// define goodput (DistServe-style: a request counts iff it meets *both*),
+/// and an admission quota bounding the tenant's in-flight requests.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TenantSpec {
+    /// Weighted-fair-queueing weight (> 0; service share under saturation
+    /// is proportional to it).
+    pub weight: f64,
+    /// Time-to-first-token SLO (seconds).
+    pub ttft_slo: f64,
+    /// Time-between-tokens SLO (seconds, mean inter-token gap).
+    pub tbt_slo: f64,
+    /// Max requests this tenant may have admitted-but-unfinished at once.
+    pub admission_quota: usize,
+}
+
+impl Default for TenantSpec {
+    fn default() -> Self {
+        TenantSpec {
+            weight: 1.0,
+            ttft_slo: 10.0,
+            tbt_slo: 0.2,
+            admission_quota: usize::MAX,
+        }
+    }
+}
+
+/// Deterministic tenant-mix labeling for the generators: integer shares,
+/// applied by request id so that tagging is a pure function of the id —
+/// streaming and Vec generators agree trivially, and every window of
+/// `sum(shares)` consecutive ids carries the exact mix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantMix {
+    /// Integer share per tenant (tenant k gets `shares[k] / sum` of ids).
+    pub shares: Vec<u32>,
+}
+
+impl TenantMix {
+    pub fn new(shares: Vec<u32>) -> Self {
+        assert!(!shares.is_empty(), "tenant mix needs at least one tenant");
+        assert!(shares.iter().any(|&s| s > 0), "tenant mix needs a nonzero share");
+        TenantMix { shares }
+    }
+
+    /// `n` tenants with equal shares.
+    pub fn uniform(n: usize) -> Self {
+        TenantMix::new(vec![1; n.max(1)])
+    }
+
+    pub fn tenants(&self) -> usize {
+        self.shares.len()
+    }
+
+    /// Tenant owning request `id`: the id's residue modulo the total share
+    /// falls into tenant k's contiguous share band.
+    pub fn tag(&self, id: usize) -> u16 {
+        let total: u64 = self.shares.iter().map(|&s| s as u64).sum();
+        let mut r = (id as u64) % total;
+        for (k, &s) in self.shares.iter().enumerate() {
+            if r < s as u64 {
+                return k as u16;
+            }
+            r -= s as u64;
+        }
+        unreachable!("residue exceeds total share")
+    }
+
+    /// Apply the mix to an existing trace in place.
+    pub fn apply(&self, trace: &mut [Request]) {
+        for r in trace {
+            r.tenant = self.tag(r.id);
+        }
     }
 }
 
@@ -171,13 +256,48 @@ pub fn generate_iter(
     (0..n).map(move |id| {
         t += rng.exponential(rate);
         let (prompt_len, output_len) = dataset.sample(&mut lens_rng);
-        Request { id, arrival: t, prompt_len: prompt_len as u32, output_len: output_len as u32 }
+        Request {
+            id,
+            arrival: t,
+            prompt_len: prompt_len as u32,
+            output_len: output_len as u32,
+            tenant: 0,
+        }
     })
 }
 
 /// Generate `n` requests with Poisson arrivals at `rate` req/s.
 pub fn generate(dataset: Dataset, n: usize, rate: f64, seed: u64) -> Vec<Request> {
     generate_iter(dataset, n, rate, seed).collect()
+}
+
+/// [`generate_iter`] with tenant labels from a [`TenantMix`]. Tagging is a
+/// pure function of the request id, so the underlying RNG stream — and
+/// therefore every arrival time and length — is identical to the untagged
+/// generator for the same seed.
+pub fn generate_iter_with_tenants(
+    dataset: Dataset,
+    n: usize,
+    rate: f64,
+    seed: u64,
+    mix: &TenantMix,
+) -> impl Iterator<Item = Request> {
+    let mix = mix.clone();
+    generate_iter(dataset, n, rate, seed).map(move |mut r| {
+        r.tenant = mix.tag(r.id);
+        r
+    })
+}
+
+/// [`generate`] with tenant labels from a [`TenantMix`].
+pub fn generate_with_tenants(
+    dataset: Dataset,
+    n: usize,
+    rate: f64,
+    seed: u64,
+    mix: &TenantMix,
+) -> Vec<Request> {
+    generate_iter_with_tenants(dataset, n, rate, seed, mix).collect()
 }
 
 /// Bursty/diurnal arrival process: a Gamma-modulated Poisson rate under a
@@ -263,6 +383,7 @@ impl Iterator for BurstyIter {
                 arrival: self.t,
                 prompt_len: prompt_len as u32,
                 output_len: output_len as u32,
+                tenant: 0,
             });
         }
     }
@@ -304,6 +425,33 @@ pub fn generate_bursty(dataset: Dataset, n: usize, cfg: &BurstyCfg, seed: u64) -
     generate_bursty_iter(dataset, n, cfg, seed).collect()
 }
 
+/// [`generate_bursty_iter`] with tenant labels from a [`TenantMix`] — the
+/// Cox-process RNG stream is untouched (tagging is a pure function of id).
+pub fn generate_bursty_iter_with_tenants(
+    dataset: Dataset,
+    n: usize,
+    cfg: &BurstyCfg,
+    seed: u64,
+    mix: &TenantMix,
+) -> impl Iterator<Item = Request> {
+    let mix = mix.clone();
+    generate_bursty_iter(dataset, n, cfg, seed).map(move |mut r| {
+        r.tenant = mix.tag(r.id);
+        r
+    })
+}
+
+/// [`generate_bursty`] with tenant labels from a [`TenantMix`].
+pub fn generate_bursty_with_tenants(
+    dataset: Dataset,
+    n: usize,
+    cfg: &BurstyCfg,
+    seed: u64,
+    mix: &TenantMix,
+) -> Vec<Request> {
+    generate_bursty_iter_with_tenants(dataset, n, cfg, seed, mix).collect()
+}
+
 /// Generate an *offline* batch: all `n` requests arrive at t=0 (§6.3).
 pub fn offline(dataset: Dataset, n: usize, seed: u64) -> Vec<Request> {
     let mut rng = Rng::new(seed);
@@ -315,6 +463,7 @@ pub fn offline(dataset: Dataset, n: usize, seed: u64) -> Vec<Request> {
                 arrival: 0.0,
                 prompt_len: prompt_len as u32,
                 output_len: output_len as u32,
+                tenant: 0,
             }
         })
         .collect()
@@ -342,6 +491,7 @@ pub fn trace_to_json(trace: &[Request]) -> Json {
                     ("arrival", Json::Num(r.arrival)),
                     ("prompt_len", Json::Num(r.prompt_len as f64)),
                     ("output_len", Json::Num(r.output_len as f64)),
+                    ("tenant", Json::Num(r.tenant as f64)),
                 ])
             })
             .collect(),
@@ -363,6 +513,8 @@ pub fn trace_from_json(j: &Json) -> Result<Vec<Request>, String> {
             arrival: field("arrival")?,
             prompt_len: field("prompt_len")? as u32,
             output_len: (field("output_len")? as u32).max(1),
+            // Pre-tenant traces omit the field; default to tenant 0.
+            tenant: item.get("tenant").and_then(Json::as_f64).unwrap_or(0.0) as u16,
         });
     }
     Ok(out)
@@ -485,9 +637,69 @@ mod tests {
 
     #[test]
     fn request_hot_state_is_compact() {
-        // §Perf hot-state audit: 24 bytes per request (was 32 with usize
-        // lengths). A regression here silently bloats every engine queue.
-        assert!(std::mem::size_of::<Request>() <= 24);
+        // §Perf hot-state audit: 32 bytes per request (24 B of core fields +
+        // the u16 tenant label, padded to the f64 alignment). A regression
+        // here silently bloats every engine queue.
+        assert!(std::mem::size_of::<Request>() <= 32);
+    }
+
+    #[test]
+    fn tenant_mix_shares_are_exact_per_block() {
+        let mix = TenantMix::new(vec![3, 1]);
+        // Every window of sum(shares)=4 consecutive ids carries the exact mix.
+        let tags: Vec<u16> = (0..8).map(|id| mix.tag(id)).collect();
+        assert_eq!(tags, vec![0, 0, 0, 1, 0, 0, 0, 1]);
+        let uni = TenantMix::uniform(3);
+        assert_eq!(uni.tenants(), 3);
+        let tags: Vec<u16> = (0..6).map(|id| uni.tag(id)).collect();
+        assert_eq!(tags, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn tenant_tagging_leaves_arrivals_and_lengths_untouched() {
+        // Tagging is a pure function of id: the tagged generators reuse the
+        // untagged RNG stream, so everything but the label is identical.
+        let mix = TenantMix::new(vec![2, 1, 1]);
+        let plain = generate(Dataset::Mixed, 120, 3.0, 77);
+        let tagged = generate_with_tenants(Dataset::Mixed, 120, 3.0, 77, &mix);
+        assert_eq!(plain.len(), tagged.len());
+        for (a, b) in plain.iter().zip(&tagged) {
+            assert_eq!((a.id, a.prompt_len, a.output_len), (b.id, b.prompt_len, b.output_len));
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(b.tenant, mix.tag(b.id));
+        }
+        let cfg = BurstyCfg::default();
+        let plain_b = generate_bursty(Dataset::ShareGpt, 150, &cfg, 19);
+        let tagged_b = generate_bursty_with_tenants(Dataset::ShareGpt, 150, &cfg, 19, &mix);
+        for (a, b) in plain_b.iter().zip(&tagged_b) {
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(b.tenant, mix.tag(b.id));
+        }
+        // Streaming twins match the Vec versions.
+        let it: Vec<Request> =
+            generate_iter_with_tenants(Dataset::Mixed, 120, 3.0, 77, &mix).collect();
+        assert_eq!(tagged, it);
+        let itb: Vec<Request> =
+            generate_bursty_iter_with_tenants(Dataset::ShareGpt, 150, &cfg, 19, &mix).collect();
+        assert_eq!(tagged_b, itb);
+    }
+
+    #[test]
+    fn uniform_single_tenant_mix_is_the_untagged_trace() {
+        // Pay-for-what-you-use: one tenant with any share leaves every
+        // request labeled 0 — exactly the untagged generator's output.
+        let mix = TenantMix::uniform(1);
+        let plain = generate(Dataset::ShareGpt, 60, 4.0, 5);
+        let tagged = generate_with_tenants(Dataset::ShareGpt, 60, 4.0, 5, &mix);
+        assert_eq!(plain, tagged);
+    }
+
+    #[test]
+    fn tenant_spec_default_is_permissive() {
+        let s = TenantSpec::default();
+        assert_eq!(s.weight, 1.0);
+        assert_eq!(s.admission_quota, usize::MAX);
+        assert!(s.ttft_slo > 0.0 && s.tbt_slo > 0.0);
     }
 
     #[test]
@@ -558,15 +770,24 @@ mod tests {
 
     #[test]
     fn trace_json_roundtrip() {
-        let tr = generate(Dataset::Arxiv, 20, 3.0, 5);
+        let mix = TenantMix::new(vec![1, 2]);
+        let tr = generate_with_tenants(Dataset::Arxiv, 20, 3.0, 5, &mix);
         let j = trace_to_json(&tr);
         let back = trace_from_json(&j).unwrap();
         assert_eq!(tr.len(), back.len());
         for (a, b) in tr.iter().zip(&back) {
             assert_eq!(a.id, b.id);
             assert_eq!(a.prompt_len, b.prompt_len);
+            assert_eq!(a.tenant, b.tenant);
             assert!((a.arrival - b.arrival).abs() < 1e-9);
         }
+        // Pre-tenant traces (no "tenant" key) parse with tenant 0.
+        let legacy = Json::parse(
+            r#"[{"id": 3, "arrival": 0.5, "prompt_len": 64, "output_len": 8}]"#,
+        )
+        .unwrap();
+        let parsed = trace_from_json(&legacy).unwrap();
+        assert_eq!(parsed[0].tenant, 0);
     }
 
     #[test]

@@ -28,10 +28,14 @@
 
 use nexus::cluster::{
     run_cluster, AutoscalerCfg, Cluster, ClusterCfg, ParallelCfg, RoutingPolicy, StealCfg,
+    WfqCfg,
 };
 use nexus::engine::{build_engine, drive, run_engine, EngineCfg, EngineKind};
 use nexus::model::ModelConfig;
-use nexus::workload::{generate, generate_bursty, BurstyCfg, Dataset, Request};
+use nexus::workload::{
+    generate, generate_bursty, generate_with_tenants, BurstyCfg, Dataset, Request, TenantMix,
+    TenantSpec,
+};
 
 fn ecfg(seed: u64) -> EngineCfg {
     EngineCfg::new(ModelConfig::qwen3b(), seed)
@@ -268,7 +272,7 @@ fn skewed_affinity_trace(n: usize, rate: f64, seed: u64) -> Vec<Request> {
     let base = generate(Dataset::ShareGpt, n, rate, seed);
     let mut trace = Vec::with_capacity(n + 64);
     for k in 0..64usize {
-        trace.push(Request { id: k, arrival: 0.0, prompt_len: 64, output_len: 4 });
+        trace.push(Request { id: k, arrival: 0.0, prompt_len: 64, output_len: 4, tenant: 0 });
     }
     for (i, r) in base.iter().enumerate() {
         // 90 % of traffic on sessions {0, 8, .., 56}; the rest never ≡ 0
@@ -397,7 +401,7 @@ fn stream_arrivals_edge_cases_match_all_fronts() {
     assert_three_way_digest(&cc, &[], "empty trace");
 
     // Single request.
-    let one = [Request { id: 0, arrival: 0.5, prompt_len: 128, output_len: 8 }];
+    let one = [Request { id: 0, arrival: 0.5, prompt_len: 128, output_len: 8, tenant: 0 }];
     assert_three_way_digest(&cc, &one, "single request");
 
     // Simultaneous ties: several arrivals at *exactly* the same instant
@@ -410,6 +414,7 @@ fn stream_arrivals_edge_cases_match_all_fronts() {
             arrival: if id < 6 { 0.0 } else { 1.25 },
             prompt_len: 64 + 32 * (id as u32 % 3),
             output_len: 6,
+            tenant: 0,
         });
     }
     assert_three_way_digest(&cc, &ties, "simultaneous ties");
@@ -420,7 +425,143 @@ fn stream_arrivals_edge_cases_match_all_fronts() {
     let cc_jsq = ClusterCfg::new(EngineKind::Vllm, ecfg(29), 3, RoutingPolicy::JoinShortestQueue);
     let mut ties = Vec::new();
     for id in 0..9usize {
-        ties.push(Request { id, arrival: 2.0, prompt_len: 96, output_len: 5 });
+        ties.push(Request { id, arrival: 2.0, prompt_len: 96, output_len: 5, tenant: 0 });
     }
     assert_three_way_digest(&cc_jsq, &ties, "jsq simultaneous ties");
+}
+
+/// Tenant-labeled trace: 3:2:1 traffic shares over three tenants, arrival
+/// times identical to the untagged generator (tagging is id-residue only).
+fn tenant_trace(n: usize, rate: f64, seed: u64) -> Vec<Request> {
+    generate_with_tenants(Dataset::ShareGpt, n, rate, seed, &TenantMix::new(vec![3, 2, 1]))
+}
+
+/// Saturating WFQ config: skewed weights, tight per-tenant quotas, and a
+/// fleet-wide capacity cap, so the gate actually holds requests back and
+/// the completion-triggered re-dispatch path is exercised.
+fn wfq_cfg() -> WfqCfg {
+    WfqCfg::new(vec![
+        TenantSpec { weight: 3.0, admission_quota: 6, ..TenantSpec::default() },
+        TenantSpec { weight: 1.0, admission_quota: 4, ..TenantSpec::default() },
+        TenantSpec { weight: 1.0, admission_quota: 2, ..TenantSpec::default() },
+    ])
+    .with_capacity(10)
+}
+
+#[test]
+fn wfq_quota_fleet_three_way_digest() {
+    // The tenant gate is virtual-time state like everything else: the heap
+    // loop, the reference loop, and the sharded loop must drive it to
+    // identical admission decisions — any thread count, stealing on or off.
+    let trace = tenant_trace(80, 14.0, 53);
+    let mut cc =
+        ClusterCfg::new(EngineKind::Nexus, ecfg(5), 3, RoutingPolicy::JoinShortestQueue);
+    cc.wfq = Some(wfq_cfg());
+    let a = Cluster::new(cc.clone()).run(&trace);
+    let b = Cluster::new(cc.clone()).run_reference(&trace);
+    let dev = a.fleet.deviation(&b.fleet);
+    assert!(
+        matches!(dev, Some(d) if d <= 1e-9),
+        "WFQ fleet: event loop diverged from reference (deviation {dev:?})"
+    );
+    let seq = a.digest();
+    for threads in [1usize, 4, 8] {
+        for steal in [None, Some(StealCfg { threshold: 1.2, interval: 0.5 })] {
+            let par = Cluster::new(cc.clone())
+                .run_parallel_cfg(&trace, ParallelCfg { threads, window: 0.0, steal })
+                .digest();
+            assert_eq!(
+                seq, par,
+                "WFQ fleet diverged @ {threads} threads, steal {steal:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn wfq_quota_autoscaled_fleet_three_way_digest() {
+    // Autoscale churn under the gate: spawned replicas must prime at the
+    // gate's same-instant re-dispatch iterations exactly like the
+    // sequential loop, and drains must not strand gated requests.
+    let trace = tenant_trace(90, 16.0, 67);
+    let mut cc =
+        ClusterCfg::new(EngineKind::Nexus, ecfg(11), 2, RoutingPolicy::JoinShortestQueue);
+    cc.wfq = Some(wfq_cfg());
+    cc.autoscale = Some(AutoscalerCfg {
+        min_replicas: 1,
+        max_replicas: 5,
+        interval: 2.0,
+        cooldown: 4.0,
+        ..AutoscalerCfg::default()
+    });
+    let a = Cluster::new(cc.clone()).run(&trace);
+    let b = Cluster::new(cc.clone()).run_reference(&trace);
+    let dev = a.fleet.deviation(&b.fleet);
+    assert!(
+        matches!(dev, Some(d) if d <= 1e-9),
+        "autoscaled WFQ fleet diverged from reference (deviation {dev:?})"
+    );
+    let seq = a.digest();
+    for threads in [1usize, 4, 8] {
+        for steal in [None, Some(StealCfg { threshold: 1.2, interval: 0.5 })] {
+            let par = Cluster::new(cc.clone())
+                .run_parallel_cfg(&trace, ParallelCfg { threads, window: 0.0, steal })
+                .digest();
+            assert_eq!(
+                seq, par,
+                "autoscaled WFQ fleet diverged @ {threads} threads, steal {steal:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn wfq_window_is_output_invariant() {
+    // Windowed advance rounds interact with the gate's lockstep mode (a
+    // backlogged gate pins the round horizon to the boundary); any window
+    // must still produce the sequential digest.
+    let trace = tenant_trace(60, 12.0, 89);
+    let mut cc =
+        ClusterCfg::new(EngineKind::Vllm, ecfg(41), 3, RoutingPolicy::LeastKvPressure);
+    cc.wfq = Some(wfq_cfg());
+    let seq = Cluster::new(cc.clone()).run(&trace).digest();
+    for window in [0.0f64, 0.1, 1.0, 1e6] {
+        let par = Cluster::new(cc.clone())
+            .run_parallel_cfg(
+                &trace,
+                ParallelCfg { threads: 4, window, steal: None },
+            )
+            .digest();
+        assert_eq!(seq, par, "WFQ + window {window} changed the digest");
+    }
+}
+
+#[test]
+fn wfq_edge_configs_three_way_digest() {
+    // Degenerate gates: unit capacity (strict serialization), a quota-less
+    // uniform gate (pure WFQ ordering), and simultaneous-tie arrivals.
+    let trace = tenant_trace(40, 10.0, 97);
+    let mut serial =
+        ClusterCfg::new(EngineKind::Nexus, ecfg(3), 2, RoutingPolicy::RoundRobin);
+    serial.wfq = Some(WfqCfg::uniform(3).with_capacity(1));
+    assert_three_way_digest(&serial, &trace, "unit-capacity gate");
+
+    let mut open = ClusterCfg::new(EngineKind::Nexus, ecfg(3), 2, RoutingPolicy::RoundRobin);
+    open.wfq = Some(WfqCfg::uniform(3));
+    assert_three_way_digest(&open, &trace, "uncapped uniform gate");
+
+    let mut ties = Vec::new();
+    for id in 0..12usize {
+        ties.push(Request {
+            id,
+            arrival: if id < 6 { 0.0 } else { 1.5 },
+            prompt_len: 64 + 32 * (id as u32 % 3),
+            output_len: 6,
+            tenant: (id % 3) as u16,
+        });
+    }
+    let mut tie_cc =
+        ClusterCfg::new(EngineKind::Vllm, ecfg(29), 2, RoutingPolicy::JoinShortestQueue);
+    tie_cc.wfq = Some(wfq_cfg().with_capacity(4));
+    assert_three_way_digest(&tie_cc, &ties, "gated simultaneous ties");
 }

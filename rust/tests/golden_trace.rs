@@ -11,14 +11,17 @@
 //! * Recording + periodic sampling perturbs neither digests nor the loop's
 //!   event counter (samples are observational grid reads, not loop events).
 
-use nexus::cluster::{AutoscalerCfg, Cluster, ClusterCfg, ClusterMetrics, RoutingPolicy};
+use nexus::cluster::{AutoscalerCfg, Cluster, ClusterCfg, ClusterMetrics, RoutingPolicy, WfqCfg};
 use nexus::engine::{build_engine, drive, drive_traced, run_engine_traced, EngineCfg, EngineKind};
 use nexus::model::ModelConfig;
 use nexus::trace::{
     attribute, canonical_order, chrome_trace, to_jsonl, EventKind, TraceEvent, Tracer, FLEET,
 };
 use nexus::util::json::Json;
-use nexus::workload::{generate, generate_bursty, BurstyCfg, Dataset, Request};
+use nexus::workload::{
+    generate, generate_bursty, generate_with_tenants, BurstyCfg, Dataset, Request, TenantMix,
+    TenantSpec,
+};
 
 fn ecfg(seed: u64) -> EngineCfg {
     EngineCfg::new(ModelConfig::qwen3b(), seed)
@@ -208,7 +211,7 @@ fn stealing_fleet_emits_the_sequential_event_set_plus_rebalances() {
     // on shard 0 under the static `id % 2` partition at 2 threads.
     let mut trace = Vec::new();
     for k in 0..4usize {
-        trace.push(Request { id: k, arrival: 0.0, prompt_len: 64, output_len: 4 });
+        trace.push(Request { id: k, arrival: 0.0, prompt_len: 64, output_len: 4, tenant: 0 });
     }
     for i in 0..120usize {
         trace.push(Request {
@@ -216,6 +219,7 @@ fn stealing_fleet_emits_the_sequential_event_set_plus_rebalances() {
             arrival: 0.2 + 0.05 * i as f64,
             prompt_len: 512,
             output_len: 24,
+            tenant: 0,
         });
     }
     let cc = ClusterCfg::new(EngineKind::Nexus, ecfg(19), 4, RoutingPolicy::SessionAffinity);
@@ -300,6 +304,148 @@ fn attribution_phases_bound_mean_e2e() {
         att.total(),
         mean_e2e
     );
+}
+
+/// A 3-tenant workload plus a deliberately tight WFQ gate (small quotas and
+/// a fleet-wide cap) so that both `TenantAdmit` *and* `TenantThrottle`
+/// actually fire under load.
+fn tenant_fleet() -> (Vec<Request>, ClusterCfg) {
+    let mix = TenantMix::new(vec![3, 2, 1]);
+    let trace = generate_with_tenants(Dataset::Mixed, 60, 10.0, 31, &mix);
+    let specs = vec![
+        TenantSpec { weight: 3.0, admission_quota: 4, ..TenantSpec::default() },
+        TenantSpec { weight: 1.0, admission_quota: 3, ..TenantSpec::default() },
+        TenantSpec { weight: 1.0, admission_quota: 2, ..TenantSpec::default() },
+    ];
+    let mut cc = ClusterCfg::new(EngineKind::Nexus, ecfg(37), 2, RoutingPolicy::JoinShortestQueue);
+    cc.wfq = Some(WfqCfg::new(specs).with_capacity(6));
+    (trace, cc)
+}
+
+#[test]
+fn tenant_events_match_across_sequential_loops_and_tie_out() {
+    // Both sequential fleet loops must narrate the WFQ front stage
+    // identically: one Arrival and (eventually) one TenantAdmit per
+    // request, throttles whenever the gate holds a request back, all at
+    // fleet level.
+    let (trace, cc) = tenant_fleet();
+    let (m_opt, ev_opt) = run_fleet(&cc, &trace, false, 1.0);
+    let (m_ref, ev_ref) = run_fleet(&cc, &trace, true, 1.0);
+    assert_trace_eq(&ev_opt, &ev_ref, "wfq fleet");
+    assert_eq!(
+        m_opt.fleet.deviation(&m_ref.fleet).map(|d| d <= 1e-9),
+        Some(true),
+        "loops must stay metric-equivalent with the gate on"
+    );
+    let count = |pred: fn(&EventKind) -> bool| ev_opt.iter().filter(|e| pred(&e.kind)).count();
+    assert_eq!(count(|k| matches!(k, EventKind::Arrival { .. })), trace.len());
+    assert_eq!(
+        count(|k| matches!(k, EventKind::TenantAdmit { .. })),
+        trace.len(),
+        "every request is admitted exactly once"
+    );
+    assert_eq!(
+        count(|k| matches!(k, EventKind::Route { .. })),
+        trace.len(),
+        "every admit carries a routing decision"
+    );
+    assert!(
+        count(|k| matches!(k, EventKind::TenantThrottle { .. })) > 0,
+        "the tight quotas must hold someone back"
+    );
+    // Gate decisions are fleet-scoped, tagged with real tenants, and every
+    // throttled request is later admitted.
+    for e in &ev_opt {
+        match &e.kind {
+            EventKind::TenantAdmit { tenant, .. } => {
+                assert_eq!(e.replica, FLEET);
+                assert!(*tenant < 3);
+            }
+            EventKind::TenantThrottle { req, tenant, queued } => {
+                assert_eq!(e.replica, FLEET);
+                assert!(*tenant < 3);
+                assert!(*queued > 0, "a throttle implies a non-empty tenant queue");
+                assert!(
+                    ev_opt.iter().any(|a| matches!(
+                        &a.kind,
+                        EventKind::TenantAdmit { req: r, .. } if r == req
+                    )),
+                    "request {req} throttled but never admitted"
+                );
+            }
+            _ => {}
+        }
+    }
+}
+
+#[test]
+fn wfq_tracing_is_observational() {
+    // Recording the tenant events must not move the gated run itself.
+    let (trace, cc) = tenant_fleet();
+    let plain = Cluster::new(cc.clone()).run(&trace);
+    let (traced, events) = run_fleet(&cc, &trace, false, 1.0);
+    assert_eq!(
+        plain.digest(),
+        traced.digest(),
+        "recording tenant events changed the gated digest"
+    );
+    assert!(events.iter().any(|e| matches!(e.kind, EventKind::TenantAdmit { .. })));
+}
+
+#[test]
+fn parallel_wfq_fleet_emits_the_sequential_tenant_event_set() {
+    // The sharded loop runs the same gate in lockstep rounds; digest AND
+    // event content (canonical order, sampling off) must match the
+    // sequential loop for any thread count.
+    let (trace, cc) = tenant_fleet();
+    let run = |threads: usize| {
+        let tracer = Tracer::recording();
+        let mut cluster = Cluster::new(cc.clone());
+        cluster.tracer = tracer.clone();
+        let m = if threads > 1 {
+            cluster.run_parallel(&trace, threads, 0.0)
+        } else {
+            cluster.run(&trace)
+        };
+        let mut events = tracer.take();
+        canonical_order(&mut events);
+        (m, events)
+    };
+    let (m_seq, ev_seq) = run(1);
+    assert!(ev_seq.iter().any(|e| matches!(e.kind, EventKind::TenantThrottle { .. })));
+    for threads in [2usize, 4] {
+        let (m_par, ev_par) = run(threads);
+        assert_eq!(
+            m_seq.digest(),
+            m_par.digest(),
+            "tracing + wfq: parallel digest diverged @ {threads} threads"
+        );
+        assert_trace_eq(&ev_par, &ev_seq, &format!("wfq parallel x{threads} vs sequential"));
+    }
+}
+
+#[test]
+fn tenant_events_round_trip_through_exports() {
+    // Chrome and JSONL serializations of a gated run — including the new
+    // TenantAdmit/TenantThrottle variants — must survive the in-repo JSON
+    // parser.
+    let (trace, cc) = tenant_fleet();
+    let (_, events) = run_fleet(&cc, &trace, false, 1.0);
+    assert!(events.iter().any(|e| matches!(e.kind, EventKind::TenantAdmit { .. })));
+    assert!(events.iter().any(|e| matches!(e.kind, EventKind::TenantThrottle { .. })));
+    let chrome = chrome_trace(&events).to_string();
+    let parsed = Json::parse(&chrome).expect("chrome trace must be valid JSON");
+    let rows = parsed
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array missing");
+    assert!(!rows.is_empty(), "no trace rows");
+    let jsonl = to_jsonl(&events);
+    let lines: Vec<&str> = jsonl.lines().collect();
+    assert_eq!(lines.len(), events.len());
+    for line in lines {
+        Json::parse(line).expect("every JSONL line must parse");
+    }
 }
 
 #[test]

@@ -173,6 +173,7 @@ fn single_request_latency_matches_isolated_prediction() {
         arrival: 0.0,
         prompt_len: 1024,
         output_len: 4,
+        tenant: 0,
     }];
     let m = run_engine(EngineKind::Vllm, &cfg, &trace);
     let r = &m.records[0];
