@@ -32,6 +32,14 @@ run cargo test --release --test prop_tenant -q
 run cargo test --release --test golden_digest wfq -q
 run cargo test --release --test golden_trace tenant -q
 run cargo test --release --test golden_trace wfq -q
+# Fleet prefix caching: store/tier invariants plus the TTFT headline
+# (prop_prefix), the prefix-aware three-way digest sweeps, and the prefix
+# trace events. Prefix routing state lives in the coordinator and must stay
+# digest-identical across all three loops, so pin these under release
+# scheduling like the other fleet invariants.
+run cargo test --release --test prop_prefix -q
+run cargo test --release --test golden_digest prefix -q
+run cargo test --release --test golden_trace prefix -q
 # Benches are the perf harness of record (BENCH_hotpath.json); keep them
 # compiling without paying their runtime in CI.
 run cargo bench --no-run
@@ -86,6 +94,54 @@ grep -q "per-tenant SLO" /tmp/nexus_wfq_a.txt
 diff /tmp/nexus_tn_off.txt \
     <(head -n "$(wc -l < /tmp/nexus_tn_off.txt)" /tmp/nexus_wfq_a.txt)
 echo "    tenant tags free; wfq deterministic; report appended only"
+# Fleet prefix-cache smoke: prefix-aware routing on the same seed twice must
+# print identical output (including the cache stats line); on the chat-heavy
+# ShareGPT workload it must beat session affinity on mean TTFT, and on the
+# low-reuse arxiv workload it must not lose (≤ 5 % tolerance). Mean TTFT is
+# column 4 of the fleet-summary row, unit-suffixed by `dur()`.
+run_cluster_cli_policy() {
+    ./target/release/nexus cluster --engine nexus --replicas 6 --policy "$1" \
+        --dataset "$2" --n "$3" --rate "$4" --seed 7 --threads 2 --window 0.5 \
+        2>/dev/null
+}
+ttft_s() {
+    awk '/^nexus x/ {
+        v = $4
+        if (v ~ /us$/)      { sub(/us$/, "", v); v /= 1e6 }
+        else if (v ~ /ms$/) { sub(/ms$/, "", v); v /= 1e3 }
+        else                { sub(/s$/, "", v) }
+        print v
+    }' "$1"
+}
+echo
+echo "==> cluster --policy prefix smoke (chat: must win TTFT vs affinity)"
+run_cluster_cli_policy prefix sharegpt 120 12 >/tmp/nexus_pfx_a.txt
+run_cluster_cli_policy prefix sharegpt 120 12 >/tmp/nexus_pfx_b.txt
+diff /tmp/nexus_pfx_a.txt /tmp/nexus_pfx_b.txt
+grep -q "prefix cache: hit rate" /tmp/nexus_pfx_a.txt
+run_cluster_cli_policy affinity sharegpt 120 12 >/tmp/nexus_aff.txt
+if grep -q "prefix cache:" /tmp/nexus_aff.txt; then
+    echo "affinity run must not engage the prefix machinery"
+    exit 1
+fi
+p=$(ttft_s /tmp/nexus_pfx_a.txt)
+a=$(ttft_s /tmp/nexus_aff.txt)
+awk -v a="$a" -v p="$p" 'BEGIN { exit !(p < a) }' || {
+    echo "prefix TTFT ${p}s did not beat affinity ${a}s on chat"
+    exit 1
+}
+echo "    deterministic; chat TTFT: prefix ${p}s < affinity ${a}s"
+echo
+echo "==> cluster --policy prefix smoke (single-turn arxiv: must not lose)"
+run_cluster_cli_policy prefix arxiv 80 3 >/tmp/nexus_pfx_ax.txt
+run_cluster_cli_policy affinity arxiv 80 3 >/tmp/nexus_aff_ax.txt
+p=$(ttft_s /tmp/nexus_pfx_ax.txt)
+a=$(ttft_s /tmp/nexus_aff_ax.txt)
+awk -v a="$a" -v p="$p" 'BEGIN { exit !(p <= 1.05 * a) }' || {
+    echo "prefix TTFT ${p}s lost vs affinity ${a}s on arxiv"
+    exit 1
+}
+echo "    arxiv TTFT: prefix ${p}s <= 1.05x affinity ${a}s"
 # fmt/clippy are advisory gates: present in some toolchain images, absent in
 # minimal ones. Fail on findings, skip cleanly when the component is missing.
 if cargo fmt --version >/dev/null 2>&1; then

@@ -12,12 +12,17 @@
 //!   O(log R) heap loop ([`Cluster::run`]) and the retained pre-refactor
 //!   O(R)-scan loop ([`Cluster::run_reference`]), with a ≤ 1 ns
 //!   structural-deviation check proving both loops served identically; and
-//! * the sharded-loop scaling sweep (schema v2) — 64/256/1024 replicas ×
+//! * the sharded-loop scaling sweep — 64/256/1024 replicas ×
 //!   {1, 4, 8} worker threads through [`Cluster::run_parallel`], digest-
 //!   checked against the one-thread run (and against the sequential loop
 //!   for the materialized rows). The 1024-replica row feeds arrivals
 //!   through the streaming generator (`generate_bursty_iter` →
-//!   `run_parallel_stream`) so the trace is never materialized.
+//!   `run_parallel_stream`) so the trace is never materialized; and
+//! * the fleet prefix-cache sweep (schema v3, `prefix[]` rows) — chat-heavy
+//!   multi-turn vs single-turn traffic × {affinity, JSQ, prefix-aware ×
+//!   tier on/off}, carrying the PR-10 TTFT headline and the cold-path
+//!   digest check (prefix-aware on untagged traffic must serve exactly
+//!   as JSQ).
 //!
 //! Results are emitted machine-readably to `BENCH_hotpath.json` at the repo
 //! root (schema documented in ROADMAP §Perf; regenerate with
@@ -381,6 +386,8 @@ fn main() {
                 prompt_len: 64,
                 output_len: 4,
                 tenant: 0,
+                prefix: 0,
+                shared_len: 0,
             });
         }
         for (i, r) in base.iter().enumerate() {
@@ -471,13 +478,124 @@ fn main() {
     }
     st_tab.print();
 
+    // 10. Fleet prefix-cache sweep (§Perf, schema v3): routing policy × tier
+    //     fabric, on a chat-heavy multi-turn trace (95 % warm turns sharing
+    //     ~3/4 of the prompt across 12 sessions) and on untagged single-turn
+    //     traffic. The chat rows carry the PR-10 headline — prefix-aware
+    //     routing plus the fleet tier vs session affinity at equal offered
+    //     load must cut mean TTFT ≥ 1.5× — and the single-turn prefix row is
+    //     digest-checked against JSQ (cold prefix-aware degenerates exactly).
+    let mut px = Table::new(
+        "fleet prefix-cache sweep (Nexus engine, 4 replicas)",
+        &["workload", "policy", "tier", "wall", "mean TTFT", "hit rate", "saved"],
+    );
+    let mut prefix_rows: Vec<Json> = Vec::new();
+    let chat_pcfg = nexus::workload::PrefixCfg {
+        sessions: 12,
+        hit_prob: 0.95,
+        mean_frac: 0.75,
+        seed: 0x51C2,
+    };
+    let chat = nexus::workload::generate_with_prefixes(
+        nexus::workload::Dataset::ShareGpt,
+        300,
+        10.0,
+        23,
+        &chat_pcfg,
+    );
+    let single = nexus::workload::generate(nexus::workload::Dataset::Arxiv, 120, 3.0, 23);
+    for (workload, trace) in [("chat-multiturn", &chat), ("single-turn", &single)] {
+        let mut affinity_ttft = 0.0f64;
+        let mut jsq_digest = None;
+        for (policy_name, policy, cache) in [
+            ("affinity", RoutingPolicy::SessionAffinity, None),
+            ("jsq", RoutingPolicy::JoinShortestQueue, None),
+            (
+                "prefix",
+                RoutingPolicy::PrefixAware,
+                Some(Some(nexus::cluster::TierCfg::rdma())),
+            ),
+            ("prefix-no-tier", RoutingPolicy::PrefixAware, Some(None)),
+        ] {
+            let mut cc = ClusterCfg::new(EngineKind::Nexus, EngineCfg::new(model, 5), 4, policy);
+            if let Some(tier) = cache {
+                cc.prefix = Some(nexus::cluster::PrefixCacheCfg {
+                    tier,
+                    ..nexus::cluster::PrefixCacheCfg::default()
+                });
+            }
+            eprintln!("  prefix sweep [{workload}]: {policy_name}...");
+            let t0 = Instant::now();
+            let m = Cluster::new(cc).run(trace);
+            let wall = t0.elapsed().as_secs_f64();
+            let s = m.summary();
+            if policy_name == "affinity" {
+                affinity_ttft = s.mean_ttft;
+            }
+            if policy_name == "jsq" {
+                jsq_digest = Some(m.digest());
+            }
+            if workload == "single-turn" && policy_name == "prefix" {
+                assert_eq!(
+                    jsq_digest,
+                    Some(m.digest()),
+                    "cold prefix-aware must serve exactly as JSQ"
+                );
+            }
+            let speedup = affinity_ttft / s.mean_ttft.max(1e-12);
+            if workload == "chat-multiturn" && policy_name == "prefix" {
+                assert!(
+                    speedup >= 1.5,
+                    "prefix-aware + tier must cut chat TTFT ≥ 1.5x vs affinity \
+                     (got {speedup:.2}x: affinity {affinity_ttft:.4}s vs {:.4}s)",
+                    s.mean_ttft
+                );
+            }
+            let tier_label = match cache {
+                None => "-",
+                Some(Some(_)) => "rdma",
+                Some(None) => "none",
+            };
+            px.row(&[
+                workload.into(),
+                policy_name.into(),
+                tier_label.into(),
+                format!("{:.2}s", wall),
+                format!("{:.4}s", s.mean_ttft),
+                if m.prefix.lookups > 0 {
+                    format!("{:.1}%", 100.0 * m.prefix.hit_rate())
+                } else {
+                    "-".into()
+                },
+                format!("{}", m.prefix.tokens_saved),
+            ]);
+            prefix_rows.push(Json::obj(vec![
+                ("workload", workload.into()),
+                ("policy", policy_name.into()),
+                ("tier", tier_label.into()),
+                ("replicas", 4usize.into()),
+                ("requests", trace.len().into()),
+                ("completed", m.fleet.records.len().into()),
+                ("wall_s", wall.into()),
+                ("mean_ttft_s", s.mean_ttft.into()),
+                ("ttft_speedup_vs_affinity", speedup.into()),
+                ("prefix_lookups", (m.prefix.lookups as usize).into()),
+                ("prefix_hit_rate", m.prefix.hit_rate().into()),
+                ("prefix_tokens_saved", (m.prefix.tokens_saved as usize).into()),
+                ("prefix_evictions", (m.prefix.evictions as usize).into()),
+            ]));
+        }
+    }
+    px.print();
+
     // Machine-readable dump for the perf trajectory (ROADMAP §Perf).
     let out = Json::obj(vec![
         ("bench", "perf_hotpath".into()),
-        ("schema_version", 2usize.into()),
+        ("schema_version", 3usize.into()),
         ("status", "measured".into()),
         ("fleet", Json::Arr(fleet_rows)),
         ("scaling", Json::Arr(scaling_rows)),
+        ("prefix", Json::Arr(prefix_rows)),
         ("micro", Json::Arr(micro)),
     ]);
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_hotpath.json");

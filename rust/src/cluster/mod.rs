@@ -69,6 +69,7 @@
 
 pub mod autoscaler;
 pub mod parallel;
+pub mod prefixcache;
 pub mod replica;
 pub mod router;
 
@@ -76,8 +77,11 @@ pub use autoscaler::{Autoscaler, AutoscalerCfg, FleetObs, ScaleObjective};
 pub use parallel::{
     plan_rebalance, Arrivals, ParallelCfg, SliceArrivals, StealCfg, StreamArrivals,
 };
+pub use prefixcache::{PrefixCacheCfg, PrefixState, PrefixStats, PrefixStore, TierCfg};
 pub use replica::{Replica, ReplicaState};
 pub use router::{ReplicaView, Router, RoutingPolicy, TenantGate, WfqCfg};
+
+use prefixcache::PrefixHit;
 
 use crate::costmodel::calibrate;
 use crate::engine::common::ArrivalFeed;
@@ -105,6 +109,12 @@ pub struct ClusterCfg {
     /// untouched — every loop, sequential and parallel, is byte-for-byte
     /// the pre-tenant code when this is off.
     pub wfq: Option<WfqCfg>,
+    /// Fleet prefix-cache tier (see [`prefixcache`]). `None` disables the
+    /// machinery entirely — engines keep their private prefix models and
+    /// every loop is byte-for-byte the pre-prefix code — unless the policy
+    /// is [`RoutingPolicy::PrefixAware`], which auto-fills the default
+    /// config (the policy is meaningless without a tier to read).
+    pub prefix: Option<PrefixCacheCfg>,
 }
 
 impl ClusterCfg {
@@ -115,7 +125,15 @@ impl ClusterCfg {
         policy: RoutingPolicy,
     ) -> Self {
         assert!(replicas >= 1, "a cluster needs at least one replica");
-        ClusterCfg { kind, engine, replicas, policy, autoscale: None, wfq: None }
+        ClusterCfg { kind, engine, replicas, policy, autoscale: None, wfq: None, prefix: None }
+    }
+
+    /// The prefix tier this config runs with: explicit, auto-filled for
+    /// [`RoutingPolicy::PrefixAware`], or none.
+    pub fn prefix_cfg(&self) -> Option<PrefixCacheCfg> {
+        self.prefix.or_else(|| {
+            (self.policy == RoutingPolicy::PrefixAware).then(PrefixCacheCfg::default)
+        })
     }
 }
 
@@ -165,6 +183,10 @@ pub struct ClusterMetrics {
     /// balance evidence behind the `BENCH_hotpath.json` skew sweep. Empty
     /// for the sequential loops.
     pub shard_steps: Vec<u64>,
+    /// Fleet prefix-cache counters (all zero when the tier is disabled).
+    /// A deterministic function of the routed sequence, so they are folded
+    /// into the digest — all three loops must agree on every field.
+    pub prefix: PrefixStats,
 }
 
 impl ClusterMetrics {
@@ -223,6 +245,12 @@ impl ClusterMetrics {
         }
         mix(&mut h, self.ttft_hist.count());
         mix(&mut h, self.tbt_hist.count());
+        mix(&mut h, self.prefix.lookups);
+        mix(&mut h, self.prefix.local_hits);
+        mix(&mut h, self.prefix.tier_hits);
+        mix(&mut h, self.prefix.misses);
+        mix(&mut h, self.prefix.evictions);
+        mix(&mut h, self.prefix.tokens_saved);
         h
     }
 
@@ -307,6 +335,9 @@ pub struct Cluster {
     pub cfg: ClusterCfg,
     pub replicas: Vec<Replica>,
     pub router: Router,
+    /// Fleet prefix-cache state (see [`prefixcache`]); rebuilt per run from
+    /// [`ClusterCfg::prefix_cfg`]. `None` = machinery off.
+    pub prefix: Option<PrefixState>,
     /// When set, [`Cluster::run`] records every processed event time into
     /// [`Cluster::event_times`] (property tests assert monotonicity).
     pub record_event_times: bool,
@@ -329,6 +360,7 @@ impl Cluster {
             cfg,
             replicas: Vec::new(),
             router: Router::new(policy),
+            prefix: None,
             record_event_times: false,
             event_times: Vec::new(),
             tracer: Tracer::default(),
@@ -427,6 +459,54 @@ impl Cluster {
         }
     }
 
+    /// Commit one routed arrival against the prefix tier: classify +
+    /// account + admit into the target's store, emit the typed prefix
+    /// events when tracing (observational only — no loop events, no state
+    /// the untraced run lacks), and return the effective prompt to pin on
+    /// the engine. `None` (machinery off) means the engine keeps its own
+    /// prefix model. An associated fn over split borrows so the loops can
+    /// hold `&mut self.replicas[target]` around the call site.
+    fn prefix_admit(
+        prefix: &mut Option<PrefixState>,
+        tracer: &Tracer,
+        views: &[ReplicaView],
+        r: &Request,
+        target: usize,
+        t: f64,
+    ) -> Option<usize> {
+        let ps = prefix.as_mut()?;
+        let kv = views
+            .iter()
+            .find(|v| v.index as usize == target)
+            .map_or(0.0, |v| v.kv_usage);
+        let ev0 = ps.stats.evictions;
+        let (eff, hit) = ps.admit(target, r, kv);
+        if tracer.enabled() {
+            let saved = r.plen().saturating_sub(eff);
+            match hit {
+                PrefixHit::Local => tracer.emit_for(
+                    FLEET,
+                    t,
+                    EventKind::PrefixHit { req: r.id, replica: target, saved },
+                ),
+                PrefixHit::Tier => tracer.emit_for(
+                    FLEET,
+                    t,
+                    EventKind::PrefixFetch { req: r.id, replica: target, saved },
+                ),
+                PrefixHit::Miss => {
+                    tracer.emit_for(FLEET, t, EventKind::PrefixMiss { req: r.id, replica: target })
+                }
+                PrefixHit::Cold => {}
+            }
+            let evicted = (ps.stats.evictions - ev0) as usize;
+            if evicted > 0 {
+                tracer.emit_for(FLEET, t, EventKind::PrefixEvict { replica: target, evicted });
+            }
+        }
+        Some(eff)
+    }
+
     fn active_views(&self) -> Vec<ReplicaView> {
         self.replicas.iter().filter(|r| r.is_active()).map(|r| r.view()).collect()
     }
@@ -457,6 +537,7 @@ impl Cluster {
         };
         self.replicas = (0..n0).map(|i| Replica::new(i, cfg.kind, &cfg.engine, 0.0)).collect();
         self.router = Router::new(cfg.policy);
+        self.prefix = cfg.prefix_cfg().map(PrefixState::new);
         self.event_times.clear();
         self.heap_peak = 0;
         self.heap_compactions = 0;
@@ -575,13 +656,24 @@ impl Cluster {
                         views_buf.extend(
                             self.replicas.iter().filter(|x| x.is_active()).map(|x| x.view()),
                         );
-                        let target = self.router.route(&views_buf, r);
+                        let target = self.router.route_with(&views_buf, r, self.prefix.as_ref());
                         self.trace_route(r, target, &views_buf, t);
+                        let eff = Self::prefix_admit(
+                            &mut self.prefix,
+                            &self.tracer,
+                            &views_buf,
+                            r,
+                            target,
+                            t,
+                        );
                         // Replicas are never removed from the vec (only
                         // retired in place), so fleet position == replica id.
                         let rep = &mut self.replicas[target];
                         debug_assert_eq!(rep.id, target);
-                        rep.eng.inject(*r);
+                        match eff {
+                            Some(e) => rep.eng.inject_effective(*r, Some(e)),
+                            None => rep.eng.inject(*r),
+                        }
                         rep.routed += 1;
                         pending_total += 1;
                         arrivals_since_tick += 1;
@@ -606,11 +698,22 @@ impl Cluster {
                         views_buf.extend(
                             self.replicas.iter().filter(|x| x.is_active()).map(|x| x.view()),
                         );
-                        let target = self.router.route(&views_buf, &r);
+                        let target = self.router.route_with(&views_buf, &r, self.prefix.as_ref());
                         self.trace_admit(&r, target, &views_buf, t);
+                        let eff = Self::prefix_admit(
+                            &mut self.prefix,
+                            &self.tracer,
+                            &views_buf,
+                            &r,
+                            target,
+                            t,
+                        );
                         let rep = &mut self.replicas[target];
                         debug_assert_eq!(rep.id, target);
-                        rep.eng.inject(r);
+                        match eff {
+                            Some(e) => rep.eng.inject_effective(r, Some(e)),
+                            None => rep.eng.inject(r),
+                        }
                         rep.routed += 1;
                         pending_total += 1;
                         stepped.push(target);
@@ -752,6 +855,10 @@ impl Cluster {
                         let id = self.replicas[i].id as u32;
                         self.tracer.emit_for(id, t, EventKind::ReplicaRetire);
                         let m = self.replicas[i].retire(t);
+                        // Dead session pins fall through to JSQ-and-repin
+                        // anyway, so purging them changes no decision; it
+                        // just keeps the pin table tombstone-free.
+                        self.router.purge_replica(i);
                         ttft_hist.merge(&m.ttft_histogram());
                         tbt_hist.merge(&m.tbt_histogram());
                         fleet.merge(m);
@@ -841,6 +948,7 @@ impl Cluster {
             tbt_hist,
             rebalances: 0,
             shard_steps: Vec::new(),
+            prefix: self.prefix.as_ref().map_or_else(PrefixStats::default, |p| p.stats),
         }
     }
 
@@ -859,6 +967,7 @@ impl Cluster {
         };
         self.replicas = (0..n0).map(|i| Replica::new(i, cfg.kind, &cfg.engine, 0.0)).collect();
         self.router = Router::new(cfg.policy);
+        self.prefix = cfg.prefix_cfg().map(PrefixState::new);
         for i in 0..n0 {
             self.trace_replica_start(i, 0.0);
         }
@@ -933,13 +1042,24 @@ impl Cluster {
                 None => {
                     for r in feed.pop_until(t) {
                         let views = self.active_views();
-                        let target = self.router.route(&views, r);
+                        let target = self.router.route_with(&views, r, self.prefix.as_ref());
                         self.trace_route(r, target, &views, t);
+                        let eff = Self::prefix_admit(
+                            &mut self.prefix,
+                            &self.tracer,
+                            &views,
+                            r,
+                            target,
+                            t,
+                        );
                         // Replicas are never removed from the vec (only
                         // retired in place), so fleet position == replica id.
                         let rep = &mut self.replicas[target];
                         debug_assert_eq!(rep.id, target);
-                        rep.eng.inject(*r);
+                        match eff {
+                            Some(e) => rep.eng.inject_effective(*r, Some(e)),
+                            None => rep.eng.inject(*r),
+                        }
                         rep.routed += 1;
                         arrivals_since_tick += 1;
                     }
@@ -956,11 +1076,22 @@ impl Cluster {
                     }
                     while let Some(r) = g.pop_next() {
                         let views = self.active_views();
-                        let target = self.router.route(&views, &r);
+                        let target = self.router.route_with(&views, &r, self.prefix.as_ref());
                         self.trace_admit(&r, target, &views, t);
+                        let eff = Self::prefix_admit(
+                            &mut self.prefix,
+                            &self.tracer,
+                            &views,
+                            &r,
+                            target,
+                            t,
+                        );
                         let rep = &mut self.replicas[target];
                         debug_assert_eq!(rep.id, target);
-                        rep.eng.inject(r);
+                        match eff {
+                            Some(e) => rep.eng.inject_effective(r, Some(e)),
+                            None => rep.eng.inject(r),
+                        }
                         rep.routed += 1;
                         held.retain(|&(id, _)| id != r.id);
                     }
@@ -1022,8 +1153,10 @@ impl Cluster {
             // Retire drained replicas, merging their metrics into the pool.
             for rep in self.replicas.iter_mut() {
                 if rep.drained() {
-                    self.tracer.emit_for(rep.id as u32, t, EventKind::ReplicaRetire);
+                    let id = rep.id;
+                    self.tracer.emit_for(id as u32, t, EventKind::ReplicaRetire);
                     let m = rep.retire(t);
+                    self.router.purge_replica(id);
                     ttft_hist.merge(&m.ttft_histogram());
                     tbt_hist.merge(&m.tbt_histogram());
                     fleet.merge(m);
@@ -1086,6 +1219,7 @@ impl Cluster {
             tbt_hist,
             rebalances: 0,
             shard_steps: Vec::new(),
+            prefix: self.prefix.as_ref().map_or_else(PrefixStats::default, |p| p.stats),
         }
     }
 

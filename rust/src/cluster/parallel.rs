@@ -126,6 +126,7 @@
 //! differential test seed is pinned.
 
 use super::autoscaler::{Autoscaler, FleetObs};
+use super::prefixcache::{PrefixState, PrefixStats};
 use super::replica::{Replica, ReplicaState};
 use super::router::{ReplicaView, Router, TenantGate};
 use super::{Cluster, ClusterCfg, ClusterMetrics, ReplicaStats, ScaleEvent};
@@ -380,9 +381,11 @@ struct RoundCmd {
     /// instants). Workers advance each replica through its own events
     /// strictly below each time before injecting/stepping at it.
     step_times: Vec<f64>,
-    /// `(step index, target id, request)` in arrival order; the target
-    /// steps at `step_times[index]`.
-    injections: Vec<(u32, usize, Request)>,
+    /// `(step index, target id, request, effective prompt)` in arrival
+    /// order; the target steps at `step_times[index]`. The effective
+    /// prompt is the coordinator's prefix-tier resolution (`u32::MAX` =
+    /// no tier — the engine keeps its own prefix model).
+    injections: Vec<(u32, usize, Request, u32)>,
     /// Primed replicas whose first step coincides with `step_times[0]`.
     step_primed: Vec<usize>,
     /// First-step time for `prime_ids` (`NaN` = no prime this round),
@@ -591,10 +594,14 @@ fn worker_loop(
                         }
                     }
                     set.clear();
-                    for &(ki, id, req) in &rc.injections {
+                    for &(ki, id, req, eff) in &rc.injections {
                         if ki as usize == k {
                             let i = find(&bin, id);
-                            bin[i].eng.inject(req);
+                            if eff == u32::MAX {
+                                bin[i].eng.inject(req);
+                            } else {
+                                bin[i].eng.inject_effective(req, Some(eff as usize));
+                            }
                             bin[i].routed += 1;
                             set.push(i);
                         }
@@ -823,6 +830,11 @@ impl Cluster {
         };
         self.replicas = Vec::new();
         self.router = Router::new(cfg.policy);
+        // Prefix-tier state lives on the coordinator: every lookup and
+        // admit happens at routing time, so the machinery is identical to
+        // the sequential loops by construction (workers only ever see the
+        // already-resolved effective prompt riding on the injection).
+        self.prefix = cfg.prefix_cfg().map(PrefixState::new);
         self.event_times.clear();
         let max_vt = cfg.engine.max_virtual_time;
         let mut next_tick = scaler.as_ref().map(|s| s.cfg.interval);
@@ -905,7 +917,7 @@ impl Cluster {
         // always rendezvous per arrival instant.
         let batching = steal.is_some() && !self.tracer.enabled() && cfg.wfq.is_none();
         let mut batch_times: Vec<f64> = Vec::new();
-        let mut batch_inj: Vec<(u32, usize, Request)> = Vec::new();
+        let mut batch_inj: Vec<(u32, usize, Request, u32)> = Vec::new();
         let mut hold_buf: Vec<Request> = Vec::new();
         let mut targets_buf: Vec<usize> = Vec::new();
         // A same-instant arrival group that failed the blind probe waits
@@ -949,7 +961,7 @@ impl Cluster {
             let mut spare: Vec<RoundCmd> =
                 (0..threads).map(|_| RoundCmd::default()).collect();
             const NO_T: &[f64] = &[];
-            const NO_I: &[(u32, usize, Request)] = &[];
+            const NO_I: &[(u32, usize, Request, u32)] = &[];
             const NO_P: &[usize] = &[];
 
             // Broadcast one round (partitioning directives by `owner`) and
@@ -957,7 +969,7 @@ impl Cluster {
             macro_rules! round {
                 ($times:expr, $inj:expr, $sp:expr, $horizon:expr) => {{
                     let times: &[f64] = $times;
-                    let inj: &[(u32, usize, Request)] = $inj;
+                    let inj: &[(u32, usize, Request, u32)] = $inj;
                     let sp: &[usize] = $sp;
                     let horizon: f64 = $horizon;
                     for c in spare.iter_mut() {
@@ -978,8 +990,8 @@ impl Cluster {
                     for &(id, at) in &pending_spawns {
                         spare[owner[id]].spawns.push((id, at));
                     }
-                    for &(k, id, req) in inj {
-                        spare[owner[id]].injections.push((k, id, req));
+                    for &(k, id, req, eff) in inj {
+                        spare[owner[id]].injections.push((k, id, req, eff));
                     }
                     for &id in sp {
                         spare[owner[id]].step_primed.push(id);
@@ -1176,14 +1188,22 @@ impl Cluster {
                 match gate.as_mut() {
                     None => {
                         for r in &arr_buf {
-                            let target = self.router.route(&views, r);
+                            let target = self.router.route_with(&views, r, self.prefix.as_ref());
                             self.trace_route(r, target, &views, b);
+                            let eff = Self::prefix_admit(
+                                &mut self.prefix,
+                                &self.tracer,
+                                &views,
+                                r,
+                                target,
+                                b,
+                            );
                             if let Ok(pos) =
                                 views.binary_search_by_key(&(target as u32), |v| v.index)
                             {
                                 views[pos].pending += 1;
                             }
-                            batch_inj.push((0, target, *r));
+                            batch_inj.push((0, target, *r, eff.map_or(u32::MAX, |e| e as u32)));
                             pending_total += 1;
                             arrivals_since_tick += 1;
                         }
@@ -1200,14 +1220,22 @@ impl Cluster {
                             throttled_buf.push((r.id, r.tenant));
                         }
                         while let Some(r) = g.pop_next() {
-                            let target = self.router.route(&views, &r);
+                            let target = self.router.route_with(&views, &r, self.prefix.as_ref());
                             self.trace_admit(&r, target, &views, b);
+                            let eff = Self::prefix_admit(
+                                &mut self.prefix,
+                                &self.tracer,
+                                &views,
+                                &r,
+                                target,
+                                b,
+                            );
                             if let Ok(pos) =
                                 views.binary_search_by_key(&(target as u32), |v| v.index)
                             {
                                 views[pos].pending += 1;
                             }
-                            batch_inj.push((0, target, r));
+                            batch_inj.push((0, target, r, eff.map_or(u32::MAX, |e| e as u32)));
                             pending_total += 1;
                             throttled_buf.retain(|&(id, _)| id != r.id);
                         }
@@ -1243,7 +1271,12 @@ impl Cluster {
                         arrivals.pop_until(a, &mut hold_buf);
                         targets_buf.clear();
                         for (j, r) in hold_buf.iter().enumerate() {
-                            match self.router.blind_probe(&views, blind_n + j, r) {
+                            match self.router.blind_probe_with(
+                                &views,
+                                blind_n + j,
+                                r,
+                                self.prefix.as_ref(),
+                            ) {
                                 Some(t) => targets_buf.push(t),
                                 None => break,
                             }
@@ -1254,8 +1287,20 @@ impl Cluster {
                         }
                         let k = batch_times.len() as u32;
                         batch_times.push(a);
-                        for (r, &t) in hold_buf.iter().zip(&targets_buf) {
-                            batch_inj.push((k, t, *r));
+                        for (r, &tg) in hold_buf.iter().zip(&targets_buf) {
+                            // Blind members passed `pure_touch`, so this admit
+                            // is a guaranteed no-op on store contents — it only
+                            // refreshes LRU ticks and stats, in the same member
+                            // order the sequential loops would use.
+                            let eff = Self::prefix_admit(
+                                &mut self.prefix,
+                                &self.tracer,
+                                &views,
+                                r,
+                                tg,
+                                a,
+                            );
+                            batch_inj.push((k, tg, *r, eff.map_or(u32::MAX, |e| e as u32)));
                             pending_total += 1;
                             arrivals_since_tick += 1;
                         }
@@ -1535,6 +1580,10 @@ impl Cluster {
             tbt_hist,
             rebalances,
             shard_steps: shard_total,
+            prefix: self
+                .prefix
+                .as_ref()
+                .map_or_else(PrefixStats::default, |p| p.stats),
         }
     }
 }

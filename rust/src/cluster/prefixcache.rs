@@ -1,0 +1,515 @@
+//! Fleet-wide prefix-cache tier: deterministic, router-visible prefix reuse.
+//!
+//! The single-engine `sched::RadixCache` models prefix reuse as a private
+//! probabilistic draw — invisible to the router, so the fleet cannot trade
+//! prefix locality against load balance. This module makes reuse a
+//! *mechanism* instead of a distribution:
+//!
+//! * every replica owns a [`PrefixStore`] — the set of prefix chains whose
+//!   KV is resident on that GPU, capacity-bounded in tokens with
+//!   deterministic LRU eviction, and coupled to the replica's KV pressure
+//!   (above `kv_watermark` the store's budget halves, shedding cold
+//!   prefixes before the engine would have to preempt decodes);
+//! * a shared fleet tier (LMCache-style) remembers the longest prefix any
+//!   replica has computed per chain; a replica missing locally can *fetch*
+//!   it over a [`TierCfg`] transfer class (NVLink / RDMA / TCP) instead of
+//!   recomputing — the fetch cost is charged as equivalent prefill tokens,
+//!   so a tier hit lands strictly between a local hit (free) and a miss
+//!   (full recompute) whenever the link is faster than recompute;
+//! * the whole state lives coordinator-side in [`PrefixState`]: lookups are
+//!   pure, mutation happens only at routing commit ([`PrefixState::admit`]),
+//!   and every decision is a deterministic function of the routed sequence —
+//!   which is exactly what keeps the three fleet loops digest-identical.
+//!
+//! The router's `PrefixAware` policy scores replicas by resident-prefix
+//! tokens minus a load penalty (see `cluster::router`); the winning
+//! replica's engine is injected with the *effective* prompt computed here
+//! (best of local hit / tier fetch / miss).
+
+use crate::workload::Request;
+use std::collections::HashMap;
+
+/// A tier transfer class: bandwidth in bytes/s plus a flat latency floor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierCfg {
+    /// Link bandwidth (bytes/s).
+    pub bw: f64,
+    /// Per-fetch latency floor (seconds).
+    pub lat: f64,
+}
+
+impl TierCfg {
+    /// Intra-node NVLink-class fabric (~400 GB/s, ~2 µs).
+    pub fn nvlink() -> Self {
+        TierCfg { bw: 400e9, lat: 2e-6 }
+    }
+
+    /// Cross-node RDMA-class fabric (~25 GB/s, ~10 µs).
+    pub fn rdma() -> Self {
+        TierCfg { bw: 25e9, lat: 10e-6 }
+    }
+
+    /// Commodity TCP-class fabric (~2.5 GB/s, ~200 µs).
+    pub fn tcp() -> Self {
+        TierCfg { bw: 2.5e9, lat: 200e-6 }
+    }
+
+    pub fn by_name(name: &str) -> Option<TierCfg> {
+        match name.to_ascii_lowercase().as_str() {
+            "nvlink" => Some(Self::nvlink()),
+            "rdma" => Some(Self::rdma()),
+            "tcp" => Some(Self::tcp()),
+            _ => None,
+        }
+    }
+}
+
+/// Fleet prefix-cache configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefixCacheCfg {
+    /// Resident prefix tokens each replica's store may hold.
+    pub capacity: usize,
+    /// Shared fleet tier; `None` = local stores only (miss on remote).
+    pub tier: Option<TierCfg>,
+    /// KV bytes per cached token (sizes tier transfers).
+    pub kv_bytes_per_token: f64,
+    /// Prefill throughput (tokens/s) used to convert transfer seconds into
+    /// equivalent prefill tokens — the common currency of the cost model.
+    pub prefill_tps: f64,
+    /// KV-usage watermark above which a replica's store budget halves.
+    pub kv_watermark: f64,
+    /// Routing-score load penalty (resident tokens one queued request is
+    /// worth; see the `PrefixAware` score in `cluster::router`).
+    pub load_penalty: f64,
+}
+
+impl Default for PrefixCacheCfg {
+    fn default() -> Self {
+        PrefixCacheCfg {
+            capacity: 1 << 18,
+            tier: Some(TierCfg::rdma()),
+            kv_bytes_per_token: 65_536.0,
+            prefill_tps: 20_000.0,
+            kv_watermark: 0.90,
+            load_penalty: 64.0,
+        }
+    }
+}
+
+impl PrefixCacheCfg {
+    /// Cost of fetching `shared` prefix tokens over `tier`, expressed as
+    /// equivalent prefill tokens (≥ 1: a fetch is never free).
+    pub fn xfer_tokens(&self, tier: &TierCfg, shared: usize) -> usize {
+        let secs = tier.lat + shared as f64 * self.kv_bytes_per_token / tier.bw;
+        ((secs * self.prefill_tps).ceil() as usize).max(1)
+    }
+
+    /// Store budget under the KV watermark coupling: KV pressure at or above
+    /// the watermark halves the prefix budget (decode KV outranks cache).
+    pub fn effective_capacity(&self, kv_usage: f64) -> usize {
+        if kv_usage >= self.kv_watermark {
+            self.capacity / 2
+        } else {
+            self.capacity
+        }
+    }
+}
+
+/// How a routed request's prefix resolved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefixHit {
+    /// Shared prefix resident on the routed replica — reuse is free.
+    Local,
+    /// Fetched from the fleet tier — reuse pays transfer, not recompute.
+    Tier,
+    /// Chain known but not reachable cheaper than recompute.
+    Miss,
+    /// No shared prefix to look up (chain head or untagged request).
+    Cold,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    chain: u32,
+    resident: u32,
+    /// Logical LRU clock value of the last touch.
+    touched: u64,
+}
+
+/// Per-replica resident-prefix set: token-capacity-bounded, deterministic
+/// LRU. Stores are small (one entry per live chain routed here), so linear
+/// scans beat pointer-chased LRU lists and are trivially deterministic.
+#[derive(Debug, Clone, Default)]
+pub struct PrefixStore {
+    entries: Vec<Entry>,
+    total: u64,
+    tick: u64,
+}
+
+impl PrefixStore {
+    /// Resident prefix tokens for `chain` (0 if absent). Pure — never
+    /// touches LRU state.
+    pub fn resident(&self, chain: u32) -> usize {
+        self.entries
+            .iter()
+            .find(|e| e.chain == chain)
+            .map_or(0, |e| e.resident as usize)
+    }
+
+    /// Total resident tokens across chains.
+    pub fn total_tokens(&self) -> usize {
+        self.total as usize
+    }
+
+    /// Number of resident chains.
+    pub fn chains(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Admit (or touch) `chain` with a prompt of `len` tokens: residency
+    /// grows monotonically to `max(resident, len)`, the entry becomes
+    /// most-recently-used, and least-recently-used *other* chains are
+    /// evicted until the store fits `capacity`. Returns the eviction count.
+    ///
+    /// A `len ≤ resident` admit under capacity is a **pure LRU touch** — no
+    /// growth, no eviction — which is what makes same-instant prefix-pinned
+    /// arrivals commute (the rendezvous-batching blind-probe contract, see
+    /// `cluster::parallel`).
+    pub fn admit(&mut self, chain: u32, len: usize, capacity: usize) -> usize {
+        self.tick += 1;
+        let len = len.min(u32::MAX as usize) as u32;
+        match self.entries.iter_mut().find(|e| e.chain == chain) {
+            Some(e) => {
+                if len > e.resident {
+                    self.total += (len - e.resident) as u64;
+                    e.resident = len;
+                }
+                e.touched = self.tick;
+            }
+            None => {
+                self.entries.push(Entry { chain, resident: len, touched: self.tick });
+                self.total += len as u64;
+            }
+        }
+        let mut evictions = 0usize;
+        while self.total > capacity as u64 && self.entries.len() > 1 {
+            // LRU victim: smallest (touched, chain). The just-touched entry
+            // holds the max tick, so it is never the victim here.
+            let mut victim = 0usize;
+            for i in 1..self.entries.len() {
+                let (a, b) = (&self.entries[i], &self.entries[victim]);
+                if (a.touched, a.chain) < (b.touched, b.chain) {
+                    victim = i;
+                }
+            }
+            self.total -= self.entries[victim].resident as u64;
+            self.entries.remove(victim);
+            evictions += 1;
+        }
+        if self.total > capacity as u64 {
+            // A lone chain larger than the whole budget: trim it in place
+            // (the tail of an over-long prefix is dropped, the head stays).
+            let e = &mut self.entries[0];
+            self.total = capacity as u64;
+            e.resident = capacity as u32;
+            if capacity == 0 {
+                self.entries.clear();
+                evictions += 1;
+            }
+        }
+        evictions
+    }
+}
+
+/// Fleet-wide counters surfaced through `ClusterMetrics` (and folded into
+/// the digest — they are a deterministic function of the routed sequence,
+/// so all three fleet loops must agree on every field).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// Routed requests that had a shared prefix to look up.
+    pub lookups: u64,
+    pub local_hits: u64,
+    pub tier_hits: u64,
+    pub misses: u64,
+    /// Chains evicted from per-replica stores.
+    pub evictions: u64,
+    /// Prefill tokens not recomputed (local savings + tier savings net of
+    /// transfer cost).
+    pub tokens_saved: u64,
+}
+
+impl PrefixStats {
+    /// Fleet hit rate (local + tier over lookups; 0 with no lookups).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            return 0.0;
+        }
+        (self.local_hits + self.tier_hits) as f64 / self.lookups as f64
+    }
+}
+
+/// Coordinator-side prefix state: one [`PrefixStore`] per replica id plus
+/// the shared fleet tier and the fleet counters. Replica ids are never
+/// reused, so retired replicas' stores simply go inert.
+#[derive(Debug, Clone)]
+pub struct PrefixState {
+    pub cfg: PrefixCacheCfg,
+    stores: Vec<PrefixStore>,
+    /// chain → longest prefix any replica has published.
+    tier: HashMap<u32, u32>,
+    pub stats: PrefixStats,
+}
+
+impl PrefixState {
+    pub fn new(cfg: PrefixCacheCfg) -> Self {
+        PrefixState { cfg, stores: Vec::new(), tier: HashMap::new(), stats: PrefixStats::default() }
+    }
+
+    /// Resident prefix tokens for `chain` on replica `rep` (pure).
+    pub fn resident(&self, rep: usize, chain: u32) -> usize {
+        self.stores.get(rep).map_or(0, |s| s.resident(chain))
+    }
+
+    /// Longest prefix the fleet tier can serve for `chain` (0 when the tier
+    /// is disabled).
+    pub fn tier_len(&self, chain: u32) -> usize {
+        if self.cfg.tier.is_none() {
+            return 0;
+        }
+        self.tier.get(&chain).map_or(0, |&l| l as usize)
+    }
+
+    /// The replica's store (for tests / diagnostics).
+    pub fn store(&self, rep: usize) -> Option<&PrefixStore> {
+        self.stores.get(rep)
+    }
+
+    /// Effective prefill length if `req` were routed to `rep`, and how the
+    /// prefix would resolve. Pure — routing probes may call this freely.
+    ///
+    /// `eff = min(plen − local, plen − tier + xfer(tier), plen).max(1)`
+    /// with ties preferring the local path.
+    pub fn effective_prompt(&self, rep: usize, req: &Request) -> (usize, PrefixHit) {
+        let plen = req.plen();
+        let s = req.shared();
+        if req.prefix == 0 || s == 0 {
+            return (plen, PrefixHit::Cold);
+        }
+        let local = self.resident(rep, req.prefix).min(s);
+        let eff_local = plen - local;
+        if let Some(t) = self.cfg.tier {
+            let st = self.tier_len(req.prefix).min(s);
+            if st > local {
+                let eff_tier = plen - st + self.cfg.xfer_tokens(&t, st);
+                if eff_tier < eff_local {
+                    return (eff_tier.max(1), PrefixHit::Tier);
+                }
+            }
+        }
+        if local > 0 {
+            (eff_local.max(1), PrefixHit::Local)
+        } else {
+            (plen, PrefixHit::Miss)
+        }
+    }
+
+    /// True when routing `req` to `rep` would be a *pure LRU touch*: the
+    /// chain is fully resident (covers the whole prompt, so no growth), the
+    /// replica's KV pressure is below the watermark, and the store sits
+    /// within the *halved* budget — so the admit cannot evict under either
+    /// capacity, whatever KV usage it is later committed with. That last
+    /// clause is what makes the touch exact for rendezvous batching: the
+    /// parallel coordinator probes with boundary-time KV views while the
+    /// sequential loop commits with instant-time ones, and a touch that is
+    /// a no-op under both budgets is identical under both views.
+    pub fn pure_touch(&self, rep: usize, req: &Request, kv_usage: f64) -> bool {
+        req.prefix != 0
+            && kv_usage < self.cfg.kv_watermark
+            && self.resident(rep, req.prefix) >= req.plen()
+            && self
+                .stores
+                .get(rep)
+                .is_some_and(|s| s.total_tokens() <= self.cfg.capacity / 2)
+    }
+
+    /// Commit `req`'s routing to `rep`: classify against current state,
+    /// account the fleet counters, admit the full prompt into the replica's
+    /// store (watermark-coupled capacity from the routing-time `kv_usage`
+    /// view), and publish the chain to the tier. Returns the effective
+    /// prefill length to inject and the hit class.
+    pub fn admit(&mut self, rep: usize, req: &Request, kv_usage: f64) -> (usize, PrefixHit) {
+        let (eff, hit) = self.effective_prompt(rep, req);
+        let plen = req.plen();
+        if hit != PrefixHit::Cold {
+            self.stats.lookups += 1;
+            match hit {
+                PrefixHit::Local => self.stats.local_hits += 1,
+                PrefixHit::Tier => self.stats.tier_hits += 1,
+                PrefixHit::Miss => self.stats.misses += 1,
+                PrefixHit::Cold => unreachable!(),
+            }
+            self.stats.tokens_saved += (plen - eff) as u64;
+        }
+        if req.prefix != 0 {
+            if rep >= self.stores.len() {
+                self.stores.resize_with(rep + 1, PrefixStore::default);
+            }
+            let cap = self.cfg.effective_capacity(kv_usage);
+            let ev = self.stores[rep].admit(req.prefix, plen, cap);
+            self.stats.evictions += ev as u64;
+            if self.cfg.tier.is_some() {
+                let e = self.tier.entry(req.prefix).or_insert(0);
+                *e = (*e).max(plen.min(u32::MAX as usize) as u32);
+            }
+        }
+        (eff, hit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, plen: u32, prefix: u32, shared: u16) -> Request {
+        Request {
+            id,
+            arrival: 0.0,
+            prompt_len: plen,
+            output_len: 4,
+            tenant: 0,
+            prefix,
+            shared_len: shared,
+        }
+    }
+
+    #[test]
+    fn tier_presets_and_names() {
+        for name in ["nvlink", "rdma", "tcp"] {
+            let t = TierCfg::by_name(name).unwrap();
+            assert!(t.bw > 0.0 && t.lat > 0.0);
+        }
+        assert!(TierCfg::by_name("carrier-pigeon").is_none());
+        // Faster fabric → cheaper fetch for the same prefix.
+        let cfg = PrefixCacheCfg::default();
+        let nv = cfg.xfer_tokens(&TierCfg::nvlink(), 4096);
+        let rd = cfg.xfer_tokens(&TierCfg::rdma(), 4096);
+        let tc = cfg.xfer_tokens(&TierCfg::tcp(), 4096);
+        assert!(nv < rd && rd < tc, "xfer {nv} {rd} {tc}");
+        assert!(cfg.xfer_tokens(&TierCfg::nvlink(), 0) >= 1, "a fetch is never free");
+    }
+
+    #[test]
+    fn store_grows_touches_and_evicts_lru() {
+        let mut s = PrefixStore::default();
+        assert_eq!(s.admit(1, 100, 1000), 0);
+        assert_eq!(s.admit(2, 200, 1000), 0);
+        assert_eq!(s.resident(1), 100);
+        // Same-chain admit with a longer prompt grows residency.
+        assert_eq!(s.admit(1, 150, 1000), 0);
+        assert_eq!(s.resident(1), 150);
+        assert_eq!(s.total_tokens(), 350);
+        // Shorter re-admit is a pure touch: no growth.
+        s.admit(1, 50, 1000);
+        assert_eq!(s.resident(1), 150);
+        // Chain 2 is now LRU; overflow evicts it, not the touched chain 1.
+        assert_eq!(s.admit(3, 700, 1000), 1);
+        assert_eq!(s.resident(2), 0);
+        assert_eq!(s.resident(1), 150);
+        assert!(s.total_tokens() <= 1000);
+    }
+
+    #[test]
+    fn store_never_exceeds_capacity() {
+        let mut s = PrefixStore::default();
+        for i in 0..200u32 {
+            s.admit(i + 1, 64 + (i as usize % 7) * 32, 512);
+            assert!(s.total_tokens() <= 512, "over capacity after admit {i}");
+        }
+        // A lone oversized chain is trimmed to the budget.
+        let mut s = PrefixStore::default();
+        s.admit(9, 4096, 512);
+        assert_eq!(s.total_tokens(), 512);
+        assert_eq!(s.resident(9), 512);
+        // Zero budget keeps nothing.
+        let mut s = PrefixStore::default();
+        s.admit(9, 100, 0);
+        assert_eq!(s.total_tokens(), 0);
+        assert_eq!(s.chains(), 0);
+    }
+
+    #[test]
+    fn lru_order_is_deterministic() {
+        let run = || {
+            let mut s = PrefixStore::default();
+            let mut evs = Vec::new();
+            for step in 0..50usize {
+                let chain = (step % 7 + 1) as u32;
+                evs.push(s.admit(chain, 120, 600));
+            }
+            (evs, s.total_tokens())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn effective_prompt_orders_local_tier_miss() {
+        let mut st = PrefixState::new(PrefixCacheCfg::default());
+        let r = req(0, 1000, 7, 800);
+        // Nothing anywhere: miss (and cold for untagged requests).
+        assert_eq!(st.effective_prompt(0, &r), (1000, PrefixHit::Miss));
+        assert_eq!(st.effective_prompt(0, &req(1, 1000, 0, 0)).1, PrefixHit::Cold);
+        // Seed replica 0 with the chain (cold head turn, then resident).
+        st.admit(0, &req(2, 1000, 7, 0), 0.0);
+        let (eff_local, h) = st.effective_prompt(0, &r);
+        assert_eq!(h, PrefixHit::Local);
+        assert_eq!(eff_local, 200);
+        // Replica 1 has nothing local but can fetch from the tier.
+        let (eff_tier, h) = st.effective_prompt(1, &r);
+        assert_eq!(h, PrefixHit::Tier);
+        assert!(
+            eff_local < eff_tier && eff_tier < 1000,
+            "tier cost must sit strictly between local hit and miss: {eff_local} < {eff_tier} < 1000"
+        );
+        // Tier disabled: remote replica pays full recompute.
+        let no_tier = PrefixCacheCfg { tier: None, ..PrefixCacheCfg::default() };
+        let mut st2 = PrefixState::new(no_tier);
+        st2.admit(0, &req(2, 1000, 7, 0), 0.0);
+        assert_eq!(st2.effective_prompt(1, &r), (1000, PrefixHit::Miss));
+    }
+
+    #[test]
+    fn admit_accounts_stats_and_watermark() {
+        let mut st = PrefixState::new(PrefixCacheCfg {
+            capacity: 1024,
+            ..PrefixCacheCfg::default()
+        });
+        st.admit(0, &req(0, 600, 1, 0), 0.0); // cold head: no lookup
+        assert_eq!(st.stats.lookups, 0);
+        let (eff, hit) = st.admit(0, &req(1, 700, 1, 400), 0.0);
+        assert_eq!(hit, PrefixHit::Local);
+        assert_eq!(eff, 300);
+        assert_eq!(st.stats.local_hits, 1);
+        assert_eq!(st.stats.tokens_saved, 400);
+        // Above the watermark the budget halves: a second large chain must
+        // evict the first.
+        let ev_before = st.stats.evictions;
+        st.admit(0, &req(2, 500, 2, 0), 0.95);
+        assert!(st.stats.evictions > ev_before, "watermark shrink must evict");
+        assert!(st.store(0).unwrap().total_tokens() <= 512);
+        // pure_touch needs full residency, sub-watermark KV, *and* enough
+        // headroom that the admit is a no-op under the halved budget too.
+        let mut st = PrefixState::new(PrefixCacheCfg {
+            capacity: 1024,
+            ..PrefixCacheCfg::default()
+        });
+        st.admit(0, &req(3, 400, 3, 0), 0.0); // total 400 ≤ 1024/2
+        assert!(st.pure_touch(0, &req(4, 300, 3, 200), 0.5));
+        assert!(!st.pure_touch(0, &req(4, 500, 3, 200), 0.5), "growth is not a touch");
+        assert!(!st.pure_touch(0, &req(4, 300, 3, 200), 0.95), "watermark blocks blind");
+        st.admit(0, &req(5, 200, 4, 0), 0.0); // total 600 > 1024/2
+        assert!(
+            !st.pure_touch(0, &req(6, 300, 3, 200), 0.5),
+            "no halved-budget headroom → a commit could evict → not blind"
+        );
+    }
+}

@@ -113,7 +113,7 @@ mod tests {
         assert!(rep.is_active() && rep.in_service());
         assert_eq!(rep.view().index, 3);
         assert_eq!(rep.view().pending, 0);
-        rep.eng.inject(Request { id: 0, arrival: 0.0, prompt_len: 64, output_len: 2, tenant: 0 });
+        rep.eng.inject(Request { id: 0, arrival: 0.0, prompt_len: 64, output_len: 2, tenant: 0, prefix: 0, shared_len: 0 });
         assert_eq!(rep.view().pending, 1);
         rep.drain();
         assert!(!rep.is_active() && rep.in_service());

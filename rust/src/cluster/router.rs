@@ -7,12 +7,18 @@
 //! mode switching) to locality-aware (session affinity, which keeps a
 //! simulated user's traffic on one replica so prefix caches stay warm).
 
+use super::prefixcache::PrefixState;
 use crate::workload::{Request, TenantSpec};
 use std::collections::{HashMap, VecDeque};
 
 /// Simulated concurrent sessions for [`RoutingPolicy::SessionAffinity`]:
 /// request ids are interleaved round-robin across this many users.
 const AFFINITY_SESSIONS: usize = 64;
+
+/// Default cap on live session pins ([`Router::with_session_cap`] overrides;
+/// the oldest pin is recycled deterministically when the cap is hit, so the
+/// map can never grow without bound over a long streaming run).
+const SESSION_CAP: usize = 4096;
 
 /// Dispatch policy for arrivals.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -25,6 +31,11 @@ pub enum RoutingPolicy {
     LeastKvPressure,
     /// Sticky per-session placement with JSQ fallback on drain/overflow.
     SessionAffinity,
+    /// Resident-prefix tokens minus a load penalty wins (JSQ fallback when
+    /// the fleet holds nothing for the request's chain). Requires the
+    /// cluster's prefix-cache tier (`ClusterCfg::prefix`); without it the
+    /// policy degenerates to JSQ.
+    PrefixAware,
 }
 
 impl RoutingPolicy {
@@ -34,6 +45,7 @@ impl RoutingPolicy {
             RoutingPolicy::JoinShortestQueue => "jsq",
             RoutingPolicy::LeastKvPressure => "least-kv",
             RoutingPolicy::SessionAffinity => "affinity",
+            RoutingPolicy::PrefixAware => "prefix",
         }
     }
 
@@ -44,6 +56,7 @@ impl RoutingPolicy {
             RoutingPolicy::JoinShortestQueue => "fewest in-flight requests wins",
             RoutingPolicy::LeastKvPressure => "lowest KV-cache usage wins",
             RoutingPolicy::SessionAffinity => "sticky per-session placement",
+            RoutingPolicy::PrefixAware => "most resident prefix tokens wins",
         }
     }
 
@@ -55,6 +68,7 @@ impl RoutingPolicy {
             }
             "least-kv" | "kv" | "least-kv-pressure" => Some(RoutingPolicy::LeastKvPressure),
             "affinity" | "session" | "session-affinity" => Some(RoutingPolicy::SessionAffinity),
+            "prefix" | "prefix-aware" => Some(RoutingPolicy::PrefixAware),
             _ => None,
         }
     }
@@ -65,6 +79,7 @@ impl RoutingPolicy {
             RoutingPolicy::JoinShortestQueue,
             RoutingPolicy::LeastKvPressure,
             RoutingPolicy::SessionAffinity,
+            RoutingPolicy::PrefixAware,
         ]
     }
 }
@@ -91,13 +106,67 @@ pub struct Router {
     rr_next: usize,
     /// session key → replica index (affinity policy only).
     sessions: HashMap<u64, usize>,
+    /// Pin insertion order for deterministic recycling at `session_cap`
+    /// (may hold stale keys for pins purged out of band; skipped lazily).
+    session_order: VecDeque<u64>,
+    /// Max live session pins before the oldest is recycled.
+    session_cap: usize,
     /// Total requests dispatched.
     pub dispatched: usize,
 }
 
 impl Router {
     pub fn new(policy: RoutingPolicy) -> Self {
-        Router { policy, rr_next: 0, sessions: HashMap::new(), dispatched: 0 }
+        Self::with_session_cap(policy, SESSION_CAP)
+    }
+
+    /// A router whose session-pin table is capped at `cap` entries (FIFO
+    /// recycling). The default cap is [`SESSION_CAP`]; tests shrink it to
+    /// exercise the recycling path.
+    pub fn with_session_cap(policy: RoutingPolicy, cap: usize) -> Self {
+        Router {
+            policy,
+            rr_next: 0,
+            sessions: HashMap::new(),
+            session_order: VecDeque::new(),
+            session_cap: cap.max(1),
+            dispatched: 0,
+        }
+    }
+
+    /// Live session pins (bounded by the cap; observability/tests).
+    pub fn sessions_pinned(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Drop every session pinned to a replica that left service. The pins
+    /// were already dead — a sticky lookup on a drained replica falls
+    /// through to JSQ-and-repin — so purging changes no routing decision;
+    /// it just keeps the map from accumulating tombstones under autoscaler
+    /// churn.
+    pub fn purge_replica(&mut self, idx: usize) {
+        self.sessions.retain(|_, &mut v| v != idx);
+    }
+
+    /// Pin `key` to `idx`, recycling the oldest pin past the cap. A remap
+    /// of a known session keeps its original age.
+    fn pin_session(&mut self, key: u64, idx: usize) {
+        if self.sessions.insert(key, idx).is_some() {
+            return;
+        }
+        self.session_order.push_back(key);
+        while self.sessions.len() > self.session_cap {
+            match self.session_order.pop_front() {
+                Some(old) if old == key => {
+                    // The newest pin is never the recycling victim.
+                    self.session_order.push_back(key);
+                }
+                Some(old) => {
+                    self.sessions.remove(&old);
+                }
+                None => break,
+            }
+        }
     }
 
     fn jsq(views: &[ReplicaView]) -> usize {
@@ -108,6 +177,22 @@ impl Router {
             .index as usize
     }
 
+    /// Lowest-index replica in `views` holding the request's full shared
+    /// prefix (`resident ≥ shared > 0`). The *lowest-index* choice (rather
+    /// than least-loaded) is load-independent, which is what lets the
+    /// blind-probe fast path commit full hits without rendezvous.
+    fn full_prefix_hit(views: &[ReplicaView], req: &Request, ps: &PrefixState) -> Option<usize> {
+        let s = req.shared();
+        if s == 0 {
+            return None;
+        }
+        views
+            .iter()
+            .map(|v| v.index as usize)
+            .filter(|&i| ps.resident(i, req.prefix) >= s)
+            .min()
+    }
+
     /// Pick the target replica for one arrival. `views` must describe the
     /// currently *active* replicas (non-empty; draining replicas excluded).
     ///
@@ -115,7 +200,16 @@ impl Router {
     /// refills one reusable buffer per arrival instead of allocating a
     /// fresh snapshot (§Perf) — same-instant dispatches still see each
     /// other because the buffer is rebuilt between arrivals.
-    pub fn route(&mut self, views: &[ReplicaView], req: &Request) -> usize {
+    ///
+    /// `prefix` is the cluster's prefix-cache tier; only
+    /// [`RoutingPolicy::PrefixAware`] reads it. [`Router::route`] is the
+    /// `None` shorthand for callers without a tier.
+    pub fn route_with(
+        &mut self,
+        views: &[ReplicaView],
+        req: &Request,
+        prefix: Option<&PrefixState>,
+    ) -> usize {
         assert!(!views.is_empty(), "route with no active replicas");
         self.dispatched += 1;
         match self.policy {
@@ -145,10 +239,50 @@ impl Router {
                 }
                 // New session, or its replica drained: place by JSQ and pin.
                 let idx = Self::jsq(views);
-                self.sessions.insert(key, idx);
+                self.pin_session(key, idx);
                 idx
             }
+            RoutingPolicy::PrefixAware => {
+                let Some(ps) = prefix else { return Self::jsq(views) };
+                // Full hit: the shared prefix is entirely resident
+                // somewhere — reuse is free, so locality beats load.
+                if let Some(idx) = Self::full_prefix_hit(views, req, ps) {
+                    return idx;
+                }
+                // Partial residency: score resident-prefix tokens minus a
+                // load penalty per queued request; positive score required
+                // so a long queue can't hide behind a sliver of prefix.
+                let s = req.shared();
+                let mut best: Option<(f64, usize)> = None;
+                if s > 0 {
+                    for v in views {
+                        let i = v.index as usize;
+                        let res = ps.resident(i, req.prefix).min(s);
+                        if res == 0 {
+                            continue;
+                        }
+                        let score = res as f64 - ps.cfg.load_penalty * v.pending as f64;
+                        let better = match best {
+                            None => true,
+                            Some((bs, bi)) => score > bs || (score == bs && i < bi),
+                        };
+                        if score > 0.0 && better {
+                            best = Some((score, i));
+                        }
+                    }
+                }
+                match best {
+                    Some((_, i)) => i,
+                    // Nothing resident (or nothing worth the queue): JSQ.
+                    None => Self::jsq(views),
+                }
+            }
         }
+    }
+
+    /// [`Router::route_with`] without a prefix tier.
+    pub fn route(&mut self, views: &[ReplicaView], req: &Request) -> usize {
+        self.route_with(views, req, None)
     }
 
     /// Probe the target for the `nth` arrival of a same-instant group
@@ -157,18 +291,27 @@ impl Router {
     /// group of arrivals can be dispatched in one worker round-trip.
     ///
     /// Returns `Some(replica index)` only when the decision is *blind*:
-    /// provably identical to what [`Router::route`] would pick given the
-    /// same pre-group `views`, independent of the queue-depth effects of
-    /// the group's earlier members. Round-robin qualifies always (the
+    /// provably identical to what [`Router::route_with`] would pick given
+    /// the same pre-group `views`, independent of the queue-depth effects
+    /// of the group's earlier members. Round-robin qualifies always (the
     /// cursor advances by one per arrival, so member `nth` lands at offset
     /// `rr_next + nth`); session affinity qualifies only on a sticky hit
-    /// (the pin ignores load). JSQ / least-KV and affinity misses read
-    /// live load, so they return `None` and the group falls back to
+    /// (the pin ignores load); prefix-aware qualifies only when the target
+    /// is a full-hit *pure touch* (fully resident below the KV watermark,
+    /// so committing it mutates nothing the group's other members can
+    /// observe). JSQ / least-KV, affinity misses, and partial prefix hits
+    /// read live load, so they return `None` and the group falls back to
     /// per-arrival rendezvous routing.
     ///
     /// On success for *every* member, commit the group with
     /// [`Router::commit_blind`]; on any `None`, commit nothing.
-    pub fn blind_probe(&self, views: &[ReplicaView], nth: usize, req: &Request) -> Option<usize> {
+    pub fn blind_probe_with(
+        &self,
+        views: &[ReplicaView],
+        nth: usize,
+        req: &Request,
+        prefix: Option<&PrefixState>,
+    ) -> Option<usize> {
         assert!(!views.is_empty(), "probe with no active replicas");
         match self.policy {
             RoutingPolicy::RoundRobin => {
@@ -179,8 +322,22 @@ impl Router {
                 let idx = *self.sessions.get(&key)?;
                 views.iter().any(|v| v.index as usize == idx).then_some(idx)
             }
+            RoutingPolicy::PrefixAware => {
+                let ps = prefix?;
+                let idx = Self::full_prefix_hit(views, req, ps)?;
+                let kv = views.iter().find(|v| v.index as usize == idx)?.kv_usage;
+                // Blind only when committing is a pure LRU touch: full
+                // residency below the watermark — no growth, no eviction,
+                // no score any same-instant sibling could observe change.
+                ps.pure_touch(idx, req, kv).then_some(idx)
+            }
             RoutingPolicy::JoinShortestQueue | RoutingPolicy::LeastKvPressure => None,
         }
+    }
+
+    /// [`Router::blind_probe_with`] without a prefix tier.
+    pub fn blind_probe(&self, views: &[ReplicaView], nth: usize, req: &Request) -> Option<usize> {
+        self.blind_probe_with(views, nth, req, None)
     }
 
     /// Commit `n` arrivals dispatched via successful [`Router::blind_probe`]
@@ -372,7 +529,27 @@ mod tests {
     use super::*;
 
     fn req(id: usize) -> Request {
-        Request { id, arrival: 0.0, prompt_len: 100, output_len: 10, tenant: 0 }
+        Request {
+            id,
+            arrival: 0.0,
+            prompt_len: 100,
+            output_len: 10,
+            tenant: 0,
+            prefix: 0,
+            shared_len: 0,
+        }
+    }
+
+    fn preq(id: usize, plen: u32, prefix: u32, shared: u16) -> Request {
+        Request {
+            id,
+            arrival: 0.0,
+            prompt_len: plen,
+            output_len: 10,
+            tenant: 0,
+            prefix,
+            shared_len: shared,
+        }
     }
 
     fn views(loads: &[(u32, u32, f64)]) -> Vec<ReplicaView> {
@@ -450,6 +627,84 @@ mod tests {
     }
 
     #[test]
+    fn prefix_aware_scores_residency_against_load() {
+        use crate::cluster::prefixcache::{PrefixCacheCfg, PrefixState};
+        let mut r = Router::new(RoutingPolicy::PrefixAware);
+        let v = views(&[(0, 0, 0.0), (1, 3, 0.0), (2, 1, 0.0)]);
+        // No tier wired at all: pure JSQ.
+        assert_eq!(r.route(&v, &preq(0, 500, 7, 400)), 0);
+        let cfg = PrefixCacheCfg { load_penalty: 64.0, ..PrefixCacheCfg::default() };
+        let mut ps = PrefixState::new(cfg);
+        // Cold request under a tier: still JSQ.
+        assert_eq!(r.route_with(&v, &preq(1, 500, 0, 0), Some(&ps)), 0);
+        // Replica 1 holds the whole chain: full hit beats its longer queue.
+        ps.admit(1, &preq(2, 500, 7, 0), 0.0);
+        assert_eq!(r.route_with(&v, &preq(3, 500, 7, 400), Some(&ps)), 1);
+        // Partial residency (300 of 400 shared) on a loaded replica loses
+        // once the load penalty outweighs the resident tokens.
+        let mut ps2 = PrefixState::new(cfg);
+        ps2.admit(1, &preq(4, 300, 9, 0), 0.0);
+        let heavy = views(&[(0, 0, 0.0), (1, 10, 0.0)]);
+        assert_eq!(
+            r.route_with(&heavy, &preq(5, 500, 9, 400), Some(&ps2)),
+            0,
+            "300 resident − 64·10 pending < 0 → JSQ fallback"
+        );
+        let light = views(&[(0, 0, 0.0), (1, 2, 0.0)]);
+        assert_eq!(
+            r.route_with(&light, &preq(6, 500, 9, 400), Some(&ps2)),
+            1,
+            "300 resident − 64·2 pending > 0 → partial hit wins"
+        );
+    }
+
+    #[test]
+    fn prefix_blind_probe_requires_pure_touch() {
+        use crate::cluster::prefixcache::{PrefixCacheCfg, PrefixState};
+        let r = Router::new(RoutingPolicy::PrefixAware);
+        let v = views(&[(0, 0, 0.1), (1, 0, 0.1)]);
+        // No tier / cold request: never blind.
+        assert_eq!(r.blind_probe(&v, 0, &preq(0, 500, 7, 400)), None);
+        let mut ps = PrefixState::new(PrefixCacheCfg::default());
+        assert_eq!(r.blind_probe_with(&v, 0, &preq(0, 500, 0, 0), Some(&ps)), None);
+        // Fully resident below the watermark: blind, and it matches route.
+        ps.admit(1, &preq(1, 500, 7, 0), 0.0);
+        let probe = r.blind_probe_with(&v, 3, &preq(2, 500, 7, 400), Some(&ps));
+        assert_eq!(probe, Some(1), "nth-independent full-hit pure touch");
+        let mut r2 = Router::new(RoutingPolicy::PrefixAware);
+        assert_eq!(r2.route_with(&v, &preq(2, 500, 7, 400), Some(&ps)), 1);
+        // A longer prompt would grow the store entry: not a pure touch.
+        assert_eq!(r.blind_probe_with(&v, 0, &preq(3, 600, 7, 400), Some(&ps)), None);
+        // KV above the watermark can shrink the budget: not blind either.
+        let hot = views(&[(0, 0, 0.1), (1, 0, 0.95)]);
+        assert_eq!(r.blind_probe_with(&hot, 0, &preq(4, 500, 7, 400), Some(&ps)), None);
+    }
+
+    #[test]
+    fn session_pins_are_capped_and_recycled() {
+        let mut r = Router::with_session_cap(RoutingPolicy::SessionAffinity, 8);
+        let v = views(&[(0, 0, 0.0), (1, 0, 0.0)]);
+        // 40 distinct sessions (ids 0..40 < AFFINITY_SESSIONS) against an
+        // 8-pin cap: the map must never exceed the cap.
+        for id in 0..40 {
+            r.route(&v, &req(id));
+            assert!(r.sessions_pinned() <= 8, "pin table exceeded cap at id {id}");
+        }
+        // Recycling is FIFO: the most recent 8 sessions are still pinned
+        // (their repeat routes stay sticky), the oldest were recycled.
+        let pinned_before = r.sessions_pinned();
+        r.route(&v, &req(39 + 64)); // session 39 again: sticky, no new pin
+        assert_eq!(r.sessions_pinned(), pinned_before);
+        // Purging a drained replica drops exactly its pins and changes no
+        // subsequent decision vs the JSQ-and-repin fallback.
+        let pins = r.sessions_pinned();
+        r.purge_replica(0);
+        assert!(r.sessions_pinned() <= pins);
+        let v1 = views(&[(1, 0, 0.0)]);
+        assert_eq!(r.route(&v1, &req(0)), 1);
+    }
+
+    #[test]
     fn affinity_is_sticky_until_drain() {
         let mut r = Router::new(RoutingPolicy::SessionAffinity);
         let v = views(&[(0, 0, 0.0), (1, 5, 0.0)]);
@@ -467,7 +722,15 @@ mod tests {
     }
 
     fn treq(id: usize, tenant: u16) -> Request {
-        Request { id, arrival: 0.0, prompt_len: 100, output_len: 10, tenant }
+        Request {
+            id,
+            arrival: 0.0,
+            prompt_len: 100,
+            output_len: 10,
+            tenant,
+            prefix: 0,
+            shared_len: 0,
+        }
     }
 
     fn spec(weight: f64, quota: usize) -> TenantSpec {

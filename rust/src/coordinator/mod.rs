@@ -3,14 +3,14 @@
 //! fleet-level [`ClusterExperiment`] driver.
 
 use crate::cluster::{
-    AutoscalerCfg, Cluster, ClusterCfg, ClusterMetrics, ParallelCfg, RoutingPolicy, StealCfg,
-    WfqCfg,
+    AutoscalerCfg, Cluster, ClusterCfg, ClusterMetrics, ParallelCfg, PrefixCacheCfg,
+    RoutingPolicy, StealCfg, WfqCfg,
 };
 use crate::engine::{run_engine, EngineCfg, EngineKind};
 use crate::metrics::{RunMetrics, Summary};
 use crate::model::ModelConfig;
 use crate::trace::Tracer;
-use crate::workload::{self, BurstyCfg, Dataset, TenantMix};
+use crate::workload::{self, BurstyCfg, Dataset, PrefixCfg, PrefixTagger, TenantMix};
 
 /// One experiment's shape: which model/dataset, how many requests, at what
 /// Poisson rate (requests/second).
@@ -91,6 +91,14 @@ pub struct ClusterExperiment {
     ///
     /// [`TenantGate`]: crate::cluster::TenantGate
     pub wfq: Option<WfqCfg>,
+    /// Fleet prefix-cache tier configuration (`--prefix-capacity`,
+    /// `--tier`). `None` with a non-prefix policy disables the machinery;
+    /// [`RoutingPolicy::PrefixAware`] auto-fills the default config. Any
+    /// enabled config also tags the generated trace with deterministic
+    /// prefix lineage from [`PrefixCfg::for_dataset`] — the same per-dataset
+    /// reuse model as the single-engine `RadixCache` table in
+    /// [`Experiment::cfg`].
+    pub prefix: Option<PrefixCacheCfg>,
 }
 
 impl ClusterExperiment {
@@ -106,11 +114,18 @@ impl ClusterExperiment {
             steal: None,
             tenant_mix: None,
             wfq: None,
+            prefix: None,
         }
     }
 
+    /// Whether the fleet prefix-cache machinery (and hence deterministic
+    /// trace lineage) is engaged for this experiment.
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix.is_some() || self.policy == RoutingPolicy::PrefixAware
+    }
+
     pub fn trace(&self) -> Vec<workload::Request> {
-        match (&self.bursty, &self.tenant_mix) {
+        let mut trace = match (&self.bursty, &self.tenant_mix) {
             (Some(b), None) => workload::generate_bursty(
                 self.base.dataset,
                 self.base.n_requests,
@@ -132,7 +147,14 @@ impl ClusterExperiment {
                 self.base.seed,
                 mix,
             ),
+        };
+        if self.prefix_enabled() {
+            // Lineage tagging is pure `(seed, id)` hashing — arrivals,
+            // lengths, and tenant labels are untouched.
+            let pcfg = PrefixCfg::for_dataset(self.base.dataset, self.base.seed);
+            PrefixTagger::new(&pcfg).apply(&mut trace);
         }
+        trace
     }
 
     /// Run the fleet with every replica running `kind`.
@@ -148,6 +170,7 @@ impl ClusterExperiment {
         let mut cfg = ClusterCfg::new(kind, self.base.cfg(), self.replicas, self.policy);
         cfg.autoscale = self.autoscale;
         cfg.wfq = self.wfq.clone();
+        cfg.prefix = self.prefix;
         let mut cluster = Cluster::new(cfg);
         cluster.tracer = tracer.clone();
         if self.threads > 1 {
@@ -343,6 +366,27 @@ mod tests {
         let rep = m.tenant_report(&specs);
         assert_eq!(rep.len(), 2);
         assert_eq!(rep.iter().map(|t| t.completed).sum::<usize>(), 30);
+    }
+
+    #[test]
+    fn cluster_experiment_prefix_policy_tags_and_reports() {
+        let base = Experiment::new(ModelConfig::qwen3b(), Dataset::ShareGpt, 120, 10.0);
+        let exp = ClusterExperiment::new(base.clone(), 2, RoutingPolicy::PrefixAware);
+        let trace = exp.trace();
+        assert!(trace.iter().all(|r| r.prefix != 0), "every request gets a lineage");
+        assert!(trace.iter().any(|r| r.shared() > 0), "chat workload must have warm turns");
+        // Tagging is observational on arrivals/lengths.
+        let untagged = ClusterExperiment::new(base, 2, RoutingPolicy::JoinShortestQueue).trace();
+        assert!(untagged.iter().all(|r| r.prefix == 0));
+        for (a, b) in trace.iter().zip(&untagged) {
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.prompt_len, b.prompt_len);
+        }
+        let m = exp.run(EngineKind::Nexus);
+        assert_eq!(m.fleet.records.len() + m.fleet.timeouts, 120);
+        assert!(m.prefix.lookups > 0, "warm turns must reach the prefix store");
+        assert!(m.prefix.tokens_saved > 0, "resident prefixes must save prefill");
+        assert!(m.prefix.hit_rate() > 0.0 && m.prefix.hit_rate() <= 1.0);
     }
 
     #[test]

@@ -137,7 +137,7 @@ mod tests {
     use super::*;
 
     fn req(id: usize, arrival: f64, p: u32, o: u32) -> Request {
-        Request { id, arrival, prompt_len: p, output_len: o, tenant: 0 }
+        Request { id, arrival, prompt_len: p, output_len: o, tenant: 0, prefix: 0, shared_len: 0 }
     }
 
     #[test]

@@ -318,9 +318,13 @@ impl Engine for DisaggEngine {
         t.is_finite().then_some(t)
     }
 
-    fn inject(&mut self, req: Request) {
+    fn inject_effective(&mut self, req: Request, eff: Option<usize>) {
         self.slot(req.id);
-        self.states[req.id] = Some(ReqState::new(req));
+        let mut st = ReqState::new(req);
+        if let Some(e) = eff {
+            st.effective_prompt = e.max(1);
+        }
+        self.states[req.id] = Some(st);
         self.waiting.insert(req.id);
         self.injected += 1;
         self.tracer.emit(req.arrival, EventKind::Admit { req: req.id });

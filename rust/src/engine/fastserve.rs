@@ -293,10 +293,17 @@ impl Engine for FastServeEngine {
         }
     }
 
-    fn inject(&mut self, req: Request) {
+    fn inject_effective(&mut self, req: Request, eff: Option<usize>) {
         self.slot(req.id);
-        self.states[req.id] = Some(ReqState::new(req));
-        self.mlfq.admit(req.id, req.plen());
+        let mut st = ReqState::new(req);
+        if let Some(e) = eff {
+            st.effective_prompt = e.max(1);
+        }
+        let prefill_len = st.effective_prompt;
+        self.states[req.id] = Some(st);
+        // Skip-join on the *effective* prefill length: a tier-shortened
+        // prompt queues at the level its real work belongs to.
+        self.mlfq.admit(req.id, prefill_len);
         self.injected += 1;
         self.tracer.emit(req.arrival, EventKind::Admit { req: req.id });
     }

@@ -200,9 +200,18 @@ pub trait Engine: Send {
     /// retry timer), if any work is in flight.
     fn next_event(&mut self) -> Option<f64>;
 
+    /// Admit one request with an externally computed effective prefill
+    /// length. `Some(eff)` pins the request's `effective_prompt` to `eff`
+    /// tokens (the cluster prefix tier's local-hit/tier-fetch/miss outcome)
+    /// without consuming any engine RNG; `None` leaves the engine to its own
+    /// prefix model (e.g. SGLang's probabilistic radix draw).
+    fn inject_effective(&mut self, req: Request, eff: Option<usize>);
+
     /// Admit one request (identified by its globally unique `id`; its
     /// `arrival` must be ≤ the next `step` target).
-    fn inject(&mut self, req: Request);
+    fn inject(&mut self, req: Request) {
+        self.inject_effective(req, None);
+    }
 
     /// Advance virtual time to `t`: process completions, then schedule.
     fn step(&mut self, t: f64) -> StepOutcome;

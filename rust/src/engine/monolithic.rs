@@ -295,10 +295,17 @@ impl Engine for MonolithicEngine {
         }
     }
 
-    fn inject(&mut self, req: Request) {
+    fn inject_effective(&mut self, req: Request, eff: Option<usize>) {
         let mut st = ReqState::new(req);
-        if let Some(radix) = &mut self.radix {
-            st.effective_prompt = radix.effective_prefill(req.plen());
+        match eff {
+            // Cluster prefix tier already resolved the prefill length; the
+            // radix RNG is deliberately not consumed.
+            Some(e) => st.effective_prompt = e.max(1),
+            None => {
+                if let Some(radix) = &mut self.radix {
+                    st.effective_prompt = radix.effective_prefill(req.plen());
+                }
+            }
         }
         self.slot(req.id);
         self.states[req.id] = Some(st);

@@ -12,6 +12,9 @@
 //!                  [--wfq-capacity C] [--ttft-slo S] [--tbt-slo S]
 //!                  [--objective goodput|utilization] [--goodput-margin M]
 //!                  (multi-tenant WFQ front + per-tenant SLO/goodput report)
+//!                  [--policy prefix] [--prefix-capacity TOKENS]
+//!                  [--tier nvlink|rdma|tcp|none] [--tier-bw B/s] [--tier-lat S]
+//!                  (fleet prefix-cache tier + prefix-aware routing)
 //! nexus throughput --engine vllm --dataset arxiv --model qwen3b --n 150
 //! nexus offline    --dataset ldc --model qwen3b --n 100
 //! nexus calibrate  [--model qwen3b]
@@ -27,7 +30,9 @@
 //! through PJRT and serves actual token traffic; everything else runs on
 //! the calibrated L20 substrate.
 
-use nexus::cluster::{AutoscalerCfg, RoutingPolicy, ScaleObjective, StealCfg, WfqCfg};
+use nexus::cluster::{
+    AutoscalerCfg, PrefixCacheCfg, RoutingPolicy, ScaleObjective, StealCfg, TierCfg, WfqCfg,
+};
 use nexus::coordinator::{
     offline_makespan, sustainable_throughput, ClusterExperiment, Experiment, SloSpec,
 };
@@ -253,6 +258,32 @@ fn cluster_experiment(args: &Args) -> (ClusterExperiment, EngineKind) {
             "--wfq needs a tenant table: pass --tenants N or --tenant-weights a,b,..."
         );
     }
+    // Fleet prefix cache: `--policy prefix` enables the default config;
+    // any prefix flag enables the machinery under other policies too
+    // (resident prefixes still shorten prefill, routing just ignores them).
+    let prefix_flags = args.get("prefix-capacity").is_some()
+        || args.get("tier").is_some()
+        || args.get("tier-bw").is_some()
+        || args.get("tier-lat").is_some();
+    if policy == RoutingPolicy::PrefixAware || prefix_flags {
+        let dflt = PrefixCacheCfg::default();
+        let mut tier = match args.get_or("tier", "rdma").as_str() {
+            "none" | "off" => None,
+            name => Some(
+                TierCfg::by_name(name)
+                    .unwrap_or_else(|| panic!("unknown --tier '{name}' (nvlink|rdma|tcp|none)")),
+            ),
+        };
+        if let Some(t) = &mut tier {
+            t.bw = args.get_f64("tier-bw", t.bw);
+            t.lat = args.get_f64("tier-lat", t.lat);
+        }
+        exp.prefix = Some(PrefixCacheCfg {
+            capacity: args.get_usize("prefix-capacity", dflt.capacity),
+            tier,
+            ..dflt
+        });
+    }
     exp.threads = args.get_usize("threads", 1);
     assert!(exp.threads >= 1, "--threads must be >= 1");
     exp.window = args.get_f64("window", 0.0);
@@ -325,6 +356,17 @@ fn cmd_cluster(args: &Args) {
         dur(m.ttft_hist.quantile(0.99)),
         dur(m.tbt_hist.quantile(0.95)),
     );
+    if m.prefix.lookups > 0 {
+        println!(
+            "prefix cache: hit rate {:.1}% ({} local, {} tier, {} miss) | {} prefill tokens saved | {} evictions",
+            100.0 * m.prefix.hit_rate(),
+            m.prefix.local_hits,
+            m.prefix.tier_hits,
+            m.prefix.misses,
+            m.prefix.tokens_saved,
+            m.prefix.evictions,
+        );
+    }
     if let Some(wfq) = &exp.wfq {
         let mut tt = Table::new(
             "per-tenant SLO",

@@ -214,6 +214,40 @@ pub fn chrome_trace(events: &[TraceEvent]) -> Json {
                     ],
                 ));
             }
+            EventKind::PrefixHit { req, replica, saved }
+            | EventKind::PrefixFetch { req, replica, saved } => {
+                let what = if matches!(ev.kind, EventKind::PrefixHit { .. }) {
+                    "prefix hit"
+                } else {
+                    "prefix fetch"
+                };
+                rows.push(instant(
+                    pid,
+                    &format!("{what} req {req} @ r{replica}"),
+                    ev.time,
+                    vec![
+                        ("req", Json::from(*req)),
+                        ("replica", Json::from(*replica)),
+                        ("saved_tokens", Json::from(*saved)),
+                    ],
+                ));
+            }
+            EventKind::PrefixMiss { req, replica } => {
+                rows.push(instant(
+                    pid,
+                    &format!("prefix miss req {req} @ r{replica}"),
+                    ev.time,
+                    vec![("req", Json::from(*req)), ("replica", Json::from(*replica))],
+                ));
+            }
+            EventKind::PrefixEvict { replica, evicted } => {
+                rows.push(instant(
+                    pid,
+                    &format!("prefix evict r{replica}"),
+                    ev.time,
+                    vec![("replica", Json::from(*replica)), ("evicted", Json::from(*evicted))],
+                ));
+            }
             EventKind::ReplicaStart => rows.push(instant(pid, "replica start", ev.time, vec![])),
             EventKind::ReplicaDrain => rows.push(instant(pid, "replica drain", ev.time, vec![])),
             EventKind::ReplicaRetire => rows.push(instant(pid, "replica retire", ev.time, vec![])),
@@ -320,6 +354,20 @@ pub fn event_json(ev: &TraceEvent) -> Json {
             fields.push(("req", Json::from(*req)));
             fields.push(("tenant", Json::from(*tenant)));
             fields.push(("queued", Json::from(*queued)));
+        }
+        EventKind::PrefixHit { req, replica, saved }
+        | EventKind::PrefixFetch { req, replica, saved } => {
+            fields.push(("req", Json::from(*req)));
+            fields.push(("target", Json::from(*replica)));
+            fields.push(("saved", Json::from(*saved)));
+        }
+        EventKind::PrefixMiss { req, replica } => {
+            fields.push(("req", Json::from(*req)));
+            fields.push(("target", Json::from(*replica)));
+        }
+        EventKind::PrefixEvict { replica, evicted } => {
+            fields.push(("target", Json::from(*replica)));
+            fields.push(("evicted", Json::from(*evicted)));
         }
         EventKind::Sample { kv_usage, waiting, running, pending, sm_prefill, inflight } => {
             fields.push(("kv_usage", Json::from(*kv_usage)));

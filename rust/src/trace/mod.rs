@@ -128,6 +128,19 @@ pub enum EventKind {
     /// WFQ front stage held a tenant's request back (quota or capacity
     /// exhausted); `queued` is the tenant's backlog depth after the hold.
     TenantThrottle { req: usize, tenant: usize, queued: usize },
+    /// Routed request found its full shared prefix resident on the target
+    /// replica; `saved` prompt tokens skip prefill. Fleet-level, at route time.
+    PrefixHit { req: usize, replica: usize, saved: usize },
+    /// Shared prefix fetched from the fleet cache tier (another replica had
+    /// published it); `saved` is the net prompt-token saving after paying the
+    /// transfer cost. Fleet-level, at route time.
+    PrefixFetch { req: usize, replica: usize, saved: usize },
+    /// Request carried a shared prefix but neither the target replica nor the
+    /// tier could serve it — full prefill. Fleet-level, at route time.
+    PrefixMiss { req: usize, replica: usize },
+    /// Admitting a prefix evicted `evicted` LRU chains from the target
+    /// replica's prefix store. Fleet-level, at route time.
+    PrefixEvict { replica: usize, evicted: usize },
     /// Request finished its last token.
     Complete { req: usize },
     /// Periodic time-series sample of one replica's state.
@@ -162,6 +175,10 @@ impl EventKind {
             EventKind::ShardRebalance { .. } => "shard-rebalance",
             EventKind::TenantAdmit { .. } => "tenant-admit",
             EventKind::TenantThrottle { .. } => "tenant-throttle",
+            EventKind::PrefixHit { .. } => "prefix-hit",
+            EventKind::PrefixFetch { .. } => "prefix-fetch",
+            EventKind::PrefixMiss { .. } => "prefix-miss",
+            EventKind::PrefixEvict { .. } => "prefix-evict",
             EventKind::Complete { .. } => "complete",
             EventKind::Sample { .. } => "sample",
         }
@@ -228,6 +245,14 @@ impl TraceEvent {
             EventKind::TenantAdmit { req, tenant } => format!(" req={req} tenant={tenant}"),
             EventKind::TenantThrottle { req, tenant, queued } => {
                 format!(" req={req} tenant={tenant} queued={queued}")
+            }
+            EventKind::PrefixHit { req, replica, saved }
+            | EventKind::PrefixFetch { req, replica, saved } => {
+                format!(" req={req} replica={replica} saved={saved}")
+            }
+            EventKind::PrefixMiss { req, replica } => format!(" req={req} replica={replica}"),
+            EventKind::PrefixEvict { replica, evicted } => {
+                format!(" replica={replica} evicted={evicted}")
             }
             EventKind::Sample { kv_usage, waiting, running, pending, sm_prefill, inflight } => {
                 format!(
@@ -307,6 +332,22 @@ impl TraceEvent {
                 K::TenantThrottle { req: ra, tenant: ta, queued: qa },
                 K::TenantThrottle { req: rb, tenant: tb, queued: qb },
             ) => ra == rb && ta == tb && qa == qb,
+            (
+                K::PrefixHit { req: ra, replica: pa, saved: sa },
+                K::PrefixHit { req: rb, replica: pb, saved: sb },
+            )
+            | (
+                K::PrefixFetch { req: ra, replica: pa, saved: sa },
+                K::PrefixFetch { req: rb, replica: pb, saved: sb },
+            ) => ra == rb && pa == pb && sa == sb,
+            (
+                K::PrefixMiss { req: ra, replica: pa },
+                K::PrefixMiss { req: rb, replica: pb },
+            ) => ra == rb && pa == pb,
+            (
+                K::PrefixEvict { replica: pa, evicted: ea },
+                K::PrefixEvict { replica: pb, evicted: eb },
+            ) => pa == pb && ea == eb,
             (K::ReplicaStart, K::ReplicaStart)
             | (K::ReplicaDrain, K::ReplicaDrain)
             | (K::ReplicaRetire, K::ReplicaRetire) => true,

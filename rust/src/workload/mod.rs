@@ -16,8 +16,9 @@ use std::collections::BTreeMap;
 
 /// A serving request as the engine layer sees it.
 ///
-/// Hot-state compaction (§Perf): token lengths are `u32` and the tenant
-/// label a `u16` (32 bytes per request instead of 40+ with `usize` fields) —
+/// Hot-state compaction (§Perf): token lengths are `u32`, the tenant
+/// label a `u16`, and the prefix lineage a `u32` chain id + `u16` shared
+/// length (32 bytes per request instead of 48+ with `usize` fields) —
 /// a million-request streaming trace holds only the in-flight window, but
 /// per-request copies also live in every engine's `ReqState`, so the narrow
 /// struct pays at fleet scale. Lengths are bounded by context windows
@@ -33,6 +34,12 @@ pub struct Request {
     /// Owning tenant (index into the run's `TenantSpec` table; single-tenant
     /// workloads leave it 0).
     pub tenant: u16,
+    /// Prefix-chain id (session lineage); 0 means "no chain" — the request
+    /// shares no prefix and seeds no residency. See [`PrefixCfg`].
+    pub prefix: u32,
+    /// Tokens of the prompt shared with the chain's accumulated prefix
+    /// (0 for the first turn of a chain; always < `prompt_len`).
+    pub shared_len: u16,
 }
 
 impl Request {
@@ -52,6 +59,13 @@ impl Request {
     #[inline]
     pub fn tid(&self) -> usize {
         self.tenant as usize
+    }
+
+    /// Shared-prefix length as `usize`, clamped below the prompt length
+    /// (a request always has at least one novel token to prefill).
+    #[inline]
+    pub fn shared(&self) -> usize {
+        (self.shared_len as usize).min(self.plen().saturating_sub(1))
     }
 }
 
@@ -126,6 +140,118 @@ impl TenantMix {
     pub fn apply(&self, trace: &mut [Request]) {
         for r in trace {
             r.tenant = self.tag(r.id);
+        }
+    }
+}
+
+/// Deterministic prefix-lineage model: multi-turn session structure as the
+/// router can see it.
+///
+/// Requests are grouped into `sessions` round-robin by id (a chat session /
+/// system-prompt group). Each session carries a *chain* — the accumulated
+/// conversation prefix — identified by a globally unique nonzero
+/// [`Request::prefix`] id. A request is a *warm turn* with probability
+/// `hit_prob` (matching the probabilistic `sched::RadixCache` hit rate):
+/// it extends the session's live chain and shares
+/// `frac ≈ mean_frac ± 0.15` of its prompt with the chain
+/// ([`Request::shared_len`]). Otherwise it opens a fresh chain (topic
+/// change / new conversation) with `shared_len = 0`.
+///
+/// All draws are pure functions of `(seed, id)` (splitmix-style hashing, no
+/// RNG stream), so tagging never consumes the arrival/length RNG — arrival
+/// times and token lengths are byte-identical to the untagged generators,
+/// and the streaming/Vec twins stay in lockstep.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefixCfg {
+    /// Concurrent sessions the id space is striped over.
+    pub sessions: usize,
+    /// Probability a request extends its session's chain (warm turn).
+    pub hit_prob: f64,
+    /// Mean fraction of the prompt shared with the chain on a warm turn.
+    pub mean_frac: f64,
+    /// Hash seed for the per-id draws (independent of the arrival seed).
+    pub seed: u64,
+}
+
+impl Default for PrefixCfg {
+    fn default() -> Self {
+        PrefixCfg { sessions: 40, hit_prob: 0.5, mean_frac: 0.5, seed: 0x9e37 }
+    }
+}
+
+impl PrefixCfg {
+    /// Per-dataset prefix model matching the coordinator's radix hit-rate
+    /// table (chat traffic reuses aggressively, arXiv summarization barely):
+    /// single-engine `serve` runs (probabilistic `RadixCache`) and fleet
+    /// `cluster` runs (deterministic lineage) share one prefix model.
+    pub fn for_dataset(dataset: Dataset, seed: u64) -> Self {
+        let (hit_prob, mean_frac) = match dataset {
+            Dataset::ShareGpt => (0.5, 0.5),
+            Dataset::Mixed => (0.4, 0.5),
+            Dataset::LongData => (0.3, 0.4),
+            Dataset::Arxiv => (0.2, 0.4),
+        };
+        PrefixCfg { sessions: 40, hit_prob, mean_frac, seed }
+    }
+}
+
+/// splitmix64-style avalanche of `(seed, id)` to a uniform draw in [0, 1).
+fn hash01(seed: u64, id: usize) -> f64 {
+    let mut x = seed ^ (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    (x >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Stateful lineage assigner for [`PrefixCfg`]: tracks each session's live
+/// chain and hands out globally unique chain ids. Deterministic — the k-th
+/// call with the same `(id, plen)` sequence always produces the same tags.
+#[derive(Debug, Clone)]
+pub struct PrefixTagger {
+    cfg: PrefixCfg,
+    /// Live chain id per session (0 = none yet).
+    chains: Vec<u32>,
+    next_chain: u32,
+}
+
+impl PrefixTagger {
+    pub fn new(cfg: &PrefixCfg) -> Self {
+        assert!(cfg.sessions > 0, "prefix model needs at least one session");
+        assert!((0.0..=1.0).contains(&cfg.hit_prob));
+        assert!((0.0..=1.0).contains(&cfg.mean_frac));
+        PrefixTagger { cfg: *cfg, chains: vec![0; cfg.sessions], next_chain: 0 }
+    }
+
+    /// Tag one request: returns `(prefix, shared_len)`.
+    pub fn tag(&mut self, id: usize, plen: usize) -> (u32, u16) {
+        let s = id % self.cfg.sessions;
+        let warm = self.chains[s] != 0 && hash01(self.cfg.seed, id) < self.cfg.hit_prob;
+        if warm {
+            // Jitter the shared fraction exactly like RadixCache's draw:
+            // mean_frac ± 0.15 uniform, clamped to [0.05, 0.95].
+            let frac = (self.cfg.mean_frac + 0.3 * (hash01(self.cfg.seed ^ 0xA5A5, id) - 0.5))
+                .clamp(0.05, 0.95);
+            let shared = ((plen as f64 * frac) as usize)
+                .min(plen.saturating_sub(1))
+                .min(u16::MAX as usize);
+            (self.chains[s], shared as u16)
+        } else {
+            self.next_chain += 1;
+            self.chains[s] = self.next_chain;
+            (self.next_chain, 0)
+        }
+    }
+
+    /// Apply the lineage to an existing trace in place (ids must be in
+    /// generation order for the chain state to match the generators).
+    pub fn apply(&mut self, trace: &mut [Request]) {
+        for r in trace {
+            let (p, s) = self.tag(r.id, r.plen());
+            r.prefix = p;
+            r.shared_len = s;
         }
     }
 }
@@ -262,6 +388,8 @@ pub fn generate_iter(
             prompt_len: prompt_len as u32,
             output_len: output_len as u32,
             tenant: 0,
+            prefix: 0,
+            shared_len: 0,
         }
     })
 }
@@ -384,6 +512,8 @@ impl Iterator for BurstyIter {
                 prompt_len: prompt_len as u32,
                 output_len: output_len as u32,
                 tenant: 0,
+                prefix: 0,
+                shared_len: 0,
             });
         }
     }
@@ -452,6 +582,66 @@ pub fn generate_bursty_with_tenants(
     generate_bursty_iter_with_tenants(dataset, n, cfg, seed, mix).collect()
 }
 
+/// [`generate_iter`] with deterministic prefix lineage from a [`PrefixCfg`].
+/// The tagger draws from `(cfg.seed, id)` hashes only — the arrival/length
+/// RNG stream is untouched, so everything but the lineage labels is
+/// identical to the untagged generator for the same seed.
+pub fn generate_iter_with_prefixes(
+    dataset: Dataset,
+    n: usize,
+    rate: f64,
+    seed: u64,
+    cfg: &PrefixCfg,
+) -> impl Iterator<Item = Request> {
+    let mut tagger = PrefixTagger::new(cfg);
+    generate_iter(dataset, n, rate, seed).map(move |mut r| {
+        let (p, s) = tagger.tag(r.id, r.plen());
+        r.prefix = p;
+        r.shared_len = s;
+        r
+    })
+}
+
+/// [`generate`] with deterministic prefix lineage from a [`PrefixCfg`].
+pub fn generate_with_prefixes(
+    dataset: Dataset,
+    n: usize,
+    rate: f64,
+    seed: u64,
+    cfg: &PrefixCfg,
+) -> Vec<Request> {
+    generate_iter_with_prefixes(dataset, n, rate, seed, cfg).collect()
+}
+
+/// [`generate_bursty_iter`] with prefix lineage — the Cox-process RNG stream
+/// is untouched (lineage draws are pure `(seed, id)` hashes).
+pub fn generate_bursty_iter_with_prefixes(
+    dataset: Dataset,
+    n: usize,
+    cfg: &BurstyCfg,
+    seed: u64,
+    prefix: &PrefixCfg,
+) -> impl Iterator<Item = Request> {
+    let mut tagger = PrefixTagger::new(prefix);
+    generate_bursty_iter(dataset, n, cfg, seed).map(move |mut r| {
+        let (p, s) = tagger.tag(r.id, r.plen());
+        r.prefix = p;
+        r.shared_len = s;
+        r
+    })
+}
+
+/// [`generate_bursty`] with prefix lineage from a [`PrefixCfg`].
+pub fn generate_bursty_with_prefixes(
+    dataset: Dataset,
+    n: usize,
+    cfg: &BurstyCfg,
+    seed: u64,
+    prefix: &PrefixCfg,
+) -> Vec<Request> {
+    generate_bursty_iter_with_prefixes(dataset, n, cfg, seed, prefix).collect()
+}
+
 /// Generate an *offline* batch: all `n` requests arrive at t=0 (§6.3).
 pub fn offline(dataset: Dataset, n: usize, seed: u64) -> Vec<Request> {
     let mut rng = Rng::new(seed);
@@ -464,6 +654,8 @@ pub fn offline(dataset: Dataset, n: usize, seed: u64) -> Vec<Request> {
                 prompt_len: prompt_len as u32,
                 output_len: output_len as u32,
                 tenant: 0,
+                prefix: 0,
+                shared_len: 0,
             }
         })
         .collect()
@@ -492,6 +684,8 @@ pub fn trace_to_json(trace: &[Request]) -> Json {
                     ("prompt_len", Json::Num(r.prompt_len as f64)),
                     ("output_len", Json::Num(r.output_len as f64)),
                     ("tenant", Json::Num(r.tenant as f64)),
+                    ("prefix", Json::Num(r.prefix as f64)),
+                    ("shared_len", Json::Num(r.shared_len as f64)),
                 ])
             })
             .collect(),
@@ -513,8 +707,10 @@ pub fn trace_from_json(j: &Json) -> Result<Vec<Request>, String> {
             arrival: field("arrival")?,
             prompt_len: field("prompt_len")? as u32,
             output_len: (field("output_len")? as u32).max(1),
-            // Pre-tenant traces omit the field; default to tenant 0.
+            // Pre-tenant/pre-prefix traces omit the fields; default to 0.
             tenant: item.get("tenant").and_then(Json::as_f64).unwrap_or(0.0) as u16,
+            prefix: item.get("prefix").and_then(Json::as_f64).unwrap_or(0.0) as u32,
+            shared_len: item.get("shared_len").and_then(Json::as_f64).unwrap_or(0.0) as u16,
         });
     }
     Ok(out)
@@ -638,7 +834,8 @@ mod tests {
     #[test]
     fn request_hot_state_is_compact() {
         // §Perf hot-state audit: 32 bytes per request (24 B of core fields +
-        // the u16 tenant label, padded to the f64 alignment). A regression
+        // u16 tenant + u32 prefix chain + u16 shared length — exactly the
+        // f64-aligned padding the tenant label left free). A regression
         // here silently bloats every engine queue.
         assert!(std::mem::size_of::<Request>() <= 32);
     }
@@ -682,6 +879,67 @@ mod tests {
         let itb: Vec<Request> =
             generate_bursty_iter_with_tenants(Dataset::ShareGpt, 150, &cfg, 19, &mix).collect();
         assert_eq!(tagged_b, itb);
+    }
+
+    #[test]
+    fn prefix_tagging_leaves_arrivals_and_lengths_untouched() {
+        // Lineage draws are pure (seed, id) hashes: the tagged generators
+        // reuse the untagged RNG stream, so everything but the lineage
+        // labels is identical — arrivals, lengths, ids, tenants.
+        let pc = PrefixCfg::for_dataset(Dataset::ShareGpt, 13);
+        let plain = generate(Dataset::ShareGpt, 200, 5.0, 77);
+        let tagged = generate_with_prefixes(Dataset::ShareGpt, 200, 5.0, 77, &pc);
+        assert_eq!(plain.len(), tagged.len());
+        for (a, b) in plain.iter().zip(&tagged) {
+            assert_eq!((a.id, a.prompt_len, a.output_len, a.tenant), (b.id, b.prompt_len, b.output_len, b.tenant));
+            assert_eq!(a.arrival, b.arrival);
+        }
+        let cfg = BurstyCfg::default();
+        let plain_b = generate_bursty(Dataset::ShareGpt, 150, &cfg, 19);
+        let tagged_b = generate_bursty_with_prefixes(Dataset::ShareGpt, 150, &cfg, 19, &pc);
+        for (a, b) in plain_b.iter().zip(&tagged_b) {
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.prompt_len, b.prompt_len);
+        }
+        // Streaming twins match the Vec versions (stateful tagger included).
+        let it: Vec<Request> =
+            generate_iter_with_prefixes(Dataset::ShareGpt, 200, 5.0, 77, &pc).collect();
+        assert_eq!(tagged, it);
+        let itb: Vec<Request> =
+            generate_bursty_iter_with_prefixes(Dataset::ShareGpt, 150, &cfg, 19, &pc).collect();
+        assert_eq!(tagged_b, itb);
+        // PrefixTagger::apply over the plain trace reproduces the generator.
+        let mut applied = plain.clone();
+        PrefixTagger::new(&pc).apply(&mut applied);
+        assert_eq!(applied, tagged);
+    }
+
+    #[test]
+    fn prefix_lineage_is_well_formed() {
+        let pc = PrefixCfg { sessions: 8, hit_prob: 0.7, mean_frac: 0.6, seed: 42 };
+        let tr = generate_with_prefixes(Dataset::ShareGpt, 400, 5.0, 3, &pc);
+        let mut last_chain = vec![0u32; pc.sessions];
+        let mut warm = 0usize;
+        for r in &tr {
+            assert_ne!(r.prefix, 0, "every request belongs to a chain");
+            assert!(
+                (r.shared_len as usize) < r.plen(),
+                "shared prefix must leave novel tokens (req {})",
+                r.id
+            );
+            let s = r.id % pc.sessions;
+            if r.shared_len > 0 {
+                // Warm turns extend the session's live chain.
+                assert_eq!(r.prefix, last_chain[s], "warm turn switched chains (req {})", r.id);
+                warm += 1;
+            }
+            last_chain[s] = r.prefix;
+        }
+        // Warm fraction tracks hit_prob loosely (first turns are always cold).
+        let frac = warm as f64 / tr.len() as f64;
+        assert!((frac - pc.hit_prob).abs() < 0.15, "warm fraction {frac}");
+        // Deterministic: same cfg, same tags.
+        assert_eq!(tr, generate_with_prefixes(Dataset::ShareGpt, 400, 5.0, 3, &pc));
     }
 
     #[test]
@@ -771,7 +1029,8 @@ mod tests {
     #[test]
     fn trace_json_roundtrip() {
         let mix = TenantMix::new(vec![1, 2]);
-        let tr = generate_with_tenants(Dataset::Arxiv, 20, 3.0, 5, &mix);
+        let mut tr = generate_with_tenants(Dataset::Arxiv, 20, 3.0, 5, &mix);
+        PrefixTagger::new(&PrefixCfg::default()).apply(&mut tr);
         let j = trace_to_json(&tr);
         let back = trace_from_json(&j).unwrap();
         assert_eq!(tr.len(), back.len());
@@ -779,15 +1038,17 @@ mod tests {
             assert_eq!(a.id, b.id);
             assert_eq!(a.prompt_len, b.prompt_len);
             assert_eq!(a.tenant, b.tenant);
+            assert_eq!((a.prefix, a.shared_len), (b.prefix, b.shared_len));
             assert!((a.arrival - b.arrival).abs() < 1e-9);
         }
-        // Pre-tenant traces (no "tenant" key) parse with tenant 0.
+        // Pre-tenant/pre-prefix traces (no such keys) parse with zeros.
         let legacy = Json::parse(
             r#"[{"id": 3, "arrival": 0.5, "prompt_len": 64, "output_len": 8}]"#,
         )
         .unwrap();
         let parsed = trace_from_json(&legacy).unwrap();
         assert_eq!(parsed[0].tenant, 0);
+        assert_eq!((parsed[0].prefix, parsed[0].shared_len), (0, 0));
     }
 
     #[test]

@@ -27,14 +27,14 @@
 //! equal the sequential loop's for every thread count and window size.
 
 use nexus::cluster::{
-    run_cluster, AutoscalerCfg, Cluster, ClusterCfg, ParallelCfg, RoutingPolicy, StealCfg,
-    WfqCfg,
+    run_cluster, AutoscalerCfg, Cluster, ClusterCfg, ParallelCfg, PrefixCacheCfg, RoutingPolicy,
+    StealCfg, TierCfg, WfqCfg,
 };
 use nexus::engine::{build_engine, drive, run_engine, EngineCfg, EngineKind};
 use nexus::model::ModelConfig;
 use nexus::workload::{
-    generate, generate_bursty, generate_with_tenants, BurstyCfg, Dataset, Request, TenantMix,
-    TenantSpec,
+    generate, generate_bursty, generate_with_prefixes, generate_with_tenants, BurstyCfg, Dataset,
+    PrefixCfg, PrefixTagger, Request, TenantMix, TenantSpec,
 };
 
 fn ecfg(seed: u64) -> EngineCfg {
@@ -272,7 +272,7 @@ fn skewed_affinity_trace(n: usize, rate: f64, seed: u64) -> Vec<Request> {
     let base = generate(Dataset::ShareGpt, n, rate, seed);
     let mut trace = Vec::with_capacity(n + 64);
     for k in 0..64usize {
-        trace.push(Request { id: k, arrival: 0.0, prompt_len: 64, output_len: 4, tenant: 0 });
+        trace.push(Request { id: k, arrival: 0.0, prompt_len: 64, output_len: 4, tenant: 0, prefix: 0, shared_len: 0 });
     }
     for (i, r) in base.iter().enumerate() {
         // 90 % of traffic on sessions {0, 8, .., 56}; the rest never ≡ 0
@@ -401,7 +401,7 @@ fn stream_arrivals_edge_cases_match_all_fronts() {
     assert_three_way_digest(&cc, &[], "empty trace");
 
     // Single request.
-    let one = [Request { id: 0, arrival: 0.5, prompt_len: 128, output_len: 8, tenant: 0 }];
+    let one = [Request { id: 0, arrival: 0.5, prompt_len: 128, output_len: 8, tenant: 0, prefix: 0, shared_len: 0 }];
     assert_three_way_digest(&cc, &one, "single request");
 
     // Simultaneous ties: several arrivals at *exactly* the same instant
@@ -415,6 +415,8 @@ fn stream_arrivals_edge_cases_match_all_fronts() {
             prompt_len: 64 + 32 * (id as u32 % 3),
             output_len: 6,
             tenant: 0,
+            prefix: 0,
+            shared_len: 0,
         });
     }
     assert_three_way_digest(&cc, &ties, "simultaneous ties");
@@ -425,9 +427,92 @@ fn stream_arrivals_edge_cases_match_all_fronts() {
     let cc_jsq = ClusterCfg::new(EngineKind::Vllm, ecfg(29), 3, RoutingPolicy::JoinShortestQueue);
     let mut ties = Vec::new();
     for id in 0..9usize {
-        ties.push(Request { id, arrival: 2.0, prompt_len: 96, output_len: 5, tenant: 0 });
+        ties.push(Request { id, arrival: 2.0, prompt_len: 96, output_len: 5, tenant: 0, prefix: 0, shared_len: 0 });
     }
     assert_three_way_digest(&cc_jsq, &ties, "jsq simultaneous ties");
+}
+
+/// Chat-heavy prefix-tagged trace: the per-dataset lineage model the
+/// coordinator applies for prefix-enabled fleet runs.
+fn prefix_trace(n: usize, rate: f64, seed: u64) -> Vec<Request> {
+    generate_with_prefixes(
+        Dataset::ShareGpt,
+        n,
+        rate,
+        seed,
+        &PrefixCfg::for_dataset(Dataset::ShareGpt, seed),
+    )
+}
+
+#[test]
+fn prefix_aware_fleet_matches_all_fronts() {
+    // Prefix-aware routing mutates coordinator-side state (stores, tier,
+    // counters) at every routing commit — the adversarial case for the
+    // sharded loop, whose rendezvous batches may only blind-route prefix
+    // arrivals that are provably pure LRU touches. Every front must agree,
+    // and the digest covers the prefix counters.
+    let trace = prefix_trace(100, 12.0, 61);
+    let cc = ClusterCfg::new(EngineKind::Nexus, ecfg(9), 4, RoutingPolicy::PrefixAware);
+    assert_three_way_digest(&cc, &trace, "prefix-aware fleet");
+
+    // Tiny stores over a slow tier: evictions and tier fetches on every
+    // front (the blind fast path disengages once stores lose headroom).
+    let mut small = cc.clone();
+    small.prefix = Some(PrefixCacheCfg {
+        capacity: 2048,
+        tier: Some(TierCfg::tcp()),
+        ..PrefixCacheCfg::default()
+    });
+    assert_three_way_digest(&small, &trace, "prefix-aware tiny stores");
+
+    // Local stores only — remote replicas pay full recompute.
+    let mut local_only = cc.clone();
+    local_only.prefix = Some(PrefixCacheCfg { tier: None, ..PrefixCacheCfg::default() });
+    assert_three_way_digest(&local_only, &trace, "prefix-aware no tier");
+
+    // The machinery under a non-prefix policy: affinity routing with the
+    // tier shortening prefills behind its back.
+    let mut aff =
+        ClusterCfg::new(EngineKind::Nexus, ecfg(9), 4, RoutingPolicy::SessionAffinity);
+    aff.prefix = Some(PrefixCacheCfg::default());
+    assert_three_way_digest(&aff, &trace, "affinity + prefix tier");
+}
+
+#[test]
+fn prefix_aware_thread_sweep_matches_sequential_digest() {
+    // Wider thread sweep with stealing and windows engaged — the exact
+    // config space the rendezvous-batching pure-touch rule must survive.
+    let trace = prefix_trace(120, 16.0, 91);
+    let cc = ClusterCfg::new(EngineKind::Nexus, ecfg(21), 6, RoutingPolicy::PrefixAware);
+    let seq = Cluster::new(cc.clone()).run(&trace).digest();
+    let reference = Cluster::new(cc.clone()).run_reference(&trace).digest();
+    assert_eq!(seq, reference, "prefix-aware heap loop diverged from reference");
+    for threads in [1usize, 4, 8] {
+        for steal in [None, Some(StealCfg { threshold: 1.2, interval: 0.5 })] {
+            for window in [0.0f64, 0.5] {
+                let par = Cluster::new(cc.clone())
+                    .run_parallel_cfg(&trace, ParallelCfg { threads, window, steal })
+                    .digest();
+                assert_eq!(
+                    seq, par,
+                    "prefix-aware fleet diverged @ {threads} threads, window {window}, \
+                     steal {steal:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prefix_aware_wfq_fleet_matches_all_fronts() {
+    // Prefix routing behind the saturating WFQ gate: dispatches flow
+    // through the gated arm of every loop, and gated rounds never take the
+    // blind-batching fast path.
+    let mut trace = tenant_trace(90, 14.0, 71);
+    PrefixTagger::new(&PrefixCfg::for_dataset(Dataset::ShareGpt, 71)).apply(&mut trace);
+    let mut cc = ClusterCfg::new(EngineKind::Nexus, ecfg(3), 3, RoutingPolicy::PrefixAware);
+    cc.wfq = Some(wfq_cfg());
+    assert_three_way_digest(&cc, &trace, "prefix-aware wfq");
 }
 
 /// Tenant-labeled trace: 3:2:1 traffic shares over three tenants, arrival
@@ -558,6 +643,8 @@ fn wfq_edge_configs_three_way_digest() {
             prompt_len: 64 + 32 * (id as u32 % 3),
             output_len: 6,
             tenant: (id % 3) as u16,
+            prefix: 0,
+            shared_len: 0,
         });
     }
     let mut tie_cc =

@@ -11,7 +11,9 @@
 //! * Recording + periodic sampling perturbs neither digests nor the loop's
 //!   event counter (samples are observational grid reads, not loop events).
 
-use nexus::cluster::{AutoscalerCfg, Cluster, ClusterCfg, ClusterMetrics, RoutingPolicy, WfqCfg};
+use nexus::cluster::{
+    AutoscalerCfg, Cluster, ClusterCfg, ClusterMetrics, PrefixCacheCfg, RoutingPolicy, WfqCfg,
+};
 use nexus::engine::{build_engine, drive, drive_traced, run_engine_traced, EngineCfg, EngineKind};
 use nexus::model::ModelConfig;
 use nexus::trace::{
@@ -19,8 +21,8 @@ use nexus::trace::{
 };
 use nexus::util::json::Json;
 use nexus::workload::{
-    generate, generate_bursty, generate_with_tenants, BurstyCfg, Dataset, Request, TenantMix,
-    TenantSpec,
+    generate, generate_bursty, generate_with_prefixes, generate_with_tenants, BurstyCfg, Dataset,
+    PrefixCfg, Request, TenantMix, TenantSpec,
 };
 
 fn ecfg(seed: u64) -> EngineCfg {
@@ -211,7 +213,7 @@ fn stealing_fleet_emits_the_sequential_event_set_plus_rebalances() {
     // on shard 0 under the static `id % 2` partition at 2 threads.
     let mut trace = Vec::new();
     for k in 0..4usize {
-        trace.push(Request { id: k, arrival: 0.0, prompt_len: 64, output_len: 4, tenant: 0 });
+        trace.push(Request { id: k, arrival: 0.0, prompt_len: 64, output_len: 4, tenant: 0, prefix: 0, shared_len: 0 });
     }
     for i in 0..120usize {
         trace.push(Request {
@@ -220,6 +222,8 @@ fn stealing_fleet_emits_the_sequential_event_set_plus_rebalances() {
             prompt_len: 512,
             output_len: 24,
             tenant: 0,
+            prefix: 0,
+            shared_len: 0,
         });
     }
     let cc = ClusterCfg::new(EngineKind::Nexus, ecfg(19), 4, RoutingPolicy::SessionAffinity);
@@ -421,6 +425,165 @@ fn parallel_wfq_fleet_emits_the_sequential_tenant_event_set() {
             "tracing + wfq: parallel digest diverged @ {threads} threads"
         );
         assert_trace_eq(&ev_par, &ev_seq, &format!("wfq parallel x{threads} vs sequential"));
+    }
+}
+
+/// A chat-heavy prefix-tagged workload on the prefix-aware policy, sized so
+/// all hit classes show up across the fleet (40 sessions, 3 replicas).
+fn prefix_fleet() -> (Vec<Request>, ClusterCfg) {
+    let pcfg = PrefixCfg::for_dataset(Dataset::ShareGpt, 43);
+    let trace = generate_with_prefixes(Dataset::ShareGpt, 80, 10.0, 43, &pcfg);
+    let cc = ClusterCfg::new(EngineKind::Nexus, ecfg(29), 3, RoutingPolicy::PrefixAware);
+    (trace, cc)
+}
+
+#[test]
+fn prefix_events_match_across_sequential_loops_and_tie_out() {
+    // Both sequential fleet loops narrate the prefix tier identically, and
+    // the event stream ties out against the run's own cache accounting:
+    // one typed event per non-cold lookup, saved-token args summing to the
+    // counter, everything at fleet level (routing-time decisions).
+    let (trace, cc) = prefix_fleet();
+    let (m_opt, ev_opt) = run_fleet(&cc, &trace, false, 1.0);
+    let (m_ref, ev_ref) = run_fleet(&cc, &trace, true, 1.0);
+    assert_trace_eq(&ev_opt, &ev_ref, "prefix fleet");
+    assert_eq!(
+        m_opt.fleet.deviation(&m_ref.fleet).map(|d| d <= 1e-9),
+        Some(true),
+        "loops must stay metric-equivalent with the tier on"
+    );
+    let count = |pred: fn(&EventKind) -> bool| ev_opt.iter().filter(|e| pred(&e.kind)).count();
+    let lookups = count(|k| {
+        matches!(
+            k,
+            EventKind::PrefixHit { .. } | EventKind::PrefixFetch { .. } | EventKind::PrefixMiss { .. }
+        )
+    });
+    assert_eq!(lookups as u64, m_opt.prefix.lookups, "one event per non-cold lookup");
+    assert!(m_opt.prefix.lookups > 0, "chat workload must exercise the cache");
+    assert_eq!(
+        count(|k| matches!(k, EventKind::PrefixHit { .. })) as u64,
+        m_opt.prefix.local_hits
+    );
+    assert_eq!(
+        count(|k| matches!(k, EventKind::PrefixFetch { .. })) as u64,
+        m_opt.prefix.tier_hits
+    );
+    assert_eq!(
+        count(|k| matches!(k, EventKind::PrefixMiss { .. })) as u64,
+        m_opt.prefix.misses
+    );
+    let saved: u64 = ev_opt
+        .iter()
+        .filter_map(|e| match &e.kind {
+            EventKind::PrefixHit { saved, .. } | EventKind::PrefixFetch { saved, .. } => {
+                Some(*saved as u64)
+            }
+            _ => None,
+        })
+        .sum();
+    assert_eq!(saved, m_opt.prefix.tokens_saved, "saved args must sum to the counter");
+    for e in &ev_opt {
+        if matches!(
+            e.kind,
+            EventKind::PrefixHit { .. }
+                | EventKind::PrefixFetch { .. }
+                | EventKind::PrefixMiss { .. }
+                | EventKind::PrefixEvict { .. }
+        ) {
+            assert_eq!(e.replica, FLEET, "prefix decisions are fleet-scoped");
+        }
+    }
+}
+
+#[test]
+fn prefix_tracing_is_observational() {
+    // Recording the prefix events must not move the run: the tracer only
+    // narrates `prefix_admit`, it never feeds back into routing or stores.
+    let (trace, cc) = prefix_fleet();
+    let plain = Cluster::new(cc.clone()).run(&trace);
+    let (traced, events) = run_fleet(&cc, &trace, false, 1.0);
+    assert_eq!(
+        plain.digest(),
+        traced.digest(),
+        "recording prefix events changed the digest"
+    );
+    assert!(events.iter().any(|e| matches!(e.kind, EventKind::PrefixHit { .. })));
+}
+
+#[test]
+fn parallel_prefix_fleet_emits_the_sequential_event_set() {
+    // The sharded loop routes (and classifies prefixes) at the coordinator;
+    // digest AND event content must match the sequential loop for any
+    // thread count (canonical order, sampling off).
+    let (trace, cc) = prefix_fleet();
+    let run = |threads: usize| {
+        let tracer = Tracer::recording();
+        let mut cluster = Cluster::new(cc.clone());
+        cluster.tracer = tracer.clone();
+        let m = if threads > 1 {
+            cluster.run_parallel(&trace, threads, 0.0)
+        } else {
+            cluster.run(&trace)
+        };
+        let mut events = tracer.take();
+        canonical_order(&mut events);
+        (m, events)
+    };
+    let (m_seq, ev_seq) = run(1);
+    assert!(ev_seq.iter().any(|e| matches!(e.kind, EventKind::PrefixHit { .. })));
+    for threads in [2usize, 4] {
+        let (m_par, ev_par) = run(threads);
+        assert_eq!(
+            m_seq.digest(),
+            m_par.digest(),
+            "tracing + prefix: parallel digest diverged @ {threads} threads"
+        );
+        assert_trace_eq(&ev_par, &ev_seq, &format!("prefix parallel x{threads} vs sequential"));
+    }
+}
+
+#[test]
+fn prefix_events_round_trip_through_exports() {
+    // Cover all four prefix event kinds across three cache configs — the
+    // default tier never misses (RDMA beats recompute for any shared len),
+    // so misses need the tier off, and evictions need a starved store —
+    // then push the union through both serializers.
+    let pcfg = PrefixCfg::for_dataset(Dataset::ShareGpt, 43);
+    let trace = generate_with_prefixes(Dataset::ShareGpt, 80, 10.0, 43, &pcfg);
+    let mut events = Vec::new();
+    for cache in [
+        PrefixCacheCfg::default(),
+        PrefixCacheCfg { tier: None, ..PrefixCacheCfg::default() },
+        PrefixCacheCfg { capacity: 2048, ..PrefixCacheCfg::default() },
+    ] {
+        let mut cc =
+            ClusterCfg::new(EngineKind::Nexus, ecfg(29), 3, RoutingPolicy::JoinShortestQueue);
+        cc.prefix = Some(cache);
+        let (_, ev) = run_fleet(&cc, &trace, false, 1.0);
+        events.extend(ev);
+    }
+    for (name, pred) in [
+        ("prefix-hit", (|k| matches!(k, EventKind::PrefixHit { .. })) as fn(&EventKind) -> bool),
+        ("prefix-fetch", |k| matches!(k, EventKind::PrefixFetch { .. })),
+        ("prefix-miss", |k| matches!(k, EventKind::PrefixMiss { .. })),
+        ("prefix-evict", |k| matches!(k, EventKind::PrefixEvict { .. })),
+    ] {
+        assert!(events.iter().any(|e| pred(&e.kind)), "no {name} event recorded");
+    }
+    let chrome = chrome_trace(&events).to_string();
+    let parsed = Json::parse(&chrome).expect("chrome trace must be valid JSON");
+    let rows = parsed
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array missing");
+    assert!(!rows.is_empty(), "no trace rows");
+    let jsonl = to_jsonl(&events);
+    assert!(jsonl.contains("prefix-hit") && jsonl.contains("prefix-miss"));
+    let lines: Vec<&str> = jsonl.lines().collect();
+    assert_eq!(lines.len(), events.len());
+    for line in lines {
+        Json::parse(line).expect("every JSONL line must parse");
     }
 }
 

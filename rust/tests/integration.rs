@@ -174,6 +174,8 @@ fn single_request_latency_matches_isolated_prediction() {
         prompt_len: 1024,
         output_len: 4,
         tenant: 0,
+        prefix: 0,
+        shared_len: 0,
     }];
     let m = run_engine(EngineKind::Vllm, &cfg, &trace);
     let r = &m.records[0];

@@ -13,7 +13,7 @@ use nexus::workload::{
 };
 
 fn treq(id: usize, tenant: u16) -> Request {
-    Request { id, arrival: 0.0, prompt_len: 64, output_len: 4, tenant }
+    Request { id, arrival: 0.0, prompt_len: 64, output_len: 4, tenant, prefix: 0, shared_len: 0 }
 }
 
 fn random_policy(rng: &mut Rng) -> RoutingPolicy {
